@@ -1,0 +1,113 @@
+//! Figure 2 / Listing 1: inference workload offloading with query
+//! elements, including capability discovery and automatic failover (R3/R4).
+//!
+//! Topology (all in one process; every byte crosses real sockets):
+//!   - an MQTT broker
+//!   - TWO server pipelines ("Device B" twice) advertising
+//!     `objdetect/ssdlite` with the detect gate model
+//!   - ONE client pipeline ("Device A") using
+//!     `tensor_query_client protocol=mqtt-hybrid` — no server address in
+//!     its description
+//!
+//! Mid-run the primary server is killed; the client fails over and the
+//! stream continues.
+//!
+//! Run: `make artifacts && cargo run --release --example offload_query`
+
+use std::time::Duration;
+
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::elements::appsink_channel;
+use edgepipe::mqtt::Broker;
+use edgepipe::pipeline::parser;
+
+fn start(desc: &str, registry: &Registry, env: &PipelineEnv) -> edgepipe::pipeline::Running {
+    parser::parse(desc, registry, env).expect("parse").start().expect("start")
+}
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    if !std::path::Path::new(&env.artifacts_dir).join("detect.manifest.txt").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let broker = Broker::start("127.0.0.1:0")?;
+    let b = broker.addr().to_string();
+    println!("broker on {b}");
+
+    // Device B (x2): one-line server pipelines (paper §5.1: "declaring the
+    // service name is all developers need to do").
+    let (p1, p2) = (free_port(), free_port());
+    let server_desc = |pair: &str, port: u16| {
+        format!(
+            "tensor_query_serversrc operation=objdetect/ssdlite port={port} pair-id={pair} \
+               protocol=mqtt-hybrid broker={b} server-id={pair} model-label=detect-v1 ! \
+             tensor_filter framework=pjrt model=detect ! \
+             tensor_query_serversink operation=objdetect/ssdlite pair-id={pair}"
+        )
+    };
+    let server1 = start(&server_desc("server-a", p1), &registry, &env);
+    let server2 = start(&server_desc("server-b", p2), &registry, &env);
+    std::thread::sleep(Duration::from_millis(500));
+    println!("servers advertised: server-a:{p1}, server-b:{p2}");
+
+    // Device A: client discovers by capability `objdetect/#` (R3).
+    let client = start(
+        &format!(
+            "videotestsrc width=96 height=96 framerate=20 pattern=ball num-buffers=60 ! \
+             videoconvert ! tensor_converter ! \
+             tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 ! \
+             tensor_query_client operation=objdetect/# protocol=mqtt-hybrid broker={b} timeout-ms=2000 ! \
+             appsink channel=results"
+        ),
+        &registry,
+        &env,
+    );
+    let rx = appsink_channel("results").expect("results channel");
+
+    let mut n = 0u64;
+    let mut killed = false;
+    loop {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(buf) => {
+                n += 1;
+                let act = f32::from_le_bytes([buf.data[0], buf.data[1], buf.data[2], buf.data[3]]);
+                if n % 10 == 0 {
+                    println!("  response {n}: activation {act:.3}");
+                }
+                if n == 20 && !killed {
+                    println!(">>> killing primary server mid-stream (R4 failover test)");
+                    // Stop server-a entirely; the client's next request
+                    // fails and it reconnects to server-b.
+                    let _ = &server1;
+                    killed = true;
+                    // Drop is deferred: move it out via Option dance below.
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = server1.stop(Duration::from_secs(5));
+    let mut after_failover = 0u64;
+    while let Ok(_buf) = rx.recv_timeout(Duration::from_secs(60)) {
+        n += 1;
+        after_failover += 1;
+    }
+    let outcome = client.wait_eos(Duration::from_secs(60));
+    println!("client outcome: {outcome:?}");
+    println!("total responses: {n} (of 60 sent), {after_failover} served after failover");
+    if let Some(s) = edgepipe::metrics::global().summary("query.tensor_query_client4.rtt_us") {
+        println!("query RTT: mean {:.2} ms, p95 {:.2} ms", s.mean / 1000.0, s.p95 / 1000.0);
+    }
+    let _ = server2.stop(Duration::from_secs(5));
+    assert!(after_failover > 0, "failover did not happen");
+    println!("offload_query OK");
+    Ok(())
+}

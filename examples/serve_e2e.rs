@@ -1,0 +1,123 @@
+//! END-TO-END SERVING DRIVER (the EXPERIMENTS.md headline run).
+//!
+//! Full among-device serving stack in one process, every hop over real
+//! sockets: MQTT broker → hybrid-advertised query servers running AOT
+//! HLO models on PJRT → N client pipelines streaming camera frames and
+//! collecting responses. Reports per-request latency percentiles,
+//! aggregate throughput, CPU usage and peak RSS.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e -- \
+//!        [--model detect|detector] [--clients 4] [--servers 2] [--secs 10] [--fps 30]`
+
+use std::time::Duration;
+
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::metrics::{self, CpuSampler};
+use edgepipe::mqtt::Broker;
+use edgepipe::pipeline::parser;
+use edgepipe::util::args::Args;
+
+fn start(desc: &str, registry: &Registry, env: &PipelineEnv) -> edgepipe::pipeline::Running {
+    parser::parse(desc, registry, env).expect("parse").start().expect("start")
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.get_or("model", "detect");
+    let n_clients = args.get_u64("clients", 4) as usize;
+    let n_servers = args.get_u64("servers", 2) as usize;
+    let secs = args.get_u64("secs", 10);
+    let fps = args.get_u64("fps", 30);
+    let (side, div) = match model {
+        "detect" => (96, "255.0"),
+        "detector" => (300, "127.5"),
+        other => {
+            eprintln!("unknown model `{other}` (use detect|detector)");
+            std::process::exit(2);
+        }
+    };
+
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    if !std::path::Path::new(&env.artifacts_dir).join(format!("{model}.manifest.txt")).exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let broker = Broker::start("127.0.0.1:0")?;
+    let b = broker.addr().to_string();
+    println!("serve_e2e: model={model} servers={n_servers} clients={n_clients} {fps} fps x {secs}s");
+    println!("broker on {b}");
+
+    // Servers: advertise `serving/<model>` via MQTT-hybrid.
+    let mut servers = Vec::new();
+    for i in 0..n_servers {
+        let desc = format!(
+            "tensor_query_serversrc operation=serving/{model} port=0 pair-id=e2e-srv{i} \
+               protocol=mqtt-hybrid broker={b} server-id=e2e-srv{i} model-label={model} ! \
+             tensor_filter framework=pjrt model={model} ! \
+             tensor_query_serversink operation=serving/{model} pair-id=e2e-srv{i}"
+        );
+        servers.push(start(&desc, &registry, &env));
+    }
+    std::thread::sleep(Duration::from_millis(600));
+
+    // Clients: live camera at the requested rate, leaky preprocessing
+    // (drop frames rather than queue them — live serving semantics).
+    let nbuf = secs * fps;
+    metrics::global().reset();
+    let mut cpu = CpuSampler::start();
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for i in 0..n_clients {
+        let desc = format!(
+            "videotestsrc width={side} height={side} framerate={fps} pattern=ball num-buffers={nbuf} ! \
+             videoconvert ! tensor_converter ! queue leaky=2 max-size-buffers=2 ! \
+             tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:{div} ! \
+             tensor_query_client name=qc{i} operation=serving/# protocol=mqtt-hybrid broker={b} timeout-ms=10000 ! \
+             appsink name=client{i}"
+        );
+        clients.push(start(&desc, &registry, &env));
+    }
+    for c in clients {
+        let out = c.wait_eos(Duration::from_secs(secs + 300));
+        if !matches!(out, edgepipe::pipeline::WaitOutcome::Eos) {
+            eprintln!("client outcome: {out:?}");
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let cpu_pct = cpu.sample();
+
+    // Aggregate results.
+    let mut total = 0u64;
+    for i in 0..n_clients {
+        total += metrics::global().counter(&format!("appsink.client{i}")).count();
+    }
+    println!("\n=== serve_e2e results ===");
+    println!("requests served:   {total} / {} offered", nbuf * n_clients as u64);
+    println!("throughput:        {:.1} req/s aggregate ({:.1} per client)", total as f64 / elapsed, total as f64 / elapsed / n_clients as f64);
+    let mut rtts: Vec<edgepipe::metrics::Summary> = Vec::new();
+    for i in 0..n_clients {
+        if let Some(s) = metrics::global().summary(&format!("query.qc{i}.rtt_us")) {
+            rtts.push(s);
+        }
+    }
+    if !rtts.is_empty() {
+        let mean = rtts.iter().map(|s| s.mean).sum::<f64>() / rtts.len() as f64;
+        let p95 = rtts.iter().map(|s| s.p95).fold(0.0, f64::max);
+        let max = rtts.iter().map(|s| s.max).fold(0.0, f64::max);
+        println!("query RTT:         mean {:.2} ms, worst-client p95 {:.2} ms, max {:.2} ms", mean / 1000.0, p95 / 1000.0, max / 1000.0);
+    }
+    println!("process CPU:       {cpu_pct:.0}% of one core");
+    if let Some(rss) = metrics::peak_rss_kb() {
+        println!("peak RSS:          {:.1} MiB", rss as f64 / 1024.0);
+    }
+    let st = broker.stats();
+    println!("broker control:    {} msgs (data path bypasses broker: MQTT-hybrid)", st.published);
+    for s in servers {
+        let _ = s.stop(Duration::from_secs(5));
+    }
+    assert!(total > 0, "no requests served");
+    println!("serve_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+"""AOT export: lower L2 models to HLO *text* + weight blobs + manifests.
+
+Interchange format (per /opt/xla-example gotchas): HLO text, NOT a
+serialized HloModuleProto — jax>=0.5 emits 64-bit instruction ids which
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly.
+
+Per model ``<name>`` we emit into ``artifacts/``:
+
+- ``<name>.hlo.txt``       HLO text of ``fn(x, *flat_params)`` lowered with
+                           return_tuple=True (Rust unwraps the tuple).
+- ``<name>.weights.bin``   all flat params, little-endian f32, concatenated
+                           in manifest order.
+- ``<name>.manifest.txt``  line-oriented manifest the Rust runtime parses:
+                               model <name>
+                               input <name> f32 d0,d1,...
+                               output <name> f32 d0,d1,...
+                               param <name> f32 d0,d1,... <byte_off> <nbytes>
+
+Usage: ``python -m compile.aot --out ../artifacts [--models a,b,...]``
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_model(name: str, outdir: str) -> dict:
+    closed, bank = M.build(name)
+    spec = M.MODELS[name]
+    in_shape = spec["input_shape"]
+
+    arg_specs = [jax.ShapeDtypeStruct(in_shape, jnp.float32)]
+    arg_specs += [jax.ShapeDtypeStruct(v.shape, jnp.float32)
+                  for v in bank.values]
+    lowered = jax.jit(closed).lower(*arg_specs)
+    hlo = to_hlo_text(lowered)
+
+    hlo_path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    weights_path = os.path.join(outdir, f"{name}.weights.bin")
+    offsets = []
+    off = 0
+    with open(weights_path, "wb") as f:
+        for v in bank.values:
+            raw = np.ascontiguousarray(v, np.float32).tobytes()
+            f.write(raw)
+            offsets.append((off, len(raw)))
+            off += len(raw)
+
+    manifest_path = os.path.join(outdir, f"{name}.manifest.txt")
+    with open(manifest_path, "w") as f:
+        f.write(f"model {name}\n")
+        dims = ",".join(str(d) for d in in_shape)
+        f.write(f"input x f32 {dims}\n")
+        for oname, oshape in spec["outputs"]:
+            dims = ",".join(str(d) for d in oshape)
+            f.write(f"output {oname} f32 {dims}\n")
+        for pname, v, (boff, blen) in zip(bank.names, bank.values, offsets):
+            dims = ",".join(str(d) for d in v.shape)
+            f.write(f"param {pname} f32 {dims} {boff} {blen}\n")
+    return dict(hlo_chars=len(hlo), weight_bytes=off,
+                n_params=len(bank.values))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(M.MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        info = export_model(name, args.out)
+        print(f"[aot] {name}: hlo={info['hlo_chars']} chars, "
+              f"weights={info['weight_bytes']} B "
+              f"({info['n_params']} tensors)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

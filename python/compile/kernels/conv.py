@@ -1,0 +1,129 @@
+"""L1 convolution kernels built on the Pallas matmul tile.
+
+Two kernels cover the models' conv menu:
+
+- ``conv2d`` — dense KxK conv as im2col + Pallas matmul (MXU path).  The
+  im2col gather is expressed with ``lax.conv_general_dilated_patches`` so
+  XLA fuses the patch extraction; the FLOPs all land in the Pallas tile.
+- ``depthwise_conv3x3`` — a dedicated Pallas kernel on the VPU mental
+  model: grid over channel blocks, each step holds an (H+2, W+2, bc) input
+  slab in VMEM and computes the output as nine shifted multiply-adds.
+
+Both are NHWC with batch folded into rows, f32, SAME or VALID padding,
+stride 1 or 2 — exactly what the SSD-lite / pose / detect models need.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .matmul import matmul
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1,
+           padding: str = "SAME", act: str = "relu6") -> jax.Array:
+    """Dense conv: x (N,H,W,Cin), w (KH,KW,Cin,Cout), b (Cout,) -> NHWC.
+
+    im2col + Pallas matmul; the matmul is the only FLOP-carrying op.
+    """
+    n, h, wdt, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"conv cin mismatch {x.shape} {w.shape}"
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    # patches: (N, Ho, Wo, Cin*KH*KW) with feature order (cin, kh, kw)
+    _, ho, wo, patch_dim = patches.shape
+    cols = patches.reshape(n * ho * wo, patch_dim)
+    # conv_general_dilated_patches emits features as (Cin, KH, KW); reorder
+    # the weight to match instead of transposing the (large) patch matrix.
+    wmat = w.transpose(2, 0, 1, 3).reshape(patch_dim, cout)
+    out = matmul(cols, wmat) + b
+    if act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out.reshape(n, ho, wo, cout)
+
+
+def pointwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                   act: str = "relu6") -> jax.Array:
+    """1x1 conv = row-major reshape + Pallas matmul (no im2col needed)."""
+    n, h, wdt, cin = x.shape
+    cout = w.shape[-1]
+    out = matmul(x.reshape(n * h * wdt, cin), w.reshape(cin, cout)) + b
+    if act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.reshape(n, h, wdt, cout)
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, stride: int, ho: int, wo: int):
+    """Depthwise 3x3 tile: nine shifted MACs over a VMEM channel slab."""
+    x = x_ref[...]            # (hp, wp, bc) padded input slab
+    w = w_ref[...]            # (3, 3, bc)
+    acc = jnp.zeros((ho, wo, x.shape[-1]), jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            sl = lax.slice(
+                x,
+                (di, dj, 0),
+                (di + (ho - 1) * stride + 1, dj + (wo - 1) * stride + 1,
+                 x.shape[-1]),
+                (stride, stride, 1),
+            )
+            acc += sl * w[di, dj, :]
+    o_ref[...] = acc
+
+
+def depthwise_conv3x3(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                      stride: int = 1, act: str = "relu6",
+                      bc: int = 32) -> jax.Array:
+    """Depthwise 3x3 conv, SAME padding: x (1,H,W,C), w (3,3,C), b (C,).
+
+    Pallas grid over channel blocks; H and W stay whole inside a block
+    (the models' largest slab, 152x152x32 f32, is ~3 MiB — VMEM-sized).
+    """
+    n, h, wdt, c = x.shape
+    assert n == 1, "depthwise kernel is written for batch-major loops"
+    assert w.shape == (3, 3, c), f"depthwise weight {w.shape} vs C={c}"
+    ho = (h + stride - 1) // stride
+    wo = (wdt + stride - 1) // stride
+    # SAME padding for kernel 3: pad_total = (ho-1)*stride + 3 - h
+    pad_h = max((ho - 1) * stride + 3 - h, 0)
+    pad_w = max((wo - 1) * stride + 3 - wdt, 0)
+    xp = jnp.pad(x[0], ((pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+    bc = min(bc, c)
+    cp = (c + bc - 1) // bc * bc
+    xp = jnp.pad(xp, ((0, 0), (0, 0), (0, cp - c)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cp - c)))
+    hp, wp_dim, _ = xp.shape
+
+    out = pl.pallas_call(
+        functools.partial(_dw_kernel, stride=stride, ho=ho, wo=wo),
+        grid=(cp // bc,),
+        in_specs=[
+            pl.BlockSpec((hp, wp_dim, bc), lambda i: (0, 0, i)),
+            pl.BlockSpec((3, 3, bc), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((ho, wo, bc), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, cp), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    out = out[:, :, :c] + b
+    if act == "relu6":
+        out = jnp.clip(out, 0.0, 6.0)
+    elif act == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out[None, ...]

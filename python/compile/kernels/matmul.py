@@ -1,0 +1,86 @@
+"""L1 Pallas matmul kernel — the MXU-shaped compute hot-spot.
+
+Every convolution in the L2 models lowers to this kernel (1x1 convs are
+reshapes; 3x3 convs go through im2col).  The kernel is written for the TPU
+mental model the paper's accelerators (EdgeTPU/NPU) imply:
+
+- grid = (M/bm, N/bn, K/bk); the K axis is the innermost ("arbitrary")
+  loop so the output block held in VMEM is revision-accumulated across K
+  steps — the classic MXU systolic schedule.
+- block shapes default to 128x128, the MXU tile; edge tiles are handled by
+  padding in the wrapper (Pallas BlockSpecs require divisible grids).
+- ``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls, and interpret mode lowers the kernel to plain HLO so the
+  AOT artifact runs on the Rust PJRT CPU client (see DESIGN.md
+  §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nsteps: int):
+    """Accumulating matmul tile: o[i,j] += x[i,k] @ y[k,j] over grid axis 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jax.Array:
+    """``x @ y`` via the Pallas tile kernel.
+
+    ``x``: (M, K) f32, ``y``: (K, N) f32 -> (M, N) f32.  Inputs are padded
+    to block multiples (the pad is free at trace time and XLA folds the
+    slices); block sizes are clamped to the padded problem so small
+    problems use a single tile.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {y.shape}"
+
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+
+    nsteps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps=nsteps),
+        grid=(mp // bm, np_ // bn, nsteps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def matmul_bias_act(x: jax.Array, y: jax.Array, b: jax.Array,
+                    act: str = "relu6") -> jax.Array:
+    """Fused matmul + bias + activation used by every conv in the models."""
+    out = matmul(x, y) + b
+    if act == "relu6":
+        return jnp.clip(out, 0.0, 6.0)
+    if act == "relu":
+        return jnp.maximum(out, 0.0)
+    if act == "none":
+        return out
+    raise ValueError(f"unknown activation {act!r}")

@@ -1,0 +1,67 @@
+"""L1 SSD detection post-processing: Pallas box decode + jnp top-k.
+
+The box decode (anchor + delta -> corner boxes, score sigmoid) is a pure
+elementwise kernel — the VPU path — expressed as a single-block Pallas
+call.  The top-k selection stays in jnp (``lax.top_k`` lowers to an HLO
+sort, which the CPU PJRT client runs natively).
+
+Output layout mirrors the paper's Listing 2 decoder caps:
+  boxes  f32 (K, 4)   -- x0, y0, x1, y1 in [0, 1]
+  cls    f32 (K,)     -- class index (float for tensor-stream uniformity)
+  score  f32 (K,)     -- sigmoid class confidence
+  count  f32 (1,)     -- number of detections above threshold
+i.e. ``other/tensors,num_tensors=4,dimensions=4:K:1:1,K:1:1:1,...``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# SSD box-coder variances (standard TF object-detection values).
+VAR_CENTER = 0.1
+VAR_SIZE = 0.2
+
+
+def _decode_kernel(loc_ref, anchor_ref, box_ref):
+    loc = loc_ref[...]          # (A, 4): ty, tx, th, tw
+    anc = anchor_ref[...]       # (A, 4): cy, cx, h, w
+    cy = loc[:, 0] * VAR_CENTER * anc[:, 2] + anc[:, 0]
+    cx = loc[:, 1] * VAR_CENTER * anc[:, 3] + anc[:, 1]
+    h = jnp.exp(loc[:, 2] * VAR_SIZE) * anc[:, 2]
+    w = jnp.exp(loc[:, 3] * VAR_SIZE) * anc[:, 3]
+    box_ref[...] = jnp.stack(
+        [cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2], axis=-1)
+
+
+def decode_boxes(loc: jax.Array, anchors: jax.Array) -> jax.Array:
+    """Decode (A,4) location deltas against (A,4) center-size anchors."""
+    a = loc.shape[0]
+    return pl.pallas_call(
+        _decode_kernel,
+        out_shape=jax.ShapeDtypeStruct((a, 4), jnp.float32),
+        interpret=True,
+    )(loc, anchors)
+
+
+def select_topk(boxes: jax.Array, logits: jax.Array, *, k: int = 20,
+                threshold: float = 0.5):
+    """Top-k detections by best non-background class score.
+
+    boxes (A,4), logits (A,C) with class 0 = background.
+    Returns (boxes (k,4), cls (k,), score (k,), count (1,)).
+    """
+    probs = jax.nn.sigmoid(logits[:, 1:])           # (A, C-1)
+    best = jnp.max(probs, axis=-1)                  # (A,)
+    cls = jnp.argmax(probs, axis=-1).astype(jnp.float32) + 1.0
+    # argsort-based top-k: lowers to a plain HLO `sort`, which the
+    # xla_extension 0.5.1 text parser accepts (`topk` from lax.top_k is a
+    # newer op its parser rejects — see DESIGN.md).
+    idx = jnp.argsort(-best)[:k]
+    score = best[idx]
+    out_boxes = jnp.clip(boxes[idx], 0.0, 1.0)
+    out_cls = cls[idx]
+    count = jnp.sum((score > threshold).astype(jnp.float32),
+                    keepdims=True)
+    return out_boxes, out_cls, score, count

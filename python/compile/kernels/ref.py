@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here computes the same mathematical result as its Pallas
+counterpart using only stock jax/lax ops; pytest asserts allclose between
+the two across shape/dtype sweeps (python/tests/test_kernels.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x, w, b, *, stride=1, padding="SAME", act="relu6"):
+    out = lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b
+    return _act(out, act)
+
+
+def depthwise_conv3x3_ref(x, w, b, *, stride=1, act="relu6"):
+    c = x.shape[-1]
+    # HWIO with feature_group_count=C: (3, 3, 1, C)
+    wf = w.reshape(3, 3, 1, c)
+    out = lax.conv_general_dilated(
+        x, wf,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    ) + b
+    return _act(out, act)
+
+
+def decode_boxes_ref(loc, anchors, *, var_center=0.1, var_size=0.2):
+    cy = loc[:, 0] * var_center * anchors[:, 2] + anchors[:, 0]
+    cx = loc[:, 1] * var_center * anchors[:, 3] + anchors[:, 1]
+    h = jnp.exp(loc[:, 2] * var_size) * anchors[:, 2]
+    w = jnp.exp(loc[:, 3] * var_size) * anchors[:, 3]
+    return jnp.stack([cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2],
+                     axis=-1)
+
+
+def _act(out, act):
+    if act == "relu6":
+        return jnp.clip(out, 0.0, 6.0)
+    if act == "relu":
+        return jnp.maximum(out, 0.0)
+    if act == "none":
+        return out
+    raise ValueError(act)

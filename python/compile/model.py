@@ -1,0 +1,256 @@
+"""L2 models — the neural networks the among-device pipelines serve.
+
+Three models cover the paper's example applications (Listings 1/2, Fig 5):
+
+- ``detector``  — SSD-lite object detector, 300x300x3 RGB in [-1,1]
+                  (the ``ssd_mobilenet_v2`` analog from Listing 1), output
+                  = the Listing 2 decoder caps: boxes(K,4), cls(K),
+                  score(K), count(1) with K=20.
+- ``posenet``   — single-person pose estimation, 192x192x3 -> 17 keypoints
+                  (x, y, score) — the "AI exercise trainer" workload.
+- ``detect``    — tiny binary activation model, 96x96x3 -> 1 score — the
+                  Fig 5 "DETECT" gate on the mobile device.
+- ``imucls``    — multi-modal worker-action classifier, (128,9) IMU window
+                  -> 2 classes — the Fig 5 wearable-stream consumer.
+
+All convs run through the L1 Pallas kernels (kernels/matmul.py,
+kernels/conv.py); weights are seeded-random (no pretrained checkpoints
+offline — see DESIGN.md substitutions), passed as runtime *arguments* so
+the HLO text stays small and Rust feeds them from ``<model>.weights.bin``.
+
+Every model is ``fn(x, *flat_params) -> tuple(outputs)``; ``aot.py``
+flattens the param pytree in a deterministic order recorded in the
+manifest.
+"""
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.conv import conv2d, depthwise_conv3x3, pointwise_conv
+from .kernels.matmul import matmul
+from .kernels import postproc
+
+# ---------------------------------------------------------------------------
+# Parameter construction (seeded, deterministic order)
+# ---------------------------------------------------------------------------
+
+
+class ParamBank:
+    """Ordered, named parameter store with He-normal seeded init."""
+
+    def __init__(self, seed: int):
+        self.key = jax.random.PRNGKey(seed)
+        self.names: List[str] = []
+        self.values: List[np.ndarray] = []
+
+    def add(self, name: str, shape, fan_in: int | None = None,
+            zeros: bool = False) -> None:
+        if zeros:
+            v = np.zeros(shape, np.float32)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            fan = fan_in if fan_in is not None else int(np.prod(shape[:-1]))
+            std = math.sqrt(2.0 / max(fan, 1))
+            v = np.asarray(jax.random.normal(sub, shape, jnp.float32)) * std
+        self.names.append(name)
+        self.values.append(v.astype(np.float32))
+
+    def add_const(self, name: str, value: np.ndarray) -> None:
+        self.names.append(name)
+        self.values.append(np.asarray(value, np.float32))
+
+
+def _conv_params(bank: ParamBank, name: str, kh, kw, cin, cout):
+    bank.add(f"{name}.w", (kh, kw, cin, cout))
+    bank.add(f"{name}.b", (cout,), zeros=True)
+
+
+def _dw_params(bank: ParamBank, name: str, c):
+    bank.add(f"{name}.w", (3, 3, c))
+    bank.add(f"{name}.b", (c,), zeros=True)
+
+
+# ---------------------------------------------------------------------------
+# SSD-lite detector
+# ---------------------------------------------------------------------------
+
+DET_INPUT = (1, 300, 300, 3)
+DET_K = 20            # top-k detections (paper's decoder shows 20)
+DET_CLASSES = 21      # background + 20 (COCO-lite label set)
+DET_ANCHORS_PER_CELL = 6
+# backbone: stem s2 -> ds(32,s2) -> ds(64,s2) -> ds(128,s2) -> ds(128,s1)
+# 300 -> 150 -> 75 -> 38 -> 19 -> 19 feature grid
+DET_GRID = 19
+
+
+def make_anchors(grid: int = DET_GRID,
+                 n_per_cell: int = DET_ANCHORS_PER_CELL) -> np.ndarray:
+    """Center-size anchors (cy, cx, h, w) over a grid, SSD-style scales."""
+    scales = [0.2, 0.35, 0.5]
+    ratios = [1.0, 2.0]
+    boxes = []
+    for gy in range(grid):
+        for gx in range(grid):
+            cy = (gy + 0.5) / grid
+            cx = (gx + 0.5) / grid
+            for s in scales:
+                for r in ratios:
+                    boxes.append([cy, cx, s / math.sqrt(r),
+                                  s * math.sqrt(r)])
+    anchors = np.asarray(boxes, np.float32)
+    assert anchors.shape == (grid * grid * n_per_cell, 4)
+    return anchors
+
+
+def detector_params(seed: int = 42) -> ParamBank:
+    bank = ParamBank(seed)
+    _conv_params(bank, "stem", 3, 3, 3, 16)
+    for i, (cin, cout) in enumerate([(16, 32), (32, 64), (64, 128),
+                                     (128, 128)]):
+        _dw_params(bank, f"ds{i}.dw", cin)
+        _conv_params(bank, f"ds{i}.pw", 1, 1, cin, cout)
+    n_out = DET_ANCHORS_PER_CELL * (4 + DET_CLASSES)
+    _conv_params(bank, "head", 3, 3, 128, n_out)
+    bank.add_const("anchors", make_anchors())
+    return bank
+
+
+def detector_fn(x: jax.Array, params: Dict[str, jax.Array]):
+    """x: (1,300,300,3) f32 in [-1,1] -> (boxes, cls, score, count)."""
+    h = conv2d(x, params["stem.w"], params["stem.b"], stride=2)
+    strides = [2, 2, 2, 1]
+    for i, s in enumerate(strides):
+        h = depthwise_conv3x3(h, params[f"ds{i}.dw.w"],
+                              params[f"ds{i}.dw.b"], stride=s)
+        h = pointwise_conv(h, params[f"ds{i}.pw.w"], params[f"ds{i}.pw.b"])
+    raw = conv2d(h, params["head.w"], params["head.b"], stride=1,
+                 act="none")                      # (1, 19, 19, A*(4+C))
+    a = DET_ANCHORS_PER_CELL
+    raw = raw.reshape(DET_GRID * DET_GRID * a, 4 + DET_CLASSES)
+    loc, logits = raw[:, :4], raw[:, 4:]
+    boxes = postproc.decode_boxes(loc, params["anchors"])
+    return postproc.select_topk(boxes, logits, k=DET_K)
+
+
+# ---------------------------------------------------------------------------
+# Pose estimation (heatmap argmax)
+# ---------------------------------------------------------------------------
+
+POSE_INPUT = (1, 192, 192, 3)
+POSE_KP = 17
+POSE_HM = 24        # 192 -> 96 -> 48 -> 24 heatmap grid
+
+
+def posenet_params(seed: int = 43) -> ParamBank:
+    bank = ParamBank(seed)
+    _conv_params(bank, "stem", 3, 3, 3, 16)
+    for i, (cin, cout) in enumerate([(16, 32), (32, 64)]):
+        _dw_params(bank, f"ds{i}.dw", cin)
+        _conv_params(bank, f"ds{i}.pw", 1, 1, cin, cout)
+    _conv_params(bank, "hm", 3, 3, 64, POSE_KP)
+    return bank
+
+
+def posenet_fn(x: jax.Array, params: Dict[str, jax.Array]):
+    """x: (1,192,192,3) -> keypoints (17,3) as (x, y, score) in [0,1]."""
+    h = conv2d(x, params["stem.w"], params["stem.b"], stride=2)
+    for i in range(2):
+        h = depthwise_conv3x3(h, params[f"ds{i}.dw.w"],
+                              params[f"ds{i}.dw.b"], stride=2)
+        h = pointwise_conv(h, params[f"ds{i}.pw.w"], params[f"ds{i}.pw.b"])
+    hm = conv2d(h, params["hm.w"], params["hm.b"], stride=1, act="none")
+    hm = hm.reshape(POSE_HM * POSE_HM, POSE_KP)      # (HW, KP)
+    score = jax.nn.sigmoid(jnp.max(hm, axis=0))      # (KP,)
+    idx = jnp.argmax(hm, axis=0)                     # (KP,)
+    y = (idx // POSE_HM).astype(jnp.float32) / (POSE_HM - 1)
+    xx = (idx % POSE_HM).astype(jnp.float32) / (POSE_HM - 1)
+    return (jnp.stack([xx, y, score], axis=-1),)
+
+
+# ---------------------------------------------------------------------------
+# DETECT activation gate (Fig 5)
+# ---------------------------------------------------------------------------
+
+DETECT_INPUT = (1, 96, 96, 3)
+
+
+def detect_params(seed: int = 44) -> ParamBank:
+    bank = ParamBank(seed)
+    _conv_params(bank, "c0", 3, 3, 3, 8)
+    _conv_params(bank, "c1", 3, 3, 8, 16)
+    bank.add("fc.w", (16, 1))
+    bank.add("fc.b", (1,), zeros=True)
+    return bank
+
+
+def detect_fn(x: jax.Array, params: Dict[str, jax.Array]):
+    """x: (1,96,96,3) -> activation score (1,) in (0,1)."""
+    h = conv2d(x, params["c0.w"], params["c0.b"], stride=2)
+    h = conv2d(h, params["c1.w"], params["c1.b"], stride=2)
+    h = jnp.mean(h, axis=(1, 2))                     # (1, 16)
+    out = matmul(h, params["fc.w"]) + params["fc.b"]
+    return (jax.nn.sigmoid(out[0]),)
+
+
+# ---------------------------------------------------------------------------
+# IMU action classifier (Fig 5 wearable stream)
+# ---------------------------------------------------------------------------
+
+IMU_INPUT = (1, 128, 9)   # 128 samples x 9 IMU channels
+IMU_CLASSES = 2           # correct / incorrect assembly
+
+
+def imucls_params(seed: int = 45) -> ParamBank:
+    bank = ParamBank(seed)
+    bank.add("fc0.w", (128 * 9, 64))
+    bank.add("fc0.b", (64,), zeros=True)
+    bank.add("fc1.w", (64, IMU_CLASSES))
+    bank.add("fc1.b", (IMU_CLASSES,), zeros=True)
+    return bank
+
+
+def imucls_fn(x: jax.Array, params: Dict[str, jax.Array]):
+    """x: (1,128,9) -> class probabilities (2,)."""
+    h = x.reshape(1, 128 * 9)
+    h = jnp.maximum(matmul(h, params["fc0.w"]) + params["fc0.b"], 0.0)
+    logits = matmul(h, params["fc1.w"]) + params["fc1.b"]
+    return (jax.nn.softmax(logits[0]),)
+
+
+# ---------------------------------------------------------------------------
+# Registry consumed by aot.py
+# ---------------------------------------------------------------------------
+
+MODELS: Dict[str, dict] = {
+    "detector": dict(fn=detector_fn, params=detector_params,
+                     input_shape=DET_INPUT,
+                     outputs=[("boxes", (DET_K, 4)), ("cls", (DET_K,)),
+                              ("score", (DET_K,)), ("count", (1,))]),
+    "posenet": dict(fn=posenet_fn, params=posenet_params,
+                    input_shape=POSE_INPUT,
+                    outputs=[("keypoints", (POSE_KP, 3))]),
+    "detect": dict(fn=detect_fn, params=detect_params,
+                   input_shape=DETECT_INPUT,
+                   outputs=[("activation", (1,))]),
+    "imucls": dict(fn=imucls_fn, params=imucls_params,
+                   input_shape=IMU_INPUT,
+                   outputs=[("probs", (IMU_CLASSES,))]),
+}
+
+
+def build(name: str) -> Tuple[callable, ParamBank]:
+    """Return (closed_fn(x, *flat), bank) for a registry model."""
+    spec = MODELS[name]
+    bank: ParamBank = spec["params"]()
+    names = list(bank.names)
+    fn = spec["fn"]
+
+    def closed(x, *flat):
+        params = dict(zip(names, flat))
+        return tuple(fn(x, params))
+
+    return closed, bank

@@ -1,0 +1,250 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/strides; every property asserts allclose against
+kernels/ref.py.  interpret=True Pallas on CPU is deterministic, so tight
+tolerances hold.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv import conv2d, depthwise_conv3x3, pointwise_conv
+from compile.kernels.matmul import matmul, matmul_bias_act
+from compile.kernels import postproc
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def _rand(shape, seed, scale=1.0):
+    return (np.random.RandomState(seed).randn(*shape) * scale).astype(
+        np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 1, 1), (8, 8, 8), (128, 128, 128), (129, 127, 130),
+        (37, 65, 19), (1, 256, 10), (300, 3, 7), (256, 150, 64),
+    ])
+    def test_matches_ref(self, m, k, n):
+        x, y = _rand((m, k), m * 3 + k), _rand((k, n), n * 7 + k)
+        np.testing.assert_allclose(matmul(jnp.array(x), jnp.array(y)),
+                                   ref.matmul_ref(x, y),
+                                   rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 80), k=st.integers(1, 80), n=st.integers(1, 80),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref_hypothesis(self, m, k, n, seed):
+        x, y = _rand((m, k), seed), _rand((k, n), seed + 1)
+        np.testing.assert_allclose(matmul(jnp.array(x), jnp.array(y)),
+                                   ref.matmul_ref(x, y),
+                                   rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8),
+                                          (128, 128, 128), (64, 8, 32)])
+    def test_block_shapes_do_not_change_result(self, bm, bn, bk):
+        x, y = _rand((50, 70), 1), _rand((70, 30), 2)
+        out = matmul(jnp.array(x), jnp.array(y), bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y),
+                                    rtol=RTOL, atol=ATOL)
+
+    def test_zero_inputs(self):
+        x = np.zeros((12, 9), np.float32)
+        y = np.zeros((9, 5), np.float32)
+        assert np.all(np.asarray(matmul(jnp.array(x), jnp.array(y))) == 0)
+
+    def test_identity(self):
+        x = _rand((16, 16), 3)
+        eye = np.eye(16, dtype=np.float32)
+        np.testing.assert_allclose(matmul(jnp.array(x), jnp.array(eye)), x,
+                                   rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("act", ["relu", "relu6", "none"])
+    def test_bias_act(self, act):
+        x, y = _rand((9, 11), 4), _rand((11, 6), 5)
+        b = _rand((6,), 6)
+        out = matmul_bias_act(jnp.array(x), jnp.array(y), jnp.array(b), act)
+        want = ref._act(ref.matmul_ref(x, y) + b, act)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_bad_activation_raises(self):
+        x, y, b = _rand((2, 2), 0), _rand((2, 2), 1), _rand((2,), 2)
+        with pytest.raises(ValueError):
+            matmul_bias_act(jnp.array(x), jnp.array(y), jnp.array(b), "gelu")
+
+    def test_inner_dim_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            matmul(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col + Pallas matmul)
+# ---------------------------------------------------------------------------
+
+
+class TestConv2d:
+    @pytest.mark.parametrize("h,w,cin,cout,stride,padding", [
+        (8, 8, 3, 4, 1, "SAME"), (8, 8, 3, 4, 2, "SAME"),
+        (19, 19, 16, 8, 1, "SAME"), (20, 20, 8, 12, 2, "SAME"),
+        (9, 9, 4, 4, 1, "VALID"), (15, 11, 2, 6, 2, "VALID"),
+        (5, 5, 1, 1, 1, "SAME"),
+    ])
+    def test_matches_ref(self, h, w, cin, cout, stride, padding):
+        x = _rand((1, h, w, cin), h + w, 0.5)
+        wt = _rand((3, 3, cin, cout), cin * cout, 0.2)
+        b = _rand((cout,), cout, 0.1)
+        out = conv2d(jnp.array(x), jnp.array(wt), jnp.array(b),
+                     stride=stride, padding=padding)
+        want = ref.conv2d_ref(x, wt, b, stride=stride, padding=padding)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(h=st.integers(4, 24), w=st.integers(4, 24),
+           cin=st.integers(1, 8), cout=st.integers(1, 8),
+           stride=st.sampled_from([1, 2]), seed=st.integers(0, 999))
+    def test_matches_ref_hypothesis(self, h, w, cin, cout, stride, seed):
+        x = _rand((1, h, w, cin), seed, 0.5)
+        wt = _rand((3, 3, cin, cout), seed + 1, 0.2)
+        b = _rand((cout,), seed + 2, 0.1)
+        out = conv2d(jnp.array(x), jnp.array(wt), jnp.array(b),
+                     stride=stride)
+        want = ref.conv2d_ref(x, wt, b, stride=stride)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_kernel_5x5(self):
+        x = _rand((1, 12, 12, 3), 10, 0.5)
+        wt = _rand((5, 5, 3, 4), 11, 0.1)
+        b = np.zeros((4,), np.float32)
+        out = conv2d(jnp.array(x), jnp.array(wt), jnp.array(b))
+        want = ref.conv2d_ref(x, wt, b)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_batch_gt_one(self):
+        x = _rand((3, 10, 10, 2), 12, 0.5)
+        wt = _rand((3, 3, 2, 5), 13, 0.2)
+        b = _rand((5,), 14, 0.1)
+        out = conv2d(jnp.array(x), jnp.array(wt), jnp.array(b))
+        want = ref.conv2d_ref(x, wt, b)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_relu6_saturates(self):
+        x = np.full((1, 4, 4, 1), 10.0, np.float32)
+        wt = np.full((3, 3, 1, 1), 10.0, np.float32)
+        b = np.zeros((1,), np.float32)
+        out = np.asarray(conv2d(jnp.array(x), jnp.array(wt), jnp.array(b)))
+        assert out.max() <= 6.0
+
+
+class TestPointwiseConv:
+    @pytest.mark.parametrize("h,w,cin,cout", [
+        (19, 19, 16, 32), (1, 1, 4, 4), (38, 38, 8, 16)])
+    def test_matches_dense_conv(self, h, w, cin, cout):
+        x = _rand((1, h, w, cin), h * cin, 0.5)
+        wt = _rand((1, 1, cin, cout), cout, 0.2)
+        b = _rand((cout,), cout + 1, 0.1)
+        out = pointwise_conv(jnp.array(x), jnp.array(wt), jnp.array(b))
+        want = ref.conv2d_ref(x, wt, b, stride=1)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+
+class TestDepthwise:
+    @pytest.mark.parametrize("h,w,c,stride", [
+        (8, 8, 4, 1), (8, 8, 4, 2), (19, 19, 32, 1), (20, 20, 16, 2),
+        (7, 9, 3, 1), (150, 150, 16, 2), (5, 5, 1, 1),
+    ])
+    def test_matches_ref(self, h, w, c, stride):
+        x = _rand((1, h, w, c), h * c, 0.5)
+        wt = _rand((3, 3, c), c, 0.3)
+        b = _rand((c,), c + 1, 0.1)
+        out = depthwise_conv3x3(jnp.array(x), jnp.array(wt), jnp.array(b),
+                                stride=stride)
+        want = ref.depthwise_conv3x3_ref(x, wt, b, stride=stride)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(h=st.integers(3, 30), w=st.integers(3, 30), c=st.integers(1, 40),
+           stride=st.sampled_from([1, 2]), seed=st.integers(0, 999))
+    def test_matches_ref_hypothesis(self, h, w, c, stride, seed):
+        x = _rand((1, h, w, c), seed, 0.5)
+        wt = _rand((3, 3, c), seed + 1, 0.3)
+        b = _rand((c,), seed + 2, 0.1)
+        out = depthwise_conv3x3(jnp.array(x), jnp.array(wt), jnp.array(b),
+                                stride=stride)
+        want = ref.depthwise_conv3x3_ref(x, wt, b, stride=stride)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("bc", [1, 8, 32, 64])
+    def test_channel_block_invariance(self, bc):
+        x = _rand((1, 10, 10, 24), 20, 0.5)
+        wt = _rand((3, 3, 24), 21, 0.3)
+        b = _rand((24,), 22, 0.1)
+        out = depthwise_conv3x3(jnp.array(x), jnp.array(wt), jnp.array(b),
+                                bc=bc)
+        want = ref.depthwise_conv3x3_ref(x, wt, b)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# SSD post-processing
+# ---------------------------------------------------------------------------
+
+
+class TestPostproc:
+    def test_decode_matches_ref(self):
+        loc = _rand((100, 4), 30, 0.5)
+        anc = np.abs(_rand((100, 4), 31, 0.2)) + 0.1
+        out = postproc.decode_boxes(jnp.array(loc), jnp.array(anc))
+        want = ref.decode_boxes_ref(loc, anc)
+        np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+    def test_zero_deltas_recover_anchor_corners(self):
+        anc = np.array([[0.5, 0.5, 0.2, 0.4]], np.float32)  # cy,cx,h,w
+        out = np.asarray(postproc.decode_boxes(
+            jnp.zeros((1, 4)), jnp.array(anc)))
+        np.testing.assert_allclose(out[0], [0.3, 0.4, 0.7, 0.6], atol=1e-6)
+
+    def test_topk_orders_scores_descending(self):
+        logits = _rand((50, 5), 40)
+        boxes = np.abs(_rand((50, 4), 41, 0.2))
+        b, c, s, n = postproc.select_topk(jnp.array(boxes),
+                                          jnp.array(logits), k=10)
+        s = np.asarray(s)
+        assert s.shape == (10,)
+        assert np.all(np.diff(s) <= 1e-6)
+        assert np.asarray(b).shape == (10, 4)
+        assert np.asarray(c).shape == (10,)
+        assert 0 <= float(np.asarray(n)[0]) <= 10
+
+    def test_topk_boxes_clipped_to_unit(self):
+        logits = _rand((30, 4), 42)
+        boxes = _rand((30, 4), 43, 3.0)   # intentionally out of range
+        b, _, _, _ = postproc.select_topk(jnp.array(boxes),
+                                          jnp.array(logits), k=5)
+        b = np.asarray(b)
+        assert b.min() >= 0.0 and b.max() <= 1.0
+
+    def test_count_threshold(self):
+        # One anchor with a huge class-1 logit -> exactly 1 above 0.5.
+        logits = np.full((10, 3), -10.0, np.float32)
+        logits[4, 1] = 10.0
+        boxes = np.tile(np.array([[0.1, 0.1, 0.2, 0.2]], np.float32),
+                        (10, 1))
+        _, c, s, n = postproc.select_topk(jnp.array(boxes),
+                                          jnp.array(logits), k=5)
+        assert float(np.asarray(n)[0]) == 1.0
+        assert float(np.asarray(s)[0]) > 0.99
+        assert float(np.asarray(c)[0]) == 1.0

@@ -1,0 +1,109 @@
+"""L2 model contracts: shapes, ranges, determinism, anchor geometry."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _run(name, seed=7, scale=0.5):
+    closed, bank = M.build(name)
+    x = (np.random.RandomState(seed)
+         .randn(*M.MODELS[name]["input_shape"]).astype(np.float32) * scale)
+    outs = closed(jnp.array(x), *[jnp.array(v) for v in bank.values])
+    return [np.asarray(o) for o in outs]
+
+
+class TestRegistry:
+    def test_all_models_declared(self):
+        assert set(M.MODELS) == {"detector", "posenet", "detect", "imucls"}
+
+    @pytest.mark.parametrize("name", list(M.MODELS))
+    def test_output_shapes_match_declaration(self, name):
+        outs = _run(name)
+        declared = [shape for _, shape in M.MODELS[name]["outputs"]]
+        assert [o.shape for o in outs] == [tuple(s) for s in declared]
+
+    @pytest.mark.parametrize("name", list(M.MODELS))
+    def test_outputs_finite(self, name):
+        for o in _run(name):
+            assert np.all(np.isfinite(o))
+
+    @pytest.mark.parametrize("name", list(M.MODELS))
+    def test_param_bank_deterministic(self, name):
+        b1 = M.MODELS[name]["params"]()
+        b2 = M.MODELS[name]["params"]()
+        assert b1.names == b2.names
+        for v1, v2 in zip(b1.values, b2.values):
+            np.testing.assert_array_equal(v1, v2)
+
+
+class TestDetector:
+    def test_boxes_in_unit_square(self):
+        boxes, cls, score, count = _run("detector")
+        assert boxes.min() >= 0.0 and boxes.max() <= 1.0
+
+    def test_scores_sorted_and_probabilistic(self):
+        _, _, score, _ = _run("detector")
+        assert np.all(np.diff(score) <= 1e-6)
+        assert score.min() >= 0.0 and score.max() <= 1.0
+
+    def test_classes_in_label_range(self):
+        _, cls, _, _ = _run("detector")
+        assert cls.min() >= 1.0 and cls.max() <= M.DET_CLASSES - 1 + 1
+
+    def test_count_bounded_by_k(self):
+        _, _, _, count = _run("detector")
+        assert 0.0 <= count[0] <= M.DET_K
+
+
+class TestAnchors:
+    def test_anchor_count(self):
+        anc = M.make_anchors()
+        assert anc.shape == (M.DET_GRID ** 2 * M.DET_ANCHORS_PER_CELL, 4)
+
+    def test_anchor_centers_cover_grid(self):
+        anc = M.make_anchors()
+        cy, cx = anc[:, 0], anc[:, 1]
+        assert cy.min() > 0 and cy.max() < 1
+        assert cx.min() > 0 and cx.max() < 1
+        # first cell center at (0.5/grid)
+        np.testing.assert_allclose(cy[0], 0.5 / M.DET_GRID, rtol=1e-6)
+
+    def test_anchor_sizes_positive(self):
+        anc = M.make_anchors()
+        assert anc[:, 2:].min() > 0
+
+
+class TestPosenet:
+    def test_keypoints_in_unit_square(self):
+        (kp,) = _run("posenet")
+        assert kp[:, 0].min() >= 0 and kp[:, 0].max() <= 1
+        assert kp[:, 1].min() >= 0 and kp[:, 1].max() <= 1
+
+    def test_scores_are_sigmoid(self):
+        (kp,) = _run("posenet")
+        assert kp[:, 2].min() >= 0 and kp[:, 2].max() <= 1
+
+
+class TestDetectGate:
+    def test_activation_is_probability(self):
+        (act,) = _run("detect")
+        assert act.shape == (1,)
+        assert 0.0 <= act[0] <= 1.0
+
+    def test_different_inputs_different_scores(self):
+        a = _run("detect", seed=1)[0][0]
+        b = _run("detect", seed=2)[0][0]
+        assert a != b
+
+
+class TestImuCls:
+    def test_probs_sum_to_one(self):
+        (p,) = _run("imucls")
+        np.testing.assert_allclose(p.sum(), 1.0, rtol=1e-5)
+
+    def test_probs_nonnegative(self):
+        (p,) = _run("imucls")
+        assert p.min() >= 0.0

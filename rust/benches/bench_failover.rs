@@ -1,0 +1,75 @@
+//! E9 — R4 failover: two MQTT-hybrid servers on one operation; the
+//! primary dies mid-stream; measure the service gap until the client's
+//! next response arrives from the backup.
+
+use std::time::{Duration, Instant};
+
+use edgepipe::bench;
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::elements::appsink_channel;
+use edgepipe::mqtt::Broker;
+use edgepipe::pipeline::parser;
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn main() {
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    println!("# bench_failover (E9, R4)");
+
+    let mut rows = Vec::new();
+    for run in 0..3 {
+        let (p1, p2) = (free_port(), free_port());
+        let mk = |pair: &str, port: u16| {
+            format!(
+                "tensor_query_serversrc operation=fo{run} port={port} pair-id={pair}-{run} \
+                   protocol=mqtt-hybrid broker={b} server-id={pair}-{run} ! \
+                 tensor_filter framework=passthrough ! \
+                 tensor_query_serversink operation=fo{run} pair-id={pair}-{run}"
+            )
+        };
+        let s1 = parser::parse(&mk("a", p1), &registry, &env).unwrap().start().unwrap();
+        let s2 = parser::parse(&mk("b", p2), &registry, &env).unwrap().start().unwrap();
+        std::thread::sleep(Duration::from_millis(500));
+
+        let client = parser::parse(
+            &format!(
+                "videotestsrc width=160 height=120 framerate=30 num-buffers=240 ! \
+                 tensor_converter ! queue leaky=2 max-size-buffers=2 ! \
+                 tensor_query_client operation=fo{run} protocol=mqtt-hybrid broker={b} timeout-ms=1000 ! \
+                 appsink channel=fo{run}"
+            ),
+            &registry,
+            &env,
+        )
+        .unwrap()
+        .start()
+        .unwrap();
+        let rx = appsink_channel(&format!("fo{run}")).unwrap();
+
+        // Warm up: 20 responses, then kill the currently-used server.
+        for _ in 0..20 {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let kill_at = Instant::now();
+        let _ = s1.stop(Duration::from_secs(2));
+        // Next response that arrives AFTER the kill marks recovery.
+        let gap = loop {
+            let _buf = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let dt = kill_at.elapsed();
+            if dt > Duration::from_millis(5) {
+                break dt;
+            }
+        };
+        rows.push(vec![format!("run {run}"), format!("{:.0}", gap.as_secs_f64() * 1000.0)]);
+        while rx.recv_timeout(Duration::from_secs(5)).is_ok() {}
+        let _ = client.stop(Duration::from_secs(5));
+        let _ = s2.stop(Duration::from_secs(5));
+    }
+    bench::table("Failover service gap", &["run", "gap ms"], &rows);
+    println!("\n(Gap = dead-request timeout + rediscovery + reconnect; bounded by timeout-ms=1000.)");
+}

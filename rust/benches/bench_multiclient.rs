@@ -1,0 +1,82 @@
+//! E10 — multi-client scaling (§3: "having multiple clients ...
+//! over-complicates pipelines" with raw TCP; trivial with query elements).
+//!
+//! One passthrough query server, 1..8 concurrent clients at VGA/30 Hz;
+//! reports aggregate and per-client fps plus fairness (min/max client).
+
+use std::time::Duration;
+
+use edgepipe::bench;
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::metrics;
+use edgepipe::pipeline::parser;
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn main() {
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    let secs = bench::secs();
+    println!("# bench_multiclient (E10) — VGA @30Hz per client, {secs}s");
+    let mut rows = Vec::new();
+    for n in [1usize, 2, 4, 8] {
+        metrics::global().reset();
+        let port = free_port();
+        let pair = format!("mc{n}");
+        let server = parser::parse(
+            &format!(
+                "tensor_query_serversrc operation={pair} port={port} pair-id={pair} ! \
+                 tensor_filter framework=passthrough ! \
+                 tensor_query_serversink operation={pair} pair-id={pair}"
+            ),
+            &registry,
+            &env,
+        )
+        .unwrap()
+        .start()
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        let nbuf = secs * 30;
+        let t0 = std::time::Instant::now();
+        let clients: Vec<_> = (0..n)
+            .map(|i| {
+                parser::parse(
+                    &format!(
+                        "videotestsrc width=640 height=480 framerate=30 num-buffers={nbuf} ! \
+                         tensor_converter ! queue leaky=2 max-size-buffers=2 ! \
+                         tensor_query_client operation={pair} server=127.0.0.1:{port} timeout-ms=20000 ! \
+                         appsink name={pair}c{i}"
+                    ),
+                    &registry,
+                    &env,
+                )
+                .unwrap()
+                .start()
+                .unwrap()
+            })
+            .collect();
+        for c in clients {
+            let _ = c.wait_eos(Duration::from_secs(secs * 8 + 60));
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let counts: Vec<u64> =
+            (0..n).map(|i| metrics::global().counter(&format!("appsink.{pair}c{i}")).count()).collect();
+        let total: u64 = counts.iter().sum();
+        let min = *counts.iter().min().unwrap() as f64 / elapsed;
+        let max = *counts.iter().max().unwrap() as f64 / elapsed;
+        let _ = server.stop(Duration::from_secs(5));
+        rows.push(vec![
+            format!("{n}"),
+            format!("{:.1}", total as f64 / elapsed),
+            format!("{:.1}", total as f64 / elapsed / n as f64),
+            format!("{:.1} / {:.1}", min, max),
+        ]);
+    }
+    bench::table(
+        "Multi-client query scaling",
+        &["clients", "aggregate fps", "per-client fps", "min/max client fps"],
+        &rows,
+    );
+}

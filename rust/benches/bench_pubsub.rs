@@ -1,0 +1,114 @@
+//! E4 — Figure 6 Case A / Figure 7 left: stream pub/sub, MQTT vs ZeroMQ.
+//!
+//! Device A publishes a live video stream at L/M/H bandwidth (60 Hz);
+//! Device B subscribes. MQTT goes through the in-repo broker; the
+//! ZeroMQ-analog is a direct brokerless connection. We report delivered
+//! fps, data rate, CPU% and RSS growth, plus the MQTT/ZMQ ratio the paper
+//! plots. Expected shape: parity at L, MQTT degradation at M/H (broker
+//! copy + slow-consumer drops).
+
+use std::time::Duration;
+
+use edgepipe::bench::{self, RunStats, CASES, FPS};
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::metrics;
+use edgepipe::mqtt::Broker;
+use edgepipe::pipeline::parser;
+
+fn run_one(transport: &str, w: u32, h: u32, secs: u64, registry: &Registry, env: &PipelineEnv) -> RunStats {
+    metrics::global().reset();
+    let nbuf = secs * FPS as u64;
+    let sink_name = format!("bps_{transport}_{w}");
+    let (pub_desc, sub_desc, _broker) = match transport {
+        "mqtt" => {
+            let broker = Broker::start("127.0.0.1:0").unwrap();
+            let b = broker.addr().to_string();
+            (
+                format!(
+                    "videotestsrc width={w} height={h} framerate={FPS} pattern=smpte num-buffers={nbuf} ! \
+                     tensor_converter ! mqttsink pub-topic=bench/cam broker={b} sync=false"
+                ),
+                format!(
+                    "mqttsrc sub-topic=bench/cam broker={b} sync=false ! tensor_converter ! appsink name={sink_name}"
+                ),
+                Some(broker),
+            )
+        }
+        "zmq" => {
+            let addr = {
+                let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                l.local_addr().unwrap().to_string()
+            };
+            (
+                format!(
+                    "videotestsrc width={w} height={h} framerate={FPS} pattern=smpte num-buffers={nbuf} ! \
+                     tensor_converter ! zmqsink bind={addr} topic=bench"
+                ),
+                format!("zmqsrc connect={addr} topic=bench ! tensor_converter ! appsink name={sink_name}"),
+                None,
+            )
+        }
+        _ => unreachable!(),
+    };
+
+    bench::measured(|| {
+        let sub = parser::parse(&sub_desc, registry, env).unwrap().start().unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        let t0 = std::time::Instant::now();
+        let publ = parser::parse(&pub_desc, registry, env).unwrap().start().unwrap();
+        let _ = publ.wait_eos(Duration::from_secs(secs * 4 + 30));
+        let (count, bytes) = bench::drain_counter(&format!("appsink.{sink_name}"), Duration::from_millis(300));
+        let elapsed = t0.elapsed().as_secs_f64() - 0.3;
+        let _ = sub.stop(Duration::from_secs(5));
+        (count, bytes, elapsed)
+    })
+}
+
+fn main() {
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    let secs = bench::secs();
+    let runs = bench::runs();
+    println!("# bench_pubsub (E4, Fig 7 left) — {secs}s x {runs} runs, offered {FPS} Hz");
+
+    let mut rows = Vec::new();
+    let mut ratio_rows = Vec::new();
+    for (label, w, h) in CASES {
+        let mut per_transport = Vec::new();
+        for transport in ["zmq", "mqtt"] {
+            let mut best = RunStats::default();
+            for _ in 0..runs {
+                let s = run_one(transport, w, h, secs, &registry, &env);
+                if s.fps() > best.fps() {
+                    best = s;
+                }
+            }
+            rows.push(vec![
+                label.to_string(),
+                transport.to_string(),
+                format!("{:.1}", best.fps()),
+                format!("{:.1}", best.mbps()),
+                format!("{:.0}", best.cpu_pct),
+                format!("{}", best.rss_growth_kb / 1024),
+            ]);
+            per_transport.push(best);
+        }
+        let (z, m) = (&per_transport[0], &per_transport[1]);
+        ratio_rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", m.fps() / z.fps().max(1e-9)),
+            format!("{:.2}", m.cpu_pct / z.cpu_pct.max(1e-9)),
+            format!("{:.2}", (m.rss_growth_kb.max(1)) as f64 / (z.rss_growth_kb.max(1)) as f64),
+        ]);
+    }
+    bench::table(
+        "Pub/Sub absolute",
+        &["case", "transport", "fps", "MB/s", "cpu %", "rss +MiB"],
+        &rows,
+    );
+    bench::table(
+        "Pub/Sub — MQTT normalized by ZeroMQ (Fig 7 left)",
+        &["case", "throughput ratio", "cpu ratio", "mem-growth ratio"],
+        &ratio_rows,
+    );
+}

@@ -1,0 +1,102 @@
+//! E5 — Figure 6 Case B / Figure 7 right: query offloading,
+//! MQTT-hybrid vs TCP-raw.
+//!
+//! The server runs a passthrough filter so the measurement isolates the
+//! transport (the paper's point: MQTT-hybrid keeps MQTT's discovery but
+//! moves data onto direct TCP, eliminating the broker from the data
+//! path). Expected shape: MQTT-hybrid ≈ TCP on all metrics.
+
+use std::time::Duration;
+
+use edgepipe::bench::{self, RunStats, CASES, FPS};
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::metrics;
+use edgepipe::mqtt::Broker;
+use edgepipe::pipeline::parser;
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+fn run_one(proto: &str, w: u32, h: u32, secs: u64, registry: &Registry, env: &PipelineEnv) -> (RunStats, f64) {
+    metrics::global().reset();
+    let nbuf = secs * FPS as u64;
+    let port = free_port();
+    let pair = format!("bq-{proto}-{w}");
+    let sink_name = format!("bq_{proto}_{w}");
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    let (server_proto, client_tail) = match proto {
+        "tcp" => ("tcp", format!("server=127.0.0.1:{port}")),
+        "hybrid" => ("mqtt-hybrid", format!("protocol=mqtt-hybrid broker={b}")),
+        _ => unreachable!(),
+    };
+    let server_desc = format!(
+        "tensor_query_serversrc operation=bench/{pair} port={port} pair-id={pair} \
+           protocol={server_proto} broker={b} server-id={pair} ! \
+         tensor_filter framework=passthrough ! \
+         tensor_query_serversink operation=bench/{pair} pair-id={pair}"
+    );
+    let client_desc = format!(
+        "videotestsrc width={w} height={h} framerate={FPS} pattern=smpte num-buffers={nbuf} ! \
+         tensor_converter ! queue leaky=2 max-size-buffers=4 ! \
+         tensor_query_client name=qc operation=bench/{pair} timeout-ms=20000 {client_tail} ! \
+         appsink name={sink_name}"
+    );
+    let stats = bench::measured(|| {
+        let server = parser::parse(&server_desc, registry, env).unwrap().start().unwrap();
+        std::thread::sleep(Duration::from_millis(400));
+        let t0 = std::time::Instant::now();
+        let client = parser::parse(&client_desc, registry, env).unwrap().start().unwrap();
+        let _ = client.wait_eos(Duration::from_secs(secs * 6 + 60));
+        let elapsed = t0.elapsed().as_secs_f64();
+        let c = metrics::global().counter(&format!("appsink.{sink_name}"));
+        let out = (c.count(), c.bytes(), elapsed);
+        let _ = server.stop(Duration::from_secs(5));
+        out
+    });
+    let rtt_ms = metrics::global().summary("query.qc.rtt_us").map(|s| s.mean / 1000.0).unwrap_or(0.0);
+    (stats, rtt_ms)
+}
+
+fn main() {
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    let secs = bench::secs();
+    println!("# bench_query (E5, Fig 7 right) — {secs}s, offered {FPS} Hz, passthrough server");
+
+    let mut rows = Vec::new();
+    let mut ratio_rows = Vec::new();
+    for (label, w, h) in CASES {
+        let mut per = Vec::new();
+        for proto in ["tcp", "hybrid"] {
+            let (s, rtt) = run_one(proto, w, h, secs, &registry, &env);
+            rows.push(vec![
+                label.to_string(),
+                proto.to_string(),
+                format!("{:.1}", s.fps()),
+                format!("{:.2}", rtt),
+                format!("{:.0}", s.cpu_pct),
+                format!("{}", s.rss_growth_kb / 1024),
+            ]);
+            per.push((s, rtt));
+        }
+        let ((t, trtt), (hb, hrtt)) = (&per[0], &per[1]);
+        ratio_rows.push(vec![
+            label.to_string(),
+            format!("{:.2}", hb.fps() / t.fps().max(1e-9)),
+            format!("{:.2}", hrtt / trtt.max(1e-9)),
+            format!("{:.2}", hb.cpu_pct / t.cpu_pct.max(1e-9)),
+        ]);
+    }
+    bench::table(
+        "Query absolute",
+        &["case", "protocol", "fps", "rtt ms", "cpu %", "rss +MiB"],
+        &rows,
+    );
+    bench::table(
+        "Query — MQTT-hybrid normalized by TCP-raw (Fig 7 right)",
+        &["case", "throughput ratio", "rtt ratio", "cpu ratio"],
+        &ratio_rows,
+    );
+}

@@ -1,0 +1,58 @@
+//! E8 — sparse tensor streams (§3/§4.1): the compression clients asked
+//! for on language/speech model tensors.
+//!
+//! Sweeps density for a 100k-element f32 tensor and reports COO size,
+//! zlib size, and encode/decode throughput vs the dense baseline.
+
+use std::time::Instant;
+
+use edgepipe::bench;
+use edgepipe::serial::compress::{compress, decompress, Codec};
+use edgepipe::tensor::{f32_to_bytes, sparse, DType, TensorInfo};
+use edgepipe::util::rng::XorShift64;
+
+fn main() {
+    let n = 100_000usize;
+    let info = TensorInfo::new(DType::F32, &[n as u32]).unwrap();
+    let mut rng = XorShift64::new(42);
+    println!("# bench_sparse (E8) — {n} f32 elements");
+    let mut rows = Vec::new();
+    for density_pct in [0.5f64, 1.0, 5.0, 10.0, 25.0, 50.0, 100.0] {
+        let vals: Vec<f32> = (0..n)
+            .map(|_| if rng.bool((density_pct / 100.0) as f32) { rng.normal() } else { 0.0 })
+            .collect();
+        let dense = f32_to_bytes(&vals);
+
+        let t0 = Instant::now();
+        let coo = sparse::encode(&info, &dense).unwrap();
+        let enc_t = t0.elapsed();
+        let t1 = Instant::now();
+        let (_, roundtrip) = sparse::decode(&coo).unwrap();
+        let dec_t = t1.elapsed();
+        assert_eq!(roundtrip, dense);
+
+        let t2 = Instant::now();
+        let z = compress(Codec::Zlib, &dense).unwrap();
+        let z_t = t2.elapsed();
+        assert_eq!(decompress(Codec::Zlib, &z).unwrap(), dense);
+
+        rows.push(vec![
+            format!("{density_pct}%"),
+            format!("{}", dense.len()),
+            format!("{} ({:.2}x)", coo.len(), dense.len() as f64 / coo.len() as f64),
+            format!("{} ({:.2}x)", z.len(), dense.len() as f64 / z.len() as f64),
+            format!("{:.1}", dense.len() as f64 / enc_t.as_secs_f64() / 1e6),
+            format!("{:.1}", dense.len() as f64 / dec_t.as_secs_f64() / 1e6),
+            format!("{:.1}", dense.len() as f64 / z_t.as_secs_f64() / 1e6),
+        ]);
+    }
+    bench::table(
+        "Sparse (COO) vs zlib on f32 tensors",
+        &["density", "dense B", "COO B (ratio)", "zlib B (ratio)", "COO enc MB/s", "COO dec MB/s", "zlib enc MB/s"],
+        &rows,
+    );
+    println!(
+        "\nCOO break-even density for f32: {:.0}% (4-byte index + 4-byte value per nnz).",
+        sparse::breakeven_density(DType::F32) * 100.0
+    );
+}

@@ -1,0 +1,88 @@
+//! Bench harness support (no criterion offline): run transport pipelines
+//! for a fixed wall-clock window and report the paper's §5.4 metrics —
+//! throughput (fps), CPU usage, memory — as markdown tables.
+
+use std::time::Duration;
+
+use crate::metrics::{self, CpuSampler};
+
+/// The paper's three input-stream bandwidths (Fig 6): QQVGA / VGA / FullHD
+/// RGB at 60 Hz.
+pub const CASES: [(&str, u32, u32); 3] =
+    [("L (QQVGA 160x120)", 160, 120), ("M (VGA 640x480)", 640, 480), ("H (FullHD 1920x1080)", 1920, 1080)];
+
+pub const FPS: u32 = 60;
+
+/// Seconds per measurement (paper: 30 s x 5 runs; scaled for CI via
+/// EDGEPIPE_BENCH_SECS).
+pub fn secs() -> u64 {
+    std::env::var("EDGEPIPE_BENCH_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(5)
+}
+
+/// Runs per case (EDGEPIPE_BENCH_RUNS; default 1).
+pub fn runs() -> u64 {
+    std::env::var("EDGEPIPE_BENCH_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// One measured transport run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub delivered: u64,
+    pub offered: u64,
+    pub bytes: u64,
+    pub secs: f64,
+    pub cpu_pct: f64,
+    pub rss_growth_kb: i64,
+}
+
+impl RunStats {
+    pub fn fps(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.delivered as f64 / self.secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mbps(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.bytes as f64 / self.secs / 1e6
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Measure around a closure: CPU% and RSS growth of this process.
+pub fn measured<F: FnOnce() -> (u64, u64, f64)>(f: F) -> RunStats {
+    let rss0 = metrics::current_rss_kb().unwrap_or(0) as i64;
+    let mut cpu = CpuSampler::start();
+    let (delivered, bytes, secs) = f();
+    let cpu_pct = cpu.sample();
+    let rss1 = metrics::current_rss_kb().unwrap_or(0) as i64;
+    RunStats { delivered, offered: 0, bytes, secs, cpu_pct, rss_growth_kb: rss1 - rss0 }
+}
+
+/// Print a markdown table.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    println!("| {} |", headers.join(" | "));
+    println!("|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        println!("| {} |", r.join(" | "));
+    }
+}
+
+/// Wait for a named appsink counter to settle, returning (count, bytes).
+pub fn drain_counter(name: &str, settle: Duration) -> (u64, u64) {
+    let c = metrics::global().counter(name);
+    let mut last = c.count();
+    loop {
+        std::thread::sleep(settle);
+        let now = c.count();
+        if now == last {
+            return (now, c.bytes());
+        }
+        last = now;
+    }
+}

@@ -1,0 +1,117 @@
+//! Stream buffers: a zero-copy payload (`Arc<[u8]>`) plus timestamps and
+//! transport metadata.
+//!
+//! Payloads are reference-counted so `tee` fan-out and in-process pub/sub
+//! never copy frame data — the hot path is allocation-free apart from the
+//! producing element's single allocation per frame.
+
+use std::sync::Arc;
+
+use crate::clock::Ns;
+
+/// Metadata attached to a buffer as it crosses elements/devices.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Meta {
+    /// Query protocol: which client this buffer belongs to
+    /// (`tensor_query_serversrc` tags it; `tensor_query_serversink` routes
+    /// on it — §4.2.2).
+    pub client_id: Option<u64>,
+    /// Per-client request sequence number for response matching.
+    pub seq: Option<u64>,
+    /// Publisher's pipeline base-time in universal ns (§4.2.3 sync).
+    pub remote_base_universal: Option<Ns>,
+    /// Ground-truth capture instant in the publisher's universal clock
+    /// (stamped by transport sinks; used by mux sync accounting).
+    pub capture_universal: Option<Ns>,
+    /// Arbitrary source tag (element name of origin device).
+    pub origin: Option<Arc<str>>,
+}
+
+/// A frame travelling through a pipeline.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    /// Presentation timestamp: running time of the producing pipeline.
+    pub pts: Option<Ns>,
+    /// Frame duration (1/fps for live video).
+    pub duration: Option<Ns>,
+    pub data: Arc<[u8]>,
+    pub meta: Meta,
+}
+
+impl Buffer {
+    pub fn new(data: Vec<u8>) -> Self {
+        Self { pts: None, duration: None, data: data.into(), meta: Meta::default() }
+    }
+
+    pub fn with_pts(mut self, pts: Ns) -> Self {
+        self.pts = Some(pts);
+        self
+    }
+
+    pub fn with_duration(mut self, d: Ns) -> Self {
+        self.duration = Some(d);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Replace the payload, keeping timestamps/meta (transform elements).
+    pub fn map_payload(&self, data: Vec<u8>) -> Buffer {
+        Buffer { pts: self.pts, duration: self.duration, data: data.into(), meta: self.meta.clone() }
+    }
+}
+
+impl PartialEq for Buffer {
+    fn eq(&self, other: &Self) -> bool {
+        self.pts == other.pts
+            && self.duration == other.duration
+            && self.data == other.data
+            && self.meta == other.meta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_sets_fields() {
+        let b = Buffer::new(vec![1, 2, 3]).with_pts(5).with_duration(7);
+        assert_eq!(b.pts, Some(5));
+        assert_eq!(b.duration, Some(7));
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+    }
+
+    #[test]
+    fn clone_shares_payload() {
+        let b = Buffer::new(vec![0u8; 1024]);
+        let c = b.clone();
+        assert!(Arc::ptr_eq(&b.data, &c.data));
+    }
+
+    #[test]
+    fn map_payload_keeps_meta() {
+        let mut b = Buffer::new(vec![1]).with_pts(9);
+        b.meta.client_id = Some(42);
+        let m = b.map_payload(vec![2, 3]);
+        assert_eq!(m.pts, Some(9));
+        assert_eq!(m.meta.client_id, Some(42));
+        assert_eq!(&m.data[..], &[2, 3]);
+    }
+
+    #[test]
+    fn equality_covers_payload() {
+        let a = Buffer::new(vec![1, 2]).with_pts(1);
+        let b = Buffer::new(vec![1, 2]).with_pts(1);
+        let c = Buffer::new(vec![9]).with_pts(1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

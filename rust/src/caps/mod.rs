@@ -1,0 +1,313 @@
+//! Stream capabilities (GSTCAP analog): a media type plus key=value
+//! fields, e.g. `video/x-raw,width=300,height=300,format=RGB` or
+//! `other/tensors,format=flexible`.
+//!
+//! Caps travel in-band (a sticky `Item::Caps` precedes buffers) and across
+//! devices (mqtt/query transports carry the caps string so the receiving
+//! pipeline can negotiate — §4.2.1).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::tensor::{Format, TensorsInfo};
+use crate::util::{Error, Result};
+
+/// Media caps: `media` type plus ordered fields.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Caps {
+    pub media: String,
+    pub fields: BTreeMap<String, String>,
+}
+
+pub const MEDIA_VIDEO: &str = "video/x-raw";
+pub const MEDIA_TENSORS: &str = "other/tensors";
+pub const MEDIA_FLEXBUF: &str = "other/flexbuf";
+pub const MEDIA_ANY: &str = "ANY";
+
+impl Caps {
+    pub fn new(media: impl Into<String>) -> Self {
+        Self { media: media.into(), fields: BTreeMap::new() }
+    }
+
+    /// Wildcard caps compatible with everything (source-agnostic sinks).
+    pub fn any() -> Self {
+        Self::new(MEDIA_ANY)
+    }
+
+    pub fn is_any(&self) -> bool {
+        self.media == MEDIA_ANY
+    }
+
+    pub fn with(mut self, key: impl Into<String>, value: impl fmt::Display) -> Self {
+        self.fields.insert(key.into(), value.to_string());
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u32(&self, key: &str) -> Option<u32> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Parse a caps string. Values may be quoted to protect commas
+    /// (`dimensions="4:20:1:1,20:1:1:1"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.is_empty() {
+            return Err(Error::Caps("empty caps string".into()));
+        }
+        let mut parts = split_unquoted(s, ',');
+        let media = parts.remove(0).trim().to_string();
+        if media.is_empty() || media.contains('=') {
+            return Err(Error::Caps(format!("bad media type in `{s}`")));
+        }
+        let mut caps = Caps::new(media);
+        for p in parts {
+            let p = p.trim();
+            if p.is_empty() {
+                continue;
+            }
+            let (k, v) = p
+                .split_once('=')
+                .ok_or_else(|| Error::Caps(format!("field `{p}` missing `=`")))?;
+            let v = v.trim().trim_matches('"');
+            caps.fields.insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(caps)
+    }
+
+    /// Two caps are compatible if media types match (or either is ANY) and
+    /// every field present in BOTH has the same value.
+    pub fn compatible(&self, other: &Caps) -> bool {
+        if self.is_any() || other.is_any() {
+            return true;
+        }
+        if self.media != other.media {
+            return false;
+        }
+        for (k, v) in &self.fields {
+            if let Some(ov) = other.fields.get(k) {
+                if ov != v {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Intersection: union of fields from both (must be compatible).
+    pub fn intersect(&self, other: &Caps) -> Result<Caps> {
+        if !self.compatible(other) {
+            return Err(Error::Caps(format!("`{self}` not compatible with `{other}`")));
+        }
+        if self.is_any() {
+            return Ok(other.clone());
+        }
+        let mut out = self.clone();
+        for (k, v) in &other.fields {
+            out.fields.entry(k.clone()).or_insert_with(|| v.clone());
+        }
+        Ok(out)
+    }
+
+    // ---- typed helpers -------------------------------------------------
+
+    /// Caps for a raw video stream (format fixed to RGB byte-planes).
+    pub fn video(width: u32, height: u32, fps: u32) -> Caps {
+        Caps::new(MEDIA_VIDEO)
+            .with("format", "RGB")
+            .with("width", width)
+            .with("height", height)
+            .with("framerate", format!("{fps}/1"))
+    }
+
+    /// Caps for a static tensors stream.
+    pub fn tensors(info: &TensorsInfo) -> Caps {
+        Caps::new(MEDIA_TENSORS)
+            .with("format", Format::Static.name())
+            .with("num_tensors", info.len())
+            .with("dimensions", info.dimensions_string())
+            .with("types", info.types_string())
+    }
+
+    /// Caps for a flexible tensors stream (dynamic schema).
+    pub fn tensors_flexible() -> Caps {
+        Caps::new(MEDIA_TENSORS).with("format", Format::Flexible.name())
+    }
+
+    /// Caps for a sparse tensors stream.
+    pub fn tensors_sparse() -> Caps {
+        Caps::new(MEDIA_TENSORS).with("format", Format::Sparse.name())
+    }
+
+    pub fn is_tensors(&self) -> bool {
+        self.media == MEDIA_TENSORS
+    }
+
+    pub fn is_video(&self) -> bool {
+        self.media == MEDIA_VIDEO
+    }
+
+    /// Tensor format of an `other/tensors` caps (default static).
+    pub fn tensor_format(&self) -> Result<Format> {
+        if !self.is_tensors() {
+            return Err(Error::Caps(format!("`{}` is not other/tensors", self.media)));
+        }
+        match self.get("format") {
+            None => Ok(Format::Static),
+            Some(f) => Format::parse(f),
+        }
+    }
+
+    /// Extract the static TensorsInfo from caps fields.
+    pub fn tensors_info(&self) -> Result<TensorsInfo> {
+        let num = self
+            .get_u32("num_tensors")
+            .ok_or_else(|| Error::Caps(format!("`{self}` missing num_tensors")))? as usize;
+        let dims = self.get("dimensions").ok_or_else(|| Error::Caps("missing dimensions".into()))?;
+        let types = self.get("types").ok_or_else(|| Error::Caps("missing types".into()))?;
+        TensorsInfo::from_caps_fields(num, dims, types)
+    }
+
+    /// Video geometry (width, height, fps).
+    pub fn video_geometry(&self) -> Result<(u32, u32, u32)> {
+        if !self.is_video() {
+            return Err(Error::Caps(format!("`{}` is not video/x-raw", self.media)));
+        }
+        let w = self.get_u32("width").ok_or_else(|| Error::Caps("missing width".into()))?;
+        let h = self.get_u32("height").ok_or_else(|| Error::Caps("missing height".into()))?;
+        let fps = self
+            .get("framerate")
+            .and_then(|f| f.split('/').next())
+            .and_then(|n| n.parse().ok())
+            .unwrap_or(30);
+        Ok((w, h, fps))
+    }
+}
+
+impl fmt::Display for Caps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.media)?;
+        for (k, v) in &self.fields {
+            if v.contains(',') {
+                write!(f, ",{k}=\"{v}\"")?;
+            } else {
+                write!(f, ",{k}={v}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Split on `sep` outside of double quotes.
+fn split_unquoted(s: &str, sep: char) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut quoted = false;
+    for c in s.chars() {
+        if c == '"' {
+            quoted = !quoted;
+            cur.push(c);
+        } else if c == sep && !quoted {
+            out.push(std::mem::take(&mut cur));
+        } else {
+            cur.push(c);
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DType, TensorInfo};
+
+    #[test]
+    fn parse_simple_video_caps() {
+        let c = Caps::parse("video/x-raw, width=300, height=300, format=RGB").unwrap();
+        assert_eq!(c.media, "video/x-raw");
+        assert_eq!(c.get_u32("width"), Some(300));
+        assert_eq!(c.get("format"), Some("RGB"));
+    }
+
+    #[test]
+    fn parse_quoted_listing2_caps() {
+        let s = r#"other/tensors,num_tensors=4,dimensions="4:20:1:1,20:1:1:1,20:1:1:1,1:1:1:1",types="float32,float32,float32,float32""#;
+        let c = Caps::parse(s).unwrap();
+        let info = c.tensors_info().unwrap();
+        assert_eq!(info.len(), 4);
+        assert_eq!(info.tensors[0].dims, [4, 20, 1, 1]);
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let mut ti = TensorsInfo::default();
+        ti.push(TensorInfo::new(DType::F32, &[4, 20]).unwrap()).unwrap();
+        ti.push(TensorInfo::new(DType::F32, &[20]).unwrap()).unwrap();
+        let c = Caps::tensors(&ti);
+        let c2 = Caps::parse(&c.to_string()).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(c2.tensors_info().unwrap(), ti);
+    }
+
+    #[test]
+    fn compatibility_rules() {
+        let a = Caps::parse("video/x-raw,width=300").unwrap();
+        let b = Caps::parse("video/x-raw,width=300,height=200").unwrap();
+        let c = Caps::parse("video/x-raw,width=640").unwrap();
+        let t = Caps::parse("other/tensors").unwrap();
+        assert!(a.compatible(&b));
+        assert!(b.compatible(&a));
+        assert!(!a.compatible(&c));
+        assert!(!a.compatible(&t));
+        assert!(Caps::any().compatible(&t));
+        assert!(t.compatible(&Caps::any()));
+    }
+
+    #[test]
+    fn intersect_unions_fields() {
+        let a = Caps::parse("video/x-raw,width=300").unwrap();
+        let b = Caps::parse("video/x-raw,height=200").unwrap();
+        let i = a.intersect(&b).unwrap();
+        assert_eq!(i.get_u32("width"), Some(300));
+        assert_eq!(i.get_u32("height"), Some(200));
+    }
+
+    #[test]
+    fn intersect_incompatible_errors() {
+        let a = Caps::parse("video/x-raw,width=300").unwrap();
+        let c = Caps::parse("video/x-raw,width=640").unwrap();
+        assert!(a.intersect(&c).is_err());
+    }
+
+    #[test]
+    fn tensor_format_defaults_static() {
+        let c = Caps::parse("other/tensors,num_tensors=1,dimensions=3:4:1:1,types=uint8").unwrap();
+        assert_eq!(c.tensor_format().unwrap(), Format::Static);
+        assert_eq!(Caps::tensors_flexible().tensor_format().unwrap(), Format::Flexible);
+    }
+
+    #[test]
+    fn video_geometry_parses_framerate() {
+        let c = Caps::video(640, 480, 60);
+        assert_eq!(c.video_geometry().unwrap(), (640, 480, 60));
+    }
+
+    #[test]
+    fn bad_caps_rejected() {
+        assert!(Caps::parse("").is_err());
+        assert!(Caps::parse("width=3").is_err());
+        assert!(Caps::parse("video/x-raw,badfield").is_err());
+    }
+
+    #[test]
+    fn non_tensor_caps_tensor_helpers_error() {
+        let v = Caps::video(10, 10, 30);
+        assert!(v.tensor_format().is_err());
+        assert!(v.tensors_info().is_err());
+        assert!(Caps::tensors_flexible().video_geometry().is_err());
+    }
+}

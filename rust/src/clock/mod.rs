@@ -1,0 +1,148 @@
+//! Pipeline clocks: monotonic running-time, universal (wall) time, and the
+//! base-time arithmetic the paper's timestamp-synchronization mechanism
+//! (§4.2.3, Fig 4) relies on.
+//!
+//! Terminology follows GStreamer:
+//! - *clock time*  — monotonic time since an arbitrary epoch (process start)
+//! - *base time*   — the clock time at which the pipeline went PLAYING
+//! - *running time* = clock time − base time; buffer PTS are running time
+//! - *universal time* — wall clock (UNIX epoch ns), used to exchange
+//!   base-times between devices (corrected by an NTP offset, see `ntp`).
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Nanoseconds; the unit of all PTS values in the crate.
+pub type Ns = u64;
+
+pub const SECOND: Ns = 1_000_000_000;
+pub const MSECOND: Ns = 1_000_000;
+pub const USECOND: Ns = 1_000;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic clock time (ns since process start). Never goes backwards.
+pub fn clock_time() -> Ns {
+    epoch().elapsed().as_nanos() as Ns
+}
+
+/// Universal (wall) time: ns since UNIX epoch, as i128-safe u64.
+pub fn universal_time() -> Ns {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos() as Ns
+}
+
+/// A pipeline clock frozen at PLAYING: converts between running time and
+/// universal time for cross-device timestamp correction.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineClock {
+    /// Monotonic clock time when the pipeline went PLAYING.
+    pub base_clock: Ns,
+    /// Universal time at the same instant.
+    pub base_universal: Ns,
+}
+
+impl PipelineClock {
+    /// Capture "now" as the pipeline base time.
+    pub fn start() -> Self {
+        Self { base_clock: clock_time(), base_universal: universal_time() }
+    }
+
+    /// Running time of "now" for this pipeline.
+    pub fn running_time(&self) -> Ns {
+        clock_time().saturating_sub(self.base_clock)
+    }
+
+    /// Universal timestamp for a buffer PTS (running time) in this pipeline.
+    pub fn pts_to_universal(&self, pts: Ns) -> Ns {
+        self.base_universal + pts
+    }
+
+    /// Convert a remote buffer's (remote base universal, pts) into a PTS on
+    /// *this* pipeline's running clock, applying the estimated clock offset
+    /// between the hosts (`remote_universal + offset ≈ local_universal`).
+    ///
+    /// This is the receiver-side correction of §4.2.3: the publisher sends
+    /// its base-time converted to universal time plus relative buffer
+    /// timestamps, the subscriber re-bases them on its own base-time.
+    pub fn remote_pts_to_local(&self, remote_base_universal: Ns, pts: Ns, offset_ns: i64) -> Ns {
+        let remote_universal = remote_base_universal as i128 + pts as i128 + offset_ns as i128;
+        let local = remote_universal - self.base_universal as i128;
+        if local < 0 {
+            0
+        } else {
+            local as Ns
+        }
+    }
+}
+
+/// Sleep until the given running time on this pipeline clock (frame pacing
+/// for live sources).
+pub fn sleep_until(clock: &PipelineClock, target_running: Ns) {
+    let now = clock.running_time();
+    if target_running > now {
+        std::thread::sleep(Duration::from_nanos(target_running - now));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let a = clock_time();
+        let b = clock_time();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn running_time_progresses() {
+        let c = PipelineClock::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.running_time() >= MSECOND);
+    }
+
+    #[test]
+    fn pts_universal_roundtrip() {
+        let c = PipelineClock::start();
+        let pts = 123 * MSECOND;
+        let uni = c.pts_to_universal(pts);
+        assert_eq!(uni - c.base_universal, pts);
+    }
+
+    #[test]
+    fn remote_rebase_identity_same_host() {
+        // Same base universal and zero offset -> PTS passes through.
+        let c = PipelineClock::start();
+        let pts = 55 * MSECOND;
+        let local = c.remote_pts_to_local(c.base_universal, pts, 0);
+        assert_eq!(local, pts);
+    }
+
+    #[test]
+    fn remote_rebase_applies_offset() {
+        let c = PipelineClock::start();
+        let pts = 10 * MSECOND;
+        let skewed = c.remote_pts_to_local(c.base_universal, pts, 5 * MSECOND as i64);
+        assert_eq!(skewed, 15 * MSECOND);
+    }
+
+    #[test]
+    fn remote_rebase_clamps_negative() {
+        let c = PipelineClock::start();
+        // Remote base far in the past with huge negative offset.
+        let local = c.remote_pts_to_local(0, 0, -1);
+        assert_eq!(local, 0);
+    }
+
+    #[test]
+    fn sleep_until_waits() {
+        let c = PipelineClock::start();
+        let target = c.running_time() + 3 * MSECOND;
+        sleep_until(&c, target);
+        assert!(c.running_time() >= target);
+    }
+}

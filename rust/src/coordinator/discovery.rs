@@ -1,0 +1,293 @@
+//! Capability-based service discovery over MQTT (R3) with liveness via
+//! last-will (R4).
+//!
+//! Query servers advertise on the retained topic
+//! `edge/query/<operation>/<server_id>` — payload is a flexbuf map with
+//! the direct-connect endpoint plus the "additional specifications"
+//! the paper mentions (model name/version, workload status). The broker
+//! clears the ad via last-will when a server dies, so subscribed clients
+//! fail over without polling.
+//!
+//! Topic filters let a client pick among compatible servers: subscribing
+//! `edge/query/objdetect/#` sees every object-detection server
+//! (§4.2.2's `/objdetect/#` example).
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::mqtt::{ClientOptions, LastWill, MqttClient};
+use crate::serial::flexbuf::{self, Value};
+use crate::util::{Error, Result};
+
+pub const QUERY_TOPIC_PREFIX: &str = "edge/query";
+
+/// A server advertisement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceAd {
+    pub operation: String,
+    pub server_id: String,
+    pub host: String,
+    pub port: u16,
+    /// Model identifier ("mobilenet-ssd v2") — client-visible capability.
+    pub model: String,
+    /// Advertised workload (0.0 = idle); selection prefers lower.
+    pub load: f64,
+}
+
+impl ServiceAd {
+    pub fn topic(&self) -> String {
+        format!("{QUERY_TOPIC_PREFIX}/{}/{}", self.operation, self.server_id)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        flexbuf::encode(&flexbuf::map(vec![
+            ("host", Value::Str(self.host.clone())),
+            ("port", Value::UInt(self.port as u64)),
+            ("model", Value::Str(self.model.clone())),
+            ("load", Value::Float(self.load)),
+        ]))
+    }
+
+    pub fn decode(operation: &str, server_id: &str, payload: &[u8]) -> Result<ServiceAd> {
+        let v = flexbuf::decode(payload)?;
+        Ok(ServiceAd {
+            operation: operation.to_string(),
+            server_id: server_id.to_string(),
+            host: v.field("host")?.as_str()?.to_string(),
+            port: v.field("port")?.as_u64()? as u16,
+            model: v.field("model")?.as_str()?.to_string(),
+            load: v.field("load").and_then(|f| f.as_f64()).unwrap_or(0.0),
+        })
+    }
+
+    pub fn endpoint(&self) -> String {
+        format!("{}:{}", self.host, self.port)
+    }
+}
+
+/// Parse `edge/query/<operation>/<server_id>` into its parts.
+pub fn split_topic(topic: &str) -> Option<(String, String)> {
+    let rest = topic.strip_prefix(QUERY_TOPIC_PREFIX)?.strip_prefix('/')?;
+    let (op, id) = rest.rsplit_once('/')?;
+    if op.is_empty() || id.is_empty() {
+        return None;
+    }
+    Some((op.to_string(), id.to_string()))
+}
+
+/// Publish a retained advertisement (server side). The MQTT session should
+/// carry a matching last-will (see [`will_for`]) so death clears it.
+pub fn advertise(client: &MqttClient, ad: &ServiceAd) -> Result<()> {
+    client.publish(&ad.topic(), &ad.encode(), true)
+}
+
+/// Clear an advertisement explicitly (clean shutdown).
+pub fn clear_advertisement(client: &MqttClient, ad: &ServiceAd) -> Result<()> {
+    client.publish(&ad.topic(), &[], true)
+}
+
+/// Last-will that clears the retained ad on unclean death.
+pub fn will_for(ad: &ServiceAd) -> LastWill {
+    LastWill { topic: ad.topic(), payload: Vec::new(), qos: 0, retain: true }
+}
+
+/// Client options for an advertising server.
+pub fn server_client_options(server_id: &str, ad: &ServiceAd) -> ClientOptions {
+    ClientOptions {
+        client_id: format!("edgepipe-srv-{server_id}"),
+        keep_alive_secs: 2, // fast death detection -> fast failover
+        will: Some(will_for(ad)),
+        channel_depth: 64,
+    }
+}
+
+/// Watches `edge/query/<operation>/#` and maintains the live server set.
+pub struct AdWatcher {
+    servers: Arc<Mutex<BTreeMap<String, ServiceAd>>>,
+    #[allow(dead_code)]
+    client: MqttClient,
+    rx_done: Receiver<()>,
+}
+
+impl AdWatcher {
+    /// Subscribe and start watching. `operation` may contain MQTT
+    /// wildcards itself (e.g. `objdetect/#`).
+    pub fn watch(broker: &str, operation: &str) -> Result<AdWatcher> {
+        let client = MqttClient::connect(
+            broker,
+            ClientOptions {
+                client_id: format!("edgepipe-watch-{}-{}", operation.replace('/', "_"), std::process::id()),
+                keep_alive_secs: 5,
+                will: None,
+                channel_depth: 64,
+            },
+        )?;
+        let servers: Arc<Mutex<BTreeMap<String, ServiceAd>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let s2 = servers.clone();
+        // An operation may itself end in a wildcard (`objdetect/#`).
+        let filter = if operation.ends_with('#') || operation.ends_with('+') {
+            format!("{QUERY_TOPIC_PREFIX}/{operation}")
+        } else {
+            format!("{QUERY_TOPIC_PREFIX}/{operation}/#")
+        };
+        let (tx_done, rx_done) = std::sync::mpsc::channel();
+        client.subscribe_cb(&filter, move |msg| {
+            let _ = &tx_done; // keep sender alive with the subscription
+            if let Some((op, id)) = split_topic(&msg.topic) {
+                let mut s = s2.lock().unwrap();
+                if msg.payload.is_empty() {
+                    s.remove(&id);
+                } else if let Ok(ad) = ServiceAd::decode(&op, &id, &msg.payload) {
+                    s.insert(id, ad);
+                }
+            }
+        })?;
+        Ok(AdWatcher { servers, client, rx_done })
+    }
+
+    /// Current live servers, sorted by (load, id).
+    pub fn servers(&self) -> Vec<ServiceAd> {
+        let mut v: Vec<ServiceAd> = self.servers.lock().unwrap().values().cloned().collect();
+        v.sort_by(|a, b| a.load.partial_cmp(&b.load).unwrap().then(a.server_id.cmp(&b.server_id)));
+        v
+    }
+
+    /// Pick the best server, excluding given ids (failover path).
+    pub fn pick(&self, exclude: &[String]) -> Option<ServiceAd> {
+        self.servers().into_iter().find(|s| !exclude.contains(&s.server_id))
+    }
+
+    /// Block until at least one server is visible.
+    pub fn wait_any(&self, timeout: Duration) -> Option<ServiceAd> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(ad) = self.pick(&[]) {
+                return Some(ad);
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+            // The rx_done channel never fires; it just sleeps with wakeups.
+            let _ = self.rx_done.recv_timeout(Duration::from_millis(20));
+        }
+    }
+}
+
+/// Validate an operation name (becomes a topic level).
+pub fn validate_operation(op: &str) -> Result<()> {
+    if op.is_empty() || op.contains(['+', '#', '\0']) {
+        return Err(Error::Mqtt(format!("bad operation name `{op}`")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mqtt::Broker;
+
+    fn ad(op: &str, id: &str, port: u16, load: f64) -> ServiceAd {
+        ServiceAd {
+            operation: op.into(),
+            server_id: id.into(),
+            host: "127.0.0.1".into(),
+            port,
+            model: "ssd-lite".into(),
+            load,
+        }
+    }
+
+    #[test]
+    fn ad_encode_decode_roundtrip() {
+        let a = ad("objdetect", "srv1", 4001, 0.25);
+        let b = ServiceAd::decode("objdetect", "srv1", &a.encode()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.endpoint(), "127.0.0.1:4001");
+    }
+
+    #[test]
+    fn topic_split() {
+        assert_eq!(
+            split_topic("edge/query/objdetect/srv1"),
+            Some(("objdetect".into(), "srv1".into()))
+        );
+        assert_eq!(
+            split_topic("edge/query/objdetect/ssd/srv1"),
+            Some(("objdetect/ssd".into(), "srv1".into()))
+        );
+        assert_eq!(split_topic("other/query/x/y"), None);
+    }
+
+    #[test]
+    fn watcher_sees_advertised_servers() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let a = ad("objdetect", "srv1", 4001, 0.5);
+        let srv = MqttClient::connect(&addr, server_client_options("srv1", &a)).unwrap();
+        advertise(&srv, &a).unwrap();
+        let watcher = AdWatcher::watch(&addr, "objdetect").unwrap();
+        let found = watcher.wait_any(Duration::from_secs(3)).unwrap();
+        assert_eq!(found.server_id, "srv1");
+    }
+
+    #[test]
+    fn watcher_prefers_lower_load() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let c = MqttClient::connect(&addr, ClientOptions::default()).unwrap();
+        advertise(&c, &ad("op", "busy", 1, 0.9)).unwrap();
+        advertise(&c, &ad("op", "idle", 2, 0.1)).unwrap();
+        let watcher = AdWatcher::watch(&addr, "op").unwrap();
+        watcher.wait_any(Duration::from_secs(3)).unwrap();
+        std::thread::sleep(Duration::from_millis(200)); // both ads land
+        assert_eq!(watcher.pick(&[]).unwrap().server_id, "idle");
+        assert_eq!(watcher.pick(&["idle".into()]).unwrap().server_id, "busy");
+    }
+
+    #[test]
+    fn unclean_server_death_clears_ad() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let a = ad("op", "dying", 3, 0.0);
+        let srv = MqttClient::connect(&addr, server_client_options("dying", &a)).unwrap();
+        advertise(&srv, &a).unwrap();
+        let watcher = AdWatcher::watch(&addr, "op").unwrap();
+        watcher.wait_any(Duration::from_secs(3)).unwrap();
+        // Unclean death: raw socket shutdown, no DISCONNECT.
+        srv.inner_stream_for_test().unwrap().shutdown(std::net::Shutdown::Both).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline {
+            if watcher.servers().is_empty() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        panic!("ad not cleared after unclean death: {:?}", watcher.servers());
+    }
+
+    #[test]
+    fn clean_clear_removes_ad() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let a = ad("op", "s", 5, 0.0);
+        let c = MqttClient::connect(&addr, ClientOptions::default()).unwrap();
+        advertise(&c, &a).unwrap();
+        let watcher = AdWatcher::watch(&addr, "op").unwrap();
+        watcher.wait_any(Duration::from_secs(3)).unwrap();
+        clear_advertisement(&c, &a).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while Instant::now() < deadline && !watcher.servers().is_empty() {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        assert!(watcher.servers().is_empty());
+    }
+
+    #[test]
+    fn operation_validation() {
+        assert!(validate_operation("objdetect/ssd").is_ok());
+        assert!(validate_operation("").is_err());
+        assert!(validate_operation("a#b").is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Among-device coordination: capability-based service discovery,
+//! server selection and failover (R3/R4) — the layer the query elements
+//! and NNStreamer-Edge analog build on.
+
+pub mod discovery;
+
+pub use discovery::{advertise, clear_advertisement, AdWatcher, ServiceAd};

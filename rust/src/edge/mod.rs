@@ -1,0 +1,290 @@
+//! EdgePipe-Edge — the NNStreamer-Edge analog (§4.3): a lightweight
+//! library for devices that cannot afford the full pipeline framework
+//! (microcontrollers, proprietary middleware, other pipeline frameworks).
+//!
+//! It deliberately depends ONLY on the transport substrate (mqtt client,
+//! serial wire format, tensor metadata) — never on `element`/`pipeline` —
+//! mirroring NNStreamer-Edge's independence from GStreamer. Three modules
+//! as in the paper:
+//!
+//! - [`EdgeSensor`]       — publish tensor streams (the "edge_sensor"
+//!                           module, e.g. remote cameras/sensors)
+//! - [`EdgeOutput`]        — subscribe to published streams ("edge_output")
+//! - [`EdgeQueryClient`]  — offload inference ("edge_query_client")
+
+use std::net::TcpStream;
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::clock::PipelineClock;
+use crate::coordinator::discovery::AdWatcher;
+use crate::mqtt::{ClientOptions, MqttClient};
+use crate::serial::wire;
+use crate::serial::Codec;
+use crate::tensor::TensorsInfo;
+use crate::util::{Error, Result};
+
+/// Publish tensor frames to a topic, compatible with `mqttsrc`.
+pub struct EdgeSensor {
+    client: MqttClient,
+    topic: String,
+    caps: Caps,
+    clock: PipelineClock,
+    codec: Codec,
+    seq: u64,
+}
+
+impl EdgeSensor {
+    /// Connect and declare the stream type this sensor publishes.
+    pub fn connect(broker: &str, topic: &str, info: &TensorsInfo) -> Result<EdgeSensor> {
+        let client = MqttClient::connect(
+            broker,
+            ClientOptions {
+                client_id: format!("edge-sensor-{}-{}", topic.replace('/', "_"), std::process::id()),
+                keep_alive_secs: 10,
+                will: None,
+                channel_depth: 16,
+            },
+        )?;
+        Ok(EdgeSensor {
+            client,
+            topic: topic.to_string(),
+            caps: Caps::tensors(info),
+            clock: PipelineClock::start(),
+            codec: Codec::None,
+            seq: 0,
+        })
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// Publish one tensor frame (payload must match the declared info).
+    pub fn publish(&mut self, payload: &[u8]) -> Result<()> {
+        let info = self.caps.tensors_info()?;
+        if payload.len() != info.frame_size() {
+            return Err(Error::Tensor(format!(
+                "edge_sensor: payload {} != declared frame size {}",
+                payload.len(),
+                info.frame_size()
+            )));
+        }
+        let mut buf = Buffer::new(payload.to_vec()).with_pts(self.clock.running_time());
+        buf.meta.remote_base_universal = Some(self.clock.base_universal);
+        self.seq += 1;
+        buf.meta.seq = Some(self.seq);
+        let frame = wire::encode(&buf, Some(&self.caps), self.codec)?;
+        self.client.publish(&self.topic, &frame, false)
+    }
+
+    pub fn close(self) {
+        self.client.disconnect();
+    }
+}
+
+/// Subscribe to a published stream without a pipeline.
+pub struct EdgeOutput {
+    rx: Receiver<crate::mqtt::Message>,
+    client: MqttClient,
+}
+
+/// One received frame.
+#[derive(Debug, Clone)]
+pub struct EdgeFrame {
+    pub buffer: Buffer,
+    pub caps: Option<Caps>,
+}
+
+impl EdgeOutput {
+    pub fn connect(broker: &str, topic: &str) -> Result<EdgeOutput> {
+        let client = MqttClient::connect(
+            broker,
+            ClientOptions {
+                client_id: format!("edge-output-{}-{}", topic.replace('/', "_"), std::process::id()),
+                keep_alive_secs: 10,
+                will: None,
+                channel_depth: 256,
+            },
+        )?;
+        let rx = client.subscribe(topic)?;
+        Ok(EdgeOutput { rx, client })
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv(&self, timeout: Duration) -> Result<EdgeFrame> {
+        let msg = self
+            .rx
+            .recv_timeout(timeout)
+            .map_err(|_| Error::Transport("edge_output: receive timeout".into()))?;
+        let (buffer, caps) = wire::decode(&msg.payload)?;
+        Ok(EdgeFrame { buffer, caps })
+    }
+
+    pub fn close(self) {
+        self.client.disconnect();
+    }
+}
+
+/// Inference offloading without a pipeline (TCP-raw or discovered).
+pub struct EdgeQueryClient {
+    conn: TcpStream,
+    caps: Option<Caps>,
+    seq: u64,
+}
+
+impl EdgeQueryClient {
+    /// Connect directly to a query server (`tensor_query_serversrc`).
+    pub fn connect(server: &str, timeout: Duration) -> Result<EdgeQueryClient> {
+        let conn = TcpStream::connect(server)
+            .map_err(|e| Error::Transport(format!("edge query connect {server}: {e}")))?;
+        conn.set_nodelay(true).ok();
+        conn.set_read_timeout(Some(timeout))?;
+        Ok(EdgeQueryClient { conn, caps: None, seq: 0 })
+    }
+
+    /// Discover a server for `operation` via the broker, then connect.
+    pub fn discover(broker: &str, operation: &str, timeout: Duration) -> Result<EdgeQueryClient> {
+        let watcher = AdWatcher::watch(broker, operation)?;
+        let ad = watcher
+            .wait_any(timeout)
+            .ok_or_else(|| Error::Transport(format!("no servers for `{operation}`")))?;
+        Self::connect(&ad.endpoint(), timeout)
+    }
+
+    /// Declare the input stream type (sent with each request).
+    pub fn set_caps(&mut self, info: &TensorsInfo) {
+        self.caps = Some(Caps::tensors(info));
+    }
+
+    /// Synchronous inference: send input payload, return output payload.
+    pub fn query(&mut self, payload: &[u8]) -> Result<Vec<u8>> {
+        self.seq += 1;
+        let mut buf = Buffer::new(payload.to_vec());
+        buf.meta.seq = Some(self.seq);
+        let frame = wire::encode(&buf, self.caps.as_ref(), Codec::None)?;
+        wire::write_frame(&mut self.conn, &frame)?;
+        let resp = wire::read_frame(&mut self.conn)?;
+        let (out, _caps) = wire::decode(&resp)?;
+        Ok(out.data.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::elements::{MqttSrc, QueryServerSink, QueryServerSrc, TensorFilter};
+    use crate::mqtt::Broker;
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{DType, TensorInfo};
+
+    fn info4() -> TensorsInfo {
+        TensorsInfo::one(TensorInfo::new(DType::U8, &[4]).unwrap())
+    }
+
+    #[test]
+    fn edge_sensor_to_pipeline_mqttsrc() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let baddr = broker.addr().to_string();
+        // Pipeline subscriber: mqttsrc -> appsink
+        let mut p = Pipeline::new();
+        let (sink, rx) = AppSink::new(8);
+        let s = p.add("sub", Box::new(MqttSrc::new(&baddr, "sensor/acc"))).unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, k).unwrap();
+        let running = p.start().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        // Edge side: no pipeline, just the library.
+        let mut sensor = EdgeSensor::connect(&baddr, "sensor/acc", &info4()).unwrap();
+        sensor.publish(&[1, 2, 3, 4]).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+        assert_eq!(&out.data[..], &[1, 2, 3, 4]);
+        assert!(out.pts.is_some());
+        sensor.close();
+        let _ = running.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn edge_sensor_validates_payload_size() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let mut sensor =
+            EdgeSensor::connect(&broker.addr().to_string(), "t", &info4()).unwrap();
+        assert!(sensor.publish(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn pipeline_to_edge_output() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let baddr = broker.addr().to_string();
+        let output = EdgeOutput::connect(&baddr, "feed/+").unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        let mut sensor = EdgeSensor::connect(&baddr, "feed/a", &info4()).unwrap();
+        sensor.publish(&[9, 9, 9, 9]).unwrap();
+        let f = output.recv(Duration::from_secs(3)).unwrap();
+        assert_eq!(&f.buffer.data[..], &[9, 9, 9, 9]);
+        assert!(f.caps.unwrap().is_tensors());
+        sensor.close();
+        output.close();
+    }
+
+    #[test]
+    fn edge_query_client_against_pipeline_server() {
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let mut p = Pipeline::new();
+        let src = QueryServerSrc::new("edgeop")
+            .with_pair_id("edgeop-lib")
+            .with_bind(&format!("127.0.0.1:{port}"));
+        let f = TensorFilter::custom(Box::new(|b: &Buffer| {
+            Ok(b.data.iter().rev().copied().collect())
+        }));
+        let s = p.add("ss", Box::new(src)).unwrap();
+        let fi = p.add("f", Box::new(f)).unwrap();
+        let k = p.add("sk", Box::new(QueryServerSink::new("edgeop-lib"))).unwrap();
+        p.link(s, fi).unwrap();
+        p.link(fi, k).unwrap();
+        let running = p.start().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+
+        let mut qc =
+            EdgeQueryClient::connect(&format!("127.0.0.1:{port}"), Duration::from_secs(3)).unwrap();
+        qc.set_caps(&info4());
+        let out = qc.query(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(out, vec![4, 3, 2, 1]);
+        let _ = running.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn edge_query_discovery() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let baddr = broker.addr().to_string();
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let mut p = Pipeline::new();
+        let src = QueryServerSrc::new("edgedisc")
+            .with_pair_id("edgedisc-lib")
+            .with_bind(&format!("127.0.0.1:{port}"))
+            .with_hybrid(&baddr);
+        let f = TensorFilter::passthrough();
+        let s = p.add("ss", Box::new(src)).unwrap();
+        let fi = p.add("f", Box::new(f)).unwrap();
+        let k = p.add("sk", Box::new(QueryServerSink::new("edgedisc-lib"))).unwrap();
+        p.link(s, fi).unwrap();
+        p.link(fi, k).unwrap();
+        let running = p.start().unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+
+        let mut qc = EdgeQueryClient::discover(&baddr, "edgedisc", Duration::from_secs(3)).unwrap();
+        qc.set_caps(&info4());
+        assert_eq!(qc.query(&[5, 6, 7, 8]).unwrap(), vec![5, 6, 7, 8]);
+        let _ = running.stop(Duration::from_secs(5));
+    }
+}

@@ -1,0 +1,377 @@
+//! Bounded multi-pad link queues with leaky policies.
+//!
+//! One [`Inbox`] per element covers all its sink pads under a single lock
+//! so a consumer can wait on "any pad has data" (needed by mux/compositor)
+//! while producers get per-pad bounded queues with backpressure or leak.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::element::Item;
+use crate::util::{Error, Result};
+
+/// Overflow policy of a link queue (GStreamer `queue leaky=` analog).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Leaky {
+    /// Block the producer (backpressure).
+    #[default]
+    No,
+    /// Drop the incoming buffer (leaky=upstream / 1).
+    Upstream,
+    /// Drop the oldest queued buffer (leaky=downstream / 2 — the paper's
+    /// `queue leaky=2` for live streams).
+    Downstream,
+}
+
+impl Leaky {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "no" | "0" => Leaky::No,
+            "upstream" | "1" => Leaky::Upstream,
+            "downstream" | "2" => Leaky::Downstream,
+            other => return Err(Error::Parse(format!("unknown leaky mode `{other}`"))),
+        })
+    }
+}
+
+/// Queue configuration for one sink pad.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueCfg {
+    /// Max buffered *buffers* (caps/EOS don't count against the limit).
+    pub capacity: usize,
+    pub leaky: Leaky,
+}
+
+impl Default for QueueCfg {
+    fn default() -> Self {
+        Self { capacity: 16, leaky: Leaky::No }
+    }
+}
+
+struct PadQueue {
+    items: VecDeque<Item>,
+    buffered: usize, // count of Item::Buffer in `items`
+    eos: bool,
+    cfg: QueueCfg,
+    dropped: u64,
+}
+
+struct Shared {
+    pads: Vec<PadQueue>,
+    closed: bool,
+    rr_next: usize,
+}
+
+/// Multi-pad bounded inbox.
+pub struct Inbox {
+    shared: Mutex<Shared>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl Inbox {
+    pub fn new(cfgs: Vec<QueueCfg>) -> Self {
+        let pads = cfgs
+            .into_iter()
+            .map(|cfg| PadQueue { items: VecDeque::new(), buffered: 0, eos: false, cfg, dropped: 0 })
+            .collect();
+        Inbox { shared: Mutex::new(Shared { pads, closed: false, rr_next: 0 }), not_empty: Condvar::new(), not_full: Condvar::new() }
+    }
+
+    pub fn n_pads(&self) -> usize {
+        self.shared.lock().unwrap().pads.len()
+    }
+
+    /// Push an item into a pad queue, applying the pad's overflow policy
+    /// to buffers. Caps and EOS always enqueue.
+    pub fn push(&self, pad: usize, item: Item) -> Result<()> {
+        let mut s = self.shared.lock().unwrap();
+        if pad >= s.pads.len() {
+            return Err(Error::Pipeline(format!("push to pad {pad} of {}", s.pads.len())));
+        }
+        if s.closed {
+            return Err(Error::Pipeline("inbox closed".into()));
+        }
+        if !item.is_buffer() {
+            if matches!(item, Item::Eos) {
+                s.pads[pad].eos = true;
+            }
+            s.pads[pad].items.push_back(item);
+            self.not_empty.notify_all();
+            return Ok(());
+        }
+        loop {
+            let p = &mut s.pads[pad];
+            if p.buffered < p.cfg.capacity {
+                p.items.push_back(item);
+                p.buffered += 1;
+                self.not_empty.notify_all();
+                return Ok(());
+            }
+            match p.cfg.leaky {
+                Leaky::Upstream => {
+                    p.dropped += 1;
+                    return Ok(()); // drop incoming
+                }
+                Leaky::Downstream => {
+                    // Drop the oldest buffered item (skip caps).
+                    if let Some(pos) = p.items.iter().position(|i| i.is_buffer()) {
+                        p.items.remove(pos);
+                        p.buffered -= 1;
+                        p.dropped += 1;
+                    }
+                    p.items.push_back(item);
+                    p.buffered += 1;
+                    self.not_empty.notify_all();
+                    return Ok(());
+                }
+                Leaky::No => {
+                    let (guard, timeout) = self
+                        .not_full
+                        .wait_timeout(s, Duration::from_millis(100))
+                        .map_err(|_| Error::Pipeline("inbox poisoned".into()))?;
+                    s = guard;
+                    if s.closed {
+                        return Err(Error::Pipeline("inbox closed".into()));
+                    }
+                    let _ = timeout;
+                }
+            }
+        }
+    }
+
+    /// Pop the next item from any pad (round-robin across non-empty pads).
+    /// Returns None when the inbox is closed or all pads are EOS-drained.
+    pub fn pop_any(&self) -> Option<(usize, Item)> {
+        let mut s = self.shared.lock().unwrap();
+        loop {
+            let n = s.pads.len();
+            if n == 0 {
+                return None;
+            }
+            let start = s.rr_next % n;
+            for off in 0..n {
+                let pad = (start + off) % n;
+                if let Some(item) = s.pads[pad].items.pop_front() {
+                    if item.is_buffer() {
+                        s.pads[pad].buffered -= 1;
+                    }
+                    s.rr_next = (pad + 1) % n;
+                    self.not_full.notify_all();
+                    return Some((pad, item));
+                }
+            }
+            // All queues empty: finished if closed or every pad hit EOS.
+            if s.closed || s.pads.iter().all(|p| p.eos) {
+                return None;
+            }
+            s = self.not_empty.wait(s).ok()?;
+        }
+    }
+
+    /// Pop from any pad with a timeout; Ok(None) = timed out.
+    pub fn pop_any_timeout(&self, timeout: Duration) -> Option<Option<(usize, Item)>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut s = self.shared.lock().unwrap();
+        loop {
+            let n = s.pads.len();
+            let start = if n == 0 { 0 } else { s.rr_next % n };
+            for off in 0..n {
+                let pad = (start + off) % n;
+                if let Some(item) = s.pads[pad].items.pop_front() {
+                    if item.is_buffer() {
+                        s.pads[pad].buffered -= 1;
+                    }
+                    s.rr_next = (pad + 1) % n;
+                    self.not_full.notify_all();
+                    return Some(Some((pad, item)));
+                }
+            }
+            if s.closed || (n > 0 && s.pads.iter().all(|p| p.eos)) {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Some(None);
+            }
+            let (guard, _) = self.not_empty.wait_timeout(s, deadline - now).ok()?;
+            s = guard;
+        }
+    }
+
+    /// Unblock all producers/consumers permanently.
+    pub fn close(&self) {
+        let mut s = self.shared.lock().unwrap();
+        s.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Buffers dropped by leaky policies on a pad (stats).
+    pub fn dropped(&self, pad: usize) -> u64 {
+        let s = self.shared.lock().unwrap();
+        s.pads.get(pad).map(|p| p.dropped).unwrap_or(0)
+    }
+
+    /// Currently queued buffers on a pad.
+    pub fn depth(&self, pad: usize) -> usize {
+        let s = self.shared.lock().unwrap();
+        s.pads.get(pad).map(|p| p.buffered).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Buffer;
+    use std::sync::Arc;
+
+    fn buf(n: u8) -> Item {
+        Item::Buffer(Buffer::new(vec![n]))
+    }
+
+    #[test]
+    fn fifo_order_single_pad() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        ib.push(0, buf(1)).unwrap();
+        ib.push(0, buf(2)).unwrap();
+        let (_, a) = ib.pop_any().unwrap();
+        let (_, b) = ib.pop_any().unwrap();
+        match (a, b) {
+            (Item::Buffer(x), Item::Buffer(y)) => {
+                assert_eq!(x.data[0], 1);
+                assert_eq!(y.data[0], 2);
+            }
+            _ => panic!("expected buffers"),
+        }
+    }
+
+    #[test]
+    fn leaky_downstream_drops_oldest() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 2, leaky: Leaky::Downstream }]);
+        for i in 1..=5 {
+            ib.push(0, buf(i)).unwrap();
+        }
+        assert_eq!(ib.dropped(0), 3);
+        let (_, a) = ib.pop_any().unwrap();
+        match a {
+            Item::Buffer(x) => assert_eq!(x.data[0], 4), // 1..3 dropped
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn leaky_upstream_drops_incoming() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 2, leaky: Leaky::Upstream }]);
+        for i in 1..=5 {
+            ib.push(0, buf(i)).unwrap();
+        }
+        assert_eq!(ib.dropped(0), 3);
+        let (_, a) = ib.pop_any().unwrap();
+        match a {
+            Item::Buffer(x) => assert_eq!(x.data[0], 1), // 3..5 dropped
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn caps_never_dropped_by_leak() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::Downstream }]);
+        ib.push(0, Item::Caps(crate::caps::Caps::any())).unwrap();
+        for i in 1..=3 {
+            ib.push(0, buf(i)).unwrap();
+        }
+        let (_, first) = ib.pop_any().unwrap();
+        assert!(matches!(first, Item::Caps(_)));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let ib = Arc::new(Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::No }]));
+        ib.push(0, buf(1)).unwrap();
+        let ib2 = ib.clone();
+        let h = std::thread::spawn(move || ib2.push(0, buf(2)));
+        std::thread::sleep(Duration::from_millis(50));
+        let _ = ib.pop_any().unwrap();
+        h.join().unwrap().unwrap();
+        assert!(matches!(ib.pop_any().unwrap().1, Item::Buffer(_)));
+    }
+
+    #[test]
+    fn pop_any_round_robins_pads() {
+        let ib = Inbox::new(vec![QueueCfg::default(), QueueCfg::default()]);
+        ib.push(0, buf(10)).unwrap();
+        ib.push(1, buf(20)).unwrap();
+        ib.push(0, buf(11)).unwrap();
+        let pads: Vec<usize> =
+            (0..3).map(|_| ib.pop_any().unwrap().0).collect();
+        assert!(pads.contains(&0) && pads.contains(&1));
+    }
+
+    #[test]
+    fn all_pads_eos_ends_pop() {
+        let ib = Inbox::new(vec![QueueCfg::default(), QueueCfg::default()]);
+        ib.push(0, Item::Eos).unwrap();
+        ib.push(1, buf(1)).unwrap();
+        ib.push(1, Item::Eos).unwrap();
+        let mut items = 0;
+        while ib.pop_any().is_some() {
+            items += 1;
+        }
+        assert_eq!(items, 3); // eos, buffer, eos drained then None
+    }
+
+    #[test]
+    fn close_unblocks_consumer() {
+        let ib = Arc::new(Inbox::new(vec![QueueCfg::default()]));
+        let ib2 = ib.clone();
+        let h = std::thread::spawn(move || ib2.pop_any());
+        std::thread::sleep(Duration::from_millis(50));
+        ib.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn close_unblocks_producer() {
+        let ib = Arc::new(Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::No }]));
+        ib.push(0, buf(1)).unwrap();
+        let ib2 = ib.clone();
+        let h = std::thread::spawn(move || ib2.push(0, buf(2)));
+        std::thread::sleep(Duration::from_millis(50));
+        ib.close();
+        assert!(h.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn pop_timeout_expires() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        match ib.pop_any_timeout(Duration::from_millis(30)) {
+            Some(None) => {}
+            other => panic!("expected timeout, got {:?}", other.map(|o| o.map(|(p, _)| p))),
+        }
+    }
+
+    #[test]
+    fn push_invalid_pad_errors() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        assert!(ib.push(3, buf(1)).is_err());
+    }
+
+    #[test]
+    fn leaky_parse() {
+        assert_eq!(Leaky::parse("2").unwrap(), Leaky::Downstream);
+        assert_eq!(Leaky::parse("downstream").unwrap(), Leaky::Downstream);
+        assert_eq!(Leaky::parse("no").unwrap(), Leaky::No);
+        assert!(Leaky::parse("9").is_err());
+    }
+
+    #[test]
+    fn depth_tracks_buffers() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        assert_eq!(ib.depth(0), 0);
+        ib.push(0, buf(1)).unwrap();
+        ib.push(0, Item::Caps(crate::caps::Caps::any())).unwrap();
+        assert_eq!(ib.depth(0), 1);
+    }
+}

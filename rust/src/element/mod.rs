@@ -1,0 +1,256 @@
+//! The element model: pipe-and-filter nodes exchanging [`Item`]s over
+//! bounded link queues (GStreamer pads/queues analog).
+//!
+//! Each element runs on its own thread. Items flow push-based; caps are
+//! sticky in-band events preceding buffers; EOS propagates per pad and is
+//! forwarded downstream by the runner once every sink pad saw it.
+//!
+//! Leaky queues (the paper's `queue leaky=2` tuning knob, §5.1) drop
+//! *buffers* under overflow but never caps/EOS, so negotiation and
+//! shutdown stay reliable no matter the policy.
+
+pub mod inbox;
+pub mod registry;
+
+pub use inbox::{Inbox, Leaky, QueueCfg};
+pub use registry::{ElementFactory, PipelineEnv, Registry};
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::clock::PipelineClock;
+use crate::util::Result;
+
+/// One unit travelling over a link.
+#[derive(Debug, Clone)]
+pub enum Item {
+    /// Sticky stream caps; always precedes the first buffer of a stream.
+    Caps(Caps),
+    Buffer(Buffer),
+    /// End of stream for this pad.
+    Eos,
+}
+
+impl Item {
+    pub fn is_buffer(&self) -> bool {
+        matches!(self, Item::Buffer(_))
+    }
+}
+
+/// Bus messages surfaced to the application.
+#[derive(Debug, Clone)]
+pub enum BusMsg {
+    /// A sink element consumed EOS on all pads.
+    Eos { element: String },
+    Error { element: String, message: String },
+    Info { element: String, message: String },
+}
+
+/// Where an element pushes output items (filled by the runner).
+pub struct Downstream {
+    /// outputs[src_pad] = fan-out list of (inbox, sink pad idx).
+    pub outputs: Vec<Vec<(Arc<Inbox>, usize)>>,
+}
+
+impl Downstream {
+    pub fn none() -> Self {
+        Downstream { outputs: Vec::new() }
+    }
+}
+
+/// Per-element runtime context handed to callbacks.
+pub struct Ctx {
+    pub name: String,
+    pub clock: PipelineClock,
+    downstream: Downstream,
+    bus: Sender<BusMsg>,
+    /// Cooperative stop flag (sources poll it).
+    pub stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Ctx {
+    pub fn new(
+        name: String,
+        clock: PipelineClock,
+        downstream: Downstream,
+        bus: Sender<BusMsg>,
+        stop: Arc<std::sync::atomic::AtomicBool>,
+    ) -> Self {
+        Self { name, clock, downstream, bus, stop }
+    }
+
+    /// True once the pipeline asked live sources to wind down.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Push an item out of `src_pad`, fanning out to all linked inboxes.
+    /// Returns Err only when every downstream is gone (pipeline teardown).
+    pub fn push(&self, src_pad: usize, item: Item) -> Result<()> {
+        let Some(links) = self.downstream.outputs.get(src_pad) else {
+            return Ok(()); // unlinked pad: drop silently (fakesink semantics)
+        };
+        if links.is_empty() {
+            return Ok(());
+        }
+        let mut alive = false;
+        let last = links.len() - 1;
+        for (i, (inbox, pad)) in links[..last].iter().enumerate() {
+            let _ = i;
+            // Clone is cheap: buffer payloads are Arc-shared.
+            if inbox.push(*pad, item.clone()).is_ok() {
+                alive = true;
+            }
+        }
+        let (inbox, pad) = &links[last];
+        if inbox.push(*pad, item).is_ok() {
+            alive = true;
+        }
+        if alive {
+            Ok(())
+        } else {
+            Err(crate::util::Error::Pipeline(format!("{}: all downstream links closed", self.name)))
+        }
+    }
+
+    /// Push a buffer out of pad 0 (the common case).
+    pub fn push_buffer(&self, buf: Buffer) -> Result<()> {
+        self.push(0, Item::Buffer(buf))
+    }
+
+    pub fn push_caps(&self, caps: Caps) -> Result<()> {
+        self.push(0, Item::Caps(caps))
+    }
+
+    pub fn n_src_pads_linked(&self) -> usize {
+        self.downstream.outputs.len()
+    }
+
+    /// Broadcast EOS on all src pads (runner calls this on teardown).
+    pub fn push_eos_all(&self) {
+        for pad in 0..self.downstream.outputs.len() {
+            let _ = self.push(pad, Item::Eos);
+        }
+    }
+
+    pub fn post_error(&self, message: impl std::fmt::Display) {
+        let _ = self
+            .bus
+            .send(BusMsg::Error { element: self.name.clone(), message: message.to_string() });
+    }
+
+    pub fn post_info(&self, message: impl std::fmt::Display) {
+        let _ = self
+            .bus
+            .send(BusMsg::Info { element: self.name.clone(), message: message.to_string() });
+    }
+
+    pub fn post_eos(&self) {
+        let _ = self.bus.send(BusMsg::Eos { element: self.name.clone() });
+    }
+}
+
+/// A pipeline element. Implementations are single-threaded (the runner
+/// gives each element its own thread) and communicate only via `Ctx`.
+pub trait Element: Send {
+    /// Number of sink (input) pads. 0 = source element.
+    fn n_sink_pads(&self) -> usize {
+        1
+    }
+
+    /// Number of src (output) pads. 0 = sink element.
+    fn n_src_pads(&self) -> usize {
+        1
+    }
+
+    /// Grow pads (mux/demux/compositor request pads). Called by the parser
+    /// when a pad reference exceeds the current count. Default: error via
+    /// returning false.
+    fn ensure_sink_pads(&mut self, _n: usize) -> bool {
+        false
+    }
+
+    fn ensure_src_pads(&mut self, _n: usize) -> bool {
+        false
+    }
+
+    /// Inbox queue configuration for a sink pad.
+    fn sink_queue_cfg(&self, _pad: usize) -> QueueCfg {
+        QueueCfg::default()
+    }
+
+    /// Called once before streaming starts.
+    fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        Ok(())
+    }
+
+    /// Handle one inbound item (non-source elements).
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<()>;
+
+    /// Produce items (source elements). Return Ok(false) for natural EOS.
+    fn produce(&mut self, _ctx: &mut Ctx) -> Result<bool> {
+        Ok(false)
+    }
+
+    /// Called once after streaming (flush/teardown).
+    fn stop(&mut self, _ctx: &mut Ctx) {}
+}
+
+/// Helper tracking per-pad EOS for multi-input elements.
+#[derive(Debug, Default)]
+pub struct EosTracker {
+    seen: Vec<bool>,
+}
+
+impl EosTracker {
+    pub fn new(pads: usize) -> Self {
+        Self { seen: vec![false; pads] }
+    }
+
+    /// Mark a pad EOS; returns true when ALL pads are done.
+    pub fn mark(&mut self, pad: usize) -> bool {
+        if pad < self.seen.len() {
+            self.seen[pad] = true;
+        }
+        self.all_eos()
+    }
+
+    pub fn all_eos(&self) -> bool {
+        self.seen.iter().all(|&b| b)
+    }
+
+    pub fn is_eos(&self, pad: usize) -> bool {
+        self.seen.get(pad).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eos_tracker_requires_all_pads() {
+        let mut t = EosTracker::new(3);
+        assert!(!t.mark(0));
+        assert!(!t.mark(2));
+        assert!(!t.is_eos(1));
+        assert!(t.mark(1));
+        assert!(t.all_eos());
+    }
+
+    #[test]
+    fn eos_tracker_out_of_range_ignored() {
+        let mut t = EosTracker::new(1);
+        assert!(!t.mark(7) || t.is_eos(0) == false);
+        assert!(t.mark(0));
+    }
+
+    #[test]
+    fn item_is_buffer() {
+        assert!(Item::Buffer(Buffer::new(vec![])).is_buffer());
+        assert!(!Item::Eos.is_buffer());
+        assert!(!Item::Caps(Caps::any()).is_buffer());
+    }
+}

@@ -1,0 +1,146 @@
+//! Element factory registry: maps element kind names (the words of a
+//! pipeline description, e.g. `videotestsrc`, `tensor_query_client`) to
+//! constructors.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::element::Element;
+use crate::util::{Error, Result};
+
+/// Element properties as parsed from a pipeline description.
+pub type Props = BTreeMap<String, String>;
+
+/// Shared environment factories may need (artifact locations etc.).
+#[derive(Debug, Clone)]
+pub struct PipelineEnv {
+    /// Directory containing `<model>.hlo.txt` + manifests (AOT outputs).
+    pub artifacts_dir: String,
+}
+
+impl Default for PipelineEnv {
+    fn default() -> Self {
+        let dir = std::env::var("EDGEPIPE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self { artifacts_dir: dir }
+    }
+}
+
+pub type ElementFactory = Arc<dyn Fn(&Props, &PipelineEnv) -> Result<Box<dyn Element>> + Send + Sync>;
+
+/// Factory registry; clone-cheap.
+#[derive(Clone, Default)]
+pub struct Registry {
+    factories: BTreeMap<String, ElementFactory>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registry with every built-in element registered.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::new();
+        crate::elements::register_all(&mut r);
+        r
+    }
+
+    pub fn register<F>(&mut self, kind: &str, f: F)
+    where
+        F: Fn(&Props, &PipelineEnv) -> Result<Box<dyn Element>> + Send + Sync + 'static,
+    {
+        self.factories.insert(kind.to_string(), Arc::new(f));
+    }
+
+    pub fn make(&self, kind: &str, props: &Props, env: &PipelineEnv) -> Result<Box<dyn Element>> {
+        let f = self
+            .factories
+            .get(kind)
+            .ok_or_else(|| Error::Parse(format!("unknown element `{kind}`")))?;
+        f(props, env)
+    }
+
+    pub fn contains(&self, kind: &str) -> bool {
+        self.factories.contains_key(kind)
+    }
+
+    pub fn kinds(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+}
+
+/// Property parse helpers shared by element constructors.
+pub fn prop_u32(props: &Props, key: &str, default: u32) -> Result<u32> {
+    match props.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| Error::Parse(format!("bad {key}={v}"))),
+    }
+}
+
+pub fn prop_u64(props: &Props, key: &str, default: u64) -> Result<u64> {
+    match props.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| Error::Parse(format!("bad {key}={v}"))),
+    }
+}
+
+pub fn prop_bool(props: &Props, key: &str, default: bool) -> Result<bool> {
+    match props.get(key).map(|s| s.as_str()) {
+        None => Ok(default),
+        Some("true" | "1" | "yes") => Ok(true),
+        Some("false" | "0" | "no") => Ok(false),
+        Some(v) => Err(Error::Parse(format!("bad {key}={v}"))),
+    }
+}
+
+pub fn prop_str<'a>(props: &'a Props, key: &str, default: &'a str) -> &'a str {
+    props.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+pub fn require_str<'a>(props: &'a Props, key: &str, element: &str) -> Result<&'a str> {
+    props
+        .get(key)
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::Parse(format!("{element}: missing required property `{key}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::{Ctx, Item};
+
+    struct Dummy;
+    impl Element for Dummy {
+        fn handle(&mut self, _pad: usize, _item: Item, _ctx: &mut Ctx) -> Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn register_and_make() {
+        let mut r = Registry::new();
+        r.register("dummy", |_p, _e| Ok(Box::new(Dummy)));
+        assert!(r.contains("dummy"));
+        let el = r.make("dummy", &Props::new(), &PipelineEnv::default());
+        assert!(el.is_ok());
+        assert!(r.make("nope", &Props::new(), &PipelineEnv::default()).is_err());
+    }
+
+    #[test]
+    fn prop_helpers() {
+        let mut p = Props::new();
+        p.insert("n".into(), "42".into());
+        p.insert("b".into(), "true".into());
+        p.insert("s".into(), "hello".into());
+        assert_eq!(prop_u32(&p, "n", 0).unwrap(), 42);
+        assert_eq!(prop_u32(&p, "missing", 7).unwrap(), 7);
+        assert!(prop_bool(&p, "b", false).unwrap());
+        assert_eq!(prop_str(&p, "s", "d"), "hello");
+        assert_eq!(prop_str(&p, "x", "d"), "d");
+        assert!(require_str(&p, "s", "el").is_ok());
+        assert!(require_str(&p, "zz", "el").is_err());
+        p.insert("bad".into(), "xyz".into());
+        assert!(prop_u32(&p, "bad", 0).is_err());
+        assert!(prop_bool(&p, "bad", false).is_err());
+    }
+}

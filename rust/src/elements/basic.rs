@@ -1,0 +1,336 @@
+//! Core plumbing elements: identity, fakesink, capsfilter, queue, tee,
+//! appsrc/appsink (programmatic + named-channel endpoints).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item, Leaky, QueueCfg};
+use crate::metrics;
+use crate::util::{Error, Result};
+
+/// Pass-through element.
+pub struct Identity;
+
+impl Element for Identity {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if !matches!(item, Item::Eos) {
+            ctx.push(0, item)?;
+        }
+        Ok(())
+    }
+}
+
+/// Swallow everything; count buffers into the global metrics registry
+/// under `fakesink.<name>`.
+pub struct FakeSink;
+
+impl Element for FakeSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if let Item::Buffer(b) = item {
+            metrics::global().counter(&format!("fakesink.{}", ctx.name)).add_bytes(b.len() as u64);
+        }
+        Ok(())
+    }
+}
+
+/// Enforce stream caps: intersects incoming caps with the configured ones,
+/// errors on incompatibility (launch-time type verification, §3).
+pub struct CapsFilter {
+    caps: Caps,
+}
+
+impl CapsFilter {
+    pub fn new(caps: Caps) -> Self {
+        Self { caps }
+    }
+}
+
+impl Element for CapsFilter {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let merged = self.caps.intersect(&c).map_err(|e| {
+                    Error::element(&ctx.name, format!("incompatible caps: {e}"))
+                })?;
+                ctx.push_caps(merged)
+            }
+            Item::Buffer(b) => ctx.push_buffer(b),
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+/// Decoupling queue with configurable size + leak policy (`queue leaky=2`).
+pub struct Queue {
+    cfg: QueueCfg,
+}
+
+impl Queue {
+    pub fn new(capacity: usize, leaky: Leaky) -> Self {
+        Self { cfg: QueueCfg { capacity, leaky } }
+    }
+}
+
+impl Element for Queue {
+    fn sink_queue_cfg(&self, _pad: usize) -> QueueCfg {
+        self.cfg
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if !matches!(item, Item::Eos) {
+            ctx.push(0, item)?;
+        }
+        Ok(())
+    }
+}
+
+/// Explicit tee (fan-out also happens implicitly on any multi-linked src
+/// pad; the element exists for description compatibility).
+pub struct Tee;
+
+impl Element for Tee {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if !matches!(item, Item::Eos) {
+            ctx.push(0, item)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// appsrc / appsink: named in-process channels so parsed descriptions can
+// exchange data with application code (NNStreamer app API analog).
+// ---------------------------------------------------------------------------
+
+type SrcReg = Mutex<HashMap<String, Receiver<(Option<Caps>, Buffer)>>>;
+type SinkReg = Mutex<HashMap<String, Receiver<Buffer>>>;
+
+fn src_registry() -> &'static SrcReg {
+    static R: OnceLock<SrcReg> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn sink_registry() -> &'static SinkReg {
+    static R: OnceLock<SinkReg> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Handle for pushing buffers into an `appsrc channel=<key>` element.
+#[derive(Clone)]
+pub struct AppSrcHandle {
+    tx: SyncSender<(Option<Caps>, Buffer)>,
+}
+
+impl AppSrcHandle {
+    pub fn push(&self, buf: Buffer) -> Result<()> {
+        self.tx
+            .send((None, buf))
+            .map_err(|_| Error::Pipeline("appsrc: pipeline gone".into()))
+    }
+
+    pub fn push_with_caps(&self, caps: Caps, buf: Buffer) -> Result<()> {
+        self.tx
+            .send((Some(caps), buf))
+            .map_err(|_| Error::Pipeline("appsrc: pipeline gone".into()))
+    }
+}
+
+/// Create the app side of an `appsrc channel=<key>`; call BEFORE parsing.
+/// Dropping the handle ends the stream (EOS).
+pub fn appsrc_channel(key: &str, depth: usize) -> AppSrcHandle {
+    let (tx, rx) = sync_channel(depth);
+    src_registry().lock().unwrap().insert(key.to_string(), rx);
+    AppSrcHandle { tx }
+}
+
+/// Take the app side of an `appsink channel=<key>`; call AFTER parsing.
+pub fn appsink_channel(key: &str) -> Option<Receiver<Buffer>> {
+    sink_registry().lock().unwrap().remove(key)
+}
+
+/// Source fed by an [`AppSrcHandle`].
+pub struct AppSrc {
+    rx: Option<Receiver<(Option<Caps>, Buffer)>>,
+    caps_sent: bool,
+    initial_caps: Option<Caps>,
+}
+
+impl AppSrc {
+    pub fn from_channel(key: &str, caps: Option<Caps>) -> Result<Self> {
+        let rx = src_registry()
+            .lock()
+            .unwrap()
+            .remove(key)
+            .ok_or_else(|| Error::Parse(format!("appsrc channel `{key}` not registered")))?;
+        Ok(AppSrc { rx: Some(rx), caps_sent: false, initial_caps: caps })
+    }
+
+    /// Programmatic constructor.
+    pub fn new(depth: usize, caps: Option<Caps>) -> (Self, AppSrcHandle) {
+        let (tx, rx) = sync_channel(depth);
+        (AppSrc { rx: Some(rx), caps_sent: false, initial_caps: caps }, AppSrcHandle { tx })
+    }
+}
+
+impl Element for AppSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!("appsrc has no sink pads")
+    }
+
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        let Some(rx) = &self.rx else { return Ok(false) };
+        if !self.caps_sent {
+            if let Some(c) = self.initial_caps.take() {
+                ctx.push_caps(c)?;
+            }
+            self.caps_sent = true;
+        }
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok((caps, buf)) => {
+                if let Some(c) = caps {
+                    ctx.push_caps(c)?;
+                }
+                ctx.push_buffer(buf)?;
+                Ok(true)
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(!ctx.stopped()),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(false),
+        }
+    }
+}
+
+/// Sink delivering buffers to an app channel (or counting if unclaimed).
+pub struct AppSink {
+    tx: Option<SyncSender<Buffer>>,
+}
+
+impl AppSink {
+    pub fn to_channel(key: &str, depth: usize) -> Self {
+        let (tx, rx) = sync_channel(depth);
+        sink_registry().lock().unwrap().insert(key.to_string(), rx);
+        AppSink { tx: Some(tx) }
+    }
+
+    /// Programmatic constructor.
+    pub fn new(depth: usize) -> (Self, Receiver<Buffer>) {
+        let (tx, rx) = sync_channel(depth);
+        (AppSink { tx: Some(tx) }, rx)
+    }
+
+    /// Channel-less appsink (counts like fakesink).
+    pub fn detached() -> Self {
+        AppSink { tx: None }
+    }
+}
+
+impl Element for AppSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if let Item::Buffer(b) = item {
+            metrics::global().counter(&format!("appsink.{}", ctx.name)).add_bytes(b.len() as u64);
+            if let Some(tx) = &self.tx {
+                // Block: the app is the consumer; backpressure is intended.
+                if tx.send(b).is_err() {
+                    self.tx = None; // app hung up; keep draining
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Pipeline, WaitOutcome};
+
+    #[test]
+    fn appsrc_appsink_roundtrip_programmatic() {
+        let mut p = Pipeline::new();
+        let (src, handle) = AppSrc::new(8, Some(Caps::video(2, 2, 30)));
+        let (sink, rx) = AppSink::new(8);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let i = p.add("id", Box::new(Identity)).unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, i).unwrap();
+        p.link(i, k).unwrap();
+        let running = p.start().unwrap();
+        handle.push(Buffer::new(vec![1, 2, 3]).with_pts(7)).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(&got.data[..], &[1, 2, 3]);
+        assert_eq!(got.pts, Some(7));
+        drop(handle); // EOS
+        assert_eq!(running.wait_eos(Duration::from_secs(5)), WaitOutcome::Eos);
+    }
+
+    #[test]
+    fn named_channels_roundtrip() {
+        let h = appsrc_channel("t-in", 4);
+        let mut p = Pipeline::new();
+        let s = p.add("src", Box::new(AppSrc::from_channel("t-in", None).unwrap())).unwrap();
+        let k = p.add("sink", Box::new(AppSink::to_channel("t-out", 4))).unwrap();
+        p.link(s, k).unwrap();
+        let rx = appsink_channel("t-out").unwrap();
+        let running = p.start().unwrap();
+        h.push(Buffer::new(vec![9])).unwrap();
+        assert_eq!(&rx.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[9]);
+        drop(h);
+        assert_eq!(running.wait_eos(Duration::from_secs(5)), WaitOutcome::Eos);
+    }
+
+    #[test]
+    fn capsfilter_rejects_mismatch() {
+        let mut p = Pipeline::new();
+        let (src, handle) = AppSrc::new(4, Some(Caps::video(4, 4, 30)));
+        let s = p.add("src", Box::new(src)).unwrap();
+        let f = p
+            .add("caps", Box::new(CapsFilter::new(Caps::parse("video/x-raw,width=999").unwrap())))
+            .unwrap();
+        let k = p.add("sink", Box::new(FakeSink)).unwrap();
+        p.link(s, f).unwrap();
+        p.link(f, k).unwrap();
+        let mut running = p.start().unwrap();
+        handle.push(Buffer::new(vec![0])).unwrap();
+        match running.wait(Duration::from_secs(5)) {
+            WaitOutcome::Error { element, .. } => assert_eq!(element, "caps"),
+            other => panic!("expected caps error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn capsfilter_passes_compatible() {
+        let mut p = Pipeline::new();
+        let (src, handle) = AppSrc::new(4, Some(Caps::video(4, 4, 30)));
+        let (sink, rx) = AppSink::new(4);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let f = p
+            .add("caps", Box::new(CapsFilter::new(Caps::parse("video/x-raw,width=4").unwrap())))
+            .unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, f).unwrap();
+        p.link(f, k).unwrap();
+        let _running = p.start().unwrap();
+        handle.push(Buffer::new(vec![5])).unwrap();
+        assert_eq!(&rx.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[5]);
+    }
+
+    #[test]
+    fn unclaimed_appsrc_channel_errors() {
+        assert!(AppSrc::from_channel("never-registered", None).is_err());
+    }
+}

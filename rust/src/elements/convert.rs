@@ -1,0 +1,556 @@
+//! Tensor conversion elements: `tensor_converter` (media → tensors),
+//! `tensor_transform` (arithmetic/typecast), `tensor_decoder` (tensors →
+//! media / flexbuf) — the NNStreamer `tensor_*` filter family (§4.1).
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item};
+use crate::serial;
+use crate::tensor::{self, DType, Format, TensorInfo, TensorsInfo};
+use crate::util::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// tensor_converter
+// ---------------------------------------------------------------------------
+
+/// Convert media streams into `other/tensors`:
+/// - `video/x-raw` RGB WxH  → static u8 tensor `3:W:H:1` (NNStreamer order)
+/// - `other/flexbuf`        → static tensors (schema from each frame;
+///                            re-negotiates on schema change)
+/// - `other/tensors,format=flexible` → static (strip per-frame headers)
+pub struct TensorConverter {
+    mode: ConvMode,
+    out_info: Option<TensorsInfo>,
+}
+
+enum ConvMode {
+    Unknown,
+    Video,
+    Flexbuf,
+    FlexTensors,
+    PassThrough,
+}
+
+impl Default for TensorConverter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TensorConverter {
+    pub fn new() -> Self {
+        Self { mode: ConvMode::Unknown, out_info: None }
+    }
+
+    fn negotiate(&mut self, info: TensorsInfo, ctx: &mut Ctx) -> Result<()> {
+        if self.out_info.as_ref() != Some(&info) {
+            ctx.push_caps(Caps::tensors(&info))?;
+            self.out_info = Some(info);
+        }
+        Ok(())
+    }
+}
+
+impl Element for TensorConverter {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                if c.is_video() {
+                    let (w, h, _fps) = c.video_geometry().map_err(|e| Error::element(&ctx.name, e))?;
+                    self.mode = ConvMode::Video;
+                    let info = TensorsInfo::one(
+                        TensorInfo::new(DType::U8, &[3, w, h]).map_err(|e| Error::element(&ctx.name, e))?,
+                    );
+                    self.negotiate(info, ctx)
+                } else if c.media == crate::caps::MEDIA_FLEXBUF {
+                    self.mode = ConvMode::Flexbuf;
+                    Ok(()) // schema discovered per frame
+                } else if c.is_tensors() {
+                    match c.tensor_format().map_err(|e| Error::element(&ctx.name, e))? {
+                        Format::Flexible => {
+                            self.mode = ConvMode::FlexTensors;
+                            Ok(())
+                        }
+                        Format::Static => {
+                            self.mode = ConvMode::PassThrough;
+                            ctx.push_caps(c)
+                        }
+                        Format::Sparse => Err(Error::element(
+                            &ctx.name,
+                            "sparse input needs tensor_sparse_dec first",
+                        )),
+                    }
+                } else {
+                    Err(Error::element(&ctx.name, format!("cannot convert caps `{c}`")))
+                }
+            }
+            Item::Buffer(b) => match self.mode {
+                ConvMode::Unknown => Err(Error::element(&ctx.name, "buffer before caps")),
+                ConvMode::Video | ConvMode::PassThrough => ctx.push_buffer(b),
+                ConvMode::Flexbuf => {
+                    let (info, payload) = serial::flexbuf_to_tensors(&b.data)
+                        .map_err(|e| Error::element(&ctx.name, e))?;
+                    self.negotiate(info, ctx)?;
+                    ctx.push_buffer(b.map_payload(payload))
+                }
+                ConvMode::FlexTensors => {
+                    let (info, payload) = tensor::flexible_to_static(&b.data)
+                        .map_err(|e| Error::element(&ctx.name, e))?;
+                    self.negotiate(info, ctx)?;
+                    ctx.push_buffer(b.map_payload(payload))
+                }
+            },
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensor_transform
+// ---------------------------------------------------------------------------
+
+/// One arithmetic op of a `tensor_transform mode=arithmetic` chain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArithOp {
+    /// Cast to a dtype (only u8→f32 and f32→u8 used by the models).
+    TypecastF32,
+    TypecastU8,
+    Add(f32),
+    Mul(f32),
+    Div(f32),
+}
+
+/// `tensor_transform` with
+/// `option=typecast:float32,add:-127.5,div:127.5` syntax (Listing 1).
+pub struct TensorTransform {
+    ops: Vec<ArithOp>,
+    in_info: Option<TensorsInfo>,
+}
+
+impl TensorTransform {
+    pub fn new(ops: Vec<ArithOp>) -> Self {
+        Self { ops, in_info: None }
+    }
+
+    /// Parse the NNStreamer option string.
+    pub fn parse_option(opt: &str) -> Result<Vec<ArithOp>> {
+        let mut ops = Vec::new();
+        for part in opt.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (op, arg) = part
+                .split_once(':')
+                .ok_or_else(|| Error::Parse(format!("bad transform op `{part}`")))?;
+            match op {
+                "typecast" => match arg {
+                    "float32" => ops.push(ArithOp::TypecastF32),
+                    "uint8" => ops.push(ArithOp::TypecastU8),
+                    other => return Err(Error::Parse(format!("unsupported typecast `{other}`"))),
+                },
+                "add" => ops.push(ArithOp::Add(
+                    arg.parse().map_err(|_| Error::Parse(format!("bad add `{arg}`")))?,
+                )),
+                "mul" => ops.push(ArithOp::Mul(
+                    arg.parse().map_err(|_| Error::Parse(format!("bad mul `{arg}`")))?,
+                )),
+                "div" => ops.push(ArithOp::Div(
+                    arg.parse().map_err(|_| Error::Parse(format!("bad div `{arg}`")))?,
+                )),
+                other => return Err(Error::Parse(format!("unknown transform op `{other}`"))),
+            }
+        }
+        if ops.is_empty() {
+            return Err(Error::Parse("empty transform option".into()));
+        }
+        Ok(ops)
+    }
+
+    fn out_dtype(&self, mut dt: DType) -> DType {
+        for op in &self.ops {
+            match op {
+                ArithOp::TypecastF32 => dt = DType::F32,
+                ArithOp::TypecastU8 => dt = DType::U8,
+                _ => {}
+            }
+        }
+        dt
+    }
+
+    fn apply(&self, info: &TensorsInfo, payload: &[u8]) -> Result<(TensorsInfo, Vec<u8>)> {
+        // Decode per input dtype to f32 workspace, run ops, encode out.
+        let mut out_info = TensorsInfo::default();
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        for t in &info.tensors {
+            let n = t.count();
+            let in_bytes = &payload[off..off + t.size()];
+            off += t.size();
+            let mut vals: Vec<f32> = match t.dtype {
+                DType::U8 => in_bytes.iter().map(|&b| b as f32).collect(),
+                DType::F32 => tensor::bytes_to_f32(in_bytes)?,
+                other => {
+                    return Err(Error::Tensor(format!("transform: unsupported input {other}")))
+                }
+            };
+            let mut dt = t.dtype;
+            for op in &self.ops {
+                match op {
+                    ArithOp::TypecastF32 => dt = DType::F32,
+                    ArithOp::TypecastU8 => dt = DType::U8,
+                    ArithOp::Add(a) => vals.iter_mut().for_each(|v| *v += a),
+                    ArithOp::Mul(m) => vals.iter_mut().for_each(|v| *v *= m),
+                    ArithOp::Div(d) => vals.iter_mut().for_each(|v| *v /= d),
+                }
+            }
+            match dt {
+                DType::F32 => out.extend(vals.iter().flat_map(|v| v.to_le_bytes())),
+                DType::U8 => out.extend(vals.iter().map(|v| v.round().clamp(0.0, 255.0) as u8)),
+                _ => unreachable!(),
+            }
+            let dims: Vec<u32> = t.dims.to_vec();
+            out_info.push(TensorInfo::new(dt, &dims)?)?;
+            debug_assert_eq!(out_info.tensors.last().unwrap().count(), n);
+        }
+        Ok((out_info, out))
+    }
+}
+
+impl Element for TensorTransform {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                if !c.is_tensors() {
+                    return Err(Error::element(&ctx.name, format!("need tensors caps, got `{c}`")));
+                }
+                let info = c.tensors_info().map_err(|e| Error::element(&ctx.name, e))?;
+                let mut out = TensorsInfo::default();
+                for t in &info.tensors {
+                    let dims: Vec<u32> = t.dims.to_vec();
+                    out.push(
+                        TensorInfo::new(self.out_dtype(t.dtype), &dims)
+                            .map_err(|e| Error::element(&ctx.name, e))?,
+                    )
+                    .map_err(|e| Error::element(&ctx.name, e))?;
+                }
+                self.in_info = Some(info);
+                ctx.push_caps(Caps::tensors(&out))
+            }
+            Item::Buffer(b) => {
+                let info = self
+                    .in_info
+                    .as_ref()
+                    .ok_or_else(|| Error::element(&ctx.name, "buffer before caps"))?;
+                if b.len() != info.frame_size() {
+                    return Err(Error::element(
+                        &ctx.name,
+                        format!("frame {} bytes != caps size {}", b.len(), info.frame_size()),
+                    ));
+                }
+                let (_info, payload) =
+                    self.apply(info, &b.data).map_err(|e| Error::element(&ctx.name, e))?;
+                ctx.push_buffer(b.map_payload(payload))
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensor_decoder
+// ---------------------------------------------------------------------------
+
+/// Decode tensors back into media / serialized form.
+pub enum DecoderMode {
+    /// SSD output (boxes,cls,score,count) → RGB frame with box outlines.
+    BoundingBoxes { width: u32, height: u32 },
+    /// Tensor `3:W:H:1` u8 → video/x-raw passthrough.
+    DirectVideo,
+    /// Tensors → `other/flexbuf` (schemaless publish, Listing 2).
+    Flexbuf,
+    /// Pose keypoints (17,3) → RGB frame with keypoint dots.
+    Pose { width: u32, height: u32 },
+}
+
+pub struct TensorDecoder {
+    mode: DecoderMode,
+    in_info: Option<TensorsInfo>,
+}
+
+impl TensorDecoder {
+    pub fn new(mode: DecoderMode) -> Self {
+        Self { mode, in_info: None }
+    }
+
+    fn decode_boxes(&self, b: &Buffer, w: u32, h: u32, info: &TensorsInfo) -> Result<Vec<u8>> {
+        // Expect 4 f32 tensors: boxes(4,K), cls(K), score(K), count(1)
+        if info.len() != 4 {
+            return Err(Error::Tensor(format!("bounding_boxes: expected 4 tensors, got {}", info.len())));
+        }
+        let k = info.tensors[1].count();
+        let vals = tensor::bytes_to_f32(&b.data)?;
+        let boxes = &vals[..4 * k];
+        let scores = &vals[4 * k + k..4 * k + 2 * k];
+        let count = vals[4 * k + 2 * k] as usize;
+        let (wu, hu) = (w as usize, h as usize);
+        let mut canvas = vec![0u8; wu * hu * 3];
+        for i in 0..count.min(k) {
+            if scores[i] <= 0.0 {
+                continue;
+            }
+            let x0 = (boxes[i * 4] * w as f32).clamp(0.0, (w - 1) as f32) as usize;
+            let y0 = (boxes[i * 4 + 1] * h as f32).clamp(0.0, (h - 1) as f32) as usize;
+            let x1 = (boxes[i * 4 + 2] * w as f32).clamp(0.0, (w - 1) as f32) as usize;
+            let y1 = (boxes[i * 4 + 3] * h as f32).clamp(0.0, (h - 1) as f32) as usize;
+            let color = [(40 + i * 37 % 200) as u8, 220, 60];
+            for x in x0..=x1 {
+                for y in [y0, y1] {
+                    let px = (y * wu + x) * 3;
+                    canvas[px..px + 3].copy_from_slice(&color);
+                }
+            }
+            for y in y0..=y1 {
+                for x in [x0, x1] {
+                    let px = (y * wu + x) * 3;
+                    canvas[px..px + 3].copy_from_slice(&color);
+                }
+            }
+        }
+        Ok(canvas)
+    }
+
+    fn decode_pose(&self, b: &Buffer, w: u32, h: u32) -> Result<Vec<u8>> {
+        let vals = tensor::bytes_to_f32(&b.data)?;
+        let (wu, hu) = (w as usize, h as usize);
+        let mut canvas = vec![0u8; wu * hu * 3];
+        for kp in vals.chunks_exact(3) {
+            let x = (kp[0] * (w - 1) as f32).clamp(0.0, (w - 1) as f32) as usize;
+            let y = (kp[1] * (h - 1) as f32).clamp(0.0, (h - 1) as f32) as usize;
+            let c = (kp[2].clamp(0.0, 1.0) * 255.0) as u8;
+            let px = (y * wu + x) * 3;
+            canvas[px] = 255;
+            canvas[px + 1] = c;
+            canvas[px + 2] = 64;
+        }
+        Ok(canvas)
+    }
+}
+
+impl Element for TensorDecoder {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                if !c.is_tensors() {
+                    return Err(Error::element(&ctx.name, format!("need tensors caps, got `{c}`")));
+                }
+                let info = c.tensors_info().ok();
+                self.in_info = info;
+                match &self.mode {
+                    DecoderMode::BoundingBoxes { width, height } | DecoderMode::Pose { width, height } => {
+                        ctx.push_caps(Caps::video(*width, *height, 30))
+                    }
+                    DecoderMode::DirectVideo => {
+                        let info = self
+                            .in_info
+                            .as_ref()
+                            .ok_or_else(|| Error::element(&ctx.name, "direct_video needs static caps"))?;
+                        let t = &info.tensors[0];
+                        if t.dims[0] != 3 || t.dtype != DType::U8 {
+                            return Err(Error::element(
+                                &ctx.name,
+                                format!("direct_video needs 3:W:H:1 uint8, got {}", t.dims_string()),
+                            ));
+                        }
+                        ctx.push_caps(Caps::video(t.dims[1], t.dims[2], 30))
+                    }
+                    DecoderMode::Flexbuf => ctx.push_caps(Caps::new(crate::caps::MEDIA_FLEXBUF)),
+                }
+            }
+            Item::Buffer(b) => match &self.mode {
+                DecoderMode::BoundingBoxes { width, height } => {
+                    let info = self
+                        .in_info
+                        .as_ref()
+                        .ok_or_else(|| Error::element(&ctx.name, "buffer before caps"))?;
+                    let frame = self
+                        .decode_boxes(&b, *width, *height, info)
+                        .map_err(|e| Error::element(&ctx.name, e))?;
+                    ctx.push_buffer(b.map_payload(frame))
+                }
+                DecoderMode::Pose { width, height } => {
+                    let frame =
+                        self.decode_pose(&b, *width, *height).map_err(|e| Error::element(&ctx.name, e))?;
+                    ctx.push_buffer(b.map_payload(frame))
+                }
+                DecoderMode::DirectVideo => ctx.push_buffer(b),
+                DecoderMode::Flexbuf => {
+                    let info = self
+                        .in_info
+                        .as_ref()
+                        .ok_or_else(|| Error::element(&ctx.name, "buffer before caps"))?;
+                    let enc = serial::tensors_to_flexbuf(info, &b.data)
+                        .map_err(|e| Error::element(&ctx.name, e))?;
+                    ctx.push_buffer(b.map_payload(enc))
+                }
+            },
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::pipeline::Pipeline;
+    use std::time::Duration;
+
+    fn run_one(el: Box<dyn Element>, caps: Caps, data: Vec<u8>) -> (Buffer, Option<Caps>) {
+        let mut p = Pipeline::new();
+        let (src, h) = AppSrc::new(4, Some(caps));
+        let (sink, rx) = AppSink::new(4);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let e = p.add("el", el).unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, e).unwrap();
+        p.link(e, k).unwrap();
+        let _r = p.start().unwrap();
+        h.push(Buffer::new(data).with_pts(42)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        (out, None)
+    }
+
+    #[test]
+    fn converter_video_to_tensors_keeps_payload() {
+        let (out, _) = run_one(
+            Box::new(TensorConverter::new()),
+            Caps::video(4, 2, 30),
+            vec![7u8; 4 * 2 * 3],
+        );
+        assert_eq!(out.len(), 24);
+        assert_eq!(out.pts, Some(42));
+    }
+
+    #[test]
+    fn converter_flexbuf_to_tensors() {
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::U8, &[4]).unwrap()).unwrap();
+        let payload = vec![1, 2, 3, 4];
+        let enc = serial::tensors_to_flexbuf(&info, &payload).unwrap();
+        let (out, _) = run_one(
+            Box::new(TensorConverter::new()),
+            Caps::new(crate::caps::MEDIA_FLEXBUF),
+            enc,
+        );
+        assert_eq!(&out.data[..], &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn converter_flexible_tensors_to_static() {
+        let t = TensorInfo::new(DType::U8, &[3]).unwrap();
+        let frame = tensor::encode_flexible(&[(t, &[9, 8, 7])]).unwrap();
+        let (out, _) =
+            run_one(Box::new(TensorConverter::new()), Caps::tensors_flexible(), frame);
+        assert_eq!(&out.data[..], &[9, 8, 7]);
+    }
+
+    #[test]
+    fn transform_parse_listing1_option() {
+        let ops =
+            TensorTransform::parse_option("typecast:float32,add:-127.5,div:127.5").unwrap();
+        assert_eq!(
+            ops,
+            vec![ArithOp::TypecastF32, ArithOp::Add(-127.5), ArithOp::Div(127.5)]
+        );
+        assert!(TensorTransform::parse_option("bogus:1").is_err());
+        assert!(TensorTransform::parse_option("").is_err());
+    }
+
+    #[test]
+    fn transform_normalizes_u8_to_unit_f32() {
+        let ops = TensorTransform::parse_option("typecast:float32,add:-127.5,div:127.5").unwrap();
+        let tt = TensorTransform::new(ops);
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[4]).unwrap());
+        let (out_info, payload) = tt.apply(&info, &[0, 127, 128, 255]).unwrap();
+        assert_eq!(out_info.tensors[0].dtype, DType::F32);
+        let vals = tensor::bytes_to_f32(&payload).unwrap();
+        assert!((vals[0] + 1.0).abs() < 1e-3);
+        assert!((vals[3] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn transform_roundtrip_u8_f32_u8() {
+        let ops = vec![ArithOp::TypecastF32, ArithOp::TypecastU8];
+        let tt = TensorTransform::new(ops);
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[3]).unwrap());
+        let (out_info, payload) = tt.apply(&info, &[5, 250, 17]).unwrap();
+        assert_eq!(out_info.tensors[0].dtype, DType::U8);
+        assert_eq!(payload, vec![5, 250, 17]);
+    }
+
+    #[test]
+    fn decoder_direct_video_reinterprets_caps() {
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::U8, &[3, 4, 2]).unwrap()).unwrap();
+        let (out, _) = run_one(
+            Box::new(TensorDecoder::new(DecoderMode::DirectVideo)),
+            Caps::tensors(&info),
+            vec![1u8; 24],
+        );
+        assert_eq!(out.len(), 24);
+    }
+
+    #[test]
+    fn decoder_bounding_boxes_draws_something() {
+        // 4 tensors: boxes(4,2), cls(2), score(2), count(1)
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::F32, &[4, 2]).unwrap()).unwrap();
+        info.push(TensorInfo::new(DType::F32, &[2]).unwrap()).unwrap();
+        info.push(TensorInfo::new(DType::F32, &[2]).unwrap()).unwrap();
+        info.push(TensorInfo::new(DType::F32, &[1]).unwrap()).unwrap();
+        let mut vals = vec![
+            0.1, 0.1, 0.6, 0.6, // box 0
+            0.2, 0.2, 0.4, 0.9, // box 1
+            1.0, 2.0, // cls
+            0.9, 0.8, // score
+            2.0, // count
+        ];
+        let payload: Vec<u8> = vals.drain(..).flat_map(|v: f32| v.to_le_bytes()).collect();
+        let (out, _) = run_one(
+            Box::new(TensorDecoder::new(DecoderMode::BoundingBoxes { width: 32, height: 32 })),
+            Caps::tensors(&info),
+            payload,
+        );
+        assert_eq!(out.len(), 32 * 32 * 3);
+        assert!(out.data.iter().any(|&b| b != 0), "expected drawn boxes");
+    }
+
+    #[test]
+    fn decoder_flexbuf_roundtrips_with_converter() {
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::U8, &[5]).unwrap()).unwrap();
+        let (out, _) = run_one(
+            Box::new(TensorDecoder::new(DecoderMode::Flexbuf)),
+            Caps::tensors(&info),
+            vec![1, 2, 3, 4, 5],
+        );
+        let (info2, payload) = serial::flexbuf_to_tensors(&out.data).unwrap();
+        assert_eq!(info2, info);
+        assert_eq!(payload, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn decoder_pose_draws_keypoints() {
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::F32, &[3, 2]).unwrap()).unwrap();
+        let vals: Vec<f32> = vec![0.5, 0.5, 1.0, 0.1, 0.9, 0.7];
+        let payload: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let (out, _) = run_one(
+            Box::new(TensorDecoder::new(DecoderMode::Pose { width: 16, height: 16 })),
+            Caps::tensors(&info),
+            payload,
+        );
+        assert!(out.data.iter().any(|&b| b == 255));
+    }
+}

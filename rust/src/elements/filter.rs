@@ -1,0 +1,162 @@
+//! `tensor_filter` — neural-network inference inside a pipeline.
+//!
+//! `framework=pjrt model=<name>` loads an AOT HLO artifact and runs it via
+//! the PJRT CPU client (the production path; Python never runs here).
+//! `framework=passthrough` is the transport-isolation stand-in used by the
+//! Fig 7 query benches; `framework=custom` wraps a closure (tests; also
+//! the paper's custom-filter sub-plugin mechanism).
+
+use std::sync::Arc;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item};
+use crate::metrics;
+use crate::runtime::Model;
+use crate::tensor::Format;
+use crate::util::{Error, Result};
+
+type CustomFn = Box<dyn FnMut(&Buffer) -> Result<Vec<u8>> + Send>;
+
+enum Backend {
+    Pjrt(Arc<Model>),
+    Passthrough,
+    Custom(CustomFn),
+}
+
+pub struct TensorFilter {
+    backend: Backend,
+    caps_ok: bool,
+}
+
+impl TensorFilter {
+    pub fn pjrt(model: Arc<Model>) -> Self {
+        Self { backend: Backend::Pjrt(model), caps_ok: false }
+    }
+
+    pub fn passthrough() -> Self {
+        Self { backend: Backend::Passthrough, caps_ok: false }
+    }
+
+    pub fn custom(f: CustomFn) -> Self {
+        Self { backend: Backend::Custom(f), caps_ok: false }
+    }
+}
+
+impl Element for TensorFilter {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                match &self.backend {
+                    Backend::Pjrt(model) => {
+                        if !c.is_tensors() {
+                            return Err(Error::element(
+                                &ctx.name,
+                                format!("tensor_filter needs tensors caps, got `{c}`"),
+                            ));
+                        }
+                        if c.tensor_format().map_err(|e| Error::element(&ctx.name, e))?
+                            != Format::Static
+                        {
+                            return Err(Error::element(&ctx.name, "needs static tensors"));
+                        }
+                        let want = model.input_info().map_err(|e| Error::element(&ctx.name, e))?;
+                        if let Ok(got) = c.tensors_info() {
+                            if got != want {
+                                return Err(Error::element(
+                                    &ctx.name,
+                                    format!(
+                                        "model `{}` expects {} got {}",
+                                        model.manifest.name,
+                                        want.dimensions_string(),
+                                        got.dimensions_string()
+                                    ),
+                                ));
+                            }
+                        }
+                        let out = model.output_info().map_err(|e| Error::element(&ctx.name, e))?;
+                        self.caps_ok = true;
+                        ctx.push_caps(Caps::tensors(&out))
+                    }
+                    Backend::Passthrough => {
+                        self.caps_ok = true;
+                        ctx.push_caps(c)
+                    }
+                    Backend::Custom(_) => {
+                        self.caps_ok = true;
+                        ctx.push_caps(c)
+                    }
+                }
+            }
+            Item::Buffer(b) => {
+                if !self.caps_ok {
+                    return Err(Error::element(&ctx.name, "buffer before caps"));
+                }
+                let t0 = std::time::Instant::now();
+                let out = match &mut self.backend {
+                    Backend::Pjrt(model) => {
+                        let payload =
+                            model.infer_bytes(&b.data).map_err(|e| Error::element(&ctx.name, e))?;
+                        b.map_payload(payload)
+                    }
+                    Backend::Passthrough => b,
+                    Backend::Custom(f) => {
+                        let payload = f(&b)?;
+                        b.map_payload(payload)
+                    }
+                };
+                metrics::global()
+                    .observe(&format!("filter.{}.latency_us", ctx.name), t0.elapsed().as_micros() as f64);
+                ctx.push_buffer(out)
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{DType, TensorInfo, TensorsInfo};
+    use std::time::Duration;
+
+    #[test]
+    fn passthrough_forwards() {
+        let mut p = Pipeline::new();
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[3]).unwrap());
+        let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+        let (sink, rx) = AppSink::new(4);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let f = p.add("f", Box::new(TensorFilter::passthrough())).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link(s, f).unwrap();
+        p.link(f, k).unwrap();
+        let _r = p.start().unwrap();
+        h.push(Buffer::new(vec![1, 2, 3])).unwrap();
+        assert_eq!(&rx.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn custom_filter_transforms() {
+        let mut p = Pipeline::new();
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[3]).unwrap());
+        let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+        let (sink, rx) = AppSink::new(4);
+        let f = TensorFilter::custom(Box::new(|b: &Buffer| {
+            Ok(b.data.iter().map(|&x| x * 2).collect())
+        }));
+        let s = p.add("src", Box::new(src)).unwrap();
+        let fi = p.add("f", Box::new(f)).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link(s, fi).unwrap();
+        p.link(fi, k).unwrap();
+        let _r = p.start().unwrap();
+        h.push(Buffer::new(vec![1, 2, 3])).unwrap();
+        assert_eq!(&rx.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[2, 4, 6]);
+    }
+
+    // PJRT-backed end-to-end filter tests live in rust/tests/ (they need
+    // built artifacts).
+}

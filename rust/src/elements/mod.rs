@@ -1,0 +1,374 @@
+//! Built-in element library + registry wiring for pipeline descriptions.
+//!
+//! Property names follow the paper's listings (GStreamer/NNStreamer
+//! spellings) wherever they appear there: `leaky=2`, `operation=`,
+//! `sub-topic=`, `pub-topic=`, `mode=arithmetic option=...`,
+//! `framework=... model=...`, `is-live=false`, `pattern=ball`, etc.
+
+pub mod basic;
+pub mod convert;
+pub mod filter;
+pub mod muxdemux;
+pub mod mqttel;
+pub mod query;
+pub mod sparsel;
+pub mod video;
+pub mod zmqel;
+
+pub use basic::{appsink_channel, appsrc_channel, AppSink, AppSrc, AppSrcHandle, CapsFilter, FakeSink, Identity, Queue, Tee};
+pub use convert::{ArithOp, DecoderMode, TensorConverter, TensorDecoder, TensorTransform};
+pub use filter::TensorFilter;
+pub use muxdemux::{IfOp, TensorDemux, TensorIf, TensorMux};
+pub use mqttel::{MqttSink, MqttSrc};
+pub use query::{QueryClient, QueryProtocol, QueryServerSink, QueryServerSrc};
+pub use sparsel::{SparseDec, SparseEnc};
+pub use video::{Compositor, PadCfg, Pattern, VideoConvert, VideoScale, VideoTestSrc};
+pub use zmqel::{ZmqSink, ZmqSrc};
+
+use crate::caps::Caps;
+use crate::element::registry::{prop_bool, prop_str, prop_u32, prop_u64, require_str, Props, Registry};
+use crate::element::Element as _;
+use crate::element::Leaky;
+use crate::serial::Codec;
+use crate::util::{Error, Result};
+
+/// Default broker address used when a description omits `broker=`.
+pub fn default_broker() -> String {
+    std::env::var("EDGEPIPE_BROKER").unwrap_or_else(|_| "127.0.0.1:1883".to_string())
+}
+
+fn compositor_from_props(props: &Props) -> Compositor {
+    let mut c = Compositor::new(1);
+    // Pad properties: sink_<n>::xpos / ypos / zorder
+    let mut max_pad = 0usize;
+    for k in props.keys() {
+        if let Some(rest) = k.strip_prefix("sink_") {
+            if let Some((n, _)) = rest.split_once("::") {
+                if let Ok(n) = n.parse::<usize>() {
+                    max_pad = max_pad.max(n);
+                }
+            }
+        }
+    }
+    c.ensure_sink_pads(max_pad + 1);
+    for pad in 0..=max_pad {
+        let get = |f: &str| {
+            props.get(&format!("sink_{pad}::{f}")).and_then(|v| v.parse::<u32>().ok()).unwrap_or(0)
+        };
+        c.set_pad(pad, PadCfg { xpos: get("xpos"), ypos: get("ypos"), zorder: get("zorder") });
+    }
+    c
+}
+
+/// Register every built-in element kind.
+pub fn register_all(r: &mut Registry) {
+    r.register("identity", |_p, _e| Ok(Box::new(Identity)));
+    r.register("fakesink", |_p, _e| Ok(Box::new(FakeSink)));
+    r.register("tee", |_p, _e| Ok(Box::new(Tee)));
+    r.register("videoconvert", |_p, _e| Ok(Box::new(VideoConvert)));
+
+    r.register("queue", |p, _e| {
+        let leaky = Leaky::parse(prop_str(p, "leaky", "no"))?;
+        let cap = prop_u32(p, "max-size-buffers", 16)? as usize;
+        Ok(Box::new(Queue::new(cap, leaky)))
+    });
+    // Listing 2 uses `queue2` for latency injection; accept it as a big
+    // non-leaky queue with an optional artificial `min-threshold-time`
+    // delay handled by the runner-level property below.
+    r.register("queue2", |p, _e| {
+        let cap = prop_u32(p, "max-size-buffers", 64)? as usize;
+        Ok(Box::new(Queue::new(cap, Leaky::No)))
+    });
+
+    r.register("capsfilter", |p, _e| {
+        let spec = require_str(p, "caps", "capsfilter")?;
+        Ok(Box::new(CapsFilter::new(Caps::parse(spec)?)))
+    });
+
+    r.register("videotestsrc", |p, _e| {
+        let w = prop_u32(p, "width", 320)?;
+        let h = prop_u32(p, "height", 240)?;
+        let fps = prop_u32(p, "framerate", prop_u32(p, "fps", 30)?)?;
+        let mut src = VideoTestSrc::new(w, h, fps)
+            .with_pattern(Pattern::parse(prop_str(p, "pattern", "smpte"))?)
+            .with_num_buffers(prop_u64(p, "num-buffers", 0)?)
+            .live(prop_bool(p, "is-live", true)?);
+        let _ = &mut src;
+        Ok(Box::new(src))
+    });
+    // Listing 1/2 use v4l2src (USB camera); our synthetic camera stands in
+    // (see DESIGN.md substitutions).
+    r.register("v4l2src", |p, _e| {
+        let w = prop_u32(p, "width", 640)?;
+        let h = prop_u32(p, "height", 480)?;
+        let fps = prop_u32(p, "framerate", 30)?;
+        Ok(Box::new(
+            VideoTestSrc::new(w, h, fps)
+                .with_pattern(Pattern::Ball)
+                .with_num_buffers(prop_u64(p, "num-buffers", 0)?),
+        ))
+    });
+
+    r.register("videoscale", |p, _e| {
+        let w = prop_u32(p, "width", 0)?;
+        let h = prop_u32(p, "height", 0)?;
+        if w == 0 || h == 0 {
+            return Err(Error::Parse("videoscale needs width= and height=".into()));
+        }
+        Ok(Box::new(VideoScale::new(w, h)))
+    });
+
+    r.register("compositor", |p, _e| Ok(Box::new(compositor_from_props(p))));
+
+    r.register("appsrc", |p, _e| {
+        let key = require_str(p, "channel", "appsrc")?;
+        Ok(Box::new(AppSrc::from_channel(key, None)?))
+    });
+    r.register("appsink", |p, _e| {
+        match p.get("channel") {
+            Some(key) => Ok(Box::new(AppSink::to_channel(key, prop_u32(p, "depth", 64)? as usize))),
+            None => Ok(Box::new(AppSink::detached())),
+        }
+    });
+    r.register("ximagesink", |_p, _e| Ok(Box::new(FakeSink))); // headless display
+
+    r.register("tensor_converter", |_p, _e| Ok(Box::new(TensorConverter::new())));
+
+    r.register("tensor_transform", |p, _e| {
+        let mode = prop_str(p, "mode", "arithmetic");
+        if mode != "arithmetic" {
+            return Err(Error::Parse(format!("tensor_transform mode `{mode}` unsupported")));
+        }
+        let opt = require_str(p, "option", "tensor_transform")?;
+        Ok(Box::new(TensorTransform::new(TensorTransform::parse_option(opt)?)))
+    });
+
+    r.register("tensor_decoder", |p, _e| {
+        let mode = require_str(p, "mode", "tensor_decoder")?;
+        let geom = |key: &str, def: (u32, u32)| -> Result<(u32, u32)> {
+            match p.get(key) {
+                None => Ok(def),
+                Some(v) => {
+                    let (w, h) = v
+                        .split_once(':')
+                        .ok_or_else(|| Error::Parse(format!("bad geometry `{v}`")))?;
+                    Ok((
+                        w.parse().map_err(|_| Error::Parse(format!("bad geometry `{v}`")))?,
+                        h.parse().map_err(|_| Error::Parse(format!("bad geometry `{v}`")))?,
+                    ))
+                }
+            }
+        };
+        let m = match mode {
+            "bounding_boxes" => {
+                // option4=WIDTH:HEIGHT in NNStreamer's decoder options.
+                let (w, h) = geom("option4", (640, 480))?;
+                DecoderMode::BoundingBoxes { width: w, height: h }
+            }
+            "direct_video" => DecoderMode::DirectVideo,
+            "flexbuf" => DecoderMode::Flexbuf,
+            "pose" => {
+                let (w, h) = geom("option4", (192, 192))?;
+                DecoderMode::Pose { width: w, height: h }
+            }
+            other => return Err(Error::Parse(format!("tensor_decoder mode `{other}` unsupported"))),
+        };
+        Ok(Box::new(TensorDecoder::new(m)))
+    });
+
+    r.register("tensor_filter", |p, e| {
+        let fw = prop_str(p, "framework", "pjrt");
+        match fw {
+            "pjrt" | "tensorflow-lite" | "tensorflow" => {
+                // Model path: accept a bare name or `/path/<name>.tflite`
+                // (listing compatibility) and map to artifacts/<name>.
+                let raw = require_str(p, "model", "tensor_filter")?;
+                let name = raw
+                    .rsplit('/')
+                    .next()
+                    .unwrap_or(raw)
+                    .trim_end_matches(".tflite")
+                    .trim_end_matches(".hlo.txt");
+                let store = crate::runtime::store_for(&e.artifacts_dir)?;
+                Ok(Box::new(TensorFilter::pjrt(store.get(name)?)))
+            }
+            "passthrough" => Ok(Box::new(TensorFilter::passthrough())),
+            other => Err(Error::Parse(format!("tensor_filter framework `{other}` unsupported"))),
+        }
+    });
+
+    r.register("tensor_mux", |p, _e| Ok(Box::new(TensorMux::new(prop_u32(p, "pads", 2)? as usize))));
+    r.register("tensor_demux", |p, _e| Ok(Box::new(TensorDemux::new(prop_u32(p, "srcs", 1)? as usize))));
+
+    r.register("tensor_if", |p, _e| {
+        let idx = prop_u32(p, "compared-value", 0)? as usize;
+        let op = IfOp::parse(prop_str(p, "operator", "gt"))?;
+        let thr: f32 = prop_str(p, "threshold", "0.5")
+            .parse()
+            .map_err(|_| Error::Parse("bad threshold".into()))?;
+        Ok(Box::new(TensorIf::new(idx, op, thr)))
+    });
+
+    r.register("tensor_sparse_enc", |_p, _e| Ok(Box::new(SparseEnc::new())));
+    r.register("tensor_sparse_dec", |_p, _e| Ok(Box::new(SparseDec::new())));
+
+    r.register("mqttsink", |p, _e| {
+        let topic = require_str(p, "pub-topic", "mqttsink")?;
+        let broker = prop_str(p, "broker", "");
+        let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
+        Ok(Box::new(
+            MqttSink::new(&broker, topic)
+                .with_codec(Codec::parse(prop_str(p, "compress", "none"))?)
+                .with_sync(prop_bool(p, "sync", true)?),
+        ))
+    });
+    r.register("mqttsrc", |p, _e| {
+        let topic = require_str(p, "sub-topic", "mqttsrc")?;
+        let broker = prop_str(p, "broker", "");
+        let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
+        Ok(Box::new(MqttSrc::new(&broker, topic).with_sync(prop_bool(p, "sync", true)?)))
+    });
+
+    r.register("zmqsink", |p, _e| {
+        let bind = require_str(p, "bind", "zmqsink")?;
+        let topic = prop_str(p, "topic", "stream");
+        Ok(Box::new(
+            ZmqSink::new(bind, topic).with_codec(Codec::parse(prop_str(p, "compress", "none"))?),
+        ))
+    });
+    r.register("zmqsrc", |p, _e| {
+        let connect = require_str(p, "connect", "zmqsrc")?;
+        let topic = prop_str(p, "topic", "stream");
+        Ok(Box::new(ZmqSrc::new(connect, topic)))
+    });
+
+    r.register("tensor_query_client", |p, _e| {
+        let op = require_str(p, "operation", "tensor_query_client")?;
+        let proto = QueryProtocol::parse(prop_str(p, "protocol", "tcp"))?;
+        let timeout = std::time::Duration::from_millis(prop_u64(p, "timeout-ms", 5000)?);
+        match proto {
+            QueryProtocol::TcpRaw => {
+                let server = require_str(p, "server", "tensor_query_client")?;
+                Ok(Box::new(QueryClient::tcp(op, server).with_timeout(timeout)))
+            }
+            QueryProtocol::MqttHybrid => {
+                let broker = prop_str(p, "broker", "");
+                let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
+                Ok(Box::new(QueryClient::hybrid(op, &broker)?.with_timeout(timeout)))
+            }
+        }
+    });
+    r.register("tensor_query_serversrc", |p, _e| {
+        let op = require_str(p, "operation", "tensor_query_serversrc")?;
+        let mut src = QueryServerSrc::new(op)
+            .with_pair_id(prop_str(p, "pair-id", op))
+            .with_bind(&format!("127.0.0.1:{}", prop_u32(p, "port", 0)?))
+            .with_model_label(prop_str(p, "model-label", "model"));
+        if let Some(id) = p.get("server-id") {
+            src = src.with_server_id(id);
+        }
+        if QueryProtocol::parse(prop_str(p, "protocol", "tcp"))? == QueryProtocol::MqttHybrid {
+            let broker = prop_str(p, "broker", "");
+            let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
+            src = src.with_hybrid(&broker);
+        }
+        Ok(Box::new(src))
+    });
+    r.register("tensor_query_serversink", |p, _e| {
+        let op = require_str(p, "operation", "tensor_query_serversink")?;
+        Ok(Box::new(QueryServerSink::new(prop_str(p, "pair-id", op))))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::element::registry::PipelineEnv;
+
+    fn registry() -> Registry {
+        Registry::with_builtins()
+    }
+
+    #[test]
+    fn all_paper_elements_registered() {
+        let r = registry();
+        for kind in [
+            "videotestsrc",
+            "v4l2src",
+            "videoconvert",
+            "videoscale",
+            "compositor",
+            "queue",
+            "queue2",
+            "tee",
+            "capsfilter",
+            "appsink",
+            "ximagesink",
+            "tensor_converter",
+            "tensor_transform",
+            "tensor_decoder",
+            "tensor_filter",
+            "tensor_mux",
+            "tensor_demux",
+            "tensor_if",
+            "tensor_sparse_enc",
+            "tensor_sparse_dec",
+            "mqttsink",
+            "mqttsrc",
+            "zmqsink",
+            "zmqsrc",
+            "tensor_query_client",
+            "tensor_query_serversrc",
+            "tensor_query_serversink",
+        ] {
+            assert!(r.contains(kind), "missing element `{kind}`");
+        }
+    }
+
+    #[test]
+    fn queue_props_parsed() {
+        let r = registry();
+        let env = PipelineEnv::default();
+        let mut p = Props::new();
+        p.insert("leaky".into(), "2".into());
+        p.insert("max-size-buffers".into(), "4".into());
+        let el = r.make("queue", &p, &env).unwrap();
+        let cfg = el.sink_queue_cfg(0);
+        assert_eq!(cfg.capacity, 4);
+        assert_eq!(cfg.leaky, Leaky::Downstream);
+    }
+
+    #[test]
+    fn missing_required_props_error() {
+        let r = registry();
+        let env = PipelineEnv::default();
+        assert!(r.make("mqttsink", &Props::new(), &env).is_err());
+        assert!(r.make("tensor_query_client", &Props::new(), &env).is_err());
+        assert!(r.make("videoscale", &Props::new(), &env).is_err());
+        assert!(r.make("capsfilter", &Props::new(), &env).is_err());
+    }
+
+    #[test]
+    fn compositor_pad_props() {
+        let mut p = Props::new();
+        p.insert("sink_1::xpos".into(), "100".into());
+        p.insert("sink_1::zorder".into(), "2".into());
+        let c = compositor_from_props(&p);
+        assert_eq!(c.n_sink_pads(), 2);
+    }
+
+    #[test]
+    fn tensor_filter_model_name_mapping() {
+        // `/PATH/ssd_mobilenet_v2_coco.tflite` maps to artifact name
+        // `ssd_mobilenet_v2_coco` (which won't exist -> error mentions it).
+        let r = registry();
+        let env = PipelineEnv { artifacts_dir: "/nonexistent".into() };
+        let mut p = Props::new();
+        p.insert("model".into(), "/PATH/detector.tflite".into());
+        let err = match r.make("tensor_filter", &p, &env) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("detector") || err.contains("nonexistent"), "{err}");
+    }
+}

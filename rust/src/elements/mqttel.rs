@@ -1,0 +1,315 @@
+//! `mqttsink` / `mqttsrc` — stream pub/sub over MQTT (§4.2.1, Fig 3).
+//!
+//! The sink publishes EdgeFrames (payload + caps string + timestamps +
+//! publisher base-time) on `pub-topic`; the source subscribes to
+//! `sub-topic` (wildcards allowed) and reconstructs the stream,
+//! re-negotiating caps in-band and correcting timestamps against the
+//! local pipeline clock (§4.2.3) using an NTP offset when a sync server
+//! is advertised on `<topic>/__sync`.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item};
+use crate::metrics;
+use crate::mqtt::{ClientOptions, Message, MqttClient};
+use crate::ntp::{NtpServer, SyncedClock};
+use crate::serial::flexbuf::{self, Value};
+use crate::serial::wire;
+use crate::serial::Codec;
+use crate::util::{Error, Result};
+use crate::log_warn;
+
+fn sync_topic(topic: &str) -> String {
+    format!("{topic}/__sync")
+}
+
+/// Publish a pipeline stream to an MQTT topic.
+pub struct MqttSink {
+    pub broker: String,
+    pub topic: String,
+    pub codec: Codec,
+    /// Enable §4.2.3 timestamp sync: run an NTP responder and advertise it.
+    pub enable_sync: bool,
+    client: Option<MqttClient>,
+    ntp: Option<NtpServer>,
+    caps: Option<Caps>,
+}
+
+impl MqttSink {
+    pub fn new(broker: &str, topic: &str) -> Self {
+        Self {
+            broker: broker.to_string(),
+            topic: topic.to_string(),
+            codec: Codec::None,
+            enable_sync: true,
+            client: None,
+            ntp: None,
+            caps: None,
+        }
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    pub fn with_sync(mut self, enable: bool) -> Self {
+        self.enable_sync = enable;
+        self
+    }
+}
+
+impl Element for MqttSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) -> Result<()> {
+        let client = MqttClient::connect(
+            &self.broker,
+            ClientOptions {
+                client_id: format!("edgepipe-pub-{}-{}", ctx.name, std::process::id()),
+                keep_alive_secs: 10,
+                will: None,
+                channel_depth: 64,
+            },
+        )?;
+        if self.enable_sync {
+            let ntp = NtpServer::start("0.0.0.0:0")?;
+            let ad = flexbuf::encode(&flexbuf::map(vec![
+                ("ntp_port", Value::UInt(ntp.addr().port() as u64)),
+                ("base_universal", Value::UInt(ctx.clock.base_universal)),
+            ]));
+            client.publish(&sync_topic(&self.topic), &ad, true)?;
+            self.ntp = Some(ntp);
+        }
+        self.client = Some(client);
+        Ok(())
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                self.caps = Some(c);
+                Ok(())
+            }
+            Item::Buffer(mut b) => {
+                let client =
+                    self.client.as_ref().ok_or_else(|| Error::element(&ctx.name, "not started"))?;
+                b.meta.remote_base_universal = Some(ctx.clock.base_universal);
+                if let Some(pts) = b.pts {
+                    b.meta.capture_universal = Some(ctx.clock.pts_to_universal(pts));
+                }
+                let frame = wire::encode(&b, self.caps.as_ref(), self.codec)
+                    .map_err(|e| Error::element(&ctx.name, e))?;
+                metrics::global()
+                    .counter(&format!("mqttsink.{}", ctx.name))
+                    .add_bytes(frame.len() as u64);
+                client.publish(&self.topic, &frame, false).map_err(|e| Error::element(&ctx.name, e))
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+
+    fn stop(&mut self, _ctx: &mut Ctx) {
+        if let Some(c) = &self.client {
+            if self.enable_sync {
+                let _ = c.publish(&sync_topic(&self.topic), &[], true);
+            }
+            c.disconnect();
+        }
+    }
+}
+
+/// Subscribe to an MQTT topic and re-emit the stream locally.
+pub struct MqttSrc {
+    pub broker: String,
+    pub topic: String,
+    /// Apply NTP offset correction to incoming timestamps.
+    pub enable_sync: bool,
+    rx: Option<Receiver<Message>>,
+    client: Option<MqttClient>,
+    synced: SyncedClock,
+    last_caps: Option<Caps>,
+    sync_started: bool,
+}
+
+impl MqttSrc {
+    pub fn new(broker: &str, topic: &str) -> Self {
+        Self {
+            broker: broker.to_string(),
+            topic: topic.to_string(),
+            enable_sync: true,
+            rx: None,
+            client: None,
+            synced: SyncedClock::new(),
+            last_caps: None,
+            sync_started: false,
+        }
+    }
+
+    pub fn with_sync(mut self, enable: bool) -> Self {
+        self.enable_sync = enable;
+        self
+    }
+}
+
+impl Element for MqttSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) -> Result<()> {
+        let client = MqttClient::connect(
+            &self.broker,
+            ClientOptions {
+                client_id: format!("edgepipe-sub-{}-{}", ctx.name, std::process::id()),
+                keep_alive_secs: 10,
+                will: None,
+                channel_depth: 32,
+            },
+        )?;
+        let rx = client.subscribe(&self.topic)?;
+        if self.enable_sync {
+            // Watch for the publisher's sync advertisement.
+            let synced = self.synced.clone();
+            client.subscribe_cb(&sync_topic(&self.topic), move |msg| {
+                if msg.payload.is_empty() {
+                    return;
+                }
+                if let Ok(v) = flexbuf::decode(&msg.payload) {
+                    if let Ok(port) = v.field("ntp_port").and_then(|p| p.as_u64()) {
+                        let server = format!("127.0.0.1:{port}");
+                        if let Err(e) = synced.sync_once(&server, 4) {
+                            log_warn!("mqttsrc", "ntp sync to {server} failed: {e}");
+                        }
+                    }
+                }
+            })?;
+        }
+        self.rx = Some(rx);
+        self.client = Some(client);
+        Ok(())
+    }
+
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        let Some(rx) = &self.rx else { return Ok(false) };
+        if !self.sync_started {
+            self.sync_started = true;
+        }
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(msg) => {
+                let (mut buf, caps) =
+                    wire::decode(&msg.payload).map_err(|e| Error::element(&ctx.name, e))?;
+                metrics::global()
+                    .counter(&format!("mqttsrc.{}", ctx.name))
+                    .add_bytes(msg.payload.len() as u64);
+                if let Some(c) = caps {
+                    if self.last_caps.as_ref() != Some(&c) {
+                        ctx.push_caps(c.clone())?;
+                        self.last_caps = Some(c);
+                    }
+                }
+                // §4.2.3: re-base the publisher's timestamps on our clock.
+                // With sync disabled the raw remote running-time passes
+                // through (the broken pre-sync behaviour the paper fixes).
+                if self.enable_sync {
+                    if let (Some(remote_base), Some(pts)) = (buf.meta.remote_base_universal, buf.pts)
+                    {
+                        buf.pts =
+                            Some(ctx.clock.remote_pts_to_local(remote_base, pts, self.synced.offset_ns()));
+                    }
+                }
+                ctx.push_buffer(buf)?;
+                Ok(true)
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(!ctx.stopped()),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(false),
+        }
+    }
+
+    fn stop(&mut self, _ctx: &mut Ctx) {
+        if let Some(c) = &self.client {
+            c.disconnect();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Buffer;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::mqtt::Broker;
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{DType, TensorInfo, TensorsInfo};
+
+    fn pubsub_pair(broker: &str, topic: &str, codec: Codec) -> (crate::pipeline::Running, crate::pipeline::Running, crate::elements::basic::AppSrcHandle, Receiver<Buffer>) {
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[4]).unwrap());
+        // Publisher pipeline: appsrc -> mqttsink
+        let mut pp = Pipeline::new();
+        let (src, h) = AppSrc::new(8, Some(Caps::tensors(&info)));
+        let s = pp.add("src", Box::new(src)).unwrap();
+        let m = pp
+            .add("pub", Box::new(MqttSink::new(broker, topic).with_codec(codec)))
+            .unwrap();
+        pp.link(s, m).unwrap();
+        // Subscriber pipeline: mqttsrc -> appsink
+        let mut sp = Pipeline::new();
+        let (sink, rx) = AppSink::new(8);
+        let ms = sp.add("sub", Box::new(MqttSrc::new(broker, topic))).unwrap();
+        let k = sp.add("sink", Box::new(sink)).unwrap();
+        sp.link(ms, k).unwrap();
+        let sub_running = sp.start().unwrap();
+        std::thread::sleep(Duration::from_millis(200)); // subscription lands
+        let pub_running = pp.start().unwrap();
+        (pub_running, sub_running, h, rx)
+    }
+
+    #[test]
+    fn pubsub_delivers_buffers_and_caps() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let (pr, sr, h, rx) = pubsub_pair(&broker.addr().to_string(), "t/pubsub", Codec::None);
+        h.push(Buffer::new(vec![1, 2, 3, 4]).with_pts(1000)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+        assert_eq!(&out.data[..], &[1, 2, 3, 4]);
+        assert!(out.pts.is_some());
+        drop(h);
+        let _ = pr.stop(Duration::from_secs(5));
+        let _ = sr.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn pubsub_with_zlib_compression() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let (pr, sr, h, rx) = pubsub_pair(&broker.addr().to_string(), "t/gz", Codec::Zlib);
+        h.push(Buffer::new(vec![7, 7, 7, 7])).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+        assert_eq!(&out.data[..], &[7, 7, 7, 7]);
+        drop(h);
+        let _ = pr.stop(Duration::from_secs(5));
+        let _ = sr.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn timestamps_rebased_to_subscriber_clock() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let (pr, sr, h, rx) = pubsub_pair(&broker.addr().to_string(), "t/sync", Codec::None);
+        std::thread::sleep(Duration::from_millis(300)); // let NTP ad land
+        h.push(Buffer::new(vec![0, 0, 0, 0]).with_pts(0)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+        // Publisher PTS 0 was stamped at publisher base-time; on the
+        // subscriber clock that instant is >= 0 and close to "now".
+        let pts = out.pts.unwrap();
+        assert!(pts < 30 * crate::clock::SECOND, "pts {pts}");
+        drop(h);
+        let _ = pr.stop(Duration::from_secs(5));
+        let _ = sr.stop(Duration::from_secs(5));
+    }
+}

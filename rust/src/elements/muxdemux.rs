@@ -1,0 +1,390 @@
+//! Stream topology elements: `tensor_mux` (N pads → one combined frame,
+//! with the timestamp-delta accounting the §4.2.3 sync experiment
+//! measures), `tensor_demux` (split tensors to pads), and `tensor_if`
+//! (condition-gated routing — the Fig 5 activation gate).
+
+use std::collections::VecDeque;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item};
+use crate::metrics;
+use crate::tensor::TensorsInfo;
+use crate::util::{Error, Result};
+
+/// Combine one frame from each sink pad into a single multi-tensor frame.
+/// Output pts = pad 0's pts. Records `|max(pts)-min(pts)|` per merged set
+/// into the global histogram `mux.<name>.delta_ms` (experiment E3).
+pub struct TensorMux {
+    n_pads: usize,
+    caps: Vec<Option<TensorsInfo>>,
+    queues: Vec<VecDeque<Buffer>>,
+    caps_sent: bool,
+}
+
+impl TensorMux {
+    pub fn new(n_pads: usize) -> Self {
+        let n = n_pads.max(2);
+        Self { n_pads: n, caps: vec![None; n], queues: vec![VecDeque::new(); n], caps_sent: false }
+    }
+
+    fn try_emit(&mut self, ctx: &mut Ctx) -> Result<()> {
+        while self.queues.iter().all(|q| !q.is_empty()) {
+            if !self.caps_sent {
+                if self.caps.iter().any(|c| c.is_none()) {
+                    return Ok(()); // all buffers there but caps missing
+                }
+                let mut merged = TensorsInfo::default();
+                for c in self.caps.iter().flatten() {
+                    for t in &c.tensors {
+                        merged.push(t.clone()).map_err(|e| Error::element(&ctx.name, e))?;
+                    }
+                }
+                ctx.push_caps(Caps::tensors(&merged))?;
+                self.caps_sent = true;
+            }
+            // Timestamp-aligned pairing (sync_mode=basepad analog): if all
+            // heads carry PTS, drop stale frames from lagging queues until
+            // every head is within `slack` of the newest head. Corrected
+            // timestamps (§4.2.3) make this align frames captured at the
+            // same real instant even when publishers started at different
+            // times.
+            if self.queues.iter().all(|q| q.front().is_some_and(|b| b.pts.is_some())) {
+                let newest = self.queues.iter().map(|q| q.front().unwrap().pts.unwrap()).max().unwrap();
+                let slack = self
+                    .queues
+                    .iter()
+                    .filter_map(|q| q.front().unwrap().duration)
+                    .max()
+                    .unwrap_or(33_000_000); // default one 30fps frame period
+                let mut dropped_stale = false;
+                for q in self.queues.iter_mut() {
+                    while q.len() > 1 && q.front().unwrap().pts.unwrap() + slack < newest {
+                        q.pop_front();
+                        dropped_stale = true;
+                    }
+                }
+                if dropped_stale && self.queues.iter().any(|q| q.is_empty()) {
+                    return Ok(()); // wait for fresher frames on the lagging pad
+                }
+                if self.queues.iter().any(|q| {
+                    q.len() == 1 && q.front().unwrap().pts.unwrap() + slack < newest
+                }) {
+                    // Lagging pad has only a stale frame; merge anyway (the
+                    // delta metric will show the residual skew).
+                }
+            }
+            let parts: Vec<Buffer> =
+                self.queues.iter_mut().map(|q| q.pop_front().unwrap()).collect();
+            // E3 metric: true capture-time skew when ground truth is
+            // available (transport sinks stamp capture_universal), else the
+            // corrected-PTS skew.
+            let caps_t: Vec<u64> = parts.iter().filter_map(|b| b.meta.capture_universal).collect();
+            let ptss: Vec<u64> = parts.iter().filter_map(|b| b.pts).collect();
+            let basis = if caps_t.len() == parts.len() { &caps_t } else { &ptss };
+            if basis.len() == parts.len() && !basis.is_empty() {
+                let delta = (*basis.iter().max().unwrap() - *basis.iter().min().unwrap()) as f64;
+                metrics::global().observe(&format!("mux.{}.delta_ms", ctx.name), delta / 1e6);
+            }
+            let total: usize = parts.iter().map(|b| b.len()).sum();
+            let mut payload = Vec::with_capacity(total);
+            for p in &parts {
+                payload.extend_from_slice(&p.data);
+            }
+            let mut out = Buffer::new(payload);
+            out.pts = parts[0].pts;
+            out.duration = parts[0].duration;
+            ctx.push_buffer(out)?;
+        }
+        Ok(())
+    }
+}
+
+impl Element for TensorMux {
+    fn n_sink_pads(&self) -> usize {
+        self.n_pads
+    }
+
+    fn ensure_sink_pads(&mut self, n: usize) -> bool {
+        while self.n_pads < n {
+            self.n_pads += 1;
+            self.caps.push(None);
+            self.queues.push(VecDeque::new());
+        }
+        true
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let info = c.tensors_info().map_err(|e| Error::element(&ctx.name, e))?;
+                self.caps[pad] = Some(info);
+                self.try_emit(ctx)
+            }
+            Item::Buffer(b) => {
+                self.queues[pad].push_back(b);
+                // Bound memory if one input stalls: keep the freshest 32.
+                if self.queues[pad].len() > 32 {
+                    self.queues[pad].pop_front();
+                    metrics::global().counter(&format!("mux.{}.dropped", ctx.name)).inc();
+                }
+                self.try_emit(ctx)
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+/// Split a static multi-tensor frame: tensor i → src pad i.
+pub struct TensorDemux {
+    n_src: usize,
+    info: Option<TensorsInfo>,
+}
+
+impl TensorDemux {
+    pub fn new(n_src: usize) -> Self {
+        Self { n_src: n_src.max(1), info: None }
+    }
+}
+
+impl Element for TensorDemux {
+    fn n_src_pads(&self) -> usize {
+        self.n_src
+    }
+
+    fn ensure_src_pads(&mut self, n: usize) -> bool {
+        self.n_src = self.n_src.max(n);
+        true
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let info = c.tensors_info().map_err(|e| Error::element(&ctx.name, e))?;
+                for (i, t) in info.tensors.iter().enumerate().take(self.n_src) {
+                    ctx.push(i, Item::Caps(Caps::tensors(&TensorsInfo::one(t.clone()))))?;
+                }
+                self.info = Some(info);
+                Ok(())
+            }
+            Item::Buffer(b) => {
+                let info = self
+                    .info
+                    .as_ref()
+                    .ok_or_else(|| Error::element(&ctx.name, "buffer before caps"))?;
+                if b.len() != info.frame_size() {
+                    return Err(Error::element(
+                        &ctx.name,
+                        format!("frame {} != caps size {}", b.len(), info.frame_size()),
+                    ));
+                }
+                let mut off = 0;
+                for (i, t) in info.tensors.iter().enumerate() {
+                    let part = b.data[off..off + t.size()].to_vec();
+                    off += t.size();
+                    if i < self.n_src {
+                        ctx.push(i, Item::Buffer(b.map_payload(part)))?;
+                    }
+                }
+                Ok(())
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+/// Comparison operator of `tensor_if`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IfOp {
+    Gt,
+    Lt,
+    Ge,
+    Le,
+    Eq,
+}
+
+impl IfOp {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gt" | ">" => IfOp::Gt,
+            "lt" | "<" => IfOp::Lt,
+            "ge" | ">=" => IfOp::Ge,
+            "le" | "<=" => IfOp::Le,
+            "eq" | "==" => IfOp::Eq,
+            other => return Err(Error::Parse(format!("unknown operator `{other}`"))),
+        })
+    }
+
+    fn eval(self, v: f32, threshold: f32) -> bool {
+        match self {
+            IfOp::Gt => v > threshold,
+            IfOp::Lt => v < threshold,
+            IfOp::Ge => v >= threshold,
+            IfOp::Le => v <= threshold,
+            IfOp::Eq => (v - threshold).abs() < f32::EPSILON,
+        }
+    }
+}
+
+/// Route buffers by a scalar condition on one f32 element of the frame:
+/// src pad 0 = condition true ("then"), src pad 1 = false ("else";
+/// dropped when unlinked). The Fig 5 DETECT gate.
+pub struct TensorIf {
+    pub value_index: usize,
+    pub op: IfOp,
+    pub threshold: f32,
+}
+
+impl TensorIf {
+    pub fn new(value_index: usize, op: IfOp, threshold: f32) -> Self {
+        Self { value_index, op, threshold }
+    }
+}
+
+impl Element for TensorIf {
+    fn n_src_pads(&self) -> usize {
+        2
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                ctx.push(0, Item::Caps(c.clone()))?;
+                ctx.push(1, Item::Caps(c))?;
+                Ok(())
+            }
+            Item::Buffer(b) => {
+                let off = self.value_index * 4;
+                if b.len() < off + 4 {
+                    return Err(Error::element(
+                        &ctx.name,
+                        format!("frame {} bytes, need f32 at {off}", b.len()),
+                    ));
+                }
+                let v = f32::from_le_bytes([b.data[off], b.data[off + 1], b.data[off + 2], b.data[off + 3]]);
+                let pad = if self.op.eval(v, self.threshold) { 0 } else { 1 };
+                metrics::global()
+                    .counter(&format!("tensor_if.{}.{}", ctx.name, if pad == 0 { "then" } else { "else" }))
+                    .inc();
+                ctx.push(pad, Item::Buffer(b))
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{DType, TensorInfo};
+    use std::time::Duration;
+
+    fn f32_buf(vals: &[f32]) -> Buffer {
+        Buffer::new(crate::tensor::f32_to_bytes(vals))
+    }
+
+    #[test]
+    fn mux_combines_two_streams() {
+        let mut p = Pipeline::new();
+        let ia = TensorsInfo::one(TensorInfo::new(DType::U8, &[2]).unwrap());
+        let ib = TensorsInfo::one(TensorInfo::new(DType::U8, &[3]).unwrap());
+        let (sa, ha) = AppSrc::new(4, Some(Caps::tensors(&ia)));
+        let (sb, hb) = AppSrc::new(4, Some(Caps::tensors(&ib)));
+        let (sink, rx) = AppSink::new(4);
+        let a = p.add("a", Box::new(sa)).unwrap();
+        let b = p.add("b", Box::new(sb)).unwrap();
+        let m = p.add("mux", Box::new(TensorMux::new(2))).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link_pads(a, 0, m, 0).unwrap();
+        p.link_pads(b, 0, m, 1).unwrap();
+        p.link(m, k).unwrap();
+        let _r = p.start().unwrap();
+        ha.push(Buffer::new(vec![1, 2]).with_pts(100)).unwrap();
+        hb.push(Buffer::new(vec![3, 4, 5]).with_pts(200)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(&out.data[..], &[1, 2, 3, 4, 5]);
+        assert_eq!(out.pts, Some(100)); // basepad pts
+    }
+
+    #[test]
+    fn mux_records_timestamp_delta() {
+        metrics::global().reset();
+        let mut p = Pipeline::new();
+        let ia = TensorsInfo::one(TensorInfo::new(DType::U8, &[1]).unwrap());
+        let (sa, ha) = AppSrc::new(4, Some(Caps::tensors(&ia)));
+        let (sb, hb) = AppSrc::new(4, Some(Caps::tensors(&ia)));
+        let (sink, _rx) = AppSink::new(4);
+        let a = p.add("a", Box::new(sa)).unwrap();
+        let b = p.add("b", Box::new(sb)).unwrap();
+        let m = p.add("m0", Box::new(TensorMux::new(2))).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link_pads(a, 0, m, 0).unwrap();
+        p.link_pads(b, 0, m, 1).unwrap();
+        p.link(m, k).unwrap();
+        let _r = p.start().unwrap();
+        ha.push(Buffer::new(vec![1]).with_pts(0)).unwrap();
+        hb.push(Buffer::new(vec![2]).with_pts(5_000_000)).unwrap(); // +5ms
+        std::thread::sleep(Duration::from_millis(200));
+        let s = metrics::global().summary("mux.m0.delta_ms").unwrap();
+        assert!((s.max - 5.0).abs() < 0.5, "delta {s:?}");
+    }
+
+    #[test]
+    fn demux_splits_tensors() {
+        let mut p = Pipeline::new();
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::U8, &[2]).unwrap()).unwrap();
+        info.push(TensorInfo::new(DType::U8, &[3]).unwrap()).unwrap();
+        let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+        let (k0, r0) = AppSink::new(4);
+        let (k1, r1) = AppSink::new(4);
+        let s = p.add("s", Box::new(src)).unwrap();
+        let d = p.add("d", Box::new(TensorDemux::new(2))).unwrap();
+        let a = p.add("k0", Box::new(k0)).unwrap();
+        let b = p.add("k1", Box::new(k1)).unwrap();
+        p.link(s, d).unwrap();
+        p.link_pads(d, 0, a, 0).unwrap();
+        p.link_pads(d, 1, b, 0).unwrap();
+        let _r = p.start().unwrap();
+        h.push(Buffer::new(vec![1, 2, 3, 4, 5])).unwrap();
+        assert_eq!(&r0.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[1, 2]);
+        assert_eq!(&r1.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[3, 4, 5]);
+    }
+
+    #[test]
+    fn tensor_if_routes_by_threshold() {
+        let mut p = Pipeline::new();
+        let info = TensorsInfo::one(TensorInfo::new(DType::F32, &[1]).unwrap());
+        let (src, h) = AppSrc::new(8, Some(Caps::tensors(&info)));
+        let (kt, rt) = AppSink::new(8);
+        let (ke, re) = AppSink::new(8);
+        let s = p.add("s", Box::new(src)).unwrap();
+        let i = p.add("if", Box::new(TensorIf::new(0, IfOp::Gt, 0.5))).unwrap();
+        let a = p.add("then", Box::new(kt)).unwrap();
+        let b = p.add("else", Box::new(ke)).unwrap();
+        p.link(s, i).unwrap();
+        p.link_pads(i, 0, a, 0).unwrap();
+        p.link_pads(i, 1, b, 0).unwrap();
+        let _r = p.start().unwrap();
+        h.push(f32_buf(&[0.9])).unwrap();
+        h.push(f32_buf(&[0.1])).unwrap();
+        h.push(f32_buf(&[0.7])).unwrap();
+        assert!(rt.recv_timeout(Duration::from_secs(2)).is_ok());
+        assert!(re.recv_timeout(Duration::from_secs(2)).is_ok());
+        assert!(rt.recv_timeout(Duration::from_secs(2)).is_ok());
+    }
+
+    #[test]
+    fn if_op_eval_table() {
+        assert!(IfOp::Gt.eval(1.0, 0.5));
+        assert!(!IfOp::Gt.eval(0.5, 0.5));
+        assert!(IfOp::Ge.eval(0.5, 0.5));
+        assert!(IfOp::Lt.eval(0.1, 0.5));
+        assert!(IfOp::Le.eval(0.5, 0.5));
+        assert!(IfOp::Eq.eval(0.5, 0.5));
+        assert!(IfOp::parse("gt").is_ok());
+        assert!(IfOp::parse("!!").is_err());
+    }
+}

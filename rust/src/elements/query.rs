@@ -1,0 +1,665 @@
+//! Query elements — inference workload offloading (§4.2.2, Fig 2):
+//! `tensor_query_client`, `tensor_query_serversrc`, `tensor_query_serversink`.
+//!
+//! In a client pipeline, `tensor_query_client` is a drop-in replacement
+//! for `tensor_filter`: it ships each input frame to a server pipeline
+//! and emits the inference result downstream. Two transports:
+//!
+//! - **tcp** (TCP-raw): direct `host:port`, no discovery (fast, rigid).
+//! - **mqtt-hybrid**: discovery + liveness via the MQTT broker
+//!   (`edge/query/<operation>/#` retained ads + last-will), DATA over a
+//!   direct TCP connection — "rich features of MQTT without broker
+//!   throughput overheads". Automatic failover to another compatible
+//!   server on death (R4).
+//!
+//! Server side: `serversrc` accepts connections, tags each request buffer
+//! with a client id; `serversink` routes responses back by that tag; the
+//! two rendezvous in-process via the operation name (`pair-id` to
+//! disambiguate multiple servers in one process).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::coordinator::discovery::{self, AdWatcher, ServiceAd};
+use crate::element::{Ctx, Element, Item};
+use crate::metrics;
+use crate::mqtt::MqttClient;
+use crate::serial::wire;
+use crate::serial::Codec;
+use crate::util::{Error, Result};
+use crate::{log_debug, log_info, log_warn};
+
+/// Shared table of live client connections (write halves), keyed by the
+/// server-assigned client id.
+#[derive(Default)]
+pub struct ConnTable {
+    conns: Mutex<HashMap<u64, TcpStream>>,
+}
+
+impl ConnTable {
+    fn insert(&self, id: u64, stream: TcpStream) {
+        self.conns.lock().unwrap().insert(id, stream);
+    }
+
+    fn remove(&self, id: u64) {
+        self.conns.lock().unwrap().remove(&id);
+    }
+
+    fn write_frame(&self, id: u64, frame: &[u8]) -> Result<()> {
+        let mut conns = self.conns.lock().unwrap();
+        let Some(stream) = conns.get_mut(&id) else {
+            return Err(Error::Transport(format!("query client {id} is gone")));
+        };
+        let r = stream
+            .write_all(&(frame.len() as u32).to_le_bytes())
+            .and_then(|_| stream.write_all(frame));
+        if r.is_err() {
+            conns.remove(&id);
+        }
+        r.map_err(|e| Error::Transport(format!("response to client {id}: {e}")))
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn tables() -> &'static Mutex<HashMap<String, Arc<ConnTable>>> {
+    static T: OnceLock<Mutex<HashMap<String, Arc<ConnTable>>>> = OnceLock::new();
+    T.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn table_for(pair_id: &str) -> Arc<ConnTable> {
+    tables().lock().unwrap().entry(pair_id.to_string()).or_default().clone()
+}
+
+/// Transport protocol of the query elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryProtocol {
+    TcpRaw,
+    MqttHybrid,
+}
+
+impl QueryProtocol {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "tcp" | "tcp-raw" => QueryProtocol::TcpRaw,
+            "mqtt-hybrid" | "hybrid" | "mqtt" => QueryProtocol::MqttHybrid,
+            other => return Err(Error::Parse(format!("unknown query protocol `{other}`"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Accepts query connections and feeds request buffers into the server
+/// pipeline, tagged with the client id.
+pub struct QueryServerSrc {
+    pub operation: String,
+    pub pair_id: String,
+    pub bind: String,
+    pub protocol: QueryProtocol,
+    pub broker: String,
+    pub server_id: String,
+    pub model_label: String,
+    rx: Option<Receiver<(Option<Caps>, Buffer)>>,
+    mqtt: Option<MqttClient>,
+    ad: Option<ServiceAd>,
+    port: u16,
+    shutdown: Option<Arc<AtomicBool>>,
+    last_caps: Option<Caps>,
+}
+
+impl QueryServerSrc {
+    pub fn new(operation: &str) -> Self {
+        Self {
+            operation: operation.to_string(),
+            pair_id: operation.to_string(),
+            bind: "127.0.0.1:0".to_string(),
+            protocol: QueryProtocol::TcpRaw,
+            broker: String::new(),
+            server_id: format!("srv-{}-{}", std::process::id(), next_server_seq()),
+            model_label: "model".to_string(),
+            rx: None,
+            mqtt: None,
+            ad: None,
+            port: 0,
+            shutdown: None,
+            last_caps: None,
+        }
+    }
+
+    pub fn with_bind(mut self, bind: &str) -> Self {
+        self.bind = bind.to_string();
+        self
+    }
+
+    pub fn with_pair_id(mut self, id: &str) -> Self {
+        self.pair_id = id.to_string();
+        self
+    }
+
+    pub fn with_hybrid(mut self, broker: &str) -> Self {
+        self.protocol = QueryProtocol::MqttHybrid;
+        self.broker = broker.to_string();
+        self
+    }
+
+    pub fn with_server_id(mut self, id: &str) -> Self {
+        self.server_id = id.to_string();
+        self
+    }
+
+    pub fn with_model_label(mut self, m: &str) -> Self {
+        self.model_label = m.to_string();
+        self
+    }
+
+    /// Port actually bound (after start).
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+}
+
+fn next_server_seq() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(1);
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+impl Element for QueryServerSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+
+    fn start(&mut self, ctx: &mut Ctx) -> Result<()> {
+        discovery::validate_operation(&self.operation)?;
+        let listener = TcpListener::bind(&self.bind)
+            .map_err(|e| Error::Transport(format!("query bind {}: {e}", self.bind)))?;
+        self.port = listener.local_addr()?.port();
+        listener.set_nonblocking(true)?;
+        let table = table_for(&self.pair_id);
+        let (tx, rx) = sync_channel::<(Option<Caps>, Buffer)>(64);
+        self.rx = Some(rx);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        self.shutdown = Some(shutdown.clone());
+
+        let name = ctx.name.clone();
+        std::thread::Builder::new()
+            .name(format!("query-accept-{}", self.operation))
+            .spawn(move || {
+                let next_client = AtomicU64::new(1);
+                while !shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            stream.set_nodelay(true).ok();
+                            let id = next_client.fetch_add(1, Ordering::Relaxed);
+                            log_debug!("query", "{name}: client {id} from {peer}");
+                            let Ok(wstream) = stream.try_clone() else { continue };
+                            table.insert(id, wstream);
+                            spawn_client_reader(id, stream, table.clone(), tx.clone());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Transport(format!("spawn accept: {e}")))?;
+
+        if self.protocol == QueryProtocol::MqttHybrid {
+            let ad = ServiceAd {
+                operation: self.operation.clone(),
+                server_id: self.server_id.clone(),
+                host: "127.0.0.1".to_string(),
+                port: self.port,
+                model: self.model_label.clone(),
+                load: 0.0,
+            };
+            let client =
+                MqttClient::connect(&self.broker, discovery::server_client_options(&self.server_id, &ad))?;
+            discovery::advertise(&client, &ad)?;
+            log_info!("query", "{}: advertised `{}` on {}", ctx.name, ad.topic(), self.broker);
+            self.mqtt = Some(client);
+            self.ad = Some(ad);
+        }
+        Ok(())
+    }
+
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        let Some(rx) = &self.rx else { return Ok(false) };
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok((caps, buf)) => {
+                if let Some(c) = caps {
+                    if self.last_caps.as_ref() != Some(&c) {
+                        ctx.push_caps(c.clone())?;
+                        self.last_caps = Some(c);
+                    }
+                }
+                metrics::global().counter(&format!("queryserver.{}", ctx.name)).add_bytes(buf.len() as u64);
+                ctx.push_buffer(buf)?;
+                Ok(true)
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(!ctx.stopped()),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(false),
+        }
+    }
+
+    fn stop(&mut self, _ctx: &mut Ctx) {
+        if let Some(s) = &self.shutdown {
+            s.store(true, Ordering::Relaxed);
+        }
+        if let (Some(client), Some(ad)) = (&self.mqtt, &self.ad) {
+            let _ = discovery::clear_advertisement(client, ad);
+            client.disconnect();
+        }
+    }
+}
+
+fn spawn_client_reader(
+    id: u64,
+    mut stream: TcpStream,
+    table: Arc<ConnTable>,
+    tx: SyncSender<(Option<Caps>, Buffer)>,
+) {
+    std::thread::Builder::new()
+        .name(format!("query-client-{id}"))
+        .spawn(move || {
+            loop {
+                let frame = match wire::read_frame(&mut stream) {
+                    Ok(f) => f,
+                    Err(_) => break,
+                };
+                let Ok((mut buf, caps)) = wire::decode(&frame) else { break };
+                buf.meta.client_id = Some(id);
+                if tx.send((caps, buf)).is_err() {
+                    break;
+                }
+            }
+            table.remove(id);
+            log_debug!("query", "client {id} disconnected");
+        })
+        .expect("spawn query reader");
+}
+
+/// Routes response buffers back to the tagged client connection.
+pub struct QueryServerSink {
+    pub pair_id: String,
+    table: Option<Arc<ConnTable>>,
+    caps: Option<Caps>,
+}
+
+impl QueryServerSink {
+    pub fn new(pair_id: &str) -> Self {
+        Self { pair_id: pair_id.to_string(), table: None, caps: None }
+    }
+}
+
+impl Element for QueryServerSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+
+    fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        self.table = Some(table_for(&self.pair_id));
+        Ok(())
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                self.caps = Some(c);
+                Ok(())
+            }
+            Item::Buffer(b) => {
+                let table =
+                    self.table.as_ref().ok_or_else(|| Error::element(&ctx.name, "not started"))?;
+                let Some(id) = b.meta.client_id else {
+                    return Err(Error::element(&ctx.name, "response buffer without client id"));
+                };
+                let frame = wire::encode(&b, self.caps.as_ref(), Codec::None)
+                    .map_err(|e| Error::element(&ctx.name, e))?;
+                // A vanished client is not a pipeline error (R4: clients
+                // come and go); drop the response.
+                if let Err(e) = table.write_frame(id, &frame) {
+                    log_debug!("query", "{}: {e}", ctx.name);
+                }
+                Ok(())
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+enum Endpoint {
+    Fixed(String),
+    Discovered { watcher: AdWatcher, current: Option<ServiceAd>, failed: Vec<String> },
+}
+
+/// Drop-in `tensor_filter` replacement that offloads inference.
+pub struct QueryClient {
+    pub operation: String,
+    pub timeout: Duration,
+    endpoint: Endpoint,
+    conn: Option<TcpStream>,
+    in_caps: Option<Caps>,
+    out_caps: Option<Caps>,
+    seq: u64,
+}
+
+impl QueryClient {
+    /// TCP-raw transport to a fixed server address.
+    pub fn tcp(operation: &str, server: &str) -> Self {
+        Self {
+            operation: operation.to_string(),
+            timeout: Duration::from_secs(5),
+            endpoint: Endpoint::Fixed(server.to_string()),
+            conn: None,
+            in_caps: None,
+            out_caps: None,
+            seq: 0,
+        }
+    }
+
+    /// MQTT-hybrid transport: discover servers for `operation` via broker.
+    pub fn hybrid(operation: &str, broker: &str) -> Result<Self> {
+        let watcher = AdWatcher::watch(broker, operation)?;
+        Ok(Self {
+            operation: operation.to_string(),
+            timeout: Duration::from_secs(5),
+            endpoint: Endpoint::Discovered { watcher, current: None, failed: Vec::new() },
+            conn: None,
+            in_caps: None,
+            out_caps: None,
+            seq: 0,
+        })
+    }
+
+    pub fn with_timeout(mut self, t: Duration) -> Self {
+        self.timeout = t;
+        self
+    }
+
+    fn connect(&mut self) -> Result<()> {
+        let addr = match &mut self.endpoint {
+            Endpoint::Fixed(a) => a.clone(),
+            Endpoint::Discovered { watcher, current, failed } => {
+                let ad = watcher
+                    .pick(failed)
+                    .or_else(|| watcher.wait_any(Duration::from_secs(3)))
+                    .ok_or_else(|| {
+                        Error::Transport(format!("no servers for operation `{}`", self.operation))
+                    })?;
+                log_info!("query", "client: using server `{}` at {}", ad.server_id, ad.endpoint());
+                let ep = ad.endpoint();
+                *current = Some(ad);
+                ep
+            }
+        };
+        let stream = TcpStream::connect(&addr)
+            .map_err(|e| Error::Transport(format!("query connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.timeout))?;
+        self.conn = Some(stream);
+        Ok(())
+    }
+
+    fn mark_failed(&mut self) {
+        self.conn = None;
+        if let Endpoint::Discovered { current, failed, .. } = &mut self.endpoint {
+            if let Some(ad) = current.take() {
+                log_warn!("query", "client: server `{}` failed; failing over", ad.server_id);
+                failed.push(ad.server_id);
+            }
+        }
+    }
+
+    /// One request/response exchange.
+    fn exchange(&mut self, b: &Buffer) -> Result<(Buffer, Option<Caps>)> {
+        if self.conn.is_none() {
+            self.connect()?;
+        }
+        let mut req = b.clone();
+        self.seq += 1;
+        req.meta.seq = Some(self.seq);
+        let frame = wire::encode(&req, self.in_caps.as_ref(), Codec::None)?;
+        let stream = self.conn.as_mut().unwrap();
+        let send = wire::write_frame(stream, &frame);
+        let resp = send.and_then(|_| wire::read_frame(stream));
+        match resp {
+            Ok(f) => wire::decode(&f),
+            Err(e) => {
+                self.mark_failed();
+                Err(e)
+            }
+        }
+    }
+}
+
+impl Element for QueryClient {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                self.in_caps = Some(c);
+                Ok(())
+            }
+            Item::Buffer(b) => {
+                let t0 = std::time::Instant::now();
+                // Try current server, then fail over once (R4).
+                let (resp, caps) = match self.exchange(&b) {
+                    Ok(r) => r,
+                    Err(first) => match self.exchange(&b) {
+                        Ok(r) => r,
+                        Err(_second) => {
+                            return Err(Error::element(
+                                &ctx.name,
+                                format!("query failed (no failover target): {first}"),
+                            ))
+                        }
+                    },
+                };
+                metrics::global().observe(
+                    &format!("query.{}.rtt_us", ctx.name),
+                    t0.elapsed().as_micros() as f64,
+                );
+                if let Some(c) = caps {
+                    if self.out_caps.as_ref() != Some(&c) {
+                        ctx.push_caps(c.clone())?;
+                        self.out_caps = Some(c);
+                    }
+                }
+                let mut out = resp;
+                out.pts = b.pts; // response inherits the request timestamp
+                out.duration = b.duration;
+                out.meta.client_id = None;
+                ctx.push_buffer(out)?;
+                Ok(())
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+
+    fn stop(&mut self, _ctx: &mut Ctx) {
+        self.conn = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::elements::filter::TensorFilter;
+    use crate::mqtt::Broker;
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{DType, TensorInfo, TensorsInfo};
+
+    /// Server pipeline (serversrc -> x2 filter -> serversink) on a port.
+    fn start_server_on(
+        pair: &str,
+        op: &str,
+        port: u16,
+        broker: Option<&str>,
+    ) -> crate::pipeline::Running {
+        let mut src = QueryServerSrc::new(op)
+            .with_pair_id(pair)
+            .with_server_id(pair)
+            .with_bind(&format!("127.0.0.1:{port}"));
+        if let Some(b) = broker {
+            src = src.with_hybrid(b);
+        }
+        let mut p = Pipeline::new();
+        let f = TensorFilter::custom(Box::new(|b: &Buffer| {
+            Ok(b.data.iter().map(|&x| x.wrapping_mul(2)).collect())
+        }));
+        let s = p.add("ssrc", Box::new(src)).unwrap();
+        let fi = p.add("f", Box::new(f)).unwrap();
+        let k = p.add("ssink", Box::new(QueryServerSink::new(pair))).unwrap();
+        p.link(s, fi).unwrap();
+        p.link(fi, k).unwrap();
+        p.start().unwrap()
+    }
+
+    fn free_port() -> u16 {
+        TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+    }
+
+    fn client_pipeline(client: QueryClient) -> (crate::pipeline::Running, crate::elements::basic::AppSrcHandle, Receiver<Buffer>) {
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[4]).unwrap());
+        let mut p = Pipeline::new();
+        let (src, h) = AppSrc::new(8, Some(Caps::tensors(&info)));
+        let (sink, rx) = AppSink::new(8);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let c = p.add("qc", Box::new(client)).unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, c).unwrap();
+        p.link(c, k).unwrap();
+        (p.start().unwrap(), h, rx)
+    }
+
+    #[test]
+    fn tcp_query_roundtrip() {
+        let port = free_port();
+        let server = start_server_on("tcp-rt", "op-tcp", port, None);
+        std::thread::sleep(Duration::from_millis(200));
+        let (cr, h, rx) = client_pipeline(QueryClient::tcp("op-tcp", &format!("127.0.0.1:{port}")));
+        h.push(Buffer::new(vec![1, 2, 3, 4]).with_pts(99)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(&out.data[..], &[2, 4, 6, 8]);
+        assert_eq!(out.pts, Some(99));
+        drop(h);
+        let _ = cr.stop(Duration::from_secs(5));
+        let _ = server.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn multiple_clients_one_server() {
+        let port = free_port();
+        let server = start_server_on("multi", "op-multi", port, None);
+        std::thread::sleep(Duration::from_millis(200));
+        let addr = format!("127.0.0.1:{port}");
+        let (c1, h1, r1) = client_pipeline(QueryClient::tcp("op-multi", &addr));
+        let (c2, h2, r2) = client_pipeline(QueryClient::tcp("op-multi", &addr));
+        h1.push(Buffer::new(vec![1, 1, 1, 1])).unwrap();
+        h2.push(Buffer::new(vec![3, 3, 3, 3])).unwrap();
+        assert_eq!(&r1.recv_timeout(Duration::from_secs(5)).unwrap().data[..], &[2, 2, 2, 2]);
+        assert_eq!(&r2.recv_timeout(Duration::from_secs(5)).unwrap().data[..], &[6, 6, 6, 6]);
+        drop(h1);
+        drop(h2);
+        let _ = c1.stop(Duration::from_secs(5));
+        let _ = c2.stop(Duration::from_secs(5));
+        let _ = server.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn hybrid_discovery_and_query() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let baddr = broker.addr().to_string();
+        let port = free_port();
+        let server = start_server_on("hy1", "op-hybrid", port, Some(&baddr));
+        std::thread::sleep(Duration::from_millis(300));
+        let client = QueryClient::hybrid("op-hybrid", &baddr).unwrap();
+        let (cr, h, rx) = client_pipeline(client);
+        h.push(Buffer::new(vec![5, 5, 5, 5])).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(&out.data[..], &[10, 10, 10, 10]);
+        drop(h);
+        let _ = cr.stop(Duration::from_secs(5));
+        let _ = server.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn hybrid_failover_to_second_server() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let baddr = broker.addr().to_string();
+        let p1 = free_port();
+        let p2 = free_port();
+        let s1 = start_server_on("fo1", "op-fo", p1, Some(&baddr));
+        let s2 = start_server_on("fo2", "op-fo", p2, Some(&baddr));
+        std::thread::sleep(Duration::from_millis(400));
+        let client = QueryClient::hybrid("op-fo", &baddr).unwrap().with_timeout(Duration::from_secs(1));
+        let (cr, h, rx) = client_pipeline(client);
+        h.push(Buffer::new(vec![1, 0, 0, 1])).unwrap();
+        assert_eq!(&rx.recv_timeout(Duration::from_secs(5)).unwrap().data[..], &[2, 0, 0, 2]);
+        // Kill the first server pipeline entirely (unclean for its MQTT
+        // session is hard to fake here; the TCP conn dying is enough for
+        // the client to fail over on the next request).
+        let _ = s1.stop(Duration::from_secs(5));
+        std::thread::sleep(Duration::from_millis(300));
+        h.push(Buffer::new(vec![2, 0, 0, 2])).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(&out.data[..], &[4, 0, 0, 4]);
+        drop(h);
+        let _ = cr.stop(Duration::from_secs(5));
+        let _ = s2.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn query_protocol_parse() {
+        assert_eq!(QueryProtocol::parse("tcp").unwrap(), QueryProtocol::TcpRaw);
+        assert_eq!(QueryProtocol::parse("mqtt-hybrid").unwrap(), QueryProtocol::MqttHybrid);
+        assert!(QueryProtocol::parse("udp").is_err());
+    }
+
+    #[test]
+    fn client_without_server_errors() {
+        let (mut running, h, _rx) = {
+            let client = QueryClient::tcp("none", "127.0.0.1:1").with_timeout(Duration::from_millis(300));
+            let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[1]).unwrap());
+            let mut p = Pipeline::new();
+            let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+            let (sink, rx) = AppSink::new(4);
+            let s = p.add("src", Box::new(src)).unwrap();
+            let c = p.add("qc", Box::new(client)).unwrap();
+            let k = p.add("sink", Box::new(sink)).unwrap();
+            p.link(s, c).unwrap();
+            p.link(c, k).unwrap();
+            (p.start().unwrap(), h, rx)
+        };
+        h.push(Buffer::new(vec![0])).unwrap();
+        match running.wait(Duration::from_secs(5)) {
+            crate::pipeline::WaitOutcome::Error { element, .. } => assert_eq!(element, "qc"),
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! `tensor_sparse_enc` / `tensor_sparse_dec` — converting filters between
+//! static and sparse (COO) tensor streams (§4.1: the binary representation
+//! is incompatible with static/flexible, hence dedicated elements).
+
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item};
+use crate::metrics;
+use crate::tensor::{sparse, TensorsInfo};
+use crate::util::{Error, Result};
+
+/// static → sparse. Records the per-frame compression ratio into the
+/// histogram `sparse.<name>.ratio` (encoded/dense).
+pub struct SparseEnc {
+    info: Option<TensorsInfo>,
+}
+
+impl Default for SparseEnc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SparseEnc {
+    pub fn new() -> Self {
+        Self { info: None }
+    }
+}
+
+impl Element for SparseEnc {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let info = c.tensors_info().map_err(|e| Error::element(&ctx.name, e))?;
+                self.info = Some(info.clone());
+                // Sparse caps keep the logical shape for the decoder side.
+                let caps = Caps::tensors_sparse()
+                    .with("num_tensors", info.len())
+                    .with("dimensions", info.dimensions_string())
+                    .with("types", info.types_string());
+                ctx.push_caps(caps)
+            }
+            Item::Buffer(b) => {
+                let info = self
+                    .info
+                    .as_ref()
+                    .ok_or_else(|| Error::element(&ctx.name, "buffer before caps"))?;
+                if b.len() != info.frame_size() {
+                    return Err(Error::element(
+                        &ctx.name,
+                        format!("frame {} != caps size {}", b.len(), info.frame_size()),
+                    ));
+                }
+                let mut out = Vec::new();
+                let mut off = 0;
+                for t in &info.tensors {
+                    let enc = sparse::encode(t, &b.data[off..off + t.size()])
+                        .map_err(|e| Error::element(&ctx.name, e))?;
+                    off += t.size();
+                    out.extend_from_slice(&enc);
+                }
+                metrics::global().observe(
+                    &format!("sparse.{}.ratio", ctx.name),
+                    out.len() as f64 / b.len().max(1) as f64,
+                );
+                ctx.push_buffer(b.map_payload(out))
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+/// sparse → static.
+pub struct SparseDec {
+    info: Option<TensorsInfo>,
+}
+
+impl Default for SparseDec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SparseDec {
+    pub fn new() -> Self {
+        Self { info: None }
+    }
+}
+
+impl Element for SparseDec {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let info = c.tensors_info().map_err(|e| Error::element(&ctx.name, e))?;
+                self.info = Some(info.clone());
+                ctx.push_caps(Caps::tensors(&info))
+            }
+            Item::Buffer(b) => {
+                let info = self
+                    .info
+                    .as_ref()
+                    .ok_or_else(|| Error::element(&ctx.name, "buffer before caps"))?;
+                let mut payload = Vec::with_capacity(info.frame_size());
+                let mut off = 0usize;
+                for _ in 0..info.len() {
+                    // Each chunk's length is derivable from its header.
+                    let chunk = &b.data[off..];
+                    let (t, dense) =
+                        sparse::decode_prefix(chunk).map_err(|e| Error::element(&ctx.name, e))?;
+                    off += sparse::encoded_len(chunk).map_err(|e| Error::element(&ctx.name, e))?;
+                    let _ = t;
+                    payload.extend_from_slice(&dense);
+                }
+                if off != b.len() {
+                    return Err(Error::element(
+                        &ctx.name,
+                        format!("{} trailing bytes in sparse frame", b.len() - off),
+                    ));
+                }
+                ctx.push_buffer(b.map_payload(payload))
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Buffer;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{f32_to_bytes, DType, TensorInfo};
+    use std::time::Duration;
+
+    #[test]
+    fn enc_dec_roundtrip_pipeline() {
+        let mut p = Pipeline::new();
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::F32, &[8]).unwrap()).unwrap();
+        info.push(TensorInfo::new(DType::F32, &[4]).unwrap()).unwrap();
+        let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+        let (sink, rx) = AppSink::new(4);
+        let s = p.add("s", Box::new(src)).unwrap();
+        let e = p.add("enc", Box::new(SparseEnc::new())).unwrap();
+        let d = p.add("dec", Box::new(SparseDec::new())).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link(s, e).unwrap();
+        p.link(e, d).unwrap();
+        p.link(d, k).unwrap();
+        let _r = p.start().unwrap();
+        let mut vals = vec![0f32; 12];
+        vals[1] = 3.5;
+        vals[9] = -1.0;
+        let payload = f32_to_bytes(&vals);
+        h.push(Buffer::new(payload.clone()).with_pts(3)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(&out.data[..], payload.as_slice());
+        assert_eq!(out.pts, Some(3));
+    }
+
+    #[test]
+    fn sparse_frame_smaller_for_sparse_data() {
+        let mut p = Pipeline::new();
+        let info = TensorsInfo::one(TensorInfo::new(DType::F32, &[1000]).unwrap());
+        let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+        let (sink, rx) = AppSink::new(4);
+        let s = p.add("s", Box::new(src)).unwrap();
+        let e = p.add("enc", Box::new(SparseEnc::new())).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link(s, e).unwrap();
+        p.link(e, k).unwrap();
+        let _r = p.start().unwrap();
+        let mut vals = vec![0f32; 1000];
+        vals[17] = 1.0;
+        h.push(Buffer::new(f32_to_bytes(&vals))).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(out.len() < 100, "sparse frame {} bytes", out.len());
+    }
+}

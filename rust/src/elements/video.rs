@@ -1,0 +1,474 @@
+//! Video elements: the synthetic camera (`videotestsrc` — the workload
+//! generator standing in for the paper's USB cameras), `videoconvert`,
+//! `videoscale`, and a minimal `compositor`.
+//!
+//! Video format is fixed to packed RGB (3 bytes/pixel, row-major), which
+//! is what the paper's pipelines negotiate before `tensor_converter`.
+
+use std::sync::Arc;
+
+use crate::buffer::Buffer;
+use crate::caps::Caps;
+use crate::clock::{sleep_until, Ns, SECOND};
+use crate::element::{Ctx, Element, EosTracker, Item};
+use crate::util::{Error, Result};
+use crate::util::rng::XorShift64;
+
+/// Test pattern of the synthetic camera.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    /// Moving color bars (deterministic, compressible).
+    Smpte,
+    /// Per-frame deterministic noise (incompressible).
+    Noise,
+    /// A bright square moving across a dark field (object-like).
+    Ball,
+}
+
+impl Pattern {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "smpte" | "0" => Pattern::Smpte,
+            "noise" | "random" | "1" => Pattern::Noise,
+            "ball" | "18" => Pattern::Ball,
+            other => return Err(Error::Parse(format!("unknown pattern `{other}`"))),
+        })
+    }
+}
+
+/// Synthetic live camera: `width`x`height` RGB at `fps`.
+pub struct VideoTestSrc {
+    pub width: u32,
+    pub height: u32,
+    pub fps: u32,
+    pub pattern: Pattern,
+    /// Stop after this many frames (0 = unbounded / live).
+    pub num_buffers: u64,
+    /// Pace frames against the pipeline clock (live source).
+    pub is_live: bool,
+    frame: u64,
+    caps_sent: bool,
+    rng: XorShift64,
+}
+
+impl VideoTestSrc {
+    pub fn new(width: u32, height: u32, fps: u32) -> Self {
+        Self {
+            width,
+            height,
+            fps,
+            pattern: Pattern::Smpte,
+            num_buffers: 0,
+            is_live: true,
+            frame: 0,
+            caps_sent: false,
+            rng: XorShift64::new(0xC0FFEE),
+        }
+    }
+
+    pub fn with_pattern(mut self, p: Pattern) -> Self {
+        self.pattern = p;
+        self
+    }
+
+    pub fn with_num_buffers(mut self, n: u64) -> Self {
+        self.num_buffers = n;
+        self
+    }
+
+    pub fn live(mut self, live: bool) -> Self {
+        self.is_live = live;
+        self
+    }
+
+    fn render(&mut self) -> Vec<u8> {
+        let (w, h) = (self.width as usize, self.height as usize);
+        let mut data = vec![0u8; w * h * 3];
+        match self.pattern {
+            Pattern::Smpte => {
+                const BARS: [[u8; 3]; 7] = [
+                    [235, 235, 235],
+                    [235, 235, 16],
+                    [16, 235, 235],
+                    [16, 235, 16],
+                    [235, 16, 235],
+                    [235, 16, 16],
+                    [16, 16, 235],
+                ];
+                let shift = (self.frame as usize) % w.max(1);
+                for y in 0..h {
+                    for x in 0..w {
+                        let bar = ((x + shift) * 7 / w.max(1)).min(6);
+                        let px = (y * w + x) * 3;
+                        data[px..px + 3].copy_from_slice(&BARS[bar]);
+                    }
+                }
+            }
+            Pattern::Noise => {
+                self.rng.fill_bytes(&mut data);
+            }
+            Pattern::Ball => {
+                let t = self.frame as usize;
+                let cx = (t * 7) % w.max(1);
+                let cy = (t * 3) % h.max(1);
+                let r = (w.min(h) / 8).max(1);
+                for y in 0..h {
+                    for x in 0..w {
+                        let px = (y * w + x) * 3;
+                        let dx = x.abs_diff(cx);
+                        let dy = y.abs_diff(cy);
+                        if dx * dx + dy * dy <= r * r {
+                            data[px] = 250;
+                            data[px + 1] = 220;
+                            data[px + 2] = 40;
+                        } else {
+                            data[px] = 24;
+                            data[px + 1] = 28;
+                            data[px + 2] = 32;
+                        }
+                    }
+                }
+            }
+        }
+        data
+    }
+}
+
+impl Element for VideoTestSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        if self.num_buffers > 0 && self.frame >= self.num_buffers {
+            return Ok(false);
+        }
+        if !self.caps_sent {
+            ctx.push_caps(Caps::video(self.width, self.height, self.fps))?;
+            self.caps_sent = true;
+        }
+        let dur = SECOND / self.fps.max(1) as Ns;
+        let pts = self.frame * dur;
+        if self.is_live {
+            // do-timestamp=true semantics: stamp at frame creation time.
+            sleep_until(&ctx.clock, pts);
+            if ctx.stopped() {
+                return Ok(false);
+            }
+        }
+        let data = self.render();
+        let mut buf = Buffer::new(data).with_pts(pts).with_duration(dur);
+        buf.meta.origin = Some(Arc::from(ctx.name.as_str()));
+        ctx.push_buffer(buf)?;
+        self.frame += 1;
+        Ok(true)
+    }
+}
+
+/// Color conversion. RGB is the only in-memory format, so this is an
+/// identity that exists for pipeline-description compatibility.
+pub struct VideoConvert;
+
+impl Element for VideoConvert {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if !matches!(item, Item::Eos) {
+            ctx.push(0, item)?;
+        }
+        Ok(())
+    }
+}
+
+/// Nearest-neighbour scaler to a fixed target size.
+pub struct VideoScale {
+    pub out_w: u32,
+    pub out_h: u32,
+    in_w: u32,
+    in_h: u32,
+}
+
+impl VideoScale {
+    pub fn new(out_w: u32, out_h: u32) -> Self {
+        Self { out_w, out_h, in_w: 0, in_h: 0 }
+    }
+}
+
+impl Element for VideoScale {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let (w, h, fps) = c
+                    .video_geometry()
+                    .map_err(|e| Error::element(&ctx.name, e))?;
+                self.in_w = w;
+                self.in_h = h;
+                ctx.push_caps(Caps::video(self.out_w, self.out_h, fps))
+            }
+            Item::Buffer(b) => {
+                if self.in_w == 0 {
+                    return Err(Error::element(&ctx.name, "buffer before caps"));
+                }
+                if self.in_w == self.out_w && self.in_h == self.out_h {
+                    return ctx.push_buffer(b);
+                }
+                let (iw, ih) = (self.in_w as usize, self.in_h as usize);
+                let (ow, oh) = (self.out_w as usize, self.out_h as usize);
+                let expect = iw * ih * 3;
+                if b.len() != expect {
+                    return Err(Error::element(
+                        &ctx.name,
+                        format!("frame {} bytes != {expect} for {iw}x{ih}", b.len()),
+                    ));
+                }
+                let mut out = vec![0u8; ow * oh * 3];
+                for y in 0..oh {
+                    let sy = y * ih / oh;
+                    for x in 0..ow {
+                        let sx = x * iw / ow;
+                        let d = (y * ow + x) * 3;
+                        let s = (sy * iw + sx) * 3;
+                        out[d..d + 3].copy_from_slice(&b.data[s..s + 3]);
+                    }
+                }
+                ctx.push_buffer(b.map_payload(out))
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+/// Minimal compositor: N video sink pads layered onto one canvas by
+/// per-pad (xpos, ypos, zorder). One output frame per pad-0 frame, using
+/// the latest frame from the other pads.
+pub struct Compositor {
+    pads: Vec<PadCfg>,
+    latest: Vec<Option<Buffer>>,
+    geoms: Vec<Option<(u32, u32)>>,
+    out_w: u32,
+    out_h: u32,
+    caps_sent: bool,
+    eos: EosTracker,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PadCfg {
+    pub xpos: u32,
+    pub ypos: u32,
+    pub zorder: u32,
+}
+
+impl Compositor {
+    pub fn new(n_pads: usize) -> Self {
+        Self {
+            pads: vec![PadCfg::default(); n_pads.max(1)],
+            latest: vec![None; n_pads.max(1)],
+            geoms: vec![None; n_pads.max(1)],
+            out_w: 0,
+            out_h: 0,
+            caps_sent: false,
+            eos: EosTracker::new(n_pads.max(1)),
+        }
+    }
+
+    pub fn set_pad(&mut self, pad: usize, cfg: PadCfg) {
+        if pad < self.pads.len() {
+            self.pads[pad] = cfg;
+        }
+    }
+
+    fn compose(&self) -> Option<Vec<u8>> {
+        let (ow, oh) = (self.out_w as usize, self.out_h as usize);
+        if ow == 0 {
+            return None;
+        }
+        let mut canvas = vec![0u8; ow * oh * 3];
+        // Paint in ascending zorder.
+        let mut order: Vec<usize> = (0..self.pads.len()).collect();
+        order.sort_by_key(|&i| self.pads[i].zorder);
+        for i in order {
+            let (Some(buf), Some((w, h))) = (&self.latest[i], self.geoms[i]) else { continue };
+            let (w, h) = (w as usize, h as usize);
+            let (x0, y0) = (self.pads[i].xpos as usize, self.pads[i].ypos as usize);
+            for y in 0..h {
+                let oy = y + y0;
+                if oy >= oh {
+                    break;
+                }
+                let copy_w = w.min(ow.saturating_sub(x0));
+                if copy_w == 0 {
+                    continue;
+                }
+                let src = (y * w) * 3;
+                let dst = (oy * ow + x0) * 3;
+                canvas[dst..dst + copy_w * 3].copy_from_slice(&buf.data[src..src + copy_w * 3]);
+            }
+        }
+        Some(canvas)
+    }
+}
+
+impl Element for Compositor {
+    fn n_sink_pads(&self) -> usize {
+        self.pads.len()
+    }
+
+    fn ensure_sink_pads(&mut self, n: usize) -> bool {
+        while self.pads.len() < n {
+            self.pads.push(PadCfg::default());
+            self.latest.push(None);
+            self.geoms.push(None);
+        }
+        self.eos = EosTracker::new(self.pads.len());
+        true
+    }
+
+    fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                let (w, h, fps) = c.video_geometry().map_err(|e| Error::element(&ctx.name, e))?;
+                self.geoms[pad] = Some((w, h));
+                // Canvas grows to cover every pad's extent.
+                self.out_w = self.out_w.max(self.pads[pad].xpos + w);
+                self.out_h = self.out_h.max(self.pads[pad].ypos + h);
+                if !self.caps_sent {
+                    ctx.push_caps(Caps::video(self.out_w, self.out_h, fps))?;
+                    self.caps_sent = true;
+                }
+                Ok(())
+            }
+            Item::Buffer(b) => {
+                let pts = b.pts;
+                self.latest[pad] = Some(b);
+                if pad == 0 {
+                    if let Some(canvas) = self.compose() {
+                        let mut out = Buffer::new(canvas);
+                        out.pts = pts;
+                        ctx.push_buffer(out)?;
+                    }
+                }
+                Ok(())
+            }
+            Item::Eos => {
+                self.eos.mark(pad);
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::basic::AppSink;
+    use crate::pipeline::{Pipeline, WaitOutcome};
+    use std::time::Duration;
+
+    #[test]
+    fn testsrc_produces_declared_frames() {
+        let mut p = Pipeline::new();
+        let (sink, rx) = AppSink::new(64);
+        let src = VideoTestSrc::new(8, 6, 30).with_num_buffers(10).live(false);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, k).unwrap();
+        let running = p.start().unwrap();
+        let mut frames = Vec::new();
+        while let Ok(b) = rx.recv_timeout(Duration::from_secs(2)) {
+            frames.push(b);
+        }
+        assert_eq!(running.wait_eos(Duration::from_secs(5)), WaitOutcome::Eos);
+        assert_eq!(frames.len(), 10);
+        assert_eq!(frames[0].len(), 8 * 6 * 3);
+        // PTS spaced by 1/fps.
+        assert_eq!(frames[1].pts.unwrap() - frames[0].pts.unwrap(), SECOND / 30);
+    }
+
+    #[test]
+    fn patterns_are_deterministic_per_frame() {
+        let mut a = VideoTestSrc::new(16, 16, 30).with_pattern(Pattern::Ball);
+        let mut b = VideoTestSrc::new(16, 16, 30).with_pattern(Pattern::Ball);
+        assert_eq!(a.render(), b.render());
+        a.frame = 5;
+        b.frame = 5;
+        assert_eq!(a.render(), b.render());
+        a.frame = 6;
+        assert_ne!(a.render(), b.render());
+    }
+
+    #[test]
+    fn noise_pattern_differs_per_frame() {
+        let mut s = VideoTestSrc::new(8, 8, 30).with_pattern(Pattern::Noise);
+        let f1 = s.render();
+        let f2 = s.render();
+        assert_ne!(f1, f2);
+    }
+
+    #[test]
+    fn pattern_parse() {
+        assert_eq!(Pattern::parse("smpte").unwrap(), Pattern::Smpte);
+        assert_eq!(Pattern::parse("noise").unwrap(), Pattern::Noise);
+        assert_eq!(Pattern::parse("ball").unwrap(), Pattern::Ball);
+        assert!(Pattern::parse("xyz").is_err());
+    }
+
+    #[test]
+    fn videoscale_downscales() {
+        let mut p = Pipeline::new();
+        let (sink, rx) = AppSink::new(16);
+        let src = VideoTestSrc::new(16, 16, 30).with_num_buffers(2).live(false);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let v = p.add("scale", Box::new(VideoScale::new(4, 4))).unwrap();
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(s, v).unwrap();
+        p.link(v, k).unwrap();
+        let running = p.start().unwrap();
+        let b = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(b.len(), 4 * 4 * 3);
+        assert_eq!(running.wait_eos(Duration::from_secs(5)), WaitOutcome::Eos);
+    }
+
+    #[test]
+    fn videoscale_passthrough_same_size() {
+        let mut vs = VideoScale::new(8, 8);
+        vs.in_w = 8;
+        vs.in_h = 8;
+        // passthrough path exercised through a pipeline would need caps;
+        // unit-check the geometry logic instead.
+        assert_eq!(vs.out_w, 8);
+    }
+
+    #[test]
+    fn compositor_layers_by_zorder() {
+        let mut c = Compositor::new(2);
+        c.set_pad(0, PadCfg { xpos: 0, ypos: 0, zorder: 1 });
+        c.set_pad(1, PadCfg { xpos: 0, ypos: 0, zorder: 0 });
+        c.geoms[0] = Some((2, 2));
+        c.geoms[1] = Some((2, 2));
+        c.out_w = 2;
+        c.out_h = 2;
+        c.latest[0] = Some(Buffer::new(vec![255; 12]));
+        c.latest[1] = Some(Buffer::new(vec![1; 12]));
+        let canvas = c.compose().unwrap();
+        // pad 0 has higher zorder -> painted last -> wins
+        assert!(canvas.iter().all(|&b| b == 255));
+    }
+
+    #[test]
+    fn compositor_side_by_side() {
+        let mut c = Compositor::new(2);
+        c.set_pad(0, PadCfg { xpos: 0, ypos: 0, zorder: 0 });
+        c.set_pad(1, PadCfg { xpos: 2, ypos: 0, zorder: 0 });
+        c.geoms[0] = Some((2, 1));
+        c.geoms[1] = Some((2, 1));
+        c.out_w = 4;
+        c.out_h = 1;
+        c.latest[0] = Some(Buffer::new(vec![10; 6]));
+        c.latest[1] = Some(Buffer::new(vec![20; 6]));
+        let canvas = c.compose().unwrap();
+        assert_eq!(&canvas[..6], &[10; 6]);
+        assert_eq!(&canvas[6..], &[20; 6]);
+    }
+}

@@ -1,0 +1,190 @@
+//! `zmqsink` / `zmqsrc` — the brokerless baseline transport (ZeroMQ
+//! analog) used as the Fig 7 normalization denominator.
+//!
+//! Same EdgeFrame envelope as the MQTT elements so the comparison
+//! isolates the transport, not the serialization.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+use crate::caps::Caps;
+use crate::element::{Ctx, Element, Item};
+use crate::metrics;
+use crate::serial::wire;
+use crate::serial::Codec;
+use crate::util::{Error, Result};
+use crate::zmq::{PubSocket, SubSocket, ZmqMessage};
+
+/// Publish a stream on a bound ZMQ-style PUB socket.
+pub struct ZmqSink {
+    pub bind: String,
+    pub topic: String,
+    pub codec: Codec,
+    socket: Option<PubSocket>,
+    caps: Option<Caps>,
+}
+
+impl ZmqSink {
+    pub fn new(bind: &str, topic: &str) -> Self {
+        Self { bind: bind.to_string(), topic: topic.to_string(), codec: Codec::None, socket: None, caps: None }
+    }
+
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.codec = codec;
+        self
+    }
+
+    /// Bound address (after start).
+    pub fn addr(&self) -> Option<std::net::SocketAddr> {
+        self.socket.as_ref().map(|s| s.addr())
+    }
+}
+
+impl Element for ZmqSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+
+    fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        self.socket = Some(PubSocket::bind(&self.bind)?);
+        Ok(())
+    }
+
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Caps(c) => {
+                self.caps = Some(c);
+                Ok(())
+            }
+            Item::Buffer(mut b) => {
+                let sock =
+                    self.socket.as_ref().ok_or_else(|| Error::element(&ctx.name, "not started"))?;
+                b.meta.remote_base_universal = Some(ctx.clock.base_universal);
+                let frame = wire::encode(&b, self.caps.as_ref(), self.codec)
+                    .map_err(|e| Error::element(&ctx.name, e))?;
+                metrics::global().counter(&format!("zmqsink.{}", ctx.name)).add_bytes(frame.len() as u64);
+                sock.send(self.topic.as_bytes(), &frame);
+                Ok(())
+            }
+            Item::Eos => Ok(()),
+        }
+    }
+}
+
+/// Subscribe to a ZMQ-style PUB socket.
+pub struct ZmqSrc {
+    pub connect: String,
+    pub topic: String,
+    rx: Option<Receiver<ZmqMessage>>,
+    last_caps: Option<Caps>,
+}
+
+impl ZmqSrc {
+    pub fn new(connect: &str, topic: &str) -> Self {
+        Self { connect: connect.to_string(), topic: topic.to_string(), rx: None, last_caps: None }
+    }
+}
+
+impl Element for ZmqSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+
+    fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        // The publisher may not have bound yet (pipelines start in any
+        // order); retry for a couple of seconds like zmq's reconnect.
+        let deadline = std::time::Instant::now() + Duration::from_secs(3);
+        let mut sock = loop {
+            match SubSocket::connect(&self.connect) {
+                Ok(s) => break s,
+                Err(e) if std::time::Instant::now() < deadline => {
+                    let _ = e;
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        sock.subscribe(self.topic.as_bytes())?;
+        self.rx = Some(sock.into_channel(32));
+        Ok(())
+    }
+
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        let Some(rx) = &self.rx else { return Ok(false) };
+        match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok((_topic, payload)) => {
+                let (mut buf, caps) =
+                    wire::decode(&payload).map_err(|e| Error::element(&ctx.name, e))?;
+                metrics::global().counter(&format!("zmqsrc.{}", ctx.name)).add_bytes(payload.len() as u64);
+                if let Some(c) = caps {
+                    if self.last_caps.as_ref() != Some(&c) {
+                        ctx.push_caps(c.clone())?;
+                        self.last_caps = Some(c);
+                    }
+                }
+                if let (Some(remote_base), Some(pts)) = (buf.meta.remote_base_universal, buf.pts) {
+                    buf.pts = Some(ctx.clock.remote_pts_to_local(remote_base, pts, 0));
+                }
+                ctx.push_buffer(buf)?;
+                Ok(true)
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Ok(!ctx.stopped()),
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Ok(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Buffer;
+    use crate::elements::basic::{AppSink, AppSrc};
+    use crate::pipeline::Pipeline;
+    use crate::tensor::{DType, TensorInfo, TensorsInfo};
+
+    #[test]
+    fn zmq_pubsub_pipeline_roundtrip() {
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[3]).unwrap());
+        // Grab a free port (std listener closes its fd synchronously on
+        // drop, unlike PubSocket whose accept thread lingers a few ms).
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+
+        let mut pp = Pipeline::new();
+        let (src, h) = AppSrc::new(8, Some(Caps::tensors(&info)));
+        let s = pp.add("src", Box::new(src)).unwrap();
+        let z = pp.add("pub", Box::new(ZmqSink::new(&addr, "t"))).unwrap();
+        pp.link(s, z).unwrap();
+
+        let mut sp = Pipeline::new();
+        let (sink, rx) = AppSink::new(8);
+        let zs = sp.add("sub", Box::new(ZmqSrc::new(&addr, "t"))).unwrap();
+        let k = sp.add("sink", Box::new(sink)).unwrap();
+        sp.link(zs, k).unwrap();
+
+        let pr = pp.start().unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        let sr = sp.start().unwrap();
+        std::thread::sleep(Duration::from_millis(300)); // sub connects
+
+        h.push(Buffer::new(vec![9, 8, 7]).with_pts(0)).unwrap();
+        // The first frame may race the subscription; push a few more.
+        for _ in 0..5 {
+            h.push(Buffer::new(vec![9, 8, 7]).with_pts(0)).unwrap();
+            if let Ok(out) = rx.recv_timeout(Duration::from_millis(400)) {
+                assert_eq!(&out.data[..], &[9, 8, 7]);
+                drop(h);
+                let _ = pr.stop(Duration::from_secs(5));
+                let _ = sr.stop(Duration::from_secs(5));
+                return;
+            }
+        }
+        panic!("no zmq delivery");
+    }
+}

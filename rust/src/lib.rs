@@ -1,0 +1,21 @@
+//! EdgePipe: among-device AI stream pipelines.
+#![allow(clippy::needless_range_loop)]
+
+pub mod bench;
+pub mod buffer;
+pub mod caps;
+pub mod mqtt;
+pub mod coordinator;
+pub mod edge;
+pub mod element;
+pub mod elements;
+pub mod metrics;
+pub mod ntp;
+pub mod pipeline;
+pub mod runtime;
+pub mod zmq;
+pub mod clock;
+pub mod serial;
+pub mod tensor;
+pub mod testkit;
+pub mod util;

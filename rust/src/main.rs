@@ -1,0 +1,184 @@
+//! EdgePipe CLI — the launcher (`gst-launch` analog plus service tools).
+//!
+//! ```text
+//! edgepipe run "<pipeline description>" [--secs N] [--artifacts DIR]
+//! edgepipe broker [--bind 127.0.0.1:1883]
+//! edgepipe serve --operation NAME --model MODEL [--port P] [--broker B] [--protocol tcp|mqtt-hybrid]
+//! edgepipe inspect [ELEMENT]
+//! edgepipe loc "<pipeline description>"          # §5.2 LoC counter
+//! ```
+
+use std::time::Duration;
+
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::pipeline::{parser, WaitOutcome};
+use edgepipe::util::args::Args;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    let code = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "broker" => cmd_broker(&args),
+        "serve" => cmd_serve(&args),
+        "inspect" => cmd_inspect(&args),
+        "loc" => cmd_loc(&args),
+        "version" | "--version" => {
+            println!("edgepipe 0.1.0");
+            0
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage:\n  edgepipe run \"<desc>\" [--secs N] [--artifacts DIR]\n  \
+         edgepipe broker [--bind ADDR]\n  \
+         edgepipe serve --operation OP --model NAME [--port P] [--broker B] [--protocol tcp|mqtt-hybrid]\n  \
+         edgepipe inspect [ELEMENT]\n  \
+         edgepipe loc \"<desc>\""
+    );
+}
+
+fn env_from(args: &Args) -> PipelineEnv {
+    let mut env = PipelineEnv::default();
+    if let Some(d) = args.get("artifacts") {
+        env.artifacts_dir = d.to_string();
+    }
+    env
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let Some(desc) = args.positional.first() else {
+        eprintln!("run: missing pipeline description");
+        return 2;
+    };
+    let registry = Registry::with_builtins();
+    let env = env_from(args);
+    let pipeline = match parser::parse(desc, &registry, &env) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("parse error: {e}");
+            return 2;
+        }
+    };
+    let running = match pipeline.start() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("start error: {e}");
+            return 1;
+        }
+    };
+    let secs = args.get_u64("secs", 0);
+    let outcome = if secs > 0 {
+        running.run_for(Duration::from_secs(secs))
+    } else {
+        running.wait_eos(Duration::from_secs(args.get_u64("timeout", 86400)))
+    };
+    report_outcome(outcome)
+}
+
+fn report_outcome(outcome: WaitOutcome) -> i32 {
+    match outcome {
+        WaitOutcome::Eos => {
+            eprintln!("pipeline finished (EOS)");
+            0
+        }
+        WaitOutcome::Error { element, message } => {
+            eprintln!("pipeline error in `{element}`: {message}");
+            1
+        }
+        WaitOutcome::Timeout => {
+            eprintln!("pipeline timed out");
+            1
+        }
+    }
+}
+
+fn cmd_broker(args: &Args) -> i32 {
+    let bind = args.get_or("bind", "127.0.0.1:1883");
+    match edgepipe::mqtt::Broker::start(bind) {
+        Ok(broker) => {
+            println!("mqtt broker on {}", broker.addr());
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("broker: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let Some(op) = args.get("operation") else {
+        eprintln!("serve: --operation required");
+        return 2;
+    };
+    let Some(model) = args.get("model") else {
+        eprintln!("serve: --model required");
+        return 2;
+    };
+    let port = args.get_u64("port", 0);
+    let protocol = args.get_or("protocol", "mqtt-hybrid");
+    let broker = args.get_or("broker", "127.0.0.1:1883");
+    let env = env_from(args);
+    let desc = format!(
+        "tensor_query_serversrc operation={op} port={port} protocol={protocol} broker={broker} model-label={model} ! \
+         tensor_filter framework=pjrt model={model} ! tensor_query_serversink operation={op}"
+    );
+    println!("serving `{op}` with model `{model}` ({protocol})");
+    let registry = Registry::with_builtins();
+    match parser::parse(&desc, &registry, &env).and_then(|p| p.start()) {
+        Ok(running) => {
+            report_outcome(running.wait_eos(Duration::from_secs(args.get_u64("secs", 86400))))
+        }
+        Err(e) => {
+            eprintln!("serve: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_inspect(args: &Args) -> i32 {
+    let registry = Registry::with_builtins();
+    match args.positional.first() {
+        None => {
+            println!("available elements:");
+            for k in registry.kinds() {
+                println!("  {k}");
+            }
+            0
+        }
+        Some(kind) => {
+            if registry.contains(kind) {
+                println!("{kind}: registered (see rust/src/elements/ docs)");
+                0
+            } else {
+                eprintln!("unknown element `{kind}`");
+                1
+            }
+        }
+    }
+}
+
+fn cmd_loc(args: &Args) -> i32 {
+    let Some(desc) = args.positional.first() else {
+        eprintln!("loc: missing description");
+        return 2;
+    };
+    println!("{} pipeline tokens", parser::segment_count(desc));
+    0
+}

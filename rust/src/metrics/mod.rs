@@ -1,0 +1,254 @@
+//! Lightweight metrics: counters, rate meters, histograms, and the
+//! process-level CPU/RSS sampling the paper's evaluation reports
+//! (throughput, CPU usage, peak memory — §5.4).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    n: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_bytes(&self, b: u64) {
+        self.n.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(b, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Value distribution (lock-guarded vec; fine for bench-scale volumes).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    values: Mutex<Vec<f64>>,
+}
+
+/// Summary statistics of a histogram.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        self.values.lock().unwrap().push(v);
+    }
+
+    pub fn summary(&self) -> Option<Summary> {
+        let mut v = self.values.lock().unwrap().clone();
+        if v.is_empty() {
+            return None;
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        let q = |p: f64| v[((n - 1) as f64 * p).round() as usize];
+        Some(Summary {
+            count: n,
+            mean: v.iter().sum::<f64>() / n as f64,
+            min: v[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            max: v[n - 1],
+        })
+    }
+
+    pub fn reset(&self) {
+        self.values.lock().unwrap().clear();
+    }
+}
+
+/// Global registry (elements record, benches read).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn observe(&self, name: &str, v: f64) {
+        self.histogram(name).observe(v);
+    }
+
+    pub fn summary(&self, name: &str) -> Option<Summary> {
+        self.histograms.lock().unwrap().get(name).and_then(|h| h.summary())
+    }
+
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.histograms.lock().unwrap().clear();
+    }
+
+    pub fn counter_names(&self) -> Vec<String> {
+        self.counters.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Process-wide registry.
+pub fn global() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::default)
+}
+
+// ---------------------------------------------------------------------------
+// /proc sampling (CPU %, peak RSS) — the paper's overhead metrics.
+// ---------------------------------------------------------------------------
+
+fn read_proc_stat_jiffies() -> Option<u64> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // utime is field 14, stime 15 (1-indexed), after the comm field which
+    // may contain spaces — skip past the closing paren first.
+    let rest = &stat[stat.rfind(')')? + 2..];
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(utime + stime)
+}
+
+/// Peak resident set size in KiB (VmHWM).
+pub fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+/// Current resident set size in KiB (VmRSS).
+pub fn current_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+/// CPU usage sampler: percentage of one core used between calls.
+pub struct CpuSampler {
+    last_jiffies: u64,
+    last_at: Instant,
+    hz: f64,
+}
+
+impl CpuSampler {
+    pub fn start() -> Self {
+        Self {
+            last_jiffies: read_proc_stat_jiffies().unwrap_or(0),
+            last_at: Instant::now(),
+            hz: 100.0, // USER_HZ on Linux
+        }
+    }
+
+    /// CPU% (of one core) since the previous call.
+    pub fn sample(&mut self) -> f64 {
+        let j = read_proc_stat_jiffies().unwrap_or(self.last_jiffies);
+        let now = Instant::now();
+        let dj = (j - self.last_jiffies) as f64 / self.hz;
+        let dt = now.duration_since(self.last_at).as_secs_f64();
+        self.last_jiffies = j;
+        self.last_at = now;
+        if dt <= 0.0 {
+            0.0
+        } else {
+            100.0 * dj / dt
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let c = Counter::default();
+        c.inc();
+        c.add_bytes(100);
+        assert_eq!(c.count(), 2);
+        assert_eq!(c.bytes(), 100);
+    }
+
+    #[test]
+    fn histogram_summary() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        let s = h.summary().unwrap();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_no_summary() {
+        assert!(Histogram::default().summary().is_none());
+    }
+
+    #[test]
+    fn registry_shares_instances() {
+        let r = Registry::default();
+        r.counter("x").inc();
+        r.counter("x").inc();
+        assert_eq!(r.counter("x").count(), 2);
+        r.observe("h", 1.0);
+        assert_eq!(r.summary("h").unwrap().count, 1);
+        assert!(r.summary("missing").is_none());
+    }
+
+    #[test]
+    fn proc_sampling_works_on_linux() {
+        assert!(peak_rss_kb().unwrap() > 0);
+        assert!(current_rss_kb().unwrap() > 0);
+        let mut s = CpuSampler::start();
+        // burn a little CPU
+        let mut x = 0u64;
+        for i in 0..2_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let pct = s.sample();
+        assert!(pct >= 0.0);
+    }
+
+    #[test]
+    fn global_registry_is_singleton() {
+        global().counter("g").inc();
+        assert!(global().counter_names().contains(&"g".to_string()));
+    }
+}

@@ -1,0 +1,388 @@
+//! In-repo MQTT 3.1.1 broker — the discovery/relay substrate the paper
+//! assumes ("users need to deploy an MQTT broker service", §3).
+//!
+//! Feature set sized to the among-device protocols: QoS 0/1 PUBLISH
+//! (QoS 1 acknowledged to the publisher; delivery to subscribers is QoS 0),
+//! retained messages (service advertisements), last-will (server-death
+//! detection → R4 failover), topic wildcards, keep-alive enforcement.
+//!
+//! One thread per connection + one writer thread per connection; fan-out
+//! shares the payload via `Arc` (no per-subscriber copy until the socket
+//! write).
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::mqtt::packet::{LastWill, Packet, CONNACK_ACCEPTED};
+use crate::mqtt::topic;
+use crate::util::{Error, Result};
+use crate::{log_debug, log_info, log_warn};
+
+/// Message queued to a connection's writer thread.
+enum OutMsg {
+    Control(Packet),
+    /// Fan-out publish: payload shared across subscribers.
+    Pub { topic: Arc<str>, payload: Arc<[u8]>, retain: bool },
+    Close,
+}
+
+struct Session {
+    #[allow(dead_code)]
+    client_id: String,
+    outbox: SyncSender<OutMsg>,
+    subs: Vec<(String, u8)>,
+    will: Option<LastWill>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct BrokerStats {
+    pub connects: u64,
+    pub disconnects: u64,
+    pub published: u64,
+    pub delivered: u64,
+    pub dropped_slow: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+struct State {
+    sessions: HashMap<u64, Session>,
+    retained: HashMap<String, Arc<[u8]>>,
+    stats: BrokerStats,
+}
+
+/// Broker configuration.
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Per-connection outbound queue depth; overflow drops the message for
+    /// that subscriber (slow-consumer policy).
+    pub outbox_depth: usize,
+    /// Fallback read timeout when a client requests keep_alive = 0.
+    pub idle_timeout: Duration,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        Self { outbox_depth: 64, idle_timeout: Duration::from_secs(3600) }
+    }
+}
+
+/// A running broker; dropping it stops the listener.
+pub struct Broker {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    state: Arc<Mutex<State>>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Broker {
+    /// Bind and start. Use port 0 for an ephemeral port.
+    pub fn start(bind: &str) -> Result<Broker> {
+        Broker::start_with(bind, BrokerConfig::default())
+    }
+
+    pub fn start_with(bind: &str, cfg: BrokerConfig) -> Result<Broker> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| Error::Mqtt(format!("bind {bind}: {e}")))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(Mutex::new(State {
+            sessions: HashMap::new(),
+            retained: HashMap::new(),
+            stats: BrokerStats::default(),
+        }));
+        let conn_seq = Arc::new(AtomicU64::new(1));
+
+        let t_shutdown = shutdown.clone();
+        let t_state = state.clone();
+        let cfg = Arc::new(cfg);
+        let accept_thread = std::thread::Builder::new()
+            .name("mqtt-broker-accept".into())
+            .spawn(move || {
+                log_info!("mqtt.broker", "listening on {addr}");
+                while !t_shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let id = conn_seq.fetch_add(1, Ordering::Relaxed);
+                            let st = t_state.clone();
+                            let sd = t_shutdown.clone();
+                            let c = cfg.clone();
+                            let _ = std::thread::Builder::new()
+                                .name(format!("mqtt-conn-{id}"))
+                                .spawn(move || {
+                                    if let Err(e) = serve_conn(id, stream, st, sd, &c) {
+                                        log_debug!("mqtt.broker", "conn {id} ({peer}): {e}");
+                                    }
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            log_warn!("mqtt.broker", "accept: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn broker accept thread");
+        Ok(Broker { addr, shutdown, state, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> BrokerStats {
+        self.state.lock().unwrap().stats.clone()
+    }
+
+    /// Number of live sessions (for tests).
+    pub fn session_count(&self) -> usize {
+        self.state.lock().unwrap().sessions.len()
+    }
+
+    /// Retained topics currently stored (for tests).
+    pub fn retained_topics(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.state.lock().unwrap().retained.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Close all sessions so conn threads unblock.
+        let sessions: Vec<SyncSender<OutMsg>> = {
+            let st = self.state.lock().unwrap();
+            st.sessions.values().map(|s| s.outbox.clone()).collect()
+        };
+        for s in sessions {
+            let _ = s.try_send(OutMsg::Close);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Broker {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn route(state: &Mutex<State>, topic_name: &str, payload: &[u8], retain: bool) {
+    let payload: Arc<[u8]> = Arc::from(payload);
+    let topic_arc: Arc<str> = Arc::from(topic_name);
+    let mut st = state.lock().unwrap();
+    st.stats.published += 1;
+    st.stats.bytes_in += payload.len() as u64;
+    if retain {
+        if payload.is_empty() {
+            st.retained.remove(topic_name);
+        } else {
+            st.retained.insert(topic_name.to_string(), payload.clone());
+        }
+    }
+    let mut delivered = 0u64;
+    let mut dropped = 0u64;
+    let mut bytes = 0u64;
+    for sess in st.sessions.values() {
+        if sess.subs.iter().any(|(f, _)| topic::matches(f, topic_name)) {
+            match sess.outbox.try_send(OutMsg::Pub {
+                topic: topic_arc.clone(),
+                payload: payload.clone(),
+                retain: false,
+            }) {
+                Ok(()) => {
+                    delivered += 1;
+                    bytes += payload.len() as u64;
+                }
+                Err(TrySendError::Full(_)) => dropped += 1,
+                Err(TrySendError::Disconnected(_)) => {}
+            }
+        }
+    }
+    st.stats.delivered += delivered;
+    st.stats.dropped_slow += dropped;
+    st.stats.bytes_out += bytes;
+}
+
+fn writer_loop(mut stream: TcpStream, rx: Receiver<OutMsg>) {
+    use std::io::Write;
+    let mut wire = Vec::with_capacity(4096);
+    for msg in rx {
+        wire.clear();
+        match msg {
+            OutMsg::Close => break,
+            OutMsg::Control(p) => match p.encode() {
+                Ok(w) => wire.extend_from_slice(&w),
+                Err(_) => continue,
+            },
+            OutMsg::Pub { topic, payload, retain } => {
+                let p = Packet::Publish {
+                    topic: topic.to_string(),
+                    payload: payload.to_vec(),
+                    qos: 0,
+                    retain,
+                    dup: false,
+                    packet_id: None,
+                };
+                match p.encode() {
+                    Ok(w) => wire.extend_from_slice(&w),
+                    Err(_) => continue,
+                }
+            }
+        }
+        if stream.write_all(&wire).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn serve_conn(
+    id: u64,
+    mut stream: TcpStream,
+    state: Arc<Mutex<State>>,
+    shutdown: Arc<AtomicBool>,
+    cfg: &BrokerConfig,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let connect = Packet::read(&mut stream)?;
+    let (client_id, keep_alive, will) = match connect {
+        Packet::Connect { client_id, keep_alive, will, .. } => (client_id, keep_alive, will),
+        other => return Err(Error::Mqtt(format!("expected CONNECT, got {other:?}"))),
+    };
+    // Keep-alive enforcement: 1.5x grace per spec.
+    let timeout = if keep_alive == 0 {
+        cfg.idle_timeout
+    } else {
+        Duration::from_millis(keep_alive as u64 * 1500)
+    };
+    stream.set_read_timeout(Some(timeout))?;
+
+    let (tx, rx) = sync_channel::<OutMsg>(cfg.outbox_depth);
+    let wstream = stream.try_clone()?;
+    let writer = std::thread::Builder::new()
+        .name(format!("mqtt-wr-{id}"))
+        .spawn(move || writer_loop(wstream, rx))
+        .expect("spawn writer");
+
+    {
+        let mut st = state.lock().unwrap();
+        st.stats.connects += 1;
+        st.sessions.insert(
+            id,
+            Session { client_id: client_id.clone(), outbox: tx.clone(), subs: Vec::new(), will },
+        );
+    }
+    let _ = tx.send(OutMsg::Control(Packet::ConnAck {
+        session_present: false,
+        code: CONNACK_ACCEPTED,
+    }));
+    log_debug!("mqtt.broker", "conn {id}: client `{client_id}` connected");
+
+    let mut clean_disconnect = false;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        let pkt = match Packet::read(&mut stream) {
+            Ok(p) => p,
+            Err(Error::Io(ref e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                log_debug!("mqtt.broker", "conn {id}: keep-alive timeout");
+                break;
+            }
+            Err(_) => break,
+        };
+        match pkt {
+            Packet::Publish { topic: t, payload, qos, retain, packet_id, .. } => {
+                if topic::validate_name(&t).is_err() {
+                    break;
+                }
+                route(&state, &t, &payload, retain);
+                if qos == 1 {
+                    if let Some(pid) = packet_id {
+                        let _ = tx.send(OutMsg::Control(Packet::PubAck { packet_id: pid }));
+                    }
+                }
+            }
+            Packet::Subscribe { packet_id, filters } => {
+                let mut codes = Vec::with_capacity(filters.len());
+                let mut retained_out: Vec<(String, Arc<[u8]>)> = Vec::new();
+                {
+                    let mut st = state.lock().unwrap();
+                    for (f, qos) in &filters {
+                        if topic::validate_filter(f).is_err() {
+                            codes.push(0x80);
+                            continue;
+                        }
+                        codes.push((*qos).min(1));
+                        for (rt, rp) in &st.retained {
+                            if topic::matches(f, rt) {
+                                retained_out.push((rt.clone(), rp.clone()));
+                            }
+                        }
+                        if let Some(sess) = st.sessions.get_mut(&id) {
+                            sess.subs.retain(|(ef, _)| ef != f);
+                            sess.subs.push((f.clone(), (*qos).min(1)));
+                        }
+                    }
+                }
+                let _ = tx.send(OutMsg::Control(Packet::SubAck { packet_id, codes }));
+                for (rt, rp) in retained_out {
+                    let _ = tx.send(OutMsg::Pub { topic: rt.into(), payload: rp, retain: true });
+                }
+            }
+            Packet::Unsubscribe { packet_id, filters } => {
+                {
+                    let mut st = state.lock().unwrap();
+                    if let Some(sess) = st.sessions.get_mut(&id) {
+                        sess.subs.retain(|(f, _)| !filters.contains(f));
+                    }
+                }
+                let _ = tx.send(OutMsg::Control(Packet::UnsubAck { packet_id }));
+            }
+            Packet::PingReq => {
+                let _ = tx.send(OutMsg::Control(Packet::PingResp));
+            }
+            Packet::Disconnect => {
+                clean_disconnect = true;
+                break;
+            }
+            Packet::PubAck { .. } => {}
+            other => {
+                log_warn!("mqtt.broker", "conn {id}: unexpected {other:?}");
+                break;
+            }
+        }
+    }
+
+    // Teardown: remove session, fire will if unclean.
+    let will = {
+        let mut st = state.lock().unwrap();
+        st.stats.disconnects += 1;
+        st.sessions.remove(&id).and_then(|s| s.will)
+    };
+    if !clean_disconnect {
+        if let Some(w) = will {
+            log_debug!("mqtt.broker", "conn {id}: firing last-will on `{}`", w.topic);
+            route(&state, &w.topic, &w.payload, w.retain);
+        }
+    }
+    let _ = tx.send(OutMsg::Close);
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}

@@ -1,0 +1,338 @@
+//! MQTT client (paho.mqtt.c analog): blocking connect/publish/subscribe
+//! with a background reader thread, keep-alive pings, QoS 1 ack waiting,
+//! and channel- or callback-based subscription delivery.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU16, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::mqtt::packet::{LastWill, Packet};
+use crate::mqtt::topic;
+use crate::util::{Error, Result};
+use crate::{log_debug, log_warn};
+
+/// An inbound publish delivered to a subscriber.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Message {
+    pub topic: String,
+    pub payload: Arc<[u8]>,
+    pub retain: bool,
+}
+
+type Callback = Box<dyn Fn(&Message) + Send + Sync>;
+
+enum Handler {
+    Channel(SyncSender<Message>),
+    Callback(Callback),
+}
+
+struct Sub {
+    filter: String,
+    handler: Handler,
+}
+
+/// Client connection options.
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    pub client_id: String,
+    pub keep_alive_secs: u16,
+    pub will: Option<LastWill>,
+    /// Subscription channel depth (overflow drops oldest-offered message).
+    pub channel_depth: usize,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        Self {
+            client_id: format!("edgepipe-{}", std::process::id()),
+            keep_alive_secs: 20,
+            will: None,
+            channel_depth: 256,
+        }
+    }
+}
+
+struct Inner {
+    writer: Mutex<TcpStream>,
+    subs: Mutex<Vec<Sub>>,
+    pending_acks: Mutex<HashMap<u16, SyncSender<Packet>>>,
+    next_id: AtomicU16,
+    connected: AtomicBool,
+}
+
+impl Inner {
+    fn send(&self, p: &Packet) -> Result<()> {
+        use std::io::Write;
+        let wire = p.encode()?;
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&wire).map_err(|e| {
+            self.connected.store(false, Ordering::Relaxed);
+            Error::Transport(format!("mqtt send: {e}"))
+        })
+    }
+
+    fn alloc_id(&self) -> u16 {
+        loop {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            if id != 0 {
+                return id;
+            }
+        }
+    }
+
+    /// Register a waiter, send, await the matching ack packet.
+    fn request(&self, p: &Packet, id: u16, timeout: Duration) -> Result<Packet> {
+        let (tx, rx) = sync_channel(1);
+        self.pending_acks.lock().unwrap().insert(id, tx);
+        self.send(p)?;
+        let out = rx
+            .recv_timeout(timeout)
+            .map_err(|_| Error::Mqtt(format!("ack timeout for packet {id}")));
+        self.pending_acks.lock().unwrap().remove(&id);
+        out
+    }
+}
+
+/// A connected MQTT client. Cheap to clone (shared connection).
+#[derive(Clone)]
+pub struct MqttClient {
+    inner: Arc<Inner>,
+}
+
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(5);
+
+impl MqttClient {
+    /// Connect to a broker (`host:port`).
+    pub fn connect(addr: &str, opts: ClientOptions) -> Result<MqttClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Transport(format!("mqtt connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        let mut rstream = stream.try_clone()?;
+        // Reads must wake periodically so a dead broker is detected.
+        rstream.set_read_timeout(Some(Duration::from_millis(
+            (opts.keep_alive_secs.max(1) as u64) * 2000,
+        )))?;
+
+        let inner = Arc::new(Inner {
+            writer: Mutex::new(stream),
+            subs: Mutex::new(Vec::new()),
+            pending_acks: Mutex::new(HashMap::new()),
+            next_id: AtomicU16::new(1),
+            connected: AtomicBool::new(true),
+        });
+
+        inner.send(&Packet::Connect {
+            client_id: opts.client_id.clone(),
+            keep_alive: opts.keep_alive_secs,
+            clean_session: true,
+            will: opts.will.clone(),
+        })?;
+        match Packet::read(&mut rstream)? {
+            Packet::ConnAck { code: 0, .. } => {}
+            Packet::ConnAck { code, .. } => {
+                return Err(Error::Mqtt(format!("connection refused: code {code}")))
+            }
+            other => return Err(Error::Mqtt(format!("expected CONNACK, got {other:?}"))),
+        }
+
+        // Reader thread: dispatch publishes + acks.
+        let r_inner = inner.clone();
+        std::thread::Builder::new()
+            .name("mqtt-client-reader".into())
+            .spawn(move || reader_loop(rstream, r_inner))
+            .expect("spawn mqtt reader");
+
+        // Keep-alive pinger.
+        if opts.keep_alive_secs > 0 {
+            let p_inner = inner.clone();
+            let interval = Duration::from_millis(opts.keep_alive_secs as u64 * 500);
+            std::thread::Builder::new()
+                .name("mqtt-client-ping".into())
+                .spawn(move || {
+                    while p_inner.connected.load(Ordering::Relaxed) {
+                        std::thread::sleep(interval);
+                        if p_inner.send(&Packet::PingReq).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn mqtt pinger");
+        }
+
+        Ok(MqttClient { inner })
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.inner.connected.load(Ordering::Relaxed)
+    }
+
+    /// Fire-and-forget publish (QoS 0).
+    pub fn publish(&self, topic_name: &str, payload: &[u8], retain: bool) -> Result<()> {
+        topic::validate_name(topic_name)?;
+        self.inner.send(&Packet::Publish {
+            topic: topic_name.to_string(),
+            payload: payload.to_vec(),
+            qos: 0,
+            retain,
+            dup: false,
+            packet_id: None,
+        })
+    }
+
+    /// Acknowledged publish (QoS 1): blocks until PUBACK or timeout.
+    pub fn publish_qos1(&self, topic_name: &str, payload: &[u8], retain: bool) -> Result<()> {
+        topic::validate_name(topic_name)?;
+        let id = self.inner.alloc_id();
+        let p = Packet::Publish {
+            topic: topic_name.to_string(),
+            payload: payload.to_vec(),
+            qos: 1,
+            retain,
+            dup: false,
+            packet_id: Some(id),
+        };
+        match self.inner.request(&p, id, DEFAULT_TIMEOUT)? {
+            Packet::PubAck { .. } => Ok(()),
+            other => Err(Error::Mqtt(format!("expected PUBACK, got {other:?}"))),
+        }
+    }
+
+    /// Subscribe and receive matching messages on a channel.
+    pub fn subscribe(&self, filter: &str) -> Result<Receiver<Message>> {
+        topic::validate_filter(filter)?;
+        let (tx, rx) = sync_channel(self_channel_depth());
+        self.do_subscribe(filter, Handler::Channel(tx))?;
+        Ok(rx)
+    }
+
+    /// Subscribe with a callback invoked on the reader thread.
+    pub fn subscribe_cb(
+        &self,
+        filter: &str,
+        cb: impl Fn(&Message) + Send + Sync + 'static,
+    ) -> Result<()> {
+        topic::validate_filter(filter)?;
+        self.do_subscribe(filter, Handler::Callback(Box::new(cb)))
+    }
+
+    fn do_subscribe(&self, filter: &str, handler: Handler) -> Result<()> {
+        let id = self.inner.alloc_id();
+        // Register the handler BEFORE the broker starts sending retained
+        // messages, or we'd race and drop them.
+        self.inner.subs.lock().unwrap().push(Sub { filter: filter.to_string(), handler });
+        let p = Packet::Subscribe { packet_id: id, filters: vec![(filter.to_string(), 0)] };
+        match self.inner.request(&p, id, DEFAULT_TIMEOUT) {
+            Ok(Packet::SubAck { codes, .. }) => {
+                if codes.first().copied().unwrap_or(0x80) == 0x80 {
+                    self.inner.subs.lock().unwrap().retain(|s| s.filter != filter);
+                    return Err(Error::Mqtt(format!("subscription `{filter}` refused")));
+                }
+                Ok(())
+            }
+            Ok(other) => Err(Error::Mqtt(format!("expected SUBACK, got {other:?}"))),
+            Err(e) => {
+                self.inner.subs.lock().unwrap().retain(|s| s.filter != filter);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn unsubscribe(&self, filter: &str) -> Result<()> {
+        let id = self.inner.alloc_id();
+        self.inner.subs.lock().unwrap().retain(|s| s.filter != filter);
+        let p = Packet::Unsubscribe { packet_id: id, filters: vec![filter.to_string()] };
+        match self.inner.request(&p, id, DEFAULT_TIMEOUT)? {
+            Packet::UnsubAck { .. } => Ok(()),
+            other => Err(Error::Mqtt(format!("expected UNSUBACK, got {other:?}"))),
+        }
+    }
+
+    /// Test/bench hook: clone the underlying stream (to simulate an
+    /// unclean disconnect by shutting the socket without DISCONNECT).
+    #[doc(hidden)]
+    pub fn inner_stream_for_test(&self) -> Result<TcpStream> {
+        Ok(self.inner.writer.lock().unwrap().try_clone()?)
+    }
+
+    /// Clean disconnect (suppresses the last-will).
+    pub fn disconnect(&self) {
+        let _ = self.inner.send(&Packet::Disconnect);
+        self.inner.connected.store(false, Ordering::Relaxed);
+        if let Ok(w) = self.inner.writer.lock() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+fn self_channel_depth() -> usize {
+    64
+}
+
+fn reader_loop(mut stream: TcpStream, inner: Arc<Inner>) {
+    loop {
+        if !inner.connected.load(Ordering::Relaxed) {
+            break;
+        }
+        let pkt = match Packet::read(&mut stream) {
+            Ok(p) => p,
+            Err(Error::Io(ref e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Keep-alive pings should prevent this; treat as dead link.
+                log_warn!("mqtt.client", "read timeout; assuming broker dead");
+                break;
+            }
+            Err(e) => {
+                log_debug!("mqtt.client", "reader: {e}");
+                break;
+            }
+        };
+        match pkt {
+            Packet::Publish { topic: t, payload, retain, .. } => {
+                let msg = Message { topic: t, payload: Arc::from(payload), retain };
+                let mut subs = inner.subs.lock().unwrap();
+                subs.retain(|s| {
+                    if !topic::matches(&s.filter, &msg.topic) {
+                        return true;
+                    }
+                    match &s.handler {
+                        Handler::Callback(cb) => {
+                            cb(&msg);
+                            true
+                        }
+                        Handler::Channel(tx) => match tx.try_send(msg.clone()) {
+                            Ok(()) => true,
+                            Err(std::sync::mpsc::TrySendError::Full(_)) => true, // drop msg
+                            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => false,
+                        },
+                    }
+                });
+            }
+            Packet::PubAck { packet_id } => notify(&inner, packet_id, Packet::PubAck { packet_id }),
+            Packet::SubAck { packet_id, codes } => {
+                notify(&inner, packet_id, Packet::SubAck { packet_id, codes })
+            }
+            Packet::UnsubAck { packet_id } => {
+                notify(&inner, packet_id, Packet::UnsubAck { packet_id })
+            }
+            Packet::PingResp => {}
+            other => {
+                log_debug!("mqtt.client", "unexpected packet {other:?}");
+            }
+        }
+    }
+    inner.connected.store(false, Ordering::Relaxed);
+    // Drop channel senders so receivers observe disconnection.
+    inner.subs.lock().unwrap().clear();
+    inner.pending_acks.lock().unwrap().clear();
+}
+
+fn notify(inner: &Inner, id: u16, pkt: Packet) {
+    if let Some(tx) = inner.pending_acks.lock().unwrap().remove(&id) {
+        let _ = tx.try_send(pkt);
+    }
+}

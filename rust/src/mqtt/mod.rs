@@ -1,0 +1,209 @@
+//! MQTT 3.1.1 substrate: [`packet`] codec, [`topic`] filters, [`broker`]
+//! (in-repo Mosquitto analog) and [`client`] (paho analog).
+//!
+//! The paper chooses MQTT over ROS/ZeroMQ because home-IoT standards
+//! (Matter, SmartThings) already speak it (§4.2.1); everything above the
+//! socket — pub/sub elements, query discovery, failover — builds on this
+//! module.
+
+pub mod broker;
+pub mod client;
+pub mod packet;
+pub mod topic;
+
+pub use broker::{Broker, BrokerConfig, BrokerStats};
+pub use client::{ClientOptions, Message, MqttClient};
+pub use packet::{LastWill, Packet};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn client(broker: &Broker, id: &str) -> MqttClient {
+        MqttClient::connect(
+            &broker.addr().to_string(),
+            ClientOptions { client_id: id.into(), ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn connect_publish_subscribe_roundtrip() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let sub = client(&broker, "sub");
+        let publ = client(&broker, "pub");
+        let rx = sub.subscribe("cam/left").unwrap();
+        publ.publish("cam/left", b"frame-1", false).unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg.topic, "cam/left");
+        assert_eq!(&msg.payload[..], b"frame-1");
+    }
+
+    #[test]
+    fn wildcard_subscription_receives_multiple_topics() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let sub = client(&broker, "sub");
+        let publ = client(&broker, "pub");
+        let rx = sub.subscribe("/objdetect/#").unwrap();
+        publ.publish("/objdetect/mobilev3", b"a", false).unwrap();
+        publ.publish("/objdetect/yolov2", b"b", false).unwrap();
+        publ.publish("/posenet/v1", b"x", false).unwrap();
+        let m1 = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let m2 = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(m1.topic, "/objdetect/mobilev3");
+        assert_eq!(m2.topic, "/objdetect/yolov2");
+        assert!(rx.recv_timeout(Duration::from_millis(200)).is_err());
+    }
+
+    #[test]
+    fn retained_message_delivered_to_late_subscriber() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let publ = client(&broker, "pub");
+        publ.publish("svc/ad", b"host:1234", true).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let sub = client(&broker, "sub");
+        let rx = sub.subscribe("svc/+").unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(&msg.payload[..], b"host:1234");
+        assert!(msg.retain);
+    }
+
+    #[test]
+    fn empty_retained_clears() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let publ = client(&broker, "pub");
+        publ.publish("svc/ad", b"x", true).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(broker.retained_topics(), vec!["svc/ad".to_string()]);
+        publ.publish("svc/ad", b"", true).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(broker.retained_topics().is_empty());
+    }
+
+    #[test]
+    fn qos1_publish_acknowledged() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let publ = client(&broker, "pub");
+        publ.publish_qos1("t", b"payload", false).unwrap();
+        assert_eq!(broker.stats().published, 1);
+    }
+
+    #[test]
+    fn last_will_fires_on_unclean_disconnect() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let watcher = client(&broker, "watcher");
+        let rx = watcher.subscribe("edge/query/objdetect/+").unwrap();
+        {
+            let dying = MqttClient::connect(
+                &broker.addr().to_string(),
+                ClientOptions {
+                    client_id: "server-1".into(),
+                    will: Some(LastWill {
+                        topic: "edge/query/objdetect/server-1".into(),
+                        payload: b"DEAD".to_vec(),
+                        qos: 0,
+                        retain: false,
+                    }),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            // Kill the TCP stream without DISCONNECT -> broker fires will.
+            if let Ok(w) = dying.inner_stream_for_test() {
+                let _ = w.shutdown(std::net::Shutdown::Both);
+            }
+        }
+        let msg = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+        assert_eq!(&msg.payload[..], b"DEAD");
+    }
+
+    #[test]
+    fn clean_disconnect_suppresses_will() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let watcher = client(&broker, "watcher");
+        let rx = watcher.subscribe("will/+").unwrap();
+        let leaving = MqttClient::connect(
+            &broker.addr().to_string(),
+            ClientOptions {
+                client_id: "polite".into(),
+                will: Some(LastWill {
+                    topic: "will/polite".into(),
+                    payload: b"DEAD".to_vec(),
+                    qos: 0,
+                    retain: false,
+                }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        leaving.disconnect();
+        assert!(rx.recv_timeout(Duration::from_millis(500)).is_err());
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let sub = client(&broker, "sub");
+        let publ = client(&broker, "pub");
+        let rx = sub.subscribe("t").unwrap();
+        publ.publish("t", b"1", false).unwrap();
+        rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        sub.unsubscribe("t").unwrap();
+        publ.publish("t", b"2", false).unwrap();
+        assert!(rx.recv_timeout(Duration::from_millis(300)).is_err());
+    }
+
+    #[test]
+    fn multiple_subscribers_fan_out() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let s1 = client(&broker, "s1");
+        let s2 = client(&broker, "s2");
+        let publ = client(&broker, "pub");
+        let r1 = s1.subscribe("fan").unwrap();
+        let r2 = s2.subscribe("fan").unwrap();
+        publ.publish("fan", b"x", false).unwrap();
+        assert_eq!(&r1.recv_timeout(Duration::from_secs(2)).unwrap().payload[..], b"x");
+        assert_eq!(&r2.recv_timeout(Duration::from_secs(2)).unwrap().payload[..], b"x");
+        assert_eq!(broker.stats().delivered, 2);
+    }
+
+    #[test]
+    fn callback_subscription() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let sub = client(&broker, "sub");
+        let publ = client(&broker, "pub");
+        let (tx, rx) = std::sync::mpsc::channel();
+        sub.subscribe_cb("cb/topic", move |m| {
+            tx.send(m.payload.len()).unwrap();
+        })
+        .unwrap();
+        publ.publish("cb/topic", &[0u8; 17], false).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(2)).unwrap(), 17);
+    }
+
+    #[test]
+    fn large_payload_roundtrip() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let sub = client(&broker, "sub");
+        let publ = client(&broker, "pub");
+        let rx = sub.subscribe("big").unwrap();
+        let payload = vec![0x5Au8; 2 * 1024 * 1024]; // FullHD frame scale
+        publ.publish("big", &payload, false).unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(msg.payload.len(), payload.len());
+    }
+
+    #[test]
+    fn session_count_tracks_connections() {
+        let mut broker = Broker::start("127.0.0.1:0").unwrap();
+        let c1 = client(&broker, "a");
+        let _c2 = client(&broker, "b");
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(broker.session_count(), 2);
+        c1.disconnect();
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(broker.session_count(), 1);
+        broker.stop();
+    }
+}

@@ -1,0 +1,509 @@
+//! MQTT 3.1.1 control-packet codec (the subset the among-device transport
+//! uses: CONNECT/CONNACK, PUBLISH QoS 0/1 + PUBACK, SUBSCRIBE/SUBACK,
+//! UNSUBSCRIBE/UNSUBACK, PING, DISCONNECT).
+
+use std::io::Read;
+
+use crate::util::{Error, Result};
+
+/// Session will (LWT): published by the broker when a client vanishes —
+/// the mechanism behind R4's automatic failover (server-down detection).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LastWill {
+    pub topic: String,
+    pub payload: Vec<u8>,
+    pub qos: u8,
+    pub retain: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Packet {
+    Connect {
+        client_id: String,
+        keep_alive: u16,
+        clean_session: bool,
+        will: Option<LastWill>,
+    },
+    ConnAck {
+        session_present: bool,
+        code: u8,
+    },
+    Publish {
+        topic: String,
+        payload: Vec<u8>,
+        qos: u8,
+        retain: bool,
+        dup: bool,
+        packet_id: Option<u16>,
+    },
+    PubAck {
+        packet_id: u16,
+    },
+    Subscribe {
+        packet_id: u16,
+        filters: Vec<(String, u8)>,
+    },
+    SubAck {
+        packet_id: u16,
+        codes: Vec<u8>,
+    },
+    Unsubscribe {
+        packet_id: u16,
+        filters: Vec<String>,
+    },
+    UnsubAck {
+        packet_id: u16,
+    },
+    PingReq,
+    PingResp,
+    Disconnect,
+}
+
+pub const PROTO_NAME: &str = "MQTT";
+pub const PROTO_LEVEL: u8 = 4; // 3.1.1
+pub const CONNACK_ACCEPTED: u8 = 0;
+pub const CONNACK_ID_REJECTED: u8 = 2;
+
+const MAX_REMAINING: usize = 268_435_455;
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_bytes16(out: &mut Vec<u8>, b: &[u8]) {
+    put_u16(out, b.len() as u16);
+    out.extend_from_slice(b);
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn u8(&mut self) -> Result<u8> {
+        let v = *self.buf.get(self.off).ok_or_else(|| Error::Mqtt("short packet".into()))?;
+        self.off += 1;
+        Ok(v)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let hi = self.u8()? as u16;
+        let lo = self.u8()? as u16;
+        Ok(hi << 8 | lo)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let s = self
+            .buf
+            .get(self.off..self.off + n)
+            .ok_or_else(|| Error::Mqtt("short packet".into()))?;
+        self.off += n;
+        Ok(s)
+    }
+
+    fn str16(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| Error::Mqtt(format!("bad utf8: {e}")))
+    }
+
+    fn bytes16(&mut self) -> Result<Vec<u8>> {
+        let n = self.u16()? as usize;
+        Ok(self.bytes(n)?.to_vec())
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.off..];
+        self.off = self.buf.len();
+        s
+    }
+
+    fn at_end(&self) -> bool {
+        self.off == self.buf.len()
+    }
+}
+
+impl Packet {
+    /// Serialize to wire bytes (fixed header + body).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let (type_flags, body) = self.encode_body()?;
+        if body.len() > MAX_REMAINING {
+            return Err(Error::Mqtt(format!("packet too large: {}", body.len())));
+        }
+        let mut out = Vec::with_capacity(body.len() + 5);
+        out.push(type_flags);
+        let mut rem = body.len();
+        loop {
+            let mut b = (rem % 128) as u8;
+            rem /= 128;
+            if rem > 0 {
+                b |= 0x80;
+            }
+            out.push(b);
+            if rem == 0 {
+                break;
+            }
+        }
+        out.extend_from_slice(&body);
+        Ok(out)
+    }
+
+    fn encode_body(&self) -> Result<(u8, Vec<u8>)> {
+        let mut b = Vec::new();
+        Ok(match self {
+            Packet::Connect { client_id, keep_alive, clean_session, will } => {
+                put_str(&mut b, PROTO_NAME);
+                b.push(PROTO_LEVEL);
+                let mut flags = 0u8;
+                if *clean_session {
+                    flags |= 0x02;
+                }
+                if let Some(w) = will {
+                    flags |= 0x04 | (w.qos << 3);
+                    if w.retain {
+                        flags |= 0x20;
+                    }
+                }
+                b.push(flags);
+                put_u16(&mut b, *keep_alive);
+                put_str(&mut b, client_id);
+                if let Some(w) = will {
+                    put_str(&mut b, &w.topic);
+                    put_bytes16(&mut b, &w.payload);
+                }
+                (0x10, b)
+            }
+            Packet::ConnAck { session_present, code } => {
+                b.push(*session_present as u8);
+                b.push(*code);
+                (0x20, b)
+            }
+            Packet::Publish { topic, payload, qos, retain, dup, packet_id } => {
+                if *qos > 1 {
+                    return Err(Error::Mqtt("QoS 2 not supported".into()));
+                }
+                put_str(&mut b, topic);
+                if *qos > 0 {
+                    let id = packet_id.ok_or_else(|| Error::Mqtt("QoS1 publish needs packet id".into()))?;
+                    put_u16(&mut b, id);
+                }
+                b.extend_from_slice(payload);
+                let mut flags = 0x30 | (qos << 1);
+                if *retain {
+                    flags |= 0x01;
+                }
+                if *dup {
+                    flags |= 0x08;
+                }
+                (flags, b)
+            }
+            Packet::PubAck { packet_id } => {
+                put_u16(&mut b, *packet_id);
+                (0x40, b)
+            }
+            Packet::Subscribe { packet_id, filters } => {
+                put_u16(&mut b, *packet_id);
+                for (f, qos) in filters {
+                    put_str(&mut b, f);
+                    b.push(*qos);
+                }
+                (0x82, b)
+            }
+            Packet::SubAck { packet_id, codes } => {
+                put_u16(&mut b, *packet_id);
+                b.extend_from_slice(codes);
+                (0x90, b)
+            }
+            Packet::Unsubscribe { packet_id, filters } => {
+                put_u16(&mut b, *packet_id);
+                for f in filters {
+                    put_str(&mut b, f);
+                }
+                (0xA2, b)
+            }
+            Packet::UnsubAck { packet_id } => {
+                put_u16(&mut b, *packet_id);
+                (0xB0, b)
+            }
+            Packet::PingReq => (0xC0, b),
+            Packet::PingResp => (0xD0, b),
+            Packet::Disconnect => (0xE0, b),
+        })
+    }
+
+    /// Parse one packet from (first byte, body).
+    pub fn decode(type_flags: u8, body: &[u8]) -> Result<Packet> {
+        let mut c = Cursor { buf: body, off: 0 };
+        let ptype = type_flags >> 4;
+        Ok(match ptype {
+            1 => {
+                let proto = c.str16()?;
+                let level = c.u8()?;
+                if proto != PROTO_NAME || level != PROTO_LEVEL {
+                    return Err(Error::Mqtt(format!("unsupported protocol {proto}/{level}")));
+                }
+                let flags = c.u8()?;
+                let keep_alive = c.u16()?;
+                let client_id = c.str16()?;
+                let will = if flags & 0x04 != 0 {
+                    let topic = c.str16()?;
+                    let payload = c.bytes16()?;
+                    Some(LastWill {
+                        topic,
+                        payload,
+                        qos: (flags >> 3) & 0x03,
+                        retain: flags & 0x20 != 0,
+                    })
+                } else {
+                    None
+                };
+                Packet::Connect { client_id, keep_alive, clean_session: flags & 0x02 != 0, will }
+            }
+            2 => {
+                let sp = c.u8()? & 0x01 != 0;
+                let code = c.u8()?;
+                Packet::ConnAck { session_present: sp, code }
+            }
+            3 => {
+                let qos = (type_flags >> 1) & 0x03;
+                if qos > 1 {
+                    return Err(Error::Mqtt("QoS 2 not supported".into()));
+                }
+                let topic = c.str16()?;
+                let packet_id = if qos > 0 { Some(c.u16()?) } else { None };
+                let payload = c.rest().to_vec();
+                Packet::Publish {
+                    topic,
+                    payload,
+                    qos,
+                    retain: type_flags & 0x01 != 0,
+                    dup: type_flags & 0x08 != 0,
+                    packet_id,
+                }
+            }
+            4 => Packet::PubAck { packet_id: c.u16()? },
+            8 => {
+                let packet_id = c.u16()?;
+                let mut filters = Vec::new();
+                while !c.at_end() {
+                    let f = c.str16()?;
+                    let qos = c.u8()?;
+                    filters.push((f, qos));
+                }
+                if filters.is_empty() {
+                    return Err(Error::Mqtt("SUBSCRIBE with no filters".into()));
+                }
+                Packet::Subscribe { packet_id, filters }
+            }
+            9 => {
+                let packet_id = c.u16()?;
+                Packet::SubAck { packet_id, codes: c.rest().to_vec() }
+            }
+            10 => {
+                let packet_id = c.u16()?;
+                let mut filters = Vec::new();
+                while !c.at_end() {
+                    filters.push(c.str16()?);
+                }
+                Packet::Unsubscribe { packet_id, filters }
+            }
+            11 => Packet::UnsubAck { packet_id: c.u16()? },
+            12 => Packet::PingReq,
+            13 => Packet::PingResp,
+            14 => Packet::Disconnect,
+            other => return Err(Error::Mqtt(format!("unsupported packet type {other}"))),
+        })
+    }
+
+    /// Read one packet from a blocking reader (fixed header + body).
+    pub fn read<R: Read>(r: &mut R) -> Result<Packet> {
+        let mut first = [0u8; 1];
+        r.read_exact(&mut first)?;
+        let mut rem: usize = 0;
+        let mut shift = 0u32;
+        loop {
+            let mut b = [0u8; 1];
+            r.read_exact(&mut b)?;
+            rem |= ((b[0] & 0x7f) as usize) << shift;
+            if b[0] & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+            if shift > 21 {
+                return Err(Error::Mqtt("remaining length overflow".into()));
+            }
+        }
+        if rem > MAX_REMAINING {
+            return Err(Error::Mqtt("packet too large".into()));
+        }
+        let mut body = vec![0u8; rem];
+        r.read_exact(&mut body)?;
+        Packet::decode(first[0], &body)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(p: Packet) {
+        let wire = p.encode().unwrap();
+        let mut r = std::io::Cursor::new(wire);
+        assert_eq!(Packet::read(&mut r).unwrap(), p);
+    }
+
+    #[test]
+    fn connect_roundtrip_plain() {
+        roundtrip(Packet::Connect {
+            client_id: "edge-1".into(),
+            keep_alive: 30,
+            clean_session: true,
+            will: None,
+        });
+    }
+
+    #[test]
+    fn connect_roundtrip_with_will() {
+        roundtrip(Packet::Connect {
+            client_id: "srv".into(),
+            keep_alive: 10,
+            clean_session: true,
+            will: Some(LastWill {
+                topic: "edge/query/objdetect/srv".into(),
+                payload: vec![],
+                qos: 0,
+                retain: true,
+            }),
+        });
+    }
+
+    #[test]
+    fn publish_qos0_roundtrip() {
+        roundtrip(Packet::Publish {
+            topic: "camleft".into(),
+            payload: vec![1, 2, 3],
+            qos: 0,
+            retain: false,
+            dup: false,
+            packet_id: None,
+        });
+    }
+
+    #[test]
+    fn publish_qos1_retain_roundtrip() {
+        roundtrip(Packet::Publish {
+            topic: "t".into(),
+            payload: vec![9; 1000],
+            qos: 1,
+            retain: true,
+            dup: true,
+            packet_id: Some(77),
+        });
+    }
+
+    #[test]
+    fn publish_empty_payload_roundtrip() {
+        // Empty retained publish = "clear retained" — used for failover.
+        roundtrip(Packet::Publish {
+            topic: "t".into(),
+            payload: vec![],
+            qos: 0,
+            retain: true,
+            dup: false,
+            packet_id: None,
+        });
+    }
+
+    #[test]
+    fn sub_unsub_roundtrip() {
+        roundtrip(Packet::Subscribe {
+            packet_id: 5,
+            filters: vec![("/objdetect/#".into(), 0), ("cam/+".into(), 1)],
+        });
+        roundtrip(Packet::SubAck { packet_id: 5, codes: vec![0, 1] });
+        roundtrip(Packet::Unsubscribe { packet_id: 6, filters: vec!["a/b".into()] });
+        roundtrip(Packet::UnsubAck { packet_id: 6 });
+    }
+
+    #[test]
+    fn control_packets_roundtrip() {
+        roundtrip(Packet::PingReq);
+        roundtrip(Packet::PingResp);
+        roundtrip(Packet::Disconnect);
+        roundtrip(Packet::ConnAck { session_present: false, code: 0 });
+        roundtrip(Packet::PubAck { packet_id: 99 });
+    }
+
+    #[test]
+    fn large_payload_multibyte_remaining_length() {
+        roundtrip(Packet::Publish {
+            topic: "big".into(),
+            payload: vec![0xAB; 300_000],
+            qos: 0,
+            retain: false,
+            dup: false,
+            packet_id: None,
+        });
+    }
+
+    #[test]
+    fn qos2_rejected() {
+        let p = Packet::Publish {
+            topic: "t".into(),
+            payload: vec![],
+            qos: 2,
+            retain: false,
+            dup: false,
+            packet_id: Some(1),
+        };
+        assert!(p.encode().is_err());
+    }
+
+    #[test]
+    fn qos1_without_id_rejected() {
+        let p = Packet::Publish {
+            topic: "t".into(),
+            payload: vec![],
+            qos: 1,
+            retain: false,
+            dup: false,
+            packet_id: None,
+        };
+        assert!(p.encode().is_err());
+    }
+
+    #[test]
+    fn bad_protocol_rejected() {
+        let mut wire = Packet::Connect {
+            client_id: "x".into(),
+            keep_alive: 0,
+            clean_session: true,
+            will: None,
+        }
+        .encode()
+        .unwrap();
+        wire[4] = b'X'; // corrupt protocol name
+        let mut r = std::io::Cursor::new(wire);
+        assert!(Packet::read(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let wire = Packet::PubAck { packet_id: 3 }.encode().unwrap();
+        let mut r = std::io::Cursor::new(&wire[..wire.len() - 1]);
+        assert!(Packet::read(&mut r).is_err());
+    }
+
+    #[test]
+    fn empty_subscribe_rejected() {
+        // type 8 with only a packet id
+        let body = vec![0u8, 1];
+        assert!(Packet::decode(0x82, &body).is_err());
+    }
+}

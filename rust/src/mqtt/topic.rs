@@ -1,0 +1,122 @@
+//! MQTT topic names and filters (wildcards `+` and `#`) — the discovery
+//! mechanism of R3: clients choose publishers dynamically by topic filter,
+//! e.g. subscribing `/objdetect/#` matches `/objdetect/mobilev3` and
+//! `/objdetect/yolov2` (§4.2.2).
+
+use crate::util::{Error, Result};
+
+/// Validate a topic NAME (publish target): non-empty, no wildcards, no NUL.
+pub fn validate_name(topic: &str) -> Result<()> {
+    if topic.is_empty() || topic.len() > 65535 {
+        return Err(Error::Mqtt(format!("bad topic length {}", topic.len())));
+    }
+    if topic.contains(['+', '#', '\0']) {
+        return Err(Error::Mqtt(format!("topic `{topic}` contains wildcard/NUL")));
+    }
+    Ok(())
+}
+
+/// Validate a topic FILTER (subscription): `+` must occupy a whole level,
+/// `#` must be the last level.
+pub fn validate_filter(filter: &str) -> Result<()> {
+    if filter.is_empty() || filter.len() > 65535 {
+        return Err(Error::Mqtt(format!("bad filter length {}", filter.len())));
+    }
+    if filter.contains('\0') {
+        return Err(Error::Mqtt("filter contains NUL".into()));
+    }
+    let levels: Vec<&str> = filter.split('/').collect();
+    for (i, level) in levels.iter().enumerate() {
+        if level.contains('#') {
+            if *level != "#" || i != levels.len() - 1 {
+                return Err(Error::Mqtt(format!("`#` misplaced in `{filter}`")));
+            }
+        }
+        if level.contains('+') && *level != "+" {
+            return Err(Error::Mqtt(format!("`+` must fill a level in `{filter}`")));
+        }
+    }
+    Ok(())
+}
+
+/// MQTT 3.1.1 §4.7 matching. Assumes both sides validated.
+pub fn matches(filter: &str, topic: &str) -> bool {
+    let mut f = filter.split('/');
+    let mut t = topic.split('/');
+    loop {
+        match (f.next(), t.next()) {
+            // '#' matches the rest INCLUDING the parent level
+            // ("sport/tennis/#" matches "sport/tennis" per spec §4.7).
+            (Some("#"), _) => return true,
+            (Some("+"), Some(_)) => continue,
+            (Some(fl), Some(tl)) if fl == tl => continue,
+            (None, None) => return true,
+            _ => return false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_match() {
+        assert!(matches("a/b/c", "a/b/c"));
+        assert!(!matches("a/b/c", "a/b"));
+        assert!(!matches("a/b", "a/b/c"));
+        assert!(!matches("a/b/c", "a/b/x"));
+    }
+
+    #[test]
+    fn plus_wildcard() {
+        assert!(matches("a/+/c", "a/b/c"));
+        assert!(matches("+/+/+", "a/b/c"));
+        assert!(!matches("a/+", "a/b/c"));
+        assert!(matches("+", "abc"));
+        assert!(!matches("+", "a/b"));
+    }
+
+    #[test]
+    fn hash_wildcard() {
+        assert!(matches("a/#", "a/b/c"));
+        assert!(matches("a/#", "a"));
+        assert!(matches("#", "anything/at/all"));
+        assert!(!matches("a/#", "b/c"));
+    }
+
+    #[test]
+    fn paper_objdetect_example() {
+        // §4.2.2: client subscribes "/objdetect/#" to pick any server.
+        assert!(matches("/objdetect/#", "/objdetect/mobilev3"));
+        assert!(matches("/objdetect/#", "/objdetect/yolov2"));
+        assert!(!matches("/objdetect/#", "/posenet/v1"));
+    }
+
+    #[test]
+    fn leading_slash_levels_are_distinct() {
+        assert!(!matches("a/b", "/a/b"));
+        assert!(matches("/+/b", "/a/b")); // '+' matches the empty first level? no:
+                                          // "/a/b" splits to ["", "a", "b"], "/+/b" to ["", "+", "b"]
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(validate_name("a/b").is_ok());
+        assert!(validate_name("").is_err());
+        assert!(validate_name("a/+/b").is_err());
+        assert!(validate_name("a/#").is_err());
+        assert!(validate_name("a\0b").is_err());
+    }
+
+    #[test]
+    fn filter_validation() {
+        assert!(validate_filter("a/+/b").is_ok());
+        assert!(validate_filter("a/#").is_ok());
+        assert!(validate_filter("#").is_ok());
+        assert!(validate_filter("a/#/b").is_err());
+        assert!(validate_filter("a/b#").is_err());
+        assert!(validate_filter("a/b+/c").is_err());
+        assert!(validate_filter("").is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Simplified NTP over UDP: 4-timestamp clock-offset estimation between
+//! pipelines (§4.2.3 — the timestamp-synchronization substrate).
+//!
+//! The publisher (mqttsink side) runs an [`NtpServer`]; the subscriber
+//! (mqttsrc side) runs [`estimate_offset`] to learn `offset` such that
+//! `remote_universal + offset ≈ local_universal`, then corrects incoming
+//! buffer timestamps via [`crate::clock::PipelineClock::remote_pts_to_local`].
+//!
+//! Protocol: client sends `t1` (its send time); server replies with
+//! `(t1, t2, t3)` = (echo, receive time, transmit time); client stamps
+//! `t4` on receipt. Standard NTP math:
+//! `offset = ((t2 - t1) + (t3 - t4)) / 2`, `delay = (t4 - t1) - (t3 - t2)`.
+
+use std::net::UdpSocket;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::clock::universal_time;
+use crate::util::{Error, Result};
+use crate::{log_debug, log_info};
+
+const MAGIC: &[u8; 4] = b"EPNT";
+const REQ_LEN: usize = 4 + 8;
+const RESP_LEN: usize = 4 + 24;
+
+/// A running NTP responder bound to a UDP port.
+pub struct NtpServer {
+    addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl NtpServer {
+    pub fn start(bind: &str) -> Result<NtpServer> {
+        let sock =
+            UdpSocket::bind(bind).map_err(|e| Error::Transport(format!("ntp bind {bind}: {e}")))?;
+        let addr = sock.local_addr()?;
+        sock.set_read_timeout(Some(Duration::from_millis(200)))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let t_shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("ntp-server".into())
+            .spawn(move || {
+                log_info!("ntp", "server on {addr}");
+                let mut buf = [0u8; 64];
+                while !t_shutdown.load(Ordering::Relaxed) {
+                    match sock.recv_from(&mut buf) {
+                        Ok((n, peer)) if n >= REQ_LEN && &buf[..4] == MAGIC => {
+                            let t2 = universal_time();
+                            let mut resp = [0u8; RESP_LEN];
+                            resp[..4].copy_from_slice(MAGIC);
+                            resp[4..12].copy_from_slice(&buf[4..12]); // echo t1
+                            resp[12..20].copy_from_slice(&t2.to_le_bytes());
+                            let t3 = universal_time();
+                            resp[20..28].copy_from_slice(&t3.to_le_bytes());
+                            let _ = sock.send_to(&resp, peer);
+                        }
+                        Ok(_) => {}
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock
+                                || e.kind() == std::io::ErrorKind::TimedOut => {}
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn ntp server");
+        Ok(NtpServer { addr, shutdown })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for NtpServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+/// One offset sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// Remote-to-local clock offset in ns (add to remote timestamps).
+    pub offset_ns: i64,
+    /// Round-trip delay in ns (quality indicator; lower = better).
+    pub delay_ns: i64,
+}
+
+/// Query a server once.
+pub fn query(server: &str, timeout: Duration) -> Result<Sample> {
+    let sock = UdpSocket::bind("0.0.0.0:0")?;
+    sock.set_read_timeout(Some(timeout))?;
+    let mut req = [0u8; REQ_LEN];
+    req[..4].copy_from_slice(MAGIC);
+    let t1 = universal_time();
+    req[4..12].copy_from_slice(&t1.to_le_bytes());
+    sock.send_to(&req, server)
+        .map_err(|e| Error::Transport(format!("ntp send {server}: {e}")))?;
+    let mut resp = [0u8; RESP_LEN];
+    let (n, _) = sock
+        .recv_from(&mut resp)
+        .map_err(|e| Error::Transport(format!("ntp recv: {e}")))?;
+    let t4 = universal_time();
+    if n < RESP_LEN || &resp[..4] != MAGIC {
+        return Err(Error::Transport("bad ntp response".into()));
+    }
+    let echo_t1 = u64::from_le_bytes(resp[4..12].try_into().unwrap());
+    if echo_t1 != t1 {
+        return Err(Error::Transport("ntp response/request mismatch".into()));
+    }
+    let t2 = u64::from_le_bytes(resp[12..20].try_into().unwrap()) as i128;
+    let t3 = u64::from_le_bytes(resp[20..28].try_into().unwrap()) as i128;
+    let t1 = t1 as i128;
+    let t4 = t4 as i128;
+    let offset = ((t2 - t1) + (t3 - t4)) / 2;
+    let delay = (t4 - t1) - (t3 - t2);
+    Ok(Sample { offset_ns: offset as i64, delay_ns: delay as i64 })
+}
+
+/// Query `n` times and return the sample with the lowest round-trip delay
+/// (the standard burst-and-pick-best estimator).
+pub fn estimate_offset(server: &str, n: usize, timeout: Duration) -> Result<Sample> {
+    let mut best: Option<Sample> = None;
+    let mut last_err = None;
+    for _ in 0..n.max(1) {
+        match query(server, timeout) {
+            Ok(s) => {
+                if best.map_or(true, |b| s.delay_ns < b.delay_ns) {
+                    best = Some(s);
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    best.ok_or_else(|| last_err.unwrap_or_else(|| Error::Transport("ntp: no samples".into())))
+}
+
+/// Continuously refreshed offset estimate shared with transport elements.
+#[derive(Clone)]
+pub struct SyncedClock {
+    offset: Arc<std::sync::atomic::AtomicI64>,
+    valid: Arc<AtomicBool>,
+}
+
+impl Default for SyncedClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SyncedClock {
+    pub fn new() -> Self {
+        Self {
+            offset: Arc::new(std::sync::atomic::AtomicI64::new(0)),
+            valid: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Offset to add to remote universal timestamps (0 until synced).
+    pub fn offset_ns(&self) -> i64 {
+        self.offset.load(Ordering::Relaxed)
+    }
+
+    pub fn is_synced(&self) -> bool {
+        self.valid.load(Ordering::Relaxed)
+    }
+
+    pub fn set(&self, offset_ns: i64) {
+        self.offset.store(offset_ns, Ordering::Relaxed);
+        self.valid.store(true, Ordering::Relaxed);
+    }
+
+    /// Sync once against `server` (burst of `n`).
+    pub fn sync_once(&self, server: &str, n: usize) -> Result<Sample> {
+        let s = estimate_offset(server, n, Duration::from_millis(500))?;
+        self.set(s.offset_ns);
+        log_debug!("ntp", "synced to {server}: offset {} us, delay {} us", s.offset_ns / 1000, s.delay_ns / 1000);
+        Ok(s)
+    }
+
+    /// Spawn a background refresher (every `interval`).
+    pub fn sync_periodic(&self, server: String, interval: Duration) {
+        let me = self.clone();
+        std::thread::Builder::new()
+            .name("ntp-refresh".into())
+            .spawn(move || loop {
+                let _ = me.sync_once(&server, 4);
+                std::thread::sleep(interval);
+            })
+            .expect("spawn ntp refresher");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_host_offset_near_zero() {
+        let server = NtpServer::start("127.0.0.1:0").unwrap();
+        let s = estimate_offset(&server.addr().to_string(), 8, Duration::from_secs(1)).unwrap();
+        // Same machine, same clock: offset must be within the RTT.
+        assert!(s.offset_ns.abs() < 50_000_000, "offset {} ns", s.offset_ns);
+        assert!(s.delay_ns >= 0, "delay {} ns", s.delay_ns);
+    }
+
+    #[test]
+    fn burst_picks_lowest_delay() {
+        let server = NtpServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        let a = query(&addr, Duration::from_secs(1)).unwrap();
+        let best = estimate_offset(&addr, 10, Duration::from_secs(1)).unwrap();
+        assert!(best.delay_ns <= a.delay_ns.max(best.delay_ns));
+    }
+
+    #[test]
+    fn unreachable_server_errors() {
+        // Reserved port with (very likely) nothing listening + short timeout.
+        let r = query("127.0.0.1:9", Duration::from_millis(100));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn synced_clock_lifecycle() {
+        let c = SyncedClock::new();
+        assert!(!c.is_synced());
+        assert_eq!(c.offset_ns(), 0);
+        c.set(12345);
+        assert!(c.is_synced());
+        assert_eq!(c.offset_ns(), 12345);
+    }
+
+    #[test]
+    fn synced_clock_via_server() {
+        let server = NtpServer::start("127.0.0.1:0").unwrap();
+        let c = SyncedClock::new();
+        c.sync_once(&server.addr().to_string(), 4).unwrap();
+        assert!(c.is_synced());
+        assert!(c.offset_ns().abs() < 50_000_000);
+    }
+}

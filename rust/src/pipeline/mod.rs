@@ -1,0 +1,535 @@
+//! Pipeline graph + threaded runner (GStreamer core analog).
+//!
+//! Build a [`Pipeline`] by adding elements and linking pads (or parse a
+//! gst-launch-style description — [`parser`]), then [`Pipeline::start`] it:
+//! every element gets a thread, links become bounded inboxes, EOS and
+//! errors surface on the bus.
+
+pub mod parser;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::clock::PipelineClock;
+use crate::element::{BusMsg, Ctx, Downstream, Element, EosTracker, Inbox, Item};
+use crate::util::{Error, Result};
+use crate::{log_debug, log_info};
+
+struct Node {
+    name: String,
+    element: Box<dyn Element>,
+}
+
+/// A pipeline under construction.
+pub struct Pipeline {
+    nodes: Vec<Node>,
+    /// (src node, src pad) -> (dst node, dst pad)
+    links: Vec<((usize, usize), (usize, usize))>,
+    names: HashMap<String, usize>,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new(), links: Vec::new(), names: HashMap::new() }
+    }
+
+    /// Add an element under a unique name (empty = auto-generated).
+    pub fn add(&mut self, name: &str, element: Box<dyn Element>) -> Result<usize> {
+        let name = if name.is_empty() {
+            format!("element{}", self.nodes.len())
+        } else {
+            name.to_string()
+        };
+        if self.names.contains_key(&name) {
+            return Err(Error::Pipeline(format!("duplicate element name `{name}`")));
+        }
+        let id = self.nodes.len();
+        self.names.insert(name.clone(), id);
+        self.nodes.push(Node { name, element });
+        Ok(id)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<usize> {
+        self.names.get(name).copied()
+    }
+
+    pub fn node_name(&self, id: usize) -> &str {
+        &self.nodes[id].name
+    }
+
+    pub fn element_mut(&mut self, id: usize) -> &mut dyn Element {
+        self.nodes[id].element.as_mut()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Link `from`'s src pad to `to`'s sink pad. A src pad may fan out to
+    /// several sinks (implicit tee); a sink pad accepts exactly one link.
+    pub fn link_pads(&mut self, from: usize, from_pad: usize, to: usize, to_pad: usize) -> Result<()> {
+        let nf = self.nodes.get(from).ok_or_else(|| Error::Pipeline(format!("bad node {from}")))?;
+        let nt = self.nodes.get(to).ok_or_else(|| Error::Pipeline(format!("bad node {to}")))?;
+        if from_pad >= nf.element.n_src_pads() {
+            return Err(Error::Pipeline(format!(
+                "`{}` has {} src pads, pad {from_pad} requested",
+                nf.name,
+                nf.element.n_src_pads()
+            )));
+        }
+        if to_pad >= nt.element.n_sink_pads() {
+            return Err(Error::Pipeline(format!(
+                "`{}` has {} sink pads, pad {to_pad} requested",
+                nt.name,
+                nt.element.n_sink_pads()
+            )));
+        }
+        if self.links.iter().any(|(_, t)| *t == (to, to_pad)) {
+            return Err(Error::Pipeline(format!(
+                "sink pad {to_pad} of `{}` already linked",
+                nt.name
+            )));
+        }
+        self.links.push(((from, from_pad), (to, to_pad)));
+        Ok(())
+    }
+
+    /// Link pad 0 -> pad 0 (the common chain case).
+    pub fn link(&mut self, from: usize, to: usize) -> Result<()> {
+        self.link_pads(from, 0, to, 0)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for pad in 0..n.element.n_sink_pads() {
+                if !self.links.iter().any(|(_, t)| *t == (i, pad)) {
+                    return Err(Error::Pipeline(format!(
+                        "sink pad {pad} of `{}` is not linked",
+                        n.name
+                    )));
+                }
+            }
+            if n.element.n_sink_pads() == 0 && n.element.n_src_pads() == 0 {
+                return Err(Error::Pipeline(format!("`{}` has no pads", n.name)));
+            }
+        }
+        if self.nodes.is_empty() {
+            return Err(Error::Pipeline("empty pipeline".into()));
+        }
+        Ok(())
+    }
+
+    /// Start streaming: spawn element threads. Consumes the pipeline.
+    pub fn start(self) -> Result<Running> {
+        self.validate()?;
+        let clock = PipelineClock::start();
+        let stop = Arc::new(AtomicBool::new(false));
+        let (bus_tx, bus_rx): (Sender<BusMsg>, Receiver<BusMsg>) = channel();
+
+        // Inboxes for nodes with sink pads.
+        let mut inboxes: Vec<Option<Arc<Inbox>>> = Vec::with_capacity(self.nodes.len());
+        for n in &self.nodes {
+            let pads = n.element.n_sink_pads();
+            if pads == 0 {
+                inboxes.push(None);
+            } else {
+                let cfgs = (0..pads).map(|p| n.element.sink_queue_cfg(p)).collect();
+                inboxes.push(Some(Arc::new(Inbox::new(cfgs))));
+            }
+        }
+
+        // Downstream tables.
+        let mut downstreams: Vec<Vec<Vec<(Arc<Inbox>, usize)>>> = self
+            .nodes
+            .iter()
+            .map(|n| vec![Vec::new(); n.element.n_src_pads()])
+            .collect();
+        for ((f, fp), (t, tp)) in &self.links {
+            let ib = inboxes[*t].as_ref().expect("linked sink without inbox").clone();
+            downstreams[*f][*fp].push((ib, *tp));
+        }
+
+        let n_sinks = self.nodes.iter().filter(|n| n.element.n_src_pads() == 0).count();
+        let mut handles = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.into_iter().enumerate() {
+            let ds = Downstream { outputs: std::mem::take(&mut downstreams[i]) };
+            let ctx = Ctx::new(node.name.clone(), clock, ds, bus_tx.clone(), stop.clone());
+            let inbox = inboxes[i].clone();
+            handles.push(spawn_node(node, ctx, inbox)?);
+        }
+        log_info!("pipeline", "started: {} elements, {} sinks", handles.len(), n_sinks);
+        Ok(Running { bus_rx, stop, inboxes, handles, n_sinks, finished: false })
+    }
+}
+
+fn spawn_node(mut node: Node, mut ctx: Ctx, inbox: Option<Arc<Inbox>>) -> Result<JoinHandle<()>> {
+    let thread_name = format!("ep-{}", node.name);
+    std::thread::Builder::new()
+        .name(thread_name)
+        .spawn(move || {
+            if let Err(e) = node.element.start(&mut ctx) {
+                ctx.post_error(format!("start: {e}"));
+                ctx.push_eos_all();
+                return;
+            }
+            let is_sink = ctx.n_src_pads_linked() == 0 && inbox.is_some();
+            match inbox {
+                None => {
+                    // Source: produce until EOS/stop/error.
+                    loop {
+                        if ctx.stopped() {
+                            break;
+                        }
+                        match node.element.produce(&mut ctx) {
+                            Ok(true) => {}
+                            Ok(false) => break,
+                            Err(e) => {
+                                ctx.post_error(format!("produce: {e}"));
+                                break;
+                            }
+                        }
+                    }
+                }
+                Some(ib) => {
+                    let mut tracker = EosTracker::new(ib.n_pads());
+                    loop {
+                        match ib.pop_any() {
+                            None => break,
+                            Some((pad, item)) => {
+                                let eos = matches!(item, Item::Eos);
+                                if let Err(e) = node.element.handle(pad, item, &mut ctx) {
+                                    ctx.post_error(format!("handle: {e}"));
+                                    break;
+                                }
+                                if eos && tracker.mark(pad) {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            ctx.push_eos_all();
+            node.element.stop(&mut ctx);
+            if is_sink || ctx.n_src_pads_linked() == 0 {
+                ctx.post_eos();
+            }
+            log_debug!("pipeline", "element `{}` done", ctx.name);
+        })
+        .map_err(|e| Error::Pipeline(format!("spawn: {e}")))
+}
+
+/// Outcome of waiting on a running pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WaitOutcome {
+    /// All sink elements reached EOS.
+    Eos,
+    /// An element posted an error.
+    Error { element: String, message: String },
+    Timeout,
+}
+
+/// A live pipeline.
+pub struct Running {
+    bus_rx: Receiver<BusMsg>,
+    stop: Arc<AtomicBool>,
+    inboxes: Vec<Option<Arc<Inbox>>>,
+    handles: Vec<JoinHandle<()>>,
+    n_sinks: usize,
+    finished: bool,
+}
+
+impl Running {
+    /// Wait until all sinks EOS, an error posts, or the timeout expires.
+    /// Info messages are discarded here; use [`Running::bus`] to observe.
+    pub fn wait(&mut self, timeout: Duration) -> WaitOutcome {
+        let deadline = Instant::now() + timeout;
+        let mut eos_seen = 0usize;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                return WaitOutcome::Timeout;
+            }
+            match self.bus_rx.recv_timeout(deadline - now) {
+                Ok(BusMsg::Eos { .. }) => {
+                    eos_seen += 1;
+                    if eos_seen >= self.n_sinks {
+                        self.finished = true;
+                        return WaitOutcome::Eos;
+                    }
+                }
+                Ok(BusMsg::Error { element, message }) => {
+                    return WaitOutcome::Error { element, message };
+                }
+                Ok(BusMsg::Info { .. }) => {}
+                Err(_) => return WaitOutcome::Timeout,
+            }
+        }
+    }
+
+    /// Ask live sources to wind down, then wait for drainage.
+    pub fn stop(mut self, grace: Duration) -> WaitOutcome {
+        self.stop.store(true, Ordering::Relaxed);
+        let out = self.wait(grace);
+        self.teardown();
+        out
+    }
+
+    /// Run for a fixed duration then stop (bench/example helper).
+    pub fn run_for(self, d: Duration) -> WaitOutcome {
+        std::thread::sleep(d);
+        self.stop(Duration::from_secs(10))
+    }
+
+    /// Wait for natural EOS (bounded sources), tearing down afterwards.
+    pub fn wait_eos(mut self, timeout: Duration) -> WaitOutcome {
+        let out = self.wait(timeout);
+        self.stop.store(true, Ordering::Relaxed);
+        self.teardown();
+        out
+    }
+
+    pub fn bus(&self) -> &Receiver<BusMsg> {
+        &self.bus_rx
+    }
+
+    fn teardown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for ib in self.inboxes.iter().flatten() {
+            ib.close();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Running {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Buffer;
+    use crate::element::QueueCfg;
+    use std::sync::atomic::AtomicU64;
+
+    /// Source producing `n` counted buffers.
+    struct CountSrc {
+        n: u64,
+        sent: u64,
+    }
+
+    impl Element for CountSrc {
+        fn n_sink_pads(&self) -> usize {
+            0
+        }
+        fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+            unreachable!()
+        }
+        fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+            if self.sent >= self.n {
+                return Ok(false);
+            }
+            ctx.push_buffer(Buffer::new(self.sent.to_le_bytes().to_vec()).with_pts(self.sent))?;
+            self.sent += 1;
+            Ok(true)
+        }
+    }
+
+    /// Sink counting buffers into a shared atomic.
+    struct CountSink {
+        count: Arc<AtomicU64>,
+    }
+
+    impl Element for CountSink {
+        fn n_src_pads(&self) -> usize {
+            0
+        }
+        fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<()> {
+            if item.is_buffer() {
+                self.count.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
+        }
+    }
+
+    /// Identity filter.
+    struct Pass;
+    impl Element for Pass {
+        fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+            if !matches!(item, Item::Eos) {
+                ctx.push(0, item)?;
+            }
+            Ok(())
+        }
+    }
+
+    fn counted_pipeline(n: u64) -> (Pipeline, Arc<AtomicU64>) {
+        let mut p = Pipeline::new();
+        let count = Arc::new(AtomicU64::new(0));
+        let s = p.add("src", Box::new(CountSrc { n, sent: 0 })).unwrap();
+        let f = p.add("pass", Box::new(Pass)).unwrap();
+        let k = p.add("sink", Box::new(CountSink { count: count.clone() })).unwrap();
+        p.link(s, f).unwrap();
+        p.link(f, k).unwrap();
+        (p, count)
+    }
+
+    #[test]
+    fn linear_pipeline_delivers_all_buffers_then_eos() {
+        let (p, count) = counted_pipeline(100);
+        let running = p.start().unwrap();
+        assert_eq!(running.wait_eos(Duration::from_secs(5)), WaitOutcome::Eos);
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn fanout_duplicates_stream() {
+        let mut p = Pipeline::new();
+        let c1 = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::new(AtomicU64::new(0));
+        let s = p.add("src", Box::new(CountSrc { n: 50, sent: 0 })).unwrap();
+        let k1 = p.add("sink1", Box::new(CountSink { count: c1.clone() })).unwrap();
+        let k2 = p.add("sink2", Box::new(CountSink { count: c2.clone() })).unwrap();
+        p.link(s, k1).unwrap();
+        p.link(s, k2).unwrap();
+        let running = p.start().unwrap();
+        assert_eq!(running.wait_eos(Duration::from_secs(5)), WaitOutcome::Eos);
+        assert_eq!(c1.load(Ordering::Relaxed), 50);
+        assert_eq!(c2.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn unlinked_sink_pad_rejected() {
+        let mut p = Pipeline::new();
+        p.add("sink", Box::new(CountSink { count: Arc::new(AtomicU64::new(0)) })).unwrap();
+        assert!(p.start().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut p = Pipeline::new();
+        p.add("x", Box::new(Pass)).unwrap();
+        assert!(p.add("x", Box::new(Pass)).is_err());
+    }
+
+    #[test]
+    fn double_link_to_same_sink_pad_rejected() {
+        let mut p = Pipeline::new();
+        let a = p.add("a", Box::new(CountSrc { n: 1, sent: 0 })).unwrap();
+        let b = p.add("b", Box::new(CountSrc { n: 1, sent: 0 })).unwrap();
+        let k = p.add("k", Box::new(CountSink { count: Arc::new(AtomicU64::new(0)) })).unwrap();
+        p.link(a, k).unwrap();
+        assert!(p.link(b, k).is_err());
+    }
+
+    #[test]
+    fn bad_pad_indices_rejected() {
+        let mut p = Pipeline::new();
+        let a = p.add("a", Box::new(CountSrc { n: 1, sent: 0 })).unwrap();
+        let k = p.add("k", Box::new(CountSink { count: Arc::new(AtomicU64::new(0)) })).unwrap();
+        assert!(p.link_pads(a, 3, k, 0).is_err());
+        assert!(p.link_pads(a, 0, k, 5).is_err());
+    }
+
+    #[test]
+    fn error_element_surfaces_on_bus() {
+        struct Fail;
+        impl Element for Fail {
+            fn n_src_pads(&self) -> usize {
+                0
+            }
+            fn handle(&mut self, _: usize, item: Item, _: &mut Ctx) -> Result<()> {
+                if item.is_buffer() {
+                    return Err(Error::Pipeline("boom".into()));
+                }
+                Ok(())
+            }
+        }
+        let mut p = Pipeline::new();
+        let s = p.add("src", Box::new(CountSrc { n: 10, sent: 0 })).unwrap();
+        let k = p.add("fail", Box::new(Fail)).unwrap();
+        p.link(s, k).unwrap();
+        let mut running = p.start().unwrap();
+        match running.wait(Duration::from_secs(5)) {
+            WaitOutcome::Error { element, message } => {
+                assert_eq!(element, "fail");
+                assert!(message.contains("boom"));
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stop_interrupts_live_source() {
+        struct Forever;
+        impl Element for Forever {
+            fn n_sink_pads(&self) -> usize {
+                0
+            }
+            fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+                unreachable!()
+            }
+            fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+                std::thread::sleep(Duration::from_millis(1));
+                ctx.push_buffer(Buffer::new(vec![0]))?;
+                Ok(true)
+            }
+        }
+        let mut p = Pipeline::new();
+        let count = Arc::new(AtomicU64::new(0));
+        let s = p.add("src", Box::new(Forever)).unwrap();
+        let k = p.add("sink", Box::new(CountSink { count: count.clone() })).unwrap();
+        p.link(s, k).unwrap();
+        let running = p.start().unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(running.stop(Duration::from_secs(5)), WaitOutcome::Eos);
+        assert!(count.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn leaky_queue_cfg_respected() {
+        struct LeakySink {
+            count: Arc<AtomicU64>,
+        }
+        impl Element for LeakySink {
+            fn n_src_pads(&self) -> usize {
+                0
+            }
+            fn sink_queue_cfg(&self, _: usize) -> QueueCfg {
+                QueueCfg { capacity: 1, leaky: crate::element::Leaky::Downstream }
+            }
+            fn handle(&mut self, _: usize, item: Item, _: &mut Ctx) -> Result<()> {
+                if item.is_buffer() {
+                    // Slow consumer.
+                    std::thread::sleep(Duration::from_millis(5));
+                    self.count.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(())
+            }
+        }
+        let mut p = Pipeline::new();
+        let count = Arc::new(AtomicU64::new(0));
+        let s = p.add("src", Box::new(CountSrc { n: 500, sent: 0 })).unwrap();
+        let k = p.add("sink", Box::new(LeakySink { count: count.clone() })).unwrap();
+        p.link(s, k).unwrap();
+        let running = p.start().unwrap();
+        assert_eq!(running.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+        // Leak must have dropped most of the 500 (source is unthrottled).
+        assert!(count.load(Ordering::Relaxed) < 500);
+    }
+}

@@ -1,0 +1,338 @@
+//! gst-launch-style pipeline description parser.
+//!
+//! Supports the syntax the paper's listings use:
+//! - chains:           `videotestsrc ! tensor_converter ! appsink`
+//! - properties:       `queue leaky=2`, `mqttsrc sub-topic=camleft`
+//! - naming:           `tee name=ts`, later `ts. ! queue ! ...`
+//! - named pads:       `dmux.src_0 ! ...`, `... ! mix.sink_1`
+//! - pad properties:   `compositor name=mix sink_0::zorder=2`
+//! - caps filters:     `... ! video/x-raw,width=300,height=300 ! ...`
+//! - quoted values:    `dimensions="4:20:1:1,20:1:1:1"`
+//!
+//! Like the paper's listings (and unlike strict gst-launch), an element
+//! directly following a `name.` source reference links implicitly.
+
+use std::collections::BTreeMap;
+
+use crate::element::registry::{PipelineEnv, Props, Registry};
+use crate::pipeline::Pipeline;
+use crate::util::{Error, Result};
+
+/// Parse a description into a ready-to-start [`Pipeline`].
+pub fn parse(desc: &str, registry: &Registry, env: &PipelineEnv) -> Result<Pipeline> {
+    let tokens = tokenize(desc)?;
+    build(&tokens, registry, env)
+}
+
+/// Count the "lines of pipeline code": non-empty `!`-separated segments.
+/// Used by the §5.2 "within 100 LoC" reproduction (bench_loc).
+pub fn segment_count(desc: &str) -> usize {
+    tokenize(desc).map(|t| t.iter().filter(|x| x != &"!").count()).unwrap_or(0)
+}
+
+fn tokenize(desc: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut quoted = false;
+    for c in desc.chars() {
+        match c {
+            '"' => {
+                quoted = !quoted;
+                cur.push(c);
+            }
+            c if c.is_whitespace() && !quoted => {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+            '!' if !quoted => {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                out.push("!".to_string());
+            }
+            _ => cur.push(c),
+        }
+    }
+    if quoted {
+        return Err(Error::Parse("unterminated quote in pipeline description".into()));
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+#[derive(Debug, PartialEq)]
+enum Tok<'a> {
+    Link,
+    /// `name.` / `name.src_0` — chain source reference.
+    SrcRef { name: &'a str, pad: Option<usize> },
+    /// `name.sink_0` — chain destination reference.
+    SinkRef { name: &'a str, pad: Option<usize> },
+    /// `k=v` (includes pad props `sink_0::zorder=2`).
+    Prop { key: &'a str, value: &'a str },
+    /// `video/x-raw,width=...` etc.
+    CapsFilter(&'a str),
+    Element(&'a str),
+}
+
+fn classify(tok: &str) -> Tok<'_> {
+    if tok == "!" {
+        return Tok::Link;
+    }
+    // caps filter: contains '/' before any '=' or ','
+    let eq = tok.find('=').unwrap_or(usize::MAX);
+    let slash = tok.find('/').unwrap_or(usize::MAX);
+    if slash < eq && slash != usize::MAX && tok.find(',').map_or(true, |c| slash < c) {
+        return Tok::CapsFilter(tok);
+    }
+    if eq != usize::MAX {
+        let (k, v) = tok.split_once('=').unwrap();
+        return Tok::Prop { key: k, value: v };
+    }
+    // pad reference: name. | name.src_N | name.sink_N
+    if let Some((name, pad)) = tok.split_once('.') {
+        if !name.is_empty() {
+            if pad.is_empty() {
+                return Tok::SrcRef { name, pad: None };
+            }
+            if let Some(n) = pad.strip_prefix("src_").and_then(|s| s.parse().ok()) {
+                return Tok::SrcRef { name, pad: Some(n) };
+            }
+            if pad == "src" {
+                return Tok::SrcRef { name, pad: Some(0) };
+            }
+            if let Some(n) = pad.strip_prefix("sink_").and_then(|s| s.parse().ok()) {
+                return Tok::SinkRef { name, pad: Some(n) };
+            }
+            if pad == "sink" {
+                return Tok::SinkRef { name, pad: Some(0) };
+            }
+        }
+    }
+    Tok::Element(tok)
+}
+
+struct Builder<'r> {
+    pipeline: Pipeline,
+    registry: &'r Registry,
+    env: &'r PipelineEnv,
+    /// Next implicit sink pad to use per node (for `! mux.` style links).
+    next_sink: BTreeMap<usize, usize>,
+}
+
+fn build(tokens: &[String], registry: &Registry, env: &PipelineEnv) -> Result<Pipeline> {
+    let mut b = Builder { pipeline: Pipeline::new(), registry, env, next_sink: BTreeMap::new() };
+
+    // Pass 1: create every element node so pad references may point
+    // forward (Listing 2 links `mux.sink_0` before/after its definition).
+    let mut node_for_token: Vec<Option<usize>> = vec![None; tokens.len()];
+    {
+        let mut i = 0;
+        while i < tokens.len() {
+            match classify(&tokens[i]) {
+                Tok::CapsFilter(spec) => {
+                    let mut props = Props::new();
+                    props.insert("caps".into(), spec.trim_matches('"').to_string());
+                    node_for_token[i] = Some(b.make_node("capsfilter", &props, "")?);
+                    i += 1;
+                }
+                Tok::Element(kind) => {
+                    let mut props = Props::new();
+                    let mut node_name = String::new();
+                    let mut j = i + 1;
+                    while j < tokens.len() {
+                        if let Tok::Prop { key, value } = classify(&tokens[j]) {
+                            if key == "name" {
+                                node_name = value.to_string();
+                            } else {
+                                props.insert(key.to_string(), value.trim_matches('"').to_string());
+                            }
+                            j += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    node_for_token[i] = Some(b.make_node(kind, &props, &node_name)?);
+                    i = j;
+                }
+                _ => i += 1,
+            }
+        }
+    }
+
+    // Pass 2: wire links. Current chain head: (node, src_pad).
+    let mut current: Option<(usize, usize)> = None;
+    let mut pending_link = false;
+
+    let mut i = 0;
+    while i < tokens.len() {
+        match classify(&tokens[i]) {
+            Tok::Link => {
+                if current.is_none() {
+                    return Err(Error::Parse("`!` with nothing to link from".into()));
+                }
+                pending_link = true;
+                i += 1;
+            }
+            Tok::SrcRef { name, pad } => {
+                let id = b
+                    .pipeline
+                    .by_name(name)
+                    .ok_or_else(|| Error::Parse(format!("unknown element `{name}`")))?;
+                let pad = pad.unwrap_or(0);
+                b.ensure_src(id, pad)?;
+                current = Some((id, pad));
+                // Paper-style implicit link: `ts. videoconvert ! ...`
+                pending_link = true;
+                i += 1;
+            }
+            Tok::SinkRef { name, pad } => {
+                if !pending_link {
+                    return Err(Error::Parse(format!("`{name}.sink` without preceding `!`")));
+                }
+                let (from, from_pad) =
+                    current.ok_or_else(|| Error::Parse("link without source".into()))?;
+                let id = b
+                    .pipeline
+                    .by_name(name)
+                    .ok_or_else(|| Error::Parse(format!("unknown element `{name}`")))?;
+                let pad = match pad {
+                    Some(p) => p,
+                    None => b.alloc_sink(id),
+                };
+                b.ensure_sink(id, pad)?;
+                b.pipeline.link_pads(from, from_pad, id, pad)?;
+                current = None;
+                pending_link = false;
+                i += 1;
+            }
+            Tok::CapsFilter(_) => {
+                let id = node_for_token[i].expect("pass-1 node");
+                if pending_link {
+                    let (from, from_pad) =
+                        current.ok_or_else(|| Error::Parse("link without source".into()))?;
+                    b.pipeline.link_pads(from, from_pad, id, 0)?;
+                }
+                current = Some((id, 0));
+                pending_link = false;
+                i += 1;
+            }
+            Tok::Prop { .. } => {
+                return Err(Error::Parse(format!(
+                    "stray property `{}` (no preceding element)",
+                    tokens[i]
+                )));
+            }
+            Tok::Element(_) => {
+                // Properties were consumed in pass 1; skip them here.
+                let mut j = i + 1;
+                while j < tokens.len() && matches!(classify(&tokens[j]), Tok::Prop { .. }) {
+                    j += 1;
+                }
+                let id = node_for_token[i].expect("pass-1 node");
+                if pending_link {
+                    let (from, from_pad) =
+                        current.ok_or_else(|| Error::Parse("link without source".into()))?;
+                    let pad = b.alloc_sink(id);
+                    b.ensure_sink(id, pad)?;
+                    b.pipeline.link_pads(from, from_pad, id, pad)?;
+                }
+                current = Some((id, 0));
+                pending_link = false;
+                i = j;
+            }
+        }
+    }
+    if pending_link {
+        return Err(Error::Parse("dangling `!` at end of description".into()));
+    }
+    Ok(b.pipeline)
+}
+
+impl Builder<'_> {
+    fn make_node(&mut self, kind: &str, props: &Props, name: &str) -> Result<usize> {
+        let el = self.registry.make(kind, props, self.env)?;
+        let auto = format!("{kind}{}", self.pipeline.n_nodes());
+        let name = if name.is_empty() { auto } else { name.to_string() };
+        self.pipeline.add(&name, el)
+    }
+
+    fn alloc_sink(&mut self, id: usize) -> usize {
+        let next = self.next_sink.entry(id).or_insert(0);
+        let pad = *next;
+        *next += 1;
+        pad
+    }
+
+    fn ensure_sink(&mut self, id: usize, pad: usize) -> Result<()> {
+        let el = self.pipeline.element_mut(id);
+        if pad < el.n_sink_pads() {
+            return Ok(());
+        }
+        if el.ensure_sink_pads(pad + 1) {
+            Ok(())
+        } else {
+            Err(Error::Parse(format!("element cannot grow to sink pad {pad}")))
+        }
+    }
+
+    fn ensure_src(&mut self, id: usize, pad: usize) -> Result<()> {
+        let el = self.pipeline.element_mut(id);
+        if pad < el.n_src_pads() {
+            return Ok(());
+        }
+        if el.ensure_src_pads(pad + 1) {
+            Ok(())
+        } else {
+            Err(Error::Parse(format!("element cannot grow to src pad {pad}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenize_respects_quotes_and_bangs() {
+        let t = tokenize(r#"a ! b opt="x,y z" ! c"#).unwrap();
+        assert_eq!(t, vec!["a", "!", "b", r#"opt="x,y z""#, "!", "c"]);
+    }
+
+    #[test]
+    fn tokenize_bang_without_spaces() {
+        let t = tokenize("a!b").unwrap();
+        assert_eq!(t, vec!["a", "!", "b"]);
+    }
+
+    #[test]
+    fn tokenize_unterminated_quote_errors() {
+        assert!(tokenize(r#"a opt="x"#).is_err());
+    }
+
+    #[test]
+    fn classify_tokens() {
+        assert_eq!(classify("!"), Tok::Link);
+        assert!(matches!(classify("videotestsrc"), Tok::Element("videotestsrc")));
+        assert!(matches!(classify("leaky=2"), Tok::Prop { key: "leaky", value: "2" }));
+        assert!(matches!(classify("video/x-raw,width=3"), Tok::CapsFilter(_)));
+        assert!(matches!(classify("other/flexbuf"), Tok::CapsFilter(_)));
+        assert!(matches!(classify("ts."), Tok::SrcRef { name: "ts", pad: None }));
+        assert!(matches!(classify("d.src_2"), Tok::SrcRef { name: "d", pad: Some(2) }));
+        assert!(matches!(classify("mix.sink_1"), Tok::SinkRef { name: "mix", pad: Some(1) }));
+        // property whose value contains '/': not caps
+        assert!(matches!(classify("model=/path/m.tflite"), Tok::Prop { .. }));
+        // pad property
+        assert!(matches!(classify("sink_0::zorder=2"), Tok::Prop { .. }));
+    }
+
+    #[test]
+    fn segment_count_counts_elements() {
+        assert_eq!(segment_count("a ! b ! c"), 3);
+        assert_eq!(segment_count("a prop=1 ! b"), 3); // props count as written tokens
+    }
+
+    // Full build tests live in rust/tests/ (they need the element registry).
+}

@@ -1,0 +1,173 @@
+//! Parser for the line-oriented model manifest emitted by
+//! `python/compile/aot.py` (see that file for the format).
+
+use std::path::Path;
+
+use crate::util::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Row-major dims as lowered (e.g. [1, 300, 300, 3]).
+    pub dims: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input: TensorSpec,
+    pub outputs: Vec<TensorSpec>,
+    pub params: Vec<ParamSpec>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|d| d.trim().parse::<usize>().map_err(|_| Error::Runtime(format!("bad dim `{d}`"))))
+        .collect()
+}
+
+impl ModelManifest {
+    pub fn load(path: &Path) -> Result<ModelManifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ModelManifest> {
+        let mut name = None;
+        let mut input = None;
+        let mut outputs = Vec::new();
+        let mut params = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            match fields.as_slice() {
+                ["model", n] => name = Some(n.to_string()),
+                ["input", n, "f32", dims] => {
+                    input = Some(TensorSpec { name: n.to_string(), dims: parse_dims(dims)? });
+                }
+                ["output", n, "f32", dims] => {
+                    outputs.push(TensorSpec { name: n.to_string(), dims: parse_dims(dims)? });
+                }
+                ["param", n, "f32", dims, off, len] => {
+                    params.push(ParamSpec {
+                        name: n.to_string(),
+                        dims: parse_dims(dims)?,
+                        offset: off
+                            .parse()
+                            .map_err(|_| Error::Runtime(format!("line {}: bad offset", ln + 1)))?,
+                        nbytes: len
+                            .parse()
+                            .map_err(|_| Error::Runtime(format!("line {}: bad nbytes", ln + 1)))?,
+                    });
+                }
+                _ => {
+                    return Err(Error::Runtime(format!(
+                        "manifest line {}: unrecognized `{line}`",
+                        ln + 1
+                    )))
+                }
+            }
+        }
+        let manifest = ModelManifest {
+            name: name.ok_or_else(|| Error::Runtime("manifest missing `model`".into()))?,
+            input: input.ok_or_else(|| Error::Runtime("manifest missing `input`".into()))?,
+            outputs,
+            params,
+        };
+        if manifest.outputs.is_empty() {
+            return Err(Error::Runtime("manifest has no outputs".into()));
+        }
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut expect = 0usize;
+        for p in &self.params {
+            if p.offset != expect {
+                return Err(Error::Runtime(format!(
+                    "param `{}` offset {} != expected {expect} (non-contiguous)",
+                    p.name, p.offset
+                )));
+            }
+            let n: usize = p.dims.iter().product();
+            if p.nbytes != n * 4 {
+                return Err(Error::Runtime(format!(
+                    "param `{}` nbytes {} != dims size {}",
+                    p.name,
+                    p.nbytes,
+                    n * 4
+                )));
+            }
+            expect += p.nbytes;
+        }
+        Ok(())
+    }
+
+    pub fn total_weight_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.nbytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model detect
+input x f32 1,96,96,3
+output activation f32 1
+param c0.w f32 3,3,3,8 0 864
+param c0.b f32 8 864 32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "detect");
+        assert_eq!(m.input.dims, vec![1, 96, 96, 3]);
+        assert_eq!(m.outputs.len(), 1);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].offset, 864);
+        assert_eq!(m.total_weight_bytes(), 896);
+    }
+
+    #[test]
+    fn missing_model_line_errors() {
+        assert!(ModelManifest::parse("input x f32 1\noutput y f32 1\n").is_err());
+    }
+
+    #[test]
+    fn missing_outputs_errors() {
+        assert!(ModelManifest::parse("model m\ninput x f32 1\n").is_err());
+    }
+
+    #[test]
+    fn non_contiguous_params_rejected() {
+        let bad = "model m\ninput x f32 1\noutput y f32 1\nparam p f32 2 4 8\n";
+        assert!(ModelManifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let bad = "model m\ninput x f32 1\noutput y f32 1\nparam p f32 2 0 4\n";
+        assert!(ModelManifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn garbage_line_rejected() {
+        assert!(ModelManifest::parse("model m\nwhatever\n").is_err());
+    }
+}

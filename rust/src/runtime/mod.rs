@@ -1,0 +1,301 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from the Rust
+//! hot path. Python is never involved at request time.
+//!
+//! Per model `<name>` the `artifacts/` directory holds:
+//! - `<name>.hlo.txt`      — HLO text of `fn(x, *params)` (1-tuple-safe
+//!                            interchange; see python/compile/aot.py)
+//! - `<name>.weights.bin`  — flat f32 params
+//! - `<name>.manifest.txt` — io/param shapes + byte ranges
+//!
+//! Weights are uploaded to the device ONCE at load (`PjRtBuffer`s); each
+//! inference only uploads the input tensor and executes (`execute_b`).
+
+pub mod manifest;
+
+pub use manifest::{ModelManifest, ParamSpec, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::tensor::{DType, TensorInfo, TensorsInfo};
+use crate::util::{Error, Result};
+use crate::{log_debug, log_info};
+
+fn rt_err(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A loaded, compiled, ready-to-run model.
+pub struct Model {
+    pub manifest: ModelManifest,
+    exe: xla::PjRtLoadedExecutable,
+    /// Device-resident parameter buffers (uploaded once).
+    params: Vec<xla::PjRtBuffer>,
+    client: xla::PjRtClient,
+}
+
+// The underlying PJRT CPU client is thread-safe; the xla crate just wraps
+// raw pointers without declaring it.
+unsafe impl Send for Model {}
+unsafe impl Sync for Model {}
+
+impl Model {
+    /// Load `<dir>/<name>.{hlo.txt,weights.bin,manifest.txt}` and compile.
+    pub fn load(dir: &Path, name: &str, client: &xla::PjRtClient) -> Result<Model> {
+        let manifest = ModelManifest::load(&dir.join(format!("{name}.manifest.txt")))?;
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| Error::Runtime("bad path".into()))?,
+        )
+        .map_err(rt_err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(rt_err)?;
+
+        let weights = std::fs::read(dir.join(format!("{name}.weights.bin")))?;
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let end = p.offset + p.nbytes;
+            if end > weights.len() {
+                return Err(Error::Runtime(format!(
+                    "{name}: param {} range {}..{end} exceeds weights.bin ({})",
+                    p.name,
+                    p.offset,
+                    weights.len()
+                )));
+            }
+            let chunk = &weights[p.offset..end];
+            let n: usize = p.dims.iter().product();
+            let mut vals = vec![0f32; n];
+            for (i, c) in chunk.chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            let dims: Vec<usize> = p.dims.clone();
+            let buf = client
+                .buffer_from_host_buffer(&vals, &dims, None)
+                .map_err(rt_err)?;
+            params.push(buf);
+        }
+        log_info!(
+            "runtime",
+            "loaded model `{name}`: input {:?}, {} outputs, {} params",
+            manifest.input.dims,
+            manifest.outputs.len(),
+            params.len()
+        );
+        Ok(Model { manifest, exe, params, client: client.clone() })
+    }
+
+    /// Run inference on a raw f32 input slice (row-major, manifest dims).
+    /// Returns one Vec<f32> per model output.
+    pub fn infer_f32(&self, input: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let want: usize = self.manifest.input.dims.iter().product();
+        if input.len() != want {
+            return Err(Error::Runtime(format!(
+                "model `{}` expects {want} input f32s, got {}",
+                self.manifest.name,
+                input.len()
+            )));
+        }
+        let x = self
+            .client
+            .buffer_from_host_buffer(input, &self.manifest.input.dims, None)
+            .map_err(rt_err)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.params.len());
+        args.push(&x);
+        args.extend(self.params.iter());
+        let result = self.exe.execute_b(&args).map_err(rt_err)?;
+        let lit = result[0][0].to_literal_sync().map_err(rt_err)?;
+        let outputs = lit.to_tuple().map_err(rt_err)?;
+        if outputs.len() != self.manifest.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "model `{}` returned {} outputs, manifest declares {}",
+                self.manifest.name,
+                outputs.len(),
+                self.manifest.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(outputs.len());
+        for lit in outputs {
+            out.push(lit.to_vec::<f32>().map_err(rt_err)?);
+        }
+        Ok(out)
+    }
+
+    /// Inference over a little-endian f32 byte payload; returns the
+    /// concatenated output payload (static `other/tensors` frame layout).
+    pub fn infer_bytes(&self, input: &[u8]) -> Result<Vec<u8>> {
+        if input.len() % 4 != 0 {
+            return Err(Error::Runtime(format!("input {} bytes not f32-aligned", input.len())));
+        }
+        let mut vals = vec![0f32; input.len() / 4];
+        for (i, c) in input.chunks_exact(4).enumerate() {
+            vals[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        let outs = self.infer_f32(&vals)?;
+        let total: usize = outs.iter().map(|o| o.len() * 4).sum();
+        let mut payload = Vec::with_capacity(total);
+        for o in outs {
+            for v in o {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(payload)
+    }
+
+    /// `other/tensors` caps info of the model input (f32, innermost-first).
+    pub fn input_info(&self) -> Result<TensorsInfo> {
+        Ok(TensorsInfo::one(spec_to_info(&self.manifest.input)?))
+    }
+
+    /// `other/tensors` caps info of the model outputs.
+    pub fn output_info(&self) -> Result<TensorsInfo> {
+        let mut ti = TensorsInfo::default();
+        for o in &self.manifest.outputs {
+            ti.push(spec_to_info(o)?)?;
+        }
+        Ok(ti)
+    }
+}
+
+/// Convert manifest row-major dims to NNStreamer innermost-first dims.
+fn spec_to_info(spec: &TensorSpec) -> Result<TensorInfo> {
+    let mut dims: Vec<u32> = spec.dims.iter().map(|&d| d as u32).collect();
+    dims.reverse();
+    // squeeze leading 1s beyond rank 4 (e.g. batch dim of 1x300x300x3)
+    while dims.len() > 4 && dims.last() == Some(&1) {
+        dims.pop();
+    }
+    if dims.is_empty() {
+        dims.push(1);
+    }
+    TensorInfo::new(DType::F32, &dims)
+}
+
+/// Shared model store: one PJRT client, models compiled once per process.
+pub struct ModelStore {
+    client: xla::PjRtClient,
+    dir: std::path::PathBuf,
+    models: Mutex<HashMap<String, Arc<Model>>>,
+}
+
+unsafe impl Send for ModelStore {}
+unsafe impl Sync for ModelStore {}
+
+impl ModelStore {
+    pub fn new(dir: &Path) -> Result<ModelStore> {
+        let client = xla::PjRtClient::cpu().map_err(rt_err)?;
+        log_debug!("runtime", "PJRT client: {}", client.platform_name());
+        Ok(ModelStore { client, dir: dir.to_path_buf(), models: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<Model>> {
+        if let Some(m) = self.models.lock().unwrap().get(name) {
+            return Ok(m.clone());
+        }
+        // Compile outside the lock (slow); racing loads are harmless.
+        let model = Arc::new(Model::load(&self.dir, name, &self.client)?);
+        self.models.lock().unwrap().insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// Process-global stores keyed by artifacts dir.
+pub fn store_for(dir: &str) -> Result<Arc<ModelStore>> {
+    static STORES: OnceLock<Mutex<HashMap<String, Arc<ModelStore>>>> = OnceLock::new();
+    let stores = STORES.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = stores.lock().unwrap();
+    if let Some(s) = map.get(dir) {
+        return Ok(s.clone());
+    }
+    let store = Arc::new(ModelStore::new(Path::new(dir))?);
+    map.insert(dir.to_string(), store.clone());
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if d.join("detect.manifest.txt").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn load_and_run_detect_model() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let store = ModelStore::new(&dir).unwrap();
+        let m = store.get("detect").unwrap();
+        assert_eq!(m.manifest.input.dims, vec![1, 96, 96, 3]);
+        let input = vec![0.1f32; 1 * 96 * 96 * 3];
+        let outs = m.infer_f32(&input).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].len(), 1);
+        let p = outs[0][0];
+        assert!((0.0..=1.0).contains(&p), "activation {p}");
+    }
+
+    #[test]
+    fn inference_is_deterministic() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ModelStore::new(&dir).unwrap();
+        let m = store.get("detect").unwrap();
+        let input = vec![0.25f32; 96 * 96 * 3];
+        let a = m.infer_f32(&input).unwrap();
+        let b = m.infer_f32(&input).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ModelStore::new(&dir).unwrap();
+        let m = store.get("detect").unwrap();
+        assert!(m.infer_f32(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn infer_bytes_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ModelStore::new(&dir).unwrap();
+        let m = store.get("detect").unwrap();
+        let input = crate::tensor::f32_to_bytes(&vec![0.5f32; 96 * 96 * 3]);
+        let out = m.infer_bytes(&input).unwrap();
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn store_caches_models() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ModelStore::new(&dir).unwrap();
+        let a = store.get("detect").unwrap();
+        let b = store.get("detect").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let store = ModelStore::new(&dir).unwrap();
+        assert!(store.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn info_conversion_reverses_dims() {
+        let spec = TensorSpec { name: "x".into(), dims: vec![1, 300, 300, 3] };
+        let info = spec_to_info(&spec).unwrap();
+        assert_eq!(info.dims, [3, 300, 300, 1]);
+    }
+}

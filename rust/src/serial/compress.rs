@@ -1,0 +1,112 @@
+//! Frame compression for inter-pipeline transmission (R3; gst-gz analog).
+//!
+//! zlib via `flate2`. Transport elements apply this per-frame when
+//! `compress=zlib` is configured; the wire flag travels in the EdgeFrame
+//! header so receivers self-configure.
+
+use std::io::{Read, Write};
+
+use crate::util::{Error, Result};
+
+/// Compression codec for transport frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    #[default]
+    None,
+    Zlib,
+}
+
+impl Codec {
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Zlib => "zlib",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Codec::None,
+            "zlib" | "gz" => Codec::Zlib,
+            other => return Err(Error::Serial(format!("unknown codec `{other}`"))),
+        })
+    }
+}
+
+/// Max decompressed size we accept (guards hostile frames): 256 MiB.
+const MAX_DECOMPRESSED: u64 = 256 * 1024 * 1024;
+
+pub fn compress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
+    match codec {
+        Codec::None => Ok(data.to_vec()),
+        Codec::Zlib => {
+            let mut enc = flate2::write::ZlibEncoder::new(
+                Vec::with_capacity(data.len() / 2 + 64),
+                flate2::Compression::fast(),
+            );
+            enc.write_all(data).map_err(|e| Error::Serial(e.to_string()))?;
+            enc.finish().map_err(|e| Error::Serial(e.to_string()))
+        }
+    }
+}
+
+pub fn decompress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
+    match codec {
+        Codec::None => Ok(data.to_vec()),
+        Codec::Zlib => {
+            let mut dec = flate2::read::ZlibDecoder::new(data).take(MAX_DECOMPRESSED);
+            let mut out = Vec::with_capacity(data.len() * 2);
+            dec.read_to_end(&mut out).map_err(|e| Error::Serial(e.to_string()))?;
+            Ok(out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64;
+
+    #[test]
+    fn codec_parse_roundtrip() {
+        assert_eq!(Codec::parse("none").unwrap(), Codec::None);
+        assert_eq!(Codec::parse("zlib").unwrap(), Codec::Zlib);
+        assert_eq!(Codec::parse("gz").unwrap(), Codec::Zlib);
+        assert!(Codec::parse("lz99").is_err());
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let data = vec![1u8, 2, 3];
+        assert_eq!(compress(Codec::None, &data).unwrap(), data);
+        assert_eq!(decompress(Codec::None, &data).unwrap(), data);
+    }
+
+    #[test]
+    fn zlib_roundtrip_compressible() {
+        let data = vec![7u8; 100_000];
+        let c = compress(Codec::Zlib, &data).unwrap();
+        assert!(c.len() < data.len() / 10, "compressed {} of {}", c.len(), data.len());
+        assert_eq!(decompress(Codec::Zlib, &c).unwrap(), data);
+    }
+
+    #[test]
+    fn zlib_roundtrip_random() {
+        let mut rng = XorShift64::new(1);
+        let mut data = vec![0u8; 10_000];
+        rng.fill_bytes(&mut data);
+        let c = compress(Codec::Zlib, &data).unwrap();
+        assert_eq!(decompress(Codec::Zlib, &c).unwrap(), data);
+    }
+
+    #[test]
+    fn zlib_roundtrip_empty() {
+        let c = compress(Codec::Zlib, &[]).unwrap();
+        assert_eq!(decompress(Codec::Zlib, &c).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn corrupt_stream_errors() {
+        assert!(decompress(Codec::Zlib, &[1, 2, 3, 4]).is_err());
+    }
+}

@@ -1,0 +1,395 @@
+//! Schemaless typed-tree serialization — the FlexBuffers-role codec
+//! behind `other/flexbuf` streams (§4.1, R2).
+//!
+//! A `Value` is a dynamically-typed tree (null/bool/int/uint/float/str/
+//! blob/vector/map).  The wire format is a compact tag+varint encoding of
+//! our own; the *semantics* (no schema required at launch, self-describing
+//! frames, type checks at decode) match what the paper uses FlexBuffers
+//! for.  As the paper warns, schemaless streams trade launch-time type
+//! verification for run-time checks — the decoder therefore validates
+//! exhaustively and errors loudly.
+
+use std::collections::BTreeMap;
+
+use crate::util::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Int(i64),
+    UInt(u64),
+    Float(f64),
+    Str(String),
+    Blob(Vec<u8>),
+    Vector(Vec<Value>),
+    Map(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Int(_) => "int",
+            Value::UInt(_) => "uint",
+            Value::Float(_) => "float",
+            Value::Str(_) => "str",
+            Value::Blob(_) => "blob",
+            Value::Vector(_) => "vector",
+            Value::Map(_) => "map",
+        }
+    }
+
+    // -- typed accessors (runtime schema checks) --------------------------
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::UInt(v) => Ok(*v),
+            Value::Int(v) if *v >= 0 => Ok(*v as u64),
+            other => Err(Error::Serial(format!("expected uint, got {}", other.type_name()))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::UInt(v) if *v <= i64::MAX as u64 => Ok(*v as i64),
+            other => Err(Error::Serial(format!("expected int, got {}", other.type_name()))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            Value::UInt(v) => Ok(*v as f64),
+            other => Err(Error::Serial(format!("expected float, got {}", other.type_name()))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(Error::Serial(format!("expected str, got {}", other.type_name()))),
+        }
+    }
+
+    pub fn as_blob(&self) -> Result<&[u8]> {
+        match self {
+            Value::Blob(b) => Ok(b),
+            other => Err(Error::Serial(format!("expected blob, got {}", other.type_name()))),
+        }
+    }
+
+    pub fn as_vector(&self) -> Result<&[Value]> {
+        match self {
+            Value::Vector(v) => Ok(v),
+            other => Err(Error::Serial(format!("expected vector, got {}", other.type_name()))),
+        }
+    }
+
+    pub fn as_map(&self) -> Result<&BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Ok(m),
+            other => Err(Error::Serial(format!("expected map, got {}", other.type_name()))),
+        }
+    }
+
+    /// Map field lookup with a descriptive error.
+    pub fn field(&self, key: &str) -> Result<&Value> {
+        self.as_map()?
+            .get(key)
+            .ok_or_else(|| Error::Serial(format!("missing field `{key}`")))
+    }
+}
+
+const TAG_NULL: u8 = 0;
+const TAG_FALSE: u8 = 1;
+const TAG_TRUE: u8 = 2;
+const TAG_INT: u8 = 3;
+const TAG_UINT: u8 = 4;
+const TAG_FLOAT: u8 = 5;
+const TAG_STR: u8 = 6;
+const TAG_BLOB: u8 = 7;
+const TAG_VEC: u8 = 8;
+const TAG_MAP: u8 = 9;
+
+/// Recursion guard: deeper trees than this are rejected at decode.
+const MAX_DEPTH: usize = 64;
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(buf: &[u8], off: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*off).ok_or_else(|| Error::Serial("varint truncated".into()))?;
+        *off += 1;
+        if shift >= 64 {
+            return Err(Error::Serial("varint overflow".into()));
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// ZigZag for signed ints.
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+pub fn encode(v: &Value) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_into(v, &mut out);
+    out
+}
+
+fn encode_into(v: &Value, out: &mut Vec<u8>) {
+    match v {
+        Value::Null => out.push(TAG_NULL),
+        Value::Bool(false) => out.push(TAG_FALSE),
+        Value::Bool(true) => out.push(TAG_TRUE),
+        Value::Int(i) => {
+            out.push(TAG_INT);
+            put_varint(out, zigzag(*i));
+        }
+        Value::UInt(u) => {
+            out.push(TAG_UINT);
+            put_varint(out, *u);
+        }
+        Value::Float(f) => {
+            out.push(TAG_FLOAT);
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        Value::Str(s) => {
+            out.push(TAG_STR);
+            put_varint(out, s.len() as u64);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Value::Blob(b) => {
+            out.push(TAG_BLOB);
+            put_varint(out, b.len() as u64);
+            out.extend_from_slice(b);
+        }
+        Value::Vector(items) => {
+            out.push(TAG_VEC);
+            put_varint(out, items.len() as u64);
+            for item in items {
+                encode_into(item, out);
+            }
+        }
+        Value::Map(m) => {
+            out.push(TAG_MAP);
+            put_varint(out, m.len() as u64);
+            for (k, val) in m {
+                put_varint(out, k.len() as u64);
+                out.extend_from_slice(k.as_bytes());
+                encode_into(val, out);
+            }
+        }
+    }
+}
+
+pub fn decode(buf: &[u8]) -> Result<Value> {
+    let mut off = 0;
+    let v = decode_at(buf, &mut off, 0)?;
+    if off != buf.len() {
+        return Err(Error::Serial(format!("{} trailing bytes after flexbuf value", buf.len() - off)));
+    }
+    Ok(v)
+}
+
+fn take<'a>(buf: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+    let s = buf
+        .get(*off..*off + n)
+        .ok_or_else(|| Error::Serial(format!("flexbuf truncated: need {n} at {off}", off = *off)))?;
+    *off += n;
+    Ok(s)
+}
+
+fn decode_at(buf: &[u8], off: &mut usize, depth: usize) -> Result<Value> {
+    if depth > MAX_DEPTH {
+        return Err(Error::Serial("flexbuf nesting too deep".into()));
+    }
+    let tag = *buf.get(*off).ok_or_else(|| Error::Serial("flexbuf empty".into()))?;
+    *off += 1;
+    Ok(match tag {
+        TAG_NULL => Value::Null,
+        TAG_FALSE => Value::Bool(false),
+        TAG_TRUE => Value::Bool(true),
+        TAG_INT => Value::Int(unzigzag(get_varint(buf, off)?)),
+        TAG_UINT => Value::UInt(get_varint(buf, off)?),
+        TAG_FLOAT => {
+            let b = take(buf, off, 8)?;
+            Value::Float(f64::from_le_bytes(b.try_into().unwrap()))
+        }
+        TAG_STR => {
+            let n = get_varint(buf, off)? as usize;
+            let b = take(buf, off, n)?;
+            Value::Str(String::from_utf8(b.to_vec()).map_err(|e| Error::Serial(e.to_string()))?)
+        }
+        TAG_BLOB => {
+            let n = get_varint(buf, off)? as usize;
+            Value::Blob(take(buf, off, n)?.to_vec())
+        }
+        TAG_VEC => {
+            let n = get_varint(buf, off)? as usize;
+            if n > buf.len() {
+                return Err(Error::Serial(format!("vector claims {n} items in {} bytes", buf.len())));
+            }
+            let mut items = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                items.push(decode_at(buf, off, depth + 1)?);
+            }
+            Value::Vector(items)
+        }
+        TAG_MAP => {
+            let n = get_varint(buf, off)? as usize;
+            if n > buf.len() {
+                return Err(Error::Serial(format!("map claims {n} entries in {} bytes", buf.len())));
+            }
+            let mut m = BTreeMap::new();
+            for _ in 0..n {
+                let klen = get_varint(buf, off)? as usize;
+                let kb = take(buf, off, klen)?;
+                let k = String::from_utf8(kb.to_vec()).map_err(|e| Error::Serial(e.to_string()))?;
+                m.insert(k, decode_at(buf, off, depth + 1)?);
+            }
+            Value::Map(m)
+        }
+        other => return Err(Error::Serial(format!("unknown flexbuf tag {other}"))),
+    })
+}
+
+/// Convenience: build a map value.
+pub fn map(entries: Vec<(&str, Value)>) -> Value {
+    Value::Map(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: Value) {
+        let enc = encode(&v);
+        assert_eq!(decode(&enc).unwrap(), v);
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        roundtrip(Value::Null);
+        roundtrip(Value::Bool(true));
+        roundtrip(Value::Bool(false));
+        roundtrip(Value::Int(-12345));
+        roundtrip(Value::Int(i64::MIN));
+        roundtrip(Value::UInt(u64::MAX));
+        roundtrip(Value::Float(3.25));
+        roundtrip(Value::Str("hello 🌍".into()));
+        roundtrip(Value::Blob(vec![0, 255, 7]));
+    }
+
+    #[test]
+    fn nested_structures_roundtrip() {
+        roundtrip(map(vec![
+            ("dims", Value::Vector(vec![Value::UInt(4), Value::UInt(20)])),
+            ("dtype", Value::Str("float32".into())),
+            ("data", Value::Blob(vec![1, 2, 3, 4])),
+            (
+                "meta",
+                map(vec![("pts", Value::UInt(123)), ("live", Value::Bool(true))]),
+            ),
+        ]));
+    }
+
+    #[test]
+    fn empty_containers() {
+        roundtrip(Value::Vector(vec![]));
+        roundtrip(Value::Map(BTreeMap::new()));
+    }
+
+    #[test]
+    fn zigzag_symmetry() {
+        for v in [0i64, 1, -1, 42, -42, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let enc = encode(&Value::Str("hello".into()));
+        for cut in 1..enc.len() {
+            assert!(decode(&enc[..cut]).is_err(), "cut at {cut} should fail");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut enc = encode(&Value::Int(5));
+        enc.push(0);
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_rejected() {
+        assert!(decode(&[200]).is_err());
+    }
+
+    #[test]
+    fn hostile_length_rejected() {
+        // vector claiming u64::MAX items must not OOM
+        let mut buf = vec![TAG_VEC];
+        put_varint(&mut buf, u64::MAX);
+        assert!(decode(&buf).is_err());
+    }
+
+    #[test]
+    fn deep_nesting_rejected() {
+        let mut v = Value::Null;
+        for _ in 0..100 {
+            v = Value::Vector(vec![v]);
+        }
+        let enc = encode(&v);
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let v = map(vec![("n", Value::UInt(7)), ("s", Value::Str("x".into()))]);
+        assert_eq!(v.field("n").unwrap().as_u64().unwrap(), 7);
+        assert_eq!(v.field("s").unwrap().as_str().unwrap(), "x");
+        assert!(v.field("missing").is_err());
+        assert!(v.field("s").unwrap().as_u64().is_err());
+        assert_eq!(Value::Int(3).as_f64().unwrap(), 3.0);
+        assert_eq!(Value::Int(3).as_u64().unwrap(), 3);
+        assert!(Value::Int(-3).as_u64().is_err());
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 127, 128, 16383, 16384, u64::MAX] {
+            let mut out = Vec::new();
+            put_varint(&mut out, v);
+            let mut off = 0;
+            assert_eq!(get_varint(&out, &mut off).unwrap(), v);
+            assert_eq!(off, out.len());
+        }
+    }
+}

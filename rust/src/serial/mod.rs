@@ -1,0 +1,106 @@
+//! Serialization for inter-pipeline transmission (§4.1–4.2):
+//! [`flexbuf`] schemaless trees, [`compress`] frame compression, and
+//! [`wire`] the EdgeFrame transport envelope.
+
+pub mod compress;
+pub mod flexbuf;
+pub mod wire;
+
+pub use compress::Codec;
+pub use flexbuf::Value;
+
+use crate::tensor::{DType, TensorInfo, TensorsInfo};
+use crate::util::{Error, Result};
+
+/// Encode a static tensors frame as a schemaless flexbuf value
+/// (`tensor_decoder mode=flexbuf` / `other/flexbuf` streams).
+pub fn tensors_to_flexbuf(info: &TensorsInfo, payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.len() != info.frame_size() {
+        return Err(Error::Serial(format!(
+            "payload {} != frame size {}",
+            payload.len(),
+            info.frame_size()
+        )));
+    }
+    let mut tensors = Vec::with_capacity(info.len());
+    let mut off = 0;
+    for t in &info.tensors {
+        let sz = t.size();
+        tensors.push(flexbuf::map(vec![
+            ("dtype", Value::Str(t.dtype.name().into())),
+            (
+                "dims",
+                Value::Vector(t.dims.iter().map(|&d| Value::UInt(d as u64)).collect()),
+            ),
+            ("data", Value::Blob(payload[off..off + sz].to_vec())),
+        ]));
+        off += sz;
+    }
+    Ok(flexbuf::encode(&flexbuf::map(vec![
+        ("num_tensors", Value::UInt(info.len() as u64)),
+        ("tensors", Value::Vector(tensors)),
+    ])))
+}
+
+/// Decode a flexbuf frame back into (TensorsInfo, payload) — the
+/// `tensor_converter` path for `other/flexbuf` input (§4.1).
+pub fn flexbuf_to_tensors(frame: &[u8]) -> Result<(TensorsInfo, Vec<u8>)> {
+    let v = flexbuf::decode(frame)?;
+    let n = v.field("num_tensors")?.as_u64()? as usize;
+    let tensors = v.field("tensors")?.as_vector()?;
+    if tensors.len() != n {
+        return Err(Error::Serial(format!("num_tensors={n} but {} entries", tensors.len())));
+    }
+    let mut info = TensorsInfo::default();
+    let mut payload = Vec::new();
+    for t in tensors {
+        let dtype = DType::parse(t.field("dtype")?.as_str()?)?;
+        let dims_v = t.field("dims")?.as_vector()?;
+        let mut dims = Vec::with_capacity(dims_v.len());
+        for d in dims_v {
+            dims.push(d.as_u64()? as u32);
+        }
+        let ti = TensorInfo::new(dtype, &dims)?;
+        let data = t.field("data")?.as_blob()?;
+        if data.len() != ti.size() {
+            return Err(Error::Serial(format!(
+                "tensor data {} != declared size {}",
+                data.len(),
+                ti.size()
+            )));
+        }
+        payload.extend_from_slice(data);
+        info.push(ti)?;
+    }
+    Ok((info, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensors_flexbuf_roundtrip() {
+        let mut info = TensorsInfo::default();
+        info.push(TensorInfo::new(DType::F32, &[4, 20]).unwrap()).unwrap();
+        info.push(TensorInfo::new(DType::U8, &[5]).unwrap()).unwrap();
+        let payload: Vec<u8> = (0..info.frame_size() as u32).map(|x| x as u8).collect();
+        let enc = tensors_to_flexbuf(&info, &payload).unwrap();
+        let (info2, payload2) = flexbuf_to_tensors(&enc).unwrap();
+        assert_eq!(info2, info);
+        assert_eq!(payload2, payload);
+    }
+
+    #[test]
+    fn flexbuf_size_mismatch_rejected() {
+        let info = TensorsInfo::one(TensorInfo::new(DType::F32, &[4]).unwrap());
+        assert!(tensors_to_flexbuf(&info, &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn flexbuf_wrong_shape_rejected() {
+        // A structurally valid flexbuf that is not a tensors frame.
+        let v = flexbuf::map(vec![("hello", Value::Int(1))]);
+        assert!(flexbuf_to_tensors(&flexbuf::encode(&v)).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! EdgeFrame — the transport envelope every among-device connection uses
+//! (mqttsink/src, zmqsink/src, query elements, NNStreamer-Edge analog).
+//!
+//! Carries the buffer payload plus everything a *remote* pipeline needs to
+//! reconstruct the stream: the caps string (so the receiver negotiates
+//! without out-of-band schema — §4.2.1), timestamps + publisher base-time
+//! (§4.2.3 sync), query routing ids (§4.2.2), and the compression codec.
+//!
+//! Layout (little-endian):
+//! ```text
+//! "EPEF" | ver u8 | flags u8 | codec u8 | pad u8
+//! pts u64 | duration u64 | base_universal u64 | client_id u64 | seq u64 | capture_universal u64
+//! caps_len u32 | caps utf8 | payload_len u32 | payload (possibly compressed)
+//! ```
+//! `u64::MAX` encodes "absent" for the optional u64 fields.
+
+use std::sync::Arc;
+
+use crate::buffer::{Buffer, Meta};
+use crate::caps::Caps;
+use crate::serial::compress::{compress, decompress, Codec};
+use crate::util::{read_u32, read_u64, Error, Result};
+
+pub const WIRE_MAGIC: &[u8; 4] = b"EPEF";
+const VERSION: u8 = 1;
+const FIXED: usize = 8 + 6 * 8;
+const ABSENT: u64 = u64::MAX;
+
+/// Encode a buffer (+ its caps) into a transport frame.
+pub fn encode(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Result<Vec<u8>> {
+    let caps_str = caps.map(|c| c.to_string()).unwrap_or_default();
+    let payload = compress(codec, &buf.data)?;
+    let mut out = Vec::with_capacity(FIXED + caps_str.len() + payload.len() + 8);
+    out.extend_from_slice(WIRE_MAGIC);
+    out.push(VERSION);
+    out.push(0); // flags (reserved)
+    out.push(codec as u8);
+    out.push(0);
+    for v in [
+        buf.pts.unwrap_or(ABSENT),
+        buf.duration.unwrap_or(ABSENT),
+        buf.meta.remote_base_universal.unwrap_or(ABSENT),
+        buf.meta.client_id.unwrap_or(ABSENT),
+        buf.meta.seq.unwrap_or(ABSENT),
+        buf.meta.capture_universal.unwrap_or(ABSENT),
+    ] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(caps_str.len() as u32).to_le_bytes());
+    out.extend_from_slice(caps_str.as_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+fn codec_from_wire(b: u8) -> Result<Codec> {
+    Ok(match b {
+        0 => Codec::None,
+        1 => Codec::Zlib,
+        other => return Err(Error::Serial(format!("unknown wire codec {other}"))),
+    })
+}
+
+fn opt(v: u64) -> Option<u64> {
+    if v == ABSENT {
+        None
+    } else {
+        Some(v)
+    }
+}
+
+/// Decode a transport frame into (Buffer, Option<Caps>).
+pub fn decode(frame: &[u8]) -> Result<(Buffer, Option<Caps>)> {
+    if frame.len() < FIXED + 8 || &frame[..4] != WIRE_MAGIC {
+        return Err(Error::Serial("not an EdgeFrame (bad magic/short)".into()));
+    }
+    if frame[4] != VERSION {
+        return Err(Error::Serial(format!("EdgeFrame version {} unsupported", frame[4])));
+    }
+    let codec = codec_from_wire(frame[6])?;
+    let pts = opt(read_u64(frame, 8)?);
+    let duration = opt(read_u64(frame, 16)?);
+    let base_universal = opt(read_u64(frame, 24)?);
+    let client_id = opt(read_u64(frame, 32)?);
+    let seq = opt(read_u64(frame, 40)?);
+    let capture_universal = opt(read_u64(frame, 48)?);
+    let caps_len = read_u32(frame, 56)? as usize;
+    let caps_end = 60 + caps_len;
+    if frame.len() < caps_end + 4 {
+        return Err(Error::Serial("EdgeFrame caps truncated".into()));
+    }
+    let caps = if caps_len == 0 {
+        None
+    } else {
+        let s = std::str::from_utf8(&frame[60..caps_end])
+            .map_err(|e| Error::Serial(format!("caps not utf8: {e}")))?;
+        Some(Caps::parse(s)?)
+    };
+    let payload_len = read_u32(frame, caps_end)? as usize;
+    let payload_start = caps_end + 4;
+    if frame.len() != payload_start + payload_len {
+        return Err(Error::Serial(format!(
+            "EdgeFrame length {} != declared {}",
+            frame.len(),
+            payload_start + payload_len
+        )));
+    }
+    let data = decompress(codec, &frame[payload_start..])?;
+    let buffer = Buffer {
+        pts,
+        duration,
+        data: Arc::from(data),
+        meta: Meta {
+            client_id,
+            seq,
+            remote_base_universal: base_universal,
+            capture_universal,
+            origin: None,
+        },
+    };
+    Ok((buffer, caps))
+}
+
+/// Read one length-prefixed EdgeFrame from a stream reader.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > 512 * 1024 * 1024 {
+        return Err(Error::Serial(format!("frame length {n} exceeds limit")));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: std::io::Write>(w: &mut W, frame: &[u8]) -> Result<()> {
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(frame)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_buffer() -> Buffer {
+        let mut b = Buffer::new(vec![1u8, 2, 3, 4, 5]).with_pts(123).with_duration(16_666_667);
+        b.meta.remote_base_universal = Some(999);
+        b.meta.client_id = Some(7);
+        b.meta.seq = Some(42);
+        b.meta.capture_universal = Some(1234567);
+        b
+    }
+
+    #[test]
+    fn roundtrip_plain() {
+        let b = sample_buffer();
+        let caps = Caps::video(4, 4, 30);
+        let frame = encode(&b, Some(&caps), Codec::None).unwrap();
+        let (b2, c2) = decode(&frame).unwrap();
+        assert_eq!(b2, b);
+        assert_eq!(c2.unwrap(), caps);
+    }
+
+    #[test]
+    fn roundtrip_zlib() {
+        let b = Buffer::new(vec![9u8; 50_000]).with_pts(5);
+        let frame = encode(&b, None, Codec::Zlib).unwrap();
+        assert!(frame.len() < 5_000);
+        let (b2, c2) = decode(&frame).unwrap();
+        assert_eq!(&b2.data[..], &b.data[..]);
+        assert!(c2.is_none());
+    }
+
+    #[test]
+    fn absent_fields_stay_absent() {
+        let b = Buffer::new(vec![1]);
+        let frame = encode(&b, None, Codec::None).unwrap();
+        let (b2, _) = decode(&frame).unwrap();
+        assert_eq!(b2.pts, None);
+        assert_eq!(b2.duration, None);
+        assert_eq!(b2.meta.client_id, None);
+        assert_eq!(b2.meta.seq, None);
+        assert_eq!(b2.meta.remote_base_universal, None);
+        assert_eq!(b2.meta.capture_universal, None);
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        let b = sample_buffer();
+        let frame = encode(&b, Some(&Caps::video(4, 4, 30)), Codec::None).unwrap();
+        assert!(decode(&frame[..frame.len() - 1]).is_err());
+        assert!(decode(&frame[..10]).is_err());
+        let mut bad = frame.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        let mut badver = frame;
+        badver[4] = 99;
+        assert!(decode(&badver).is_err());
+    }
+
+    #[test]
+    fn stream_framing_roundtrip() {
+        let b = sample_buffer();
+        let frame = encode(&b, None, Codec::None).unwrap();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &frame).unwrap();
+        write_frame(&mut wire, &frame).unwrap();
+        let mut r = std::io::Cursor::new(wire);
+        assert_eq!(read_frame(&mut r).unwrap(), frame);
+        assert_eq!(read_frame(&mut r).unwrap(), frame);
+        assert!(read_frame(&mut r).is_err()); // EOF
+    }
+
+    #[test]
+    fn oversize_frame_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = std::io::Cursor::new(wire);
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Tensor element types for `other/tensors` streams (NNStreamer set).
+
+use crate::util::{Error, Result};
+
+/// Element type of a tensor stream. Wire ids are stable (used in flexible
+/// frame headers and sparse encodings) — do not reorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum DType {
+    I8 = 0,
+    U8 = 1,
+    I16 = 2,
+    U16 = 3,
+    I32 = 4,
+    U32 = 5,
+    I64 = 6,
+    U64 = 7,
+    F32 = 8,
+    F64 = 9,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 | DType::U8 => 1,
+            DType::I16 | DType::U16 => 2,
+            DType::I32 | DType::U32 | DType::F32 => 4,
+            DType::I64 | DType::U64 | DType::F64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I8 => "int8",
+            DType::U8 => "uint8",
+            DType::I16 => "int16",
+            DType::U16 => "uint16",
+            DType::I32 => "int32",
+            DType::U32 => "uint32",
+            DType::I64 => "int64",
+            DType::U64 => "uint64",
+            DType::F32 => "float32",
+            DType::F64 => "float64",
+        }
+    }
+
+    /// Parse the NNStreamer caps spelling (e.g. `float32`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "int8" => DType::I8,
+            "uint8" => DType::U8,
+            "int16" => DType::I16,
+            "uint16" => DType::U16,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            "int64" => DType::I64,
+            "uint64" => DType::U64,
+            "float32" => DType::F32,
+            "float64" => DType::F64,
+            other => return Err(Error::Tensor(format!("unknown dtype `{other}`"))),
+        })
+    }
+
+    pub fn from_wire(id: u8) -> Result<Self> {
+        Ok(match id {
+            0 => DType::I8,
+            1 => DType::U8,
+            2 => DType::I16,
+            3 => DType::U16,
+            4 => DType::I32,
+            5 => DType::U32,
+            6 => DType::I64,
+            7 => DType::U64,
+            8 => DType::F32,
+            9 => DType::F64,
+            other => return Err(Error::Tensor(format!("unknown dtype wire id {other}"))),
+        })
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+pub const ALL_DTYPES: [DType; 10] = [
+    DType::I8,
+    DType::U8,
+    DType::I16,
+    DType::U16,
+    DType::I32,
+    DType::U32,
+    DType::I64,
+    DType::U64,
+    DType::F32,
+    DType::F64,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::U8.size(), 1);
+        assert_eq!(DType::I16.size(), 2);
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::F64.size(), 8);
+    }
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for d in ALL_DTYPES {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        for d in ALL_DTYPES {
+            assert_eq!(DType::from_wire(d as u8).unwrap(), d);
+        }
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(DType::parse("bfloat16").is_err());
+        assert!(DType::from_wire(200).is_err());
+    }
+}

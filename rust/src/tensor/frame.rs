@@ -1,0 +1,262 @@
+//! Frame payload layouts for `other/tensors` streams.
+//!
+//! - **static**: raw concatenation of tensor payloads; the shape lives in
+//!   the negotiated caps only (no per-frame header) — R2's default.
+//! - **flexible** (`format=flexible`): every frame starts with a header
+//!   declaring per-tensor dtype/dims, so dimension and type may vary per
+//!   frame (dynamic schema, §4.1).
+//!
+//! Sparse is a separate per-tensor encoding — see [`crate::tensor::sparse`].
+
+use crate::tensor::{DType, TensorInfo, TensorsInfo, MAX_RANK, MAX_TENSORS};
+use crate::util::{read_u32, Error, Result};
+
+/// Stream format of an `other/tensors` pad (§4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Format {
+    #[default]
+    Static,
+    Flexible,
+    Sparse,
+}
+
+impl Format {
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Static => "static",
+            Format::Flexible => "flexible",
+            Format::Sparse => "sparse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "static" => Format::Static,
+            "flexible" => Format::Flexible,
+            "sparse" => Format::Sparse,
+            other => return Err(Error::Tensor(format!("unknown format `{other}`"))),
+        })
+    }
+}
+
+/// Magic prefix of a flexible frame header.
+pub const FLEX_MAGIC: &[u8; 4] = b"EPFX";
+const FLEX_VERSION: u8 = 1;
+/// Per-tensor header entry size: dtype(1) rank(1) pad(2) dims(16) size(4).
+const ENTRY: usize = 24;
+
+/// Encode a flexible frame: header + concatenated payloads.
+///
+/// `parts` pairs each tensor's metadata with its payload; payload length
+/// must equal `info.size()`.
+pub fn encode_flexible(parts: &[(TensorInfo, &[u8])]) -> Result<Vec<u8>> {
+    if parts.is_empty() || parts.len() > MAX_TENSORS {
+        return Err(Error::Tensor(format!("{} tensors out of 1..={MAX_TENSORS}", parts.len())));
+    }
+    let payload: usize = parts.iter().map(|(_, p)| p.len()).sum();
+    let mut out = Vec::with_capacity(8 + parts.len() * ENTRY + payload);
+    out.extend_from_slice(FLEX_MAGIC);
+    out.push(FLEX_VERSION);
+    out.push(parts.len() as u8);
+    out.extend_from_slice(&[0u8, 0u8]);
+    for (info, p) in parts {
+        if p.len() != info.size() {
+            return Err(Error::Tensor(format!(
+                "payload {} != declared size {} for dims {:?}",
+                p.len(),
+                info.size(),
+                info.dims
+            )));
+        }
+        out.push(info.dtype as u8);
+        out.push(MAX_RANK as u8);
+        out.extend_from_slice(&[0u8, 0u8]);
+        for d in info.dims {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    }
+    for (_, p) in parts {
+        out.extend_from_slice(p);
+    }
+    Ok(out)
+}
+
+/// Decoded view of a flexible frame: metadata plus payload byte ranges
+/// (offsets into the original frame buffer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlexFrame {
+    pub info: TensorsInfo,
+    pub ranges: Vec<std::ops::Range<usize>>,
+}
+
+/// Decode a flexible frame header; validates sizes against the buffer.
+pub fn decode_flexible(buf: &[u8]) -> Result<FlexFrame> {
+    if buf.len() < 8 || &buf[..4] != FLEX_MAGIC {
+        return Err(Error::Tensor("not a flexible tensor frame (bad magic)".into()));
+    }
+    if buf[4] != FLEX_VERSION {
+        return Err(Error::Tensor(format!("flexible frame version {} unsupported", buf[4])));
+    }
+    let n = buf[5] as usize;
+    if n == 0 || n > MAX_TENSORS {
+        return Err(Error::Tensor(format!("flexible frame declares {n} tensors")));
+    }
+    let header_end = 8 + n * ENTRY;
+    if buf.len() < header_end {
+        return Err(Error::Tensor("flexible frame header truncated".into()));
+    }
+    let mut info = TensorsInfo::default();
+    let mut ranges = Vec::with_capacity(n);
+    let mut off = header_end;
+    for i in 0..n {
+        let e = 8 + i * ENTRY;
+        let dtype = DType::from_wire(buf[e])?;
+        let mut dims = [1u32; MAX_RANK];
+        for (j, d) in dims.iter_mut().enumerate() {
+            *d = read_u32(buf, e + 4 + j * 4)?;
+        }
+        let size = read_u32(buf, e + 20)? as usize;
+        let ti = TensorInfo::new(dtype, &dims)?;
+        if ti.size() != size {
+            return Err(Error::Tensor(format!(
+                "flexible entry {i}: declared size {size} != dims size {}",
+                ti.size()
+            )));
+        }
+        if buf.len() < off + size {
+            return Err(Error::Tensor(format!("flexible frame payload truncated at tensor {i}")));
+        }
+        ranges.push(off..off + size);
+        info.push(ti)?;
+        off += size;
+    }
+    if off != buf.len() {
+        return Err(Error::Tensor(format!("flexible frame has {} trailing bytes", buf.len() - off)));
+    }
+    Ok(FlexFrame { info, ranges })
+}
+
+/// Convert a static frame (payload + its negotiated info) into flexible.
+pub fn static_to_flexible(info: &TensorsInfo, payload: &[u8]) -> Result<Vec<u8>> {
+    if payload.len() != info.frame_size() {
+        return Err(Error::Tensor(format!(
+            "static frame {} bytes != info {}",
+            payload.len(),
+            info.frame_size()
+        )));
+    }
+    let mut parts = Vec::with_capacity(info.len());
+    let mut off = 0;
+    for t in &info.tensors {
+        parts.push((t.clone(), &payload[off..off + t.size()]));
+        off += t.size();
+    }
+    encode_flexible(&parts)
+}
+
+/// Strip a flexible header, returning the static payload (concatenated
+/// tensors) and the per-frame info.
+pub fn flexible_to_static(buf: &[u8]) -> Result<(TensorsInfo, Vec<u8>)> {
+    let f = decode_flexible(buf)?;
+    let mut payload = Vec::with_capacity(buf.len());
+    for r in &f.ranges {
+        payload.extend_from_slice(&buf[r.clone()]);
+    }
+    Ok((f.info, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(dims: &[u32]) -> TensorInfo {
+        TensorInfo::new(DType::F32, dims).unwrap()
+    }
+
+    #[test]
+    fn format_parse_roundtrip() {
+        for f in [Format::Static, Format::Flexible, Format::Sparse] {
+            assert_eq!(Format::parse(f.name()).unwrap(), f);
+        }
+        assert!(Format::parse("dense").is_err());
+    }
+
+    #[test]
+    fn flexible_roundtrip_single() {
+        let t = info(&[2, 3]);
+        let payload: Vec<u8> = (0..t.size() as u8).map(|x| x).collect();
+        let frame = encode_flexible(&[(t.clone(), &payload)]).unwrap();
+        let dec = decode_flexible(&frame).unwrap();
+        assert_eq!(dec.info.tensors[0].dims, t.dims);
+        assert_eq!(&frame[dec.ranges[0].clone()], payload.as_slice());
+    }
+
+    #[test]
+    fn flexible_roundtrip_multi() {
+        let a = info(&[4, 20]);
+        let b = TensorInfo::new(DType::U8, &[7]).unwrap();
+        let pa = vec![1u8; a.size()];
+        let pb = vec![2u8; b.size()];
+        let frame = encode_flexible(&[(a.clone(), &pa), (b.clone(), &pb)]).unwrap();
+        let dec = decode_flexible(&frame).unwrap();
+        assert_eq!(dec.info.len(), 2);
+        assert_eq!(dec.info.tensors[1].dtype, DType::U8);
+        assert_eq!(&frame[dec.ranges[1].clone()], pb.as_slice());
+    }
+
+    #[test]
+    fn flexible_detects_truncation() {
+        let t = info(&[8]);
+        let payload = vec![0u8; t.size()];
+        let mut frame = encode_flexible(&[(t, &payload)]).unwrap();
+        frame.truncate(frame.len() - 1);
+        assert!(decode_flexible(&frame).is_err());
+    }
+
+    #[test]
+    fn flexible_detects_trailing_garbage() {
+        let t = info(&[8]);
+        let payload = vec![0u8; t.size()];
+        let mut frame = encode_flexible(&[(t, &payload)]).unwrap();
+        frame.push(0xAA);
+        assert!(decode_flexible(&frame).is_err());
+    }
+
+    #[test]
+    fn flexible_rejects_bad_magic() {
+        assert!(decode_flexible(b"XXXX....").is_err());
+        assert!(decode_flexible(b"EP").is_err());
+    }
+
+    #[test]
+    fn payload_size_mismatch_rejected() {
+        let t = info(&[4]);
+        let bad = vec![0u8; 3];
+        assert!(encode_flexible(&[(t, &bad)]).is_err());
+    }
+
+    #[test]
+    fn static_flexible_roundtrip() {
+        let mut ti = TensorsInfo::default();
+        ti.push(info(&[2, 2])).unwrap();
+        ti.push(TensorInfo::new(DType::U8, &[3]).unwrap()).unwrap();
+        let payload: Vec<u8> = (0..ti.frame_size() as u8).collect();
+        let flex = static_to_flexible(&ti, &payload).unwrap();
+        let (info2, payload2) = flexible_to_static(&flex).unwrap();
+        assert_eq!(info2, ti);
+        assert_eq!(payload2, payload);
+    }
+
+    #[test]
+    fn varying_dims_per_frame() {
+        // The §4.1 motivation: cropped-video streams vary per frame.
+        for w in [3u32, 5, 9] {
+            let t = TensorInfo::new(DType::U8, &[3, w, w]).unwrap();
+            let payload = vec![7u8; t.size()];
+            let frame = encode_flexible(&[(t, &payload)]).unwrap();
+            let dec = decode_flexible(&frame).unwrap();
+            assert_eq!(dec.info.tensors[0].dims[1], w);
+        }
+    }
+}

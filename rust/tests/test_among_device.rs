@@ -1,0 +1,230 @@
+//! Integration: the paper's among-device scenarios end-to-end, with the
+//! PJRT-backed models where artifacts are available.
+//!
+//! "Devices" are separate pipelines in one process; every byte still
+//! crosses real TCP/UDP sockets through the in-repo broker/transports.
+
+use std::time::Duration;
+
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::elements::{appsink_channel, appsrc_channel};
+use edgepipe::metrics;
+use edgepipe::mqtt::Broker;
+use edgepipe::pipeline::{parser, Running, WaitOutcome};
+use edgepipe::tensor;
+
+fn registry() -> Registry {
+    Registry::with_builtins()
+}
+
+fn env() -> PipelineEnv {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    PipelineEnv { artifacts_dir: dir.to_string_lossy().into_owned() }
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/detect.manifest.txt").exists()
+}
+
+fn start(desc: &str) -> Running {
+    parser::parse(desc, &registry(), &env()).expect("parse").start().expect("start")
+}
+
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+// ---------------------------------------------------------------------------
+// Listing 1 / Figure 2: workload offloading with query elements
+// ---------------------------------------------------------------------------
+
+#[test]
+fn listing1_offload_detect_model_tcp() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let port = free_port();
+    // Device B (Listing 1 server): one line of pipeline code + model.
+    let server = start(&format!(
+        "tensor_query_serversrc operation=detectgate port={port} pair-id=l1tcp ! \
+         tensor_filter framework=pjrt model=detect ! \
+         tensor_query_serversink operation=detectgate pair-id=l1tcp"
+    ));
+    std::thread::sleep(Duration::from_millis(300));
+    // Device A (client): camera -> preprocess -> query -> sink.
+    metrics::global().reset();
+    let client = start(&format!(
+        "videotestsrc width=96 height=96 num-buffers=8 is-live=false pattern=ball ! \
+         videoconvert ! video/x-raw,width=96,height=96,format=RGB ! \
+         queue leaky=2 ! tensor_converter ! \
+         tensor_transform mode=arithmetic option=typecast:float32,add:-127.5,div:127.5 ! \
+         tensor_query_client operation=detectgate server=127.0.0.1:{port} ! \
+         appsink name=l1out"
+    ));
+    assert_eq!(client.wait_eos(Duration::from_secs(120)), WaitOutcome::Eos);
+    let c = metrics::global().counter("appsink.l1out");
+    assert_eq!(c.count(), 8);
+    assert_eq!(c.bytes(), 8 * 4); // detect model: one f32 activation per frame
+    let _ = server.stop(Duration::from_secs(5));
+}
+
+#[test]
+fn offload_with_mqtt_hybrid_discovery() {
+    if !have_artifacts() {
+        return;
+    }
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    let port = free_port();
+    let server = start(&format!(
+        "tensor_query_serversrc operation=objdetect/detect port={port} pair-id=hyb1 \
+           protocol=mqtt-hybrid broker={b} server-id=hyb-a model-label=detect-v1 ! \
+         tensor_filter framework=pjrt model=detect ! \
+         tensor_query_serversink operation=objdetect/detect pair-id=hyb1"
+    ));
+    std::thread::sleep(Duration::from_millis(400));
+    metrics::global().reset();
+    // Client discovers by capability (`objdetect/#`), not address (R3).
+    let client = start(&format!(
+        "videotestsrc width=96 height=96 num-buffers=5 is-live=false ! \
+         tensor_converter ! tensor_transform mode=arithmetic option=typecast:float32,div:255.0 ! \
+         tensor_query_client operation=objdetect/# protocol=mqtt-hybrid broker={b} ! \
+         appsink name=hybout"
+    ));
+    assert_eq!(client.wait_eos(Duration::from_secs(120)), WaitOutcome::Eos);
+    assert_eq!(metrics::global().counter("appsink.hybout").count(), 5);
+    let _ = server.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// Listing 2 / Figure 3: pub/sub with two cameras, processing, output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn listing2_pubsub_two_cameras_processing_output() {
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+
+    // Output device (Device D): subscribes both cameras, muxes, composites.
+    let output = start(&format!(
+        "mqttsrc sub-topic=camleft broker={b} ! tensor_converter ! queue ! mux.sink_0 \
+         mqttsrc sub-topic=camright broker={b} ! tensor_converter ! queue ! mux.sink_1 \
+         tensor_mux name=mux ! tensor_demux name=dmux srcs=2 \
+         dmux.src_0 ! tensor_decoder mode=direct_video ! queue ! mix.sink_0 \
+         dmux.src_1 ! tensor_decoder mode=direct_video ! queue ! mix.sink_1 \
+         compositor name=mix sink_0::xpos=0 sink_1::xpos=32 ! videoconvert ! appsink name=display"
+    ));
+    std::thread::sleep(Duration::from_millis(300));
+
+    // Camera devices (C1, C2) publish via flexbuf like Listing 2.
+    let cam1 = start(&format!(
+        "videotestsrc width=32 height=24 num-buffers=30 pattern=ball ! \
+         tensor_converter ! tensor_decoder mode=flexbuf ! \
+         mqttsink pub-topic=camleft broker={b}"
+    ));
+    let cam2 = start(&format!(
+        "videotestsrc width=32 height=24 num-buffers=30 pattern=smpte ! \
+         tensor_converter ! tensor_decoder mode=flexbuf ! \
+         mqttsink pub-topic=camright broker={b}"
+    ));
+    // Wait: flexbuf -> mqtt -> tensor_converter on the output device.
+    // Cameras are live 30fps: 30 frames ~ 1s.
+    let _ = cam1.wait_eos(Duration::from_secs(30));
+    let _ = cam2.wait_eos(Duration::from_secs(30));
+    std::thread::sleep(Duration::from_millis(500));
+    let c = metrics::global().counter("appsink.display");
+    assert!(c.count() > 0, "no composited frames delivered");
+    // Composite canvas is 64x24 RGB.
+    let _ = output.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// §4.2.3: timestamp synchronization with injected latency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn timestamp_sync_rebases_remote_pts() {
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    let sub = start(&format!("mqttsrc sub-topic=ts/cam broker={b} ! tensor_converter ! appsink channel=tsout"));
+    let rx = appsink_channel("tsout").unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    // Publisher starts LATER: its pts ~0 must map to a positive local pts
+    // roughly equal to the subscriber's elapsed runtime.
+    std::thread::sleep(Duration::from_millis(400));
+    let publ = start(&format!(
+        "videotestsrc width=8 height=8 num-buffers=5 ! tensor_converter ! \
+         tensor_decoder mode=flexbuf ! mqttsink pub-topic=ts/cam broker={b}"
+    ));
+    let first = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    let pts = first.pts.expect("pts");
+    assert!(
+        pts > 300 * edgepipe::clock::MSECOND && pts < 30 * edgepipe::clock::SECOND,
+        "rebased pts {pts}"
+    );
+    let _ = publ.wait_eos(Duration::from_secs(10));
+    let _ = sub.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// Fig 5: multi-modal augmented worker (tensor_if gating)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig5_detect_gate_controls_wearable_stream() {
+    if !have_artifacts() {
+        return;
+    }
+    // DETECT model gates: activation > 0.5 -> "then" branch counts.
+    metrics::global().reset();
+    let running = start(
+        "videotestsrc width=96 height=96 num-buffers=10 is-live=false pattern=ball ! \
+         tensor_converter ! tensor_transform mode=arithmetic option=typecast:float32,div:255.0 ! \
+         tensor_filter framework=pjrt model=detect ! tensor_if compared-value=0 operator=gt threshold=0.5 name=gate \
+         gate.src_0 ! appsink name=active \
+         gate.src_1 ! appsink name=idle",
+    );
+    assert_eq!(running.wait_eos(Duration::from_secs(120)), WaitOutcome::Eos);
+    let active = metrics::global().counter("appsink.active").count();
+    let idle = metrics::global().counter("appsink.idle").count();
+    assert_eq!(active + idle, 10, "every frame routed exactly once");
+}
+
+// ---------------------------------------------------------------------------
+// PJRT detector end-to-end (Listing 1's model on-device)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn detector_pipeline_decodes_bounding_boxes() {
+    if !have_artifacts() {
+        return;
+    }
+    let h = appsrc_channel("detin", 4);
+    let registry = registry();
+    let e = env();
+    let p = parser::parse(
+        "appsrc channel=detin ! \
+         other/tensors,num_tensors=1,dimensions=3:300:300:1,types=float32 ! \
+         tensor_filter framework=pjrt model=detector ! \
+         tensor_decoder mode=bounding_boxes option4=64:48 ! appsink channel=detout",
+        &registry,
+        &e,
+    )
+    .unwrap();
+    let rx = appsink_channel("detout").unwrap();
+    let running = p.start().unwrap();
+    let input = vec![0.1f32; 300 * 300 * 3];
+    let mut info = edgepipe::tensor::TensorsInfo::default();
+    info.push(edgepipe::tensor::TensorInfo::new(edgepipe::tensor::DType::F32, &[3, 300, 300]).unwrap())
+        .unwrap();
+    h.push_with_caps(
+        edgepipe::caps::Caps::tensors(&info),
+        edgepipe::buffer::Buffer::new(tensor::f32_to_bytes(&input)),
+    )
+    .unwrap();
+    let frame = rx.recv_timeout(Duration::from_secs(180)).unwrap();
+    assert_eq!(frame.len(), 64 * 48 * 3); // rendered RGB canvas
+    drop(h);
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+}

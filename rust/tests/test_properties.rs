@@ -1,0 +1,258 @@
+//! Property-based tests on coordinator/substrate invariants (testkit —
+//! the in-repo proptest analog).
+
+use edgepipe::caps::Caps;
+use edgepipe::mqtt::topic;
+use edgepipe::serial::flexbuf::{self, Value};
+use edgepipe::serial::{compress, wire, Codec};
+use edgepipe::tensor::{self, sparse, DType, TensorInfo, TensorsInfo};
+use edgepipe::testkit;
+
+fn gen_dims(g: &mut testkit::Gen) -> Vec<u32> {
+    let rank = g.usize(1, 4);
+    (0..rank).map(|_| g.u32(1, 12)).collect()
+}
+
+fn gen_info(g: &mut testkit::Gen) -> TensorInfo {
+    let dtypes = [DType::U8, DType::I16, DType::F32, DType::F64];
+    TensorInfo::new(*g.choose(&dtypes), &gen_dims(g)).unwrap()
+}
+
+#[test]
+fn prop_flexible_frame_roundtrip() {
+    testkit::check(150, |g| {
+        let n = g.usize(1, 5);
+        let parts: Vec<(TensorInfo, Vec<u8>)> = (0..n)
+            .map(|_| {
+                let info = gen_info(g);
+                let mut payload = vec![0u8; info.size()];
+                for b in payload.iter_mut() {
+                    *b = g.u32(0, 255) as u8;
+                }
+                (info, payload)
+            })
+            .collect();
+        let refs: Vec<(TensorInfo, &[u8])> =
+            parts.iter().map(|(i, p)| (i.clone(), p.as_slice())).collect();
+        let frame = tensor::encode_flexible(&refs).unwrap();
+        let dec = tensor::decode_flexible(&frame).unwrap();
+        assert_eq!(dec.info.len(), n);
+        for (i, (info, payload)) in parts.iter().enumerate() {
+            assert_eq!(dec.info.tensors[i].dims, info.dims);
+            assert_eq!(&frame[dec.ranges[i].clone()], payload.as_slice());
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_roundtrip_any_density() {
+    testkit::check(150, |g| {
+        let info = TensorInfo::new(DType::F32, &gen_dims(g)).unwrap();
+        let density = g.f32_unit();
+        let vals: Vec<f32> = (0..info.count())
+            .map(|_| if g.bool(density) { g.f32() } else { 0.0 })
+            .collect();
+        let dense = tensor::f32_to_bytes(&vals);
+        let enc = sparse::encode(&info, &dense).unwrap();
+        let (info2, dense2) = sparse::decode(&enc).unwrap();
+        assert_eq!(info2.dims, info.dims);
+        assert_eq!(dense2, dense);
+    });
+}
+
+#[test]
+fn prop_flexbuf_value_roundtrip() {
+    fn gen_value(g: &mut testkit::Gen, depth: usize) -> Value {
+        match g.usize(0, if depth > 3 { 5 } else { 7 }) {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool(0.5)),
+            2 => Value::Int(g.i64()),
+            3 => Value::UInt(g.u64(0, u64::MAX - 1)),
+            4 => Value::Str(g.ascii_string(24)),
+            5 => Value::Blob(g.vec_u8(64)),
+            6 => {
+                let n = g.usize(0, 4);
+                Value::Vector((0..n).map(|_| gen_value(g, depth + 1)).collect())
+            }
+            _ => {
+                let n = g.usize(0, 4);
+                Value::Map(
+                    (0..n).map(|i| (format!("k{i}-{}", g.ascii_string(4)), gen_value(g, depth + 1))).collect(),
+                )
+            }
+        }
+    }
+    testkit::check(200, |g| {
+        let v = gen_value(g, 0);
+        let enc = flexbuf::encode(&v);
+        assert_eq!(flexbuf::decode(&enc).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_flexbuf_decoder_never_panics_on_garbage() {
+    testkit::check(300, |g| {
+        let garbage = g.vec_u8(256);
+        let _ = flexbuf::decode(&garbage); // must return, never panic/OOM
+    });
+}
+
+#[test]
+fn prop_wire_frame_roundtrip() {
+    testkit::check(150, |g| {
+        let mut b = edgepipe::buffer::Buffer::new(g.vec_u8(2048));
+        if g.bool(0.7) {
+            b.pts = Some(g.u64(0, 1 << 60));
+        }
+        if g.bool(0.5) {
+            b.meta.client_id = Some(g.u64(0, 1 << 30));
+            b.meta.seq = Some(g.u64(0, 1 << 30));
+        }
+        if g.bool(0.5) {
+            b.meta.remote_base_universal = Some(g.u64(0, 1 << 62));
+        }
+        let codec = if g.bool(0.5) { Codec::Zlib } else { Codec::None };
+        let caps = if g.bool(0.6) { Some(Caps::video(g.u32(1, 64), g.u32(1, 64), 30)) } else { None };
+        let frame = wire::encode(&b, caps.as_ref(), codec).unwrap();
+        let (b2, c2) = wire::decode(&frame).unwrap();
+        assert_eq!(b2, b);
+        assert_eq!(c2, caps);
+    });
+}
+
+#[test]
+fn prop_wire_decoder_never_panics_on_garbage() {
+    testkit::check(300, |g| {
+        let garbage = g.vec_u8(512);
+        let _ = wire::decode(&garbage);
+    });
+}
+
+#[test]
+fn prop_compression_roundtrip() {
+    testkit::check(100, |g| {
+        let data = g.vec_u8(4096);
+        let c = compress::compress(Codec::Zlib, &data).unwrap();
+        assert_eq!(compress::decompress(Codec::Zlib, &c).unwrap(), data);
+    });
+}
+
+#[test]
+fn prop_caps_display_parse_roundtrip() {
+    testkit::check(150, |g| {
+        let mut info = TensorsInfo::default();
+        for _ in 0..g.usize(1, 6) {
+            info.push(gen_info(g)).unwrap();
+        }
+        let caps = Caps::tensors(&info);
+        let parsed = Caps::parse(&caps.to_string()).unwrap();
+        assert_eq!(parsed, caps);
+        assert_eq!(parsed.tensors_info().unwrap(), info);
+    });
+}
+
+#[test]
+fn prop_topic_filter_matching_invariants() {
+    testkit::check(300, |g| {
+        let levels = g.usize(1, 5);
+        let topic: Vec<String> = (0..levels).map(|_| g.ascii_string(6)).collect();
+        let topic_str = topic.join("/");
+        if topic::validate_name(&topic_str).is_err() {
+            return; // empty level strings are fine to skip
+        }
+        // 1. A topic always matches itself as a filter.
+        assert!(topic::matches(&topic_str, &topic_str));
+        // 2. '#' matches everything.
+        assert!(topic::matches("#", &topic_str));
+        // 3. Replacing any one level with '+' still matches.
+        for i in 0..levels {
+            let mut f = topic.clone();
+            f[i] = "+".into();
+            assert!(topic::matches(&f.join("/"), &topic_str));
+        }
+        // 4. Truncating to a prefix + '/#' matches.
+        for i in 1..=levels {
+            let f = format!("{}/#", topic[..i].join("/"));
+            assert!(topic::matches(&f, &topic_str));
+        }
+        // 5. A different first level never matches without wildcards.
+        let mut other = topic.clone();
+        other[0] = format!("x{}", other[0]);
+        assert!(!topic::matches(&other.join("/"), &topic_str));
+    });
+}
+
+#[test]
+fn prop_tensors_flexbuf_roundtrip() {
+    testkit::check(100, |g| {
+        let mut info = TensorsInfo::default();
+        let n = g.usize(1, 4);
+        for _ in 0..n {
+            info.push(gen_info(g)).unwrap();
+        }
+        let mut payload = vec![0u8; info.frame_size()];
+        for b in payload.iter_mut() {
+            *b = g.u32(0, 255) as u8;
+        }
+        let enc = edgepipe::serial::tensors_to_flexbuf(&info, &payload).unwrap();
+        let (info2, payload2) = edgepipe::serial::flexbuf_to_tensors(&enc).unwrap();
+        assert_eq!(info2, info);
+        assert_eq!(payload2, payload);
+    });
+}
+
+#[test]
+fn prop_leaky_queue_never_exceeds_capacity_and_keeps_order() {
+    use edgepipe::element::{Inbox, Item, Leaky, QueueCfg};
+    testkit::check(80, |g| {
+        let cap = g.usize(1, 8);
+        let leaky = *g.choose(&[Leaky::Upstream, Leaky::Downstream]);
+        let ib = Inbox::new(vec![QueueCfg { capacity: cap, leaky }]);
+        let n = g.usize(0, 40);
+        for i in 0..n {
+            ib.push(0, Item::Buffer(edgepipe::buffer::Buffer::new(vec![i as u8]))).unwrap();
+            assert!(ib.depth(0) <= cap);
+        }
+        // Drain: sequence numbers must be strictly increasing (order kept).
+        let mut last: Option<u8> = None;
+        ib.push(0, Item::Eos).unwrap();
+        while let Some((_, item)) = ib.pop_any() {
+            if let Item::Buffer(b) = item {
+                if let Some(l) = last {
+                    assert!(b.data[0] > l, "order violated: {} after {l}", b.data[0]);
+                }
+                last = Some(b.data[0]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mux_output_size_is_sum_of_inputs() {
+    use edgepipe::buffer::Buffer;
+    use edgepipe::elements::basic::{AppSink, AppSrc};
+    use edgepipe::elements::TensorMux;
+    use edgepipe::pipeline::Pipeline;
+    testkit::check(12, |g| {
+        let a_len = g.usize(1, 16);
+        let b_len = g.usize(1, 16);
+        let ia = TensorsInfo::one(TensorInfo::new(DType::U8, &[a_len as u32]).unwrap());
+        let ib = TensorsInfo::one(TensorInfo::new(DType::U8, &[b_len as u32]).unwrap());
+        let mut p = Pipeline::new();
+        let (sa, ha) = AppSrc::new(4, Some(Caps::tensors(&ia)));
+        let (sb, hb) = AppSrc::new(4, Some(Caps::tensors(&ib)));
+        let (sink, rx) = AppSink::new(4);
+        let a = p.add("a", Box::new(sa)).unwrap();
+        let b = p.add("b", Box::new(sb)).unwrap();
+        let m = p.add("m", Box::new(TensorMux::new(2))).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link_pads(a, 0, m, 0).unwrap();
+        p.link_pads(b, 0, m, 1).unwrap();
+        p.link(m, k).unwrap();
+        let _r = p.start().unwrap();
+        ha.push(Buffer::new(vec![1; a_len]).with_pts(1)).unwrap();
+        hb.push(Buffer::new(vec![2; b_len]).with_pts(2)).unwrap();
+        let out = rx.recv_timeout(std::time::Duration::from_secs(2)).unwrap();
+        assert_eq!(out.len(), a_len + b_len);
+    });
+}
