@@ -1,0 +1,210 @@
+//! `Bytes` — a cheaply cloneable, sliceable view into a shared byte
+//! allocation (the `bytes::Bytes` idea, dependency-free).
+//!
+//! This is the currency of the zero-copy transport path: a frame is
+//! allocated once per hop (producer `Vec` or socket read) and every
+//! downstream consumer — tee fan-out, broker fan-out, wire decode, tensor
+//! demux — holds an `(Arc, offset, len)` view into that one allocation.
+//!
+//! Every place that *must* duplicate payload bytes goes through
+//! [`Bytes::copy_from_slice`] or records the copy via [`record_copy`], so
+//! the process-wide [`bytes_copied`] counter gives an auditable
+//! bytes-copied-per-frame figure (asserted by `bench_wirepath` and the
+//! zero-copy invariant tests).
+
+use std::ops::{Bound, Deref, RangeBounds};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-wide count of payload bytes duplicated by explicit copies.
+static COPIED: AtomicU64 = AtomicU64::new(0);
+
+/// Record `n` payload bytes as copied (for code that copies outside
+/// [`Bytes::copy_from_slice`], e.g. legacy/baseline paths).
+pub fn record_copy(n: usize) {
+    COPIED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Total payload bytes duplicated so far in this process.
+pub fn bytes_copied() -> u64 {
+    COPIED.load(Ordering::Relaxed)
+}
+
+/// A shared, immutable byte slice: `Arc<Vec<u8>>` + offset/len.
+///
+/// `clone()` and [`slice`](Bytes::slice) are O(1) and never touch the
+/// payload. Construction from an owned `Vec<u8>` moves the allocation
+/// (no copy); construction from a borrowed slice copies once and counts
+/// it.
+#[derive(Clone, Default)]
+pub struct Bytes {
+    data: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// Empty bytes (no allocation shared).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Copy a borrowed slice into a fresh allocation (counted).
+    pub fn copy_from_slice(src: &[u8]) -> Self {
+        record_copy(src.len());
+        Bytes::from(src.to_vec())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.off..self.off + self.len]
+    }
+
+    /// O(1) sub-view sharing the same backing allocation.
+    ///
+    /// Panics if the range is out of bounds (mirrors slice indexing).
+    pub fn slice(&self, range: impl RangeBounds<usize>) -> Bytes {
+        let start = match range.start_bound() {
+            Bound::Included(&s) => s,
+            Bound::Excluded(&s) => s + 1,
+            Bound::Unbounded => 0,
+        };
+        let end = match range.end_bound() {
+            Bound::Included(&e) => e + 1,
+            Bound::Excluded(&e) => e,
+            Bound::Unbounded => self.len,
+        };
+        assert!(start <= end && end <= self.len, "Bytes::slice {start}..{end} of {}", self.len);
+        Bytes { data: self.data.clone(), off: self.off + start, len: end - start }
+    }
+
+    /// Do two views share one backing allocation? (zero-copy assertions)
+    pub fn same_backing(&self, other: &Bytes) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
+    }
+
+    /// Copy out into an owned `Vec` (counted).
+    pub fn to_vec_counted(&self) -> Vec<u8> {
+        record_copy(self.len);
+        self.as_slice().to_vec()
+    }
+}
+
+impl Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Bytes {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    /// Moves the allocation — zero copy.
+    fn from(v: Vec<u8>) -> Self {
+        let len = v.len();
+        Bytes { data: Arc::new(v), off: 0, len }
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    /// Copies (counted) — prefer `From<Vec<u8>>` on owned data.
+    fn from(s: &[u8]) -> Self {
+        Bytes::copy_from_slice(s)
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} bytes", self.len)?;
+        if self.off != 0 || self.len != self.data.len() {
+            write!(f, " @{}..{} of {}", self.off, self.off + self.len, self.data.len())?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_moves_without_copy() {
+        let before = bytes_copied();
+        let b = Bytes::from(vec![1u8, 2, 3, 4]);
+        assert_eq!(bytes_copied(), before);
+        assert_eq!(&b[..], &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn copy_from_slice_is_counted() {
+        let before = bytes_copied();
+        let b = Bytes::copy_from_slice(&[9u8; 100]);
+        assert_eq!(bytes_copied(), before + 100);
+        assert_eq!(b.len(), 100);
+    }
+
+    #[test]
+    fn slice_shares_backing() {
+        let b = Bytes::from(vec![0u8, 1, 2, 3, 4, 5]);
+        let s = b.slice(2..5);
+        assert_eq!(&s[..], &[2, 3, 4]);
+        assert!(s.same_backing(&b));
+        let s2 = s.slice(1..);
+        assert_eq!(&s2[..], &[3, 4]);
+        assert!(s2.same_backing(&b));
+    }
+
+    #[test]
+    fn slice_full_and_empty_ranges() {
+        let b = Bytes::from(vec![7u8; 8]);
+        assert_eq!(b.slice(..).len(), 8);
+        assert_eq!(b.slice(8..8).len(), 0);
+        assert_eq!(b.slice(..=3).len(), 4);
+        assert!(b.slice(3..3).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_out_of_bounds_panics() {
+        let b = Bytes::from(vec![0u8; 4]);
+        let _ = b.slice(2..9);
+    }
+
+    #[test]
+    fn equality_is_by_content() {
+        let a = Bytes::from(vec![1u8, 2, 3]);
+        let b = Bytes::from(vec![0u8, 1, 2, 3, 4]).slice(1..4);
+        assert_eq!(a, b);
+        assert!(!a.same_backing(&b));
+    }
+
+    #[test]
+    fn clone_is_shallow() {
+        let a = Bytes::from(vec![5u8; 1024]);
+        let before = bytes_copied();
+        let b = a.clone();
+        assert_eq!(bytes_copied(), before);
+        assert!(a.same_backing(&b));
+    }
+}

@@ -1,9 +1,14 @@
-//! Stream buffers: a zero-copy payload (`Arc<[u8]>`) plus timestamps and
+//! Stream buffers: a zero-copy payload ([`Bytes`]) plus timestamps and
 //! transport metadata.
 //!
-//! Payloads are reference-counted so `tee` fan-out and in-process pub/sub
-//! never copy frame data — the hot path is allocation-free apart from the
-//! producing element's single allocation per frame.
+//! Payloads are reference-counted slice views so `tee` fan-out, in-process
+//! pub/sub, broker fan-out, and wire decode never copy frame data — the
+//! hot path is allocation-free apart from one allocation per hop (the
+//! producing element's `Vec` or the receiving socket read).
+
+pub mod bytes;
+
+pub use bytes::{bytes_copied, record_copy, Bytes};
 
 use std::sync::Arc;
 
@@ -34,13 +39,18 @@ pub struct Buffer {
     pub pts: Option<Ns>,
     /// Frame duration (1/fps for live video).
     pub duration: Option<Ns>,
-    pub data: Arc<[u8]>,
+    pub data: Bytes,
     pub meta: Meta,
 }
 
 impl Buffer {
     pub fn new(data: Vec<u8>) -> Self {
         Self { pts: None, duration: None, data: data.into(), meta: Meta::default() }
+    }
+
+    /// Build from an already-shared payload (transport decode paths).
+    pub fn from_bytes(data: Bytes) -> Self {
+        Self { pts: None, duration: None, data, meta: Meta::default() }
     }
 
     pub fn with_pts(mut self, pts: Ns) -> Self {
@@ -62,7 +72,8 @@ impl Buffer {
     }
 
     /// Replace the payload, keeping timestamps/meta (transform elements).
-    pub fn map_payload(&self, data: Vec<u8>) -> Buffer {
+    /// Accepts an owned `Vec` (moved, no copy) or a `Bytes` view.
+    pub fn map_payload(&self, data: impl Into<Bytes>) -> Buffer {
         Buffer { pts: self.pts, duration: self.duration, data: data.into(), meta: self.meta.clone() }
     }
 }
@@ -93,7 +104,7 @@ mod tests {
     fn clone_shares_payload() {
         let b = Buffer::new(vec![0u8; 1024]);
         let c = b.clone();
-        assert!(Arc::ptr_eq(&b.data, &c.data));
+        assert!(b.data.same_backing(&c.data));
     }
 
     #[test]
@@ -104,6 +115,15 @@ mod tests {
         assert_eq!(m.pts, Some(9));
         assert_eq!(m.meta.client_id, Some(42));
         assert_eq!(&m.data[..], &[2, 3]);
+    }
+
+    #[test]
+    fn map_payload_accepts_shared_slice() {
+        let b = Buffer::new(vec![1, 2, 3, 4]).with_pts(1);
+        let view = b.data.slice(1..3);
+        let m = b.map_payload(view);
+        assert_eq!(&m.data[..], &[2, 3]);
+        assert!(m.data.same_backing(&b.data));
     }
 
     #[test]

@@ -77,8 +77,8 @@ impl EdgeSensor {
         buf.meta.remote_base_universal = Some(self.clock.base_universal);
         self.seq += 1;
         buf.meta.seq = Some(self.seq);
-        let frame = wire::encode(&buf, Some(&self.caps), self.codec)?;
-        self.client.publish(&self.topic, &frame, false)
+        let frame = wire::encode_vectored(&buf, Some(&self.caps), self.codec)?;
+        self.client.publish_frame(&self.topic, &frame, false)
     }
 
     pub fn close(self) {
@@ -120,7 +120,7 @@ impl EdgeOutput {
             .rx
             .recv_timeout(timeout)
             .map_err(|_| Error::Transport("edge_output: receive timeout".into()))?;
-        let (buffer, caps) = wire::decode(&msg.payload)?;
+        let (buffer, caps) = wire::decode_shared(&msg.payload)?;
         Ok(EdgeFrame { buffer, caps })
     }
 
@@ -165,11 +165,13 @@ impl EdgeQueryClient {
         self.seq += 1;
         let mut buf = Buffer::new(payload.to_vec());
         buf.meta.seq = Some(self.seq);
-        let frame = wire::encode(&buf, self.caps.as_ref(), Codec::None)?;
-        wire::write_frame(&mut self.conn, &frame)?;
+        let frame = wire::encode_vectored(&buf, self.caps.as_ref(), Codec::None)?;
+        wire::write_frame_vectored(&mut self.conn, &frame)?;
         let resp = wire::read_frame(&mut self.conn)?;
-        let (out, _caps) = wire::decode(&resp)?;
-        Ok(out.data.to_vec())
+        let (out, _caps) = wire::decode_shared(&resp)?;
+        // Handing an owned Vec across the library boundary is a real
+        // payload copy — keep it visible to the bytes-copied audit.
+        Ok(out.data.to_vec_counted())
     }
 }
 

@@ -98,6 +98,8 @@ impl Inbox {
                 s.pads[pad].eos = true;
             }
             s.pads[pad].items.push_back(item);
+            // Caps/EOS are rare control events that may change the
+            // "all pads EOS" exit condition — wake every waiter.
             self.not_empty.notify_all();
             return Ok(());
         }
@@ -106,7 +108,11 @@ impl Inbox {
             if p.buffered < p.cfg.capacity {
                 p.items.push_back(item);
                 p.buffered += 1;
-                self.not_empty.notify_all();
+                // One buffer satisfies one pop; notify_one avoids the
+                // thundering-herd wakeup storm under multi-producer load
+                // (verified by bench_multiclient). Each inbox has a single
+                // consumer thread, so one wakeup is always sufficient.
+                self.not_empty.notify_one();
                 return Ok(());
             }
             match p.cfg.leaky {
@@ -123,7 +129,7 @@ impl Inbox {
                     }
                     p.items.push_back(item);
                     p.buffered += 1;
-                    self.not_empty.notify_all();
+                    self.not_empty.notify_one();
                     return Ok(());
                 }
                 Leaky::No => {

@@ -94,7 +94,9 @@ impl Element for TensorConverter {
                     ctx.push_buffer(b.map_payload(payload))
                 }
                 ConvMode::FlexTensors => {
-                    let (info, payload) = tensor::flexible_to_static(&b.data)
+                    // Zero copy: the static payload is a slice view into
+                    // the flexible frame's shared allocation.
+                    let (info, payload) = tensor::flexible_to_static_shared(&b.data)
                         .map_err(|e| Error::element(&ctx.name, e))?;
                     self.negotiate(info, ctx)?;
                     ctx.push_buffer(b.map_payload(payload))

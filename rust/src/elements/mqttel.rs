@@ -102,12 +102,16 @@ impl Element for MqttSink {
                 if let Some(pts) = b.pts {
                     b.meta.capture_universal = Some(ctx.clock.pts_to_universal(pts));
                 }
-                let frame = wire::encode(&b, self.caps.as_ref(), self.codec)
+                // Zero-copy hop: the EdgeFrame shares the buffer payload
+                // and publish_frame emits it with one vectored write.
+                let frame = wire::encode_vectored(&b, self.caps.as_ref(), self.codec)
                     .map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global()
                     .counter(&format!("mqttsink.{}", ctx.name))
                     .add_bytes(frame.len() as u64);
-                client.publish(&self.topic, &frame, false).map_err(|e| Error::element(&ctx.name, e))
+                client
+                    .publish_frame(&self.topic, &frame, false)
+                    .map_err(|e| Error::element(&ctx.name, e))
             }
             Item::Eos => Ok(()),
         }
@@ -205,8 +209,10 @@ impl Element for MqttSrc {
         }
         match rx.recv_timeout(Duration::from_millis(100)) {
             Ok(msg) => {
+                // msg.payload is the socket read's single allocation; the
+                // decoded buffer is a slice view into it (zero copy).
                 let (mut buf, caps) =
-                    wire::decode(&msg.payload).map_err(|e| Error::element(&ctx.name, e))?;
+                    wire::decode_shared(&msg.payload).map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global()
                     .counter(&format!("mqttsrc.{}", ctx.name))
                     .add_bytes(msg.payload.len() as u64);

@@ -180,7 +180,9 @@ impl Element for TensorDemux {
                 }
                 let mut off = 0;
                 for (i, t) in info.tensors.iter().enumerate() {
-                    let part = b.data[off..off + t.size()].to_vec();
+                    // Slice views into the combined frame — demux fan-out
+                    // shares the parent allocation, no per-tensor copy.
+                    let part = b.data.slice(off..off + t.size());
                     off += t.size();
                     if i < self.n_src {
                         ctx.push(i, Item::Buffer(b.map_payload(part)))?;

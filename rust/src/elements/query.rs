@@ -18,7 +18,6 @@
 //! disambiguate multiple servers in one process).
 
 use std::collections::HashMap;
-use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -31,9 +30,9 @@ use crate::coordinator::discovery::{self, AdWatcher, ServiceAd};
 use crate::element::{Ctx, Element, Item};
 use crate::metrics;
 use crate::mqtt::MqttClient;
-use crate::serial::wire;
+use crate::serial::wire::{self, WireFrame};
 use crate::serial::Codec;
-use crate::util::{Error, Result};
+use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_info, log_warn};
 
 /// Shared table of live client connections (write halves), keyed by the
@@ -52,14 +51,18 @@ impl ConnTable {
         self.conns.lock().unwrap().remove(&id);
     }
 
-    fn write_frame(&self, id: u64, frame: &[u8]) -> Result<()> {
+    fn write_frame(&self, id: u64, frame: &WireFrame) -> Result<()> {
         let mut conns = self.conns.lock().unwrap();
         let Some(stream) = conns.get_mut(&id) else {
             return Err(Error::Transport(format!("query client {id} is gone")));
         };
-        let r = stream
-            .write_all(&(frame.len() as u32).to_le_bytes())
-            .and_then(|_| stream.write_all(frame));
+        // Length prefix + frame header + shared payload in one vectored
+        // write — the response payload is never assembled or copied.
+        let len = (frame.len() as u32).to_le_bytes();
+        let r = write_all_vectored(
+            stream,
+            &[&len[..], frame.header.as_slice(), frame.payload.as_slice()],
+        );
         if r.is_err() {
             conns.remove(&id);
         }
@@ -287,7 +290,9 @@ fn spawn_client_reader(
                     Ok(f) => f,
                     Err(_) => break,
                 };
-                let Ok((mut buf, caps)) = wire::decode(&frame) else { break };
+                // One allocation per request: the decoded buffer is a
+                // slice view into the received frame.
+                let Ok((mut buf, caps)) = wire::decode_shared(&frame) else { break };
                 buf.meta.client_id = Some(id);
                 if tx.send((caps, buf)).is_err() {
                     break;
@@ -334,7 +339,7 @@ impl Element for QueryServerSink {
                 let Some(id) = b.meta.client_id else {
                     return Err(Error::element(&ctx.name, "response buffer without client id"));
                 };
-                let frame = wire::encode(&b, self.caps.as_ref(), Codec::None)
+                let frame = wire::encode_vectored(&b, self.caps.as_ref(), Codec::None)
                     .map_err(|e| Error::element(&ctx.name, e))?;
                 // A vanished client is not a pipeline error (R4: clients
                 // come and go); drop the response.
@@ -443,12 +448,12 @@ impl QueryClient {
         let mut req = b.clone();
         self.seq += 1;
         req.meta.seq = Some(self.seq);
-        let frame = wire::encode(&req, self.in_caps.as_ref(), Codec::None)?;
+        let frame = wire::encode_vectored(&req, self.in_caps.as_ref(), Codec::None)?;
         let stream = self.conn.as_mut().unwrap();
-        let send = wire::write_frame(stream, &frame);
+        let send = wire::write_frame_vectored(stream, &frame);
         let resp = send.and_then(|_| wire::read_frame(stream));
         match resp {
-            Ok(f) => wire::decode(&f),
+            Ok(f) => wire::decode_shared(&f),
             Err(e) => {
                 self.mark_failed();
                 Err(e)

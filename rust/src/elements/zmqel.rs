@@ -60,10 +60,12 @@ impl Element for ZmqSink {
                 let sock =
                     self.socket.as_ref().ok_or_else(|| Error::element(&ctx.name, "not started"))?;
                 b.meta.remote_base_universal = Some(ctx.clock.base_universal);
-                let frame = wire::encode(&b, self.caps.as_ref(), self.codec)
+                // Zero-copy hop: header + shared payload fan out to all
+                // subscribers without assembling a contiguous frame.
+                let frame = wire::encode_vectored(&b, self.caps.as_ref(), self.codec)
                     .map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global().counter(&format!("zmqsink.{}", ctx.name)).add_bytes(frame.len() as u64);
-                sock.send(self.topic.as_bytes(), &frame);
+                sock.send_parts(self.topic.as_bytes(), [frame.header, frame.payload]);
                 Ok(())
             }
             Item::Eos => Ok(()),
@@ -117,8 +119,10 @@ impl Element for ZmqSrc {
         let Some(rx) = &self.rx else { return Ok(false) };
         match rx.recv_timeout(Duration::from_millis(100)) {
             Ok((_topic, payload)) => {
+                // payload is the socket read's single allocation; decode
+                // into a slice view of it (zero copy).
                 let (mut buf, caps) =
-                    wire::decode(&payload).map_err(|e| Error::element(&ctx.name, e))?;
+                    wire::decode_shared(&payload).map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global().counter(&format!("zmqsrc.{}", ctx.name)).add_bytes(payload.len() as u64);
                 if let Some(c) = caps {
                     if self.last_caps.as_ref() != Some(&c) {

@@ -6,9 +6,12 @@
 //! retained messages (service advertisements), last-will (server-death
 //! detection → R4 failover), topic wildcards, keep-alive enforcement.
 //!
-//! One thread per connection + one writer thread per connection; fan-out
-//! shares the payload via `Arc` (no per-subscriber copy until the socket
-//! write).
+//! One thread per connection + one writer thread per connection. A
+//! published frame is encoded **once**: `route` builds the outbound
+//! PUBLISH head a single time and every subscriber's writer emits
+//! `head ++ payload` with a vectored write, where the payload is the
+//! shared slice view produced by the connection's packet read — zero
+//! broker-side payload copies regardless of subscriber count.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -18,16 +21,18 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::mqtt::packet::{LastWill, Packet, CONNACK_ACCEPTED};
+use crate::buffer::Bytes;
+use crate::mqtt::packet::{self, LastWill, Packet, CONNACK_ACCEPTED};
 use crate::mqtt::topic;
-use crate::util::{Error, Result};
+use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_info, log_warn};
 
 /// Message queued to a connection's writer thread.
 enum OutMsg {
     Control(Packet),
-    /// Fan-out publish: payload shared across subscribers.
-    Pub { topic: Arc<str>, payload: Arc<[u8]>, retain: bool },
+    /// Fan-out publish: pre-encoded PUBLISH head + payload, both shared
+    /// across every subscriber of the topic.
+    Pub { head: Bytes, payload: Bytes },
     Close,
 }
 
@@ -52,7 +57,7 @@ pub struct BrokerStats {
 
 struct State {
     sessions: HashMap<u64, Session>,
-    retained: HashMap<String, Arc<[u8]>>,
+    retained: HashMap<String, Bytes>,
     stats: BrokerStats,
 }
 
@@ -177,9 +182,13 @@ impl Drop for Broker {
     }
 }
 
-fn route(state: &Mutex<State>, topic_name: &str, payload: &[u8], retain: bool) {
-    let payload: Arc<[u8]> = Arc::from(payload);
-    let topic_arc: Arc<str> = Arc::from(topic_name);
+/// Build the shared outbound PUBLISH (head, payload) pair for a delivery.
+fn pub_msg(topic_name: &str, payload: &Bytes, retain: bool) -> Option<OutMsg> {
+    let head = packet::publish_head(topic_name, 0, retain, false, None, payload.len()).ok()?;
+    Some(OutMsg::Pub { head: Bytes::from(head), payload: payload.clone() })
+}
+
+fn route(state: &Mutex<State>, topic_name: &str, payload: &Bytes, retain: bool) {
     let mut st = state.lock().unwrap();
     st.stats.published += 1;
     st.stats.bytes_in += payload.len() as u64;
@@ -190,19 +199,22 @@ fn route(state: &Mutex<State>, topic_name: &str, payload: &[u8], retain: bool) {
             st.retained.insert(topic_name.to_string(), payload.clone());
         }
     }
+    // Encode the outbound head ONCE; all subscribers share head + payload.
+    let Some(OutMsg::Pub { head, payload: shared }) = pub_msg(topic_name, payload, false) else {
+        return;
+    };
     let mut delivered = 0u64;
     let mut dropped = 0u64;
     let mut bytes = 0u64;
     for sess in st.sessions.values() {
         if sess.subs.iter().any(|(f, _)| topic::matches(f, topic_name)) {
             match sess.outbox.try_send(OutMsg::Pub {
-                topic: topic_arc.clone(),
-                payload: payload.clone(),
-                retain: false,
+                head: head.clone(),
+                payload: shared.clone(),
             }) {
                 Ok(()) => {
                     delivered += 1;
-                    bytes += payload.len() as u64;
+                    bytes += shared.len() as u64;
                 }
                 Err(TrySendError::Full(_)) => dropped += 1,
                 Err(TrySendError::Disconnected(_)) => {}
@@ -215,32 +227,21 @@ fn route(state: &Mutex<State>, topic_name: &str, payload: &[u8], retain: bool) {
 }
 
 fn writer_loop(mut stream: TcpStream, rx: Receiver<OutMsg>) {
-    use std::io::Write;
-    let mut wire = Vec::with_capacity(4096);
     for msg in rx {
-        wire.clear();
-        match msg {
+        let ok = match msg {
             OutMsg::Close => break,
             OutMsg::Control(p) => match p.encode() {
-                Ok(w) => wire.extend_from_slice(&w),
+                Ok(w) => {
+                    use std::io::Write;
+                    stream.write_all(&w).is_ok()
+                }
                 Err(_) => continue,
             },
-            OutMsg::Pub { topic, payload, retain } => {
-                let p = Packet::Publish {
-                    topic: topic.to_string(),
-                    payload: payload.to_vec(),
-                    qos: 0,
-                    retain,
-                    dup: false,
-                    packet_id: None,
-                };
-                match p.encode() {
-                    Ok(w) => wire.extend_from_slice(&w),
-                    Err(_) => continue,
-                }
+            OutMsg::Pub { head, payload } => {
+                write_all_vectored(&mut stream, &[head.as_slice(), payload.as_slice()]).is_ok()
             }
-        }
-        if stream.write_all(&wire).is_err() {
+        };
+        if !ok {
             break;
         }
     }
@@ -311,6 +312,8 @@ fn serve_conn(
                 if topic::validate_name(&t).is_err() {
                     break;
                 }
+                // `payload` is a shared view into this connection's packet
+                // read; route() fans it out without duplicating it.
                 route(&state, &t, &payload, retain);
                 if qos == 1 {
                     if let Some(pid) = packet_id {
@@ -320,7 +323,7 @@ fn serve_conn(
             }
             Packet::Subscribe { packet_id, filters } => {
                 let mut codes = Vec::with_capacity(filters.len());
-                let mut retained_out: Vec<(String, Arc<[u8]>)> = Vec::new();
+                let mut retained_out: Vec<(String, Bytes)> = Vec::new();
                 {
                     let mut st = state.lock().unwrap();
                     for (f, qos) in &filters {
@@ -342,7 +345,9 @@ fn serve_conn(
                 }
                 let _ = tx.send(OutMsg::Control(Packet::SubAck { packet_id, codes }));
                 for (rt, rp) in retained_out {
-                    let _ = tx.send(OutMsg::Pub { topic: rt.into(), payload: rp, retain: true });
+                    if let Some(msg) = pub_msg(&rt, &rp, true) {
+                        let _ = tx.send(msg);
+                    }
                 }
             }
             Packet::Unsubscribe { packet_id, filters } => {
@@ -378,7 +383,7 @@ fn serve_conn(
     if !clean_disconnect {
         if let Some(w) = will {
             log_debug!("mqtt.broker", "conn {id}: firing last-will on `{}`", w.topic);
-            route(&state, &w.topic, &w.payload, w.retain);
+            route(&state, &w.topic, &Bytes::from(w.payload), w.retain);
         }
     }
     let _ = tx.send(OutMsg::Close);

@@ -1,6 +1,11 @@
 //! MQTT client (paho.mqtt.c analog): blocking connect/publish/subscribe
 //! with a background reader thread, keep-alive pings, QoS 1 ack waiting,
 //! and channel- or callback-based subscription delivery.
+//!
+//! Publish never copies the payload: the PUBLISH head is built separately
+//! and head + payload go out in one vectored write ([`MqttClient::publish`]
+//! for a borrowed slice, [`MqttClient::publish_frame`] for a shared
+//! [`WireFrame`] whose header/payload are emitted as three parts).
 
 use std::collections::HashMap;
 use std::net::TcpStream;
@@ -9,16 +14,19 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::mqtt::packet::{LastWill, Packet};
+use crate::buffer::Bytes;
+use crate::mqtt::packet::{self, LastWill, Packet};
 use crate::mqtt::topic;
-use crate::util::{Error, Result};
+use crate::serial::wire::WireFrame;
+use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_warn};
 
-/// An inbound publish delivered to a subscriber.
+/// An inbound publish delivered to a subscriber. The payload is a shared
+/// view into the connection's single per-packet read allocation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Message {
     pub topic: String,
-    pub payload: Arc<[u8]>,
+    pub payload: Bytes,
     pub retain: bool,
 }
 
@@ -65,10 +73,14 @@ struct Inner {
 
 impl Inner {
     fn send(&self, p: &Packet) -> Result<()> {
-        use std::io::Write;
-        let wire = p.encode()?;
+        let (head, payload) = p.encode_parts()?;
+        self.send_parts(&[head.as_slice(), payload.as_deref().unwrap_or(&[])])
+    }
+
+    /// Vectored write under the writer lock (single syscall, no assembly).
+    fn send_parts(&self, parts: &[&[u8]]) -> Result<()> {
         let mut w = self.writer.lock().unwrap();
-        w.write_all(&wire).map_err(|e| {
+        write_all_vectored(&mut *w, parts).map_err(|e| {
             self.connected.store(false, Ordering::Relaxed);
             Error::Transport(format!("mqtt send: {e}"))
         })
@@ -83,16 +95,22 @@ impl Inner {
         }
     }
 
-    /// Register a waiter, send, await the matching ack packet.
-    fn request(&self, p: &Packet, id: u16, timeout: Duration) -> Result<Packet> {
+    /// Register a waiter, send the parts, await the matching ack packet.
+    fn request_parts(&self, parts: &[&[u8]], id: u16, timeout: Duration) -> Result<Packet> {
         let (tx, rx) = sync_channel(1);
         self.pending_acks.lock().unwrap().insert(id, tx);
-        self.send(p)?;
-        let out = rx
-            .recv_timeout(timeout)
-            .map_err(|_| Error::Mqtt(format!("ack timeout for packet {id}")));
+        let sent = self.send_parts(parts);
+        let out = sent.and_then(|_| {
+            rx.recv_timeout(timeout)
+                .map_err(|_| Error::Mqtt(format!("ack timeout for packet {id}")))
+        });
         self.pending_acks.lock().unwrap().remove(&id);
         out
+    }
+
+    fn request(&self, p: &Packet, id: u16, timeout: Duration) -> Result<Packet> {
+        let (head, payload) = p.encode_parts()?;
+        self.request_parts(&[head.as_slice(), payload.as_deref().unwrap_or(&[])], id, timeout)
     }
 }
 
@@ -169,32 +187,30 @@ impl MqttClient {
         self.inner.connected.load(Ordering::Relaxed)
     }
 
-    /// Fire-and-forget publish (QoS 0).
+    /// Fire-and-forget publish (QoS 0). The payload is written straight
+    /// from the caller's slice — no intermediate copy.
     pub fn publish(&self, topic_name: &str, payload: &[u8], retain: bool) -> Result<()> {
         topic::validate_name(topic_name)?;
-        self.inner.send(&Packet::Publish {
-            topic: topic_name.to_string(),
-            payload: payload.to_vec(),
-            qos: 0,
-            retain,
-            dup: false,
-            packet_id: None,
-        })
+        let head = packet::publish_head(topic_name, 0, retain, false, None, payload.len())?;
+        self.inner.send_parts(&[head.as_slice(), payload])
+    }
+
+    /// Publish an already-encoded [`WireFrame`] (QoS 0): PUBLISH head,
+    /// frame header, and shared frame payload leave in one vectored write
+    /// — zero payload copies end-to-end.
+    pub fn publish_frame(&self, topic_name: &str, frame: &WireFrame, retain: bool) -> Result<()> {
+        topic::validate_name(topic_name)?;
+        let head = packet::publish_head(topic_name, 0, retain, false, None, frame.len())?;
+        self.inner
+            .send_parts(&[head.as_slice(), frame.header.as_slice(), frame.payload.as_slice()])
     }
 
     /// Acknowledged publish (QoS 1): blocks until PUBACK or timeout.
     pub fn publish_qos1(&self, topic_name: &str, payload: &[u8], retain: bool) -> Result<()> {
         topic::validate_name(topic_name)?;
         let id = self.inner.alloc_id();
-        let p = Packet::Publish {
-            topic: topic_name.to_string(),
-            payload: payload.to_vec(),
-            qos: 1,
-            retain,
-            dup: false,
-            packet_id: Some(id),
-        };
-        match self.inner.request(&p, id, DEFAULT_TIMEOUT)? {
+        let head = packet::publish_head(topic_name, 1, retain, false, Some(id), payload.len())?;
+        match self.inner.request_parts(&[head.as_slice(), payload], id, DEFAULT_TIMEOUT)? {
             Packet::PubAck { .. } => Ok(()),
             other => Err(Error::Mqtt(format!("expected PUBACK, got {other:?}"))),
         }
@@ -293,7 +309,9 @@ fn reader_loop(mut stream: TcpStream, inner: Arc<Inner>) {
         };
         match pkt {
             Packet::Publish { topic: t, payload, retain, .. } => {
-                let msg = Message { topic: t, payload: Arc::from(payload), retain };
+                // `payload` is already a shared view into the socket-read
+                // allocation; fan-out to handlers clones the view only.
+                let msg = Message { topic: t, payload, retain };
                 let mut subs = inner.subs.lock().unwrap();
                 subs.retain(|s| {
                     if !topic::matches(&s.filter, &msg.topic) {

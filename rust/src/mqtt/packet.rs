@@ -1,9 +1,15 @@
 //! MQTT 3.1.1 control-packet codec (the subset the among-device transport
 //! uses: CONNECT/CONNACK, PUBLISH QoS 0/1 + PUBACK, SUBSCRIBE/SUBACK,
 //! UNSUBSCRIBE/UNSUBACK, PING, DISCONNECT).
+//!
+//! PUBLISH payloads are [`Bytes`]: decoding slices the payload out of the
+//! received body without copying, and the send side emits
+//! [`publish_head`] + payload as separate scatter-gather parts so one
+//! encoded frame can be shared across every subscriber of a topic.
 
 use std::io::Read;
 
+use crate::buffer::Bytes;
 use crate::util::{Error, Result};
 
 /// Session will (LWT): published by the broker when a client vanishes —
@@ -30,7 +36,7 @@ pub enum Packet {
     },
     Publish {
         topic: String,
-        payload: Vec<u8>,
+        payload: Bytes,
         qos: u8,
         retain: bool,
         dup: bool,
@@ -78,6 +84,288 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
 fn put_bytes16(out: &mut Vec<u8>, b: &[u8]) {
     put_u16(out, b.len() as u16);
     out.extend_from_slice(b);
+}
+
+/// Append the MQTT variable-length "remaining length" encoding.
+/// Public so wire-replica tooling (bench baselines) reuses one encoder.
+pub fn put_remaining(out: &mut Vec<u8>, mut rem: usize) {
+    loop {
+        let mut b = (rem % 128) as u8;
+        rem /= 128;
+        if rem > 0 {
+            b |= 0x80;
+        }
+        out.push(b);
+        if rem == 0 {
+            break;
+        }
+    }
+}
+
+/// Build everything of a PUBLISH packet that precedes the payload: fixed
+/// header, remaining length, topic, optional packet id. Writing
+/// `head ++ payload` yields a complete wire packet — the hot path pairs
+/// this with a vectored write so the (shared) payload is never copied.
+pub fn publish_head(
+    topic: &str,
+    qos: u8,
+    retain: bool,
+    dup: bool,
+    packet_id: Option<u16>,
+    payload_len: usize,
+) -> Result<Vec<u8>> {
+    if qos > 1 {
+        return Err(Error::Mqtt("QoS 2 not supported".into()));
+    }
+    if qos > 0 && packet_id.is_none() {
+        return Err(Error::Mqtt("QoS1 publish needs packet id".into()));
+    }
+    let var_len = 2 + topic.len() + if qos > 0 { 2 } else { 0 } + payload_len;
+    if var_len > MAX_REMAINING {
+        return Err(Error::Mqtt(format!("packet too large: {var_len}")));
+    }
+    let mut head = Vec::with_capacity(7 + topic.len());
+    let mut flags = 0x30 | (qos << 1);
+    if retain {
+        flags |= 0x01;
+    }
+    if dup {
+        flags |= 0x08;
+    }
+    head.push(flags);
+    put_remaining(&mut head, var_len);
+    put_str(&mut head, topic);
+    if qos > 0 {
+        put_u16(&mut head, packet_id.unwrap_or(0));
+    }
+    Ok(head)
+}
+
+impl Packet {
+    /// Split into wire parts: (everything before the payload, payload).
+    /// Non-PUBLISH packets are fully contained in the first part.
+    pub fn encode_parts(&self) -> Result<(Vec<u8>, Option<Bytes>)> {
+        if let Packet::Publish { topic, payload, qos, retain, dup, packet_id } = self {
+            let head = publish_head(topic, *qos, *retain, *dup, *packet_id, payload.len())?;
+            return Ok((head, Some(payload.clone())));
+        }
+        let (type_flags, body) = self.encode_body()?;
+        if body.len() > MAX_REMAINING {
+            return Err(Error::Mqtt(format!("packet too large: {}", body.len())));
+        }
+        let mut out = Vec::with_capacity(body.len() + 5);
+        out.push(type_flags);
+        put_remaining(&mut out, body.len());
+        out.extend_from_slice(&body);
+        Ok((out, None))
+    }
+
+    /// Serialize to one contiguous wire buffer (fixed header + body).
+    /// PUBLISH copies its payload once (counted); the transport hot path
+    /// uses [`Packet::encode_parts`] / [`publish_head`] instead.
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let (mut head, payload) = self.encode_parts()?;
+        if let Some(p) = payload {
+            crate::buffer::record_copy(p.len());
+            head.extend_from_slice(&p);
+        }
+        Ok(head)
+    }
+
+    fn encode_body(&self) -> Result<(u8, Vec<u8>)> {
+        let mut b = Vec::new();
+        Ok(match self {
+            Packet::Connect { client_id, keep_alive, clean_session, will } => {
+                put_str(&mut b, PROTO_NAME);
+                b.push(PROTO_LEVEL);
+                let mut flags = 0u8;
+                if *clean_session {
+                    flags |= 0x02;
+                }
+                if let Some(w) = will {
+                    flags |= 0x04 | (w.qos << 3);
+                    if w.retain {
+                        flags |= 0x20;
+                    }
+                }
+                b.push(flags);
+                put_u16(&mut b, *keep_alive);
+                put_str(&mut b, client_id);
+                if let Some(w) = will {
+                    put_str(&mut b, &w.topic);
+                    put_bytes16(&mut b, &w.payload);
+                }
+                (0x10, b)
+            }
+            Packet::ConnAck { session_present, code } => {
+                b.push(*session_present as u8);
+                b.push(*code);
+                (0x20, b)
+            }
+            Packet::Publish { .. } => {
+                unreachable!("publish is encoded via encode_parts")
+            }
+            Packet::PubAck { packet_id } => {
+                put_u16(&mut b, *packet_id);
+                (0x40, b)
+            }
+            Packet::Subscribe { packet_id, filters } => {
+                put_u16(&mut b, *packet_id);
+                for (f, qos) in filters {
+                    put_str(&mut b, f);
+                    b.push(*qos);
+                }
+                (0x82, b)
+            }
+            Packet::SubAck { packet_id, codes } => {
+                put_u16(&mut b, *packet_id);
+                b.extend_from_slice(codes);
+                (0x90, b)
+            }
+            Packet::Unsubscribe { packet_id, filters } => {
+                put_u16(&mut b, *packet_id);
+                for f in filters {
+                    put_str(&mut b, f);
+                }
+                (0xA2, b)
+            }
+            Packet::UnsubAck { packet_id } => {
+                put_u16(&mut b, *packet_id);
+                (0xB0, b)
+            }
+            Packet::PingReq => (0xC0, b),
+            Packet::PingResp => (0xD0, b),
+            Packet::Disconnect => (0xE0, b),
+        })
+    }
+
+    /// Parse one packet from (first byte, borrowed body). PUBLISH payloads
+    /// are copied out (counted); receive paths that own the body should
+    /// use [`Packet::decode_owned`].
+    pub fn decode(type_flags: u8, body: &[u8]) -> Result<Packet> {
+        Self::decode_inner(type_flags, body, None)
+    }
+
+    /// Parse one packet from an owned body. PUBLISH payloads become
+    /// zero-copy slice views into `body` — the hop's single allocation
+    /// (the socket read) is shared all the way into the pipeline.
+    pub fn decode_owned(type_flags: u8, body: Bytes) -> Result<Packet> {
+        Self::decode_inner(type_flags, &body, Some(&body))
+    }
+
+    fn decode_inner(type_flags: u8, body: &[u8], shared: Option<&Bytes>) -> Result<Packet> {
+        let mut c = Cursor { buf: body, off: 0 };
+        let ptype = type_flags >> 4;
+        Ok(match ptype {
+            1 => {
+                let proto = c.str16()?;
+                let level = c.u8()?;
+                if proto != PROTO_NAME || level != PROTO_LEVEL {
+                    return Err(Error::Mqtt(format!("unsupported protocol {proto}/{level}")));
+                }
+                let flags = c.u8()?;
+                let keep_alive = c.u16()?;
+                let client_id = c.str16()?;
+                let will = if flags & 0x04 != 0 {
+                    let topic = c.str16()?;
+                    let payload = c.bytes16()?;
+                    Some(LastWill {
+                        topic,
+                        payload,
+                        qos: (flags >> 3) & 0x03,
+                        retain: flags & 0x20 != 0,
+                    })
+                } else {
+                    None
+                };
+                Packet::Connect { client_id, keep_alive, clean_session: flags & 0x02 != 0, will }
+            }
+            2 => {
+                let sp = c.u8()? & 0x01 != 0;
+                let code = c.u8()?;
+                Packet::ConnAck { session_present: sp, code }
+            }
+            3 => {
+                let qos = (type_flags >> 1) & 0x03;
+                if qos > 1 {
+                    return Err(Error::Mqtt("QoS 2 not supported".into()));
+                }
+                let topic = c.str16()?;
+                let packet_id = if qos > 0 { Some(c.u16()?) } else { None };
+                let payload = match shared {
+                    Some(b) => b.slice(c.off..),
+                    None => Bytes::copy_from_slice(c.rest()),
+                };
+                Packet::Publish {
+                    topic,
+                    payload,
+                    qos,
+                    retain: type_flags & 0x01 != 0,
+                    dup: type_flags & 0x08 != 0,
+                    packet_id,
+                }
+            }
+            4 => Packet::PubAck { packet_id: c.u16()? },
+            8 => {
+                let packet_id = c.u16()?;
+                let mut filters = Vec::new();
+                while !c.at_end() {
+                    let f = c.str16()?;
+                    let qos = c.u8()?;
+                    filters.push((f, qos));
+                }
+                if filters.is_empty() {
+                    return Err(Error::Mqtt("SUBSCRIBE with no filters".into()));
+                }
+                Packet::Subscribe { packet_id, filters }
+            }
+            9 => {
+                let packet_id = c.u16()?;
+                Packet::SubAck { packet_id, codes: c.rest().to_vec() }
+            }
+            10 => {
+                let packet_id = c.u16()?;
+                let mut filters = Vec::new();
+                while !c.at_end() {
+                    filters.push(c.str16()?);
+                }
+                Packet::Unsubscribe { packet_id, filters }
+            }
+            11 => Packet::UnsubAck { packet_id: c.u16()? },
+            12 => Packet::PingReq,
+            13 => Packet::PingResp,
+            14 => Packet::Disconnect,
+            other => return Err(Error::Mqtt(format!("unsupported packet type {other}"))),
+        })
+    }
+
+    /// Read one packet from a blocking reader (fixed header + body).
+    /// The body is this hop's single allocation; PUBLISH payloads are
+    /// shared views into it.
+    pub fn read<R: Read>(r: &mut R) -> Result<Packet> {
+        let mut first = [0u8; 1];
+        r.read_exact(&mut first)?;
+        let mut rem: usize = 0;
+        let mut shift = 0u32;
+        loop {
+            let mut b = [0u8; 1];
+            r.read_exact(&mut b)?;
+            rem |= ((b[0] & 0x7f) as usize) << shift;
+            if b[0] & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+            if shift > 21 {
+                return Err(Error::Mqtt("remaining length overflow".into()));
+            }
+        }
+        if rem > MAX_REMAINING {
+            return Err(Error::Mqtt("packet too large".into()));
+        }
+        let mut body = vec![0u8; rem];
+        r.read_exact(&mut body)?;
+        Packet::decode_owned(first[0], Bytes::from(body))
+    }
 }
 
 struct Cursor<'a> {
@@ -129,225 +417,6 @@ impl<'a> Cursor<'a> {
     }
 }
 
-impl Packet {
-    /// Serialize to wire bytes (fixed header + body).
-    pub fn encode(&self) -> Result<Vec<u8>> {
-        let (type_flags, body) = self.encode_body()?;
-        if body.len() > MAX_REMAINING {
-            return Err(Error::Mqtt(format!("packet too large: {}", body.len())));
-        }
-        let mut out = Vec::with_capacity(body.len() + 5);
-        out.push(type_flags);
-        let mut rem = body.len();
-        loop {
-            let mut b = (rem % 128) as u8;
-            rem /= 128;
-            if rem > 0 {
-                b |= 0x80;
-            }
-            out.push(b);
-            if rem == 0 {
-                break;
-            }
-        }
-        out.extend_from_slice(&body);
-        Ok(out)
-    }
-
-    fn encode_body(&self) -> Result<(u8, Vec<u8>)> {
-        let mut b = Vec::new();
-        Ok(match self {
-            Packet::Connect { client_id, keep_alive, clean_session, will } => {
-                put_str(&mut b, PROTO_NAME);
-                b.push(PROTO_LEVEL);
-                let mut flags = 0u8;
-                if *clean_session {
-                    flags |= 0x02;
-                }
-                if let Some(w) = will {
-                    flags |= 0x04 | (w.qos << 3);
-                    if w.retain {
-                        flags |= 0x20;
-                    }
-                }
-                b.push(flags);
-                put_u16(&mut b, *keep_alive);
-                put_str(&mut b, client_id);
-                if let Some(w) = will {
-                    put_str(&mut b, &w.topic);
-                    put_bytes16(&mut b, &w.payload);
-                }
-                (0x10, b)
-            }
-            Packet::ConnAck { session_present, code } => {
-                b.push(*session_present as u8);
-                b.push(*code);
-                (0x20, b)
-            }
-            Packet::Publish { topic, payload, qos, retain, dup, packet_id } => {
-                if *qos > 1 {
-                    return Err(Error::Mqtt("QoS 2 not supported".into()));
-                }
-                put_str(&mut b, topic);
-                if *qos > 0 {
-                    let id = packet_id.ok_or_else(|| Error::Mqtt("QoS1 publish needs packet id".into()))?;
-                    put_u16(&mut b, id);
-                }
-                b.extend_from_slice(payload);
-                let mut flags = 0x30 | (qos << 1);
-                if *retain {
-                    flags |= 0x01;
-                }
-                if *dup {
-                    flags |= 0x08;
-                }
-                (flags, b)
-            }
-            Packet::PubAck { packet_id } => {
-                put_u16(&mut b, *packet_id);
-                (0x40, b)
-            }
-            Packet::Subscribe { packet_id, filters } => {
-                put_u16(&mut b, *packet_id);
-                for (f, qos) in filters {
-                    put_str(&mut b, f);
-                    b.push(*qos);
-                }
-                (0x82, b)
-            }
-            Packet::SubAck { packet_id, codes } => {
-                put_u16(&mut b, *packet_id);
-                b.extend_from_slice(codes);
-                (0x90, b)
-            }
-            Packet::Unsubscribe { packet_id, filters } => {
-                put_u16(&mut b, *packet_id);
-                for f in filters {
-                    put_str(&mut b, f);
-                }
-                (0xA2, b)
-            }
-            Packet::UnsubAck { packet_id } => {
-                put_u16(&mut b, *packet_id);
-                (0xB0, b)
-            }
-            Packet::PingReq => (0xC0, b),
-            Packet::PingResp => (0xD0, b),
-            Packet::Disconnect => (0xE0, b),
-        })
-    }
-
-    /// Parse one packet from (first byte, body).
-    pub fn decode(type_flags: u8, body: &[u8]) -> Result<Packet> {
-        let mut c = Cursor { buf: body, off: 0 };
-        let ptype = type_flags >> 4;
-        Ok(match ptype {
-            1 => {
-                let proto = c.str16()?;
-                let level = c.u8()?;
-                if proto != PROTO_NAME || level != PROTO_LEVEL {
-                    return Err(Error::Mqtt(format!("unsupported protocol {proto}/{level}")));
-                }
-                let flags = c.u8()?;
-                let keep_alive = c.u16()?;
-                let client_id = c.str16()?;
-                let will = if flags & 0x04 != 0 {
-                    let topic = c.str16()?;
-                    let payload = c.bytes16()?;
-                    Some(LastWill {
-                        topic,
-                        payload,
-                        qos: (flags >> 3) & 0x03,
-                        retain: flags & 0x20 != 0,
-                    })
-                } else {
-                    None
-                };
-                Packet::Connect { client_id, keep_alive, clean_session: flags & 0x02 != 0, will }
-            }
-            2 => {
-                let sp = c.u8()? & 0x01 != 0;
-                let code = c.u8()?;
-                Packet::ConnAck { session_present: sp, code }
-            }
-            3 => {
-                let qos = (type_flags >> 1) & 0x03;
-                if qos > 1 {
-                    return Err(Error::Mqtt("QoS 2 not supported".into()));
-                }
-                let topic = c.str16()?;
-                let packet_id = if qos > 0 { Some(c.u16()?) } else { None };
-                let payload = c.rest().to_vec();
-                Packet::Publish {
-                    topic,
-                    payload,
-                    qos,
-                    retain: type_flags & 0x01 != 0,
-                    dup: type_flags & 0x08 != 0,
-                    packet_id,
-                }
-            }
-            4 => Packet::PubAck { packet_id: c.u16()? },
-            8 => {
-                let packet_id = c.u16()?;
-                let mut filters = Vec::new();
-                while !c.at_end() {
-                    let f = c.str16()?;
-                    let qos = c.u8()?;
-                    filters.push((f, qos));
-                }
-                if filters.is_empty() {
-                    return Err(Error::Mqtt("SUBSCRIBE with no filters".into()));
-                }
-                Packet::Subscribe { packet_id, filters }
-            }
-            9 => {
-                let packet_id = c.u16()?;
-                Packet::SubAck { packet_id, codes: c.rest().to_vec() }
-            }
-            10 => {
-                let packet_id = c.u16()?;
-                let mut filters = Vec::new();
-                while !c.at_end() {
-                    filters.push(c.str16()?);
-                }
-                Packet::Unsubscribe { packet_id, filters }
-            }
-            11 => Packet::UnsubAck { packet_id: c.u16()? },
-            12 => Packet::PingReq,
-            13 => Packet::PingResp,
-            14 => Packet::Disconnect,
-            other => return Err(Error::Mqtt(format!("unsupported packet type {other}"))),
-        })
-    }
-
-    /// Read one packet from a blocking reader (fixed header + body).
-    pub fn read<R: Read>(r: &mut R) -> Result<Packet> {
-        let mut first = [0u8; 1];
-        r.read_exact(&mut first)?;
-        let mut rem: usize = 0;
-        let mut shift = 0u32;
-        loop {
-            let mut b = [0u8; 1];
-            r.read_exact(&mut b)?;
-            rem |= ((b[0] & 0x7f) as usize) << shift;
-            if b[0] & 0x80 == 0 {
-                break;
-            }
-            shift += 7;
-            if shift > 21 {
-                return Err(Error::Mqtt("remaining length overflow".into()));
-            }
-        }
-        if rem > MAX_REMAINING {
-            return Err(Error::Mqtt("packet too large".into()));
-        }
-        let mut body = vec![0u8; rem];
-        r.read_exact(&mut body)?;
-        Packet::decode(first[0], &body)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +425,10 @@ mod tests {
         let wire = p.encode().unwrap();
         let mut r = std::io::Cursor::new(wire);
         assert_eq!(Packet::read(&mut r).unwrap(), p);
+    }
+
+    fn publish(topic: &str, payload: Vec<u8>, qos: u8, retain: bool, dup: bool, packet_id: Option<u16>) -> Packet {
+        Packet::Publish { topic: topic.into(), payload: payload.into(), qos, retain, dup, packet_id }
     }
 
     #[test]
@@ -385,39 +458,49 @@ mod tests {
 
     #[test]
     fn publish_qos0_roundtrip() {
-        roundtrip(Packet::Publish {
-            topic: "camleft".into(),
-            payload: vec![1, 2, 3],
-            qos: 0,
-            retain: false,
-            dup: false,
-            packet_id: None,
-        });
+        roundtrip(publish("camleft", vec![1, 2, 3], 0, false, false, None));
     }
 
     #[test]
     fn publish_qos1_retain_roundtrip() {
-        roundtrip(Packet::Publish {
-            topic: "t".into(),
-            payload: vec![9; 1000],
-            qos: 1,
-            retain: true,
-            dup: true,
-            packet_id: Some(77),
-        });
+        roundtrip(publish("t", vec![9; 1000], 1, true, true, Some(77)));
     }
 
     #[test]
     fn publish_empty_payload_roundtrip() {
         // Empty retained publish = "clear retained" — used for failover.
-        roundtrip(Packet::Publish {
-            topic: "t".into(),
-            payload: vec![],
-            qos: 0,
-            retain: true,
-            dup: false,
-            packet_id: None,
-        });
+        roundtrip(publish("t", vec![], 0, true, false, None));
+    }
+
+    #[test]
+    fn publish_head_plus_payload_equals_encode() {
+        let p = publish("cam/left", vec![7u8; 300], 1, true, false, Some(5));
+        let contiguous = p.encode().unwrap();
+        let (head, payload) = p.encode_parts().unwrap();
+        let payload = payload.unwrap();
+        let mut assembled = head;
+        assembled.extend_from_slice(&payload);
+        assert_eq!(assembled, contiguous);
+    }
+
+    #[test]
+    fn decode_owned_publish_payload_is_shared_view() {
+        // 100-byte payload keeps remaining-length to one byte, so the
+        // body starts at wire[2..].
+        let p = publish("t", (0..100u8).collect(), 0, false, false, None);
+        let wire = p.encode().unwrap();
+        let mut r = std::io::Cursor::new(&wire);
+        let got = Packet::read(&mut r).unwrap();
+        assert_eq!(got, p);
+        // Direct decode_owned: payload must share the body's backing.
+        let body = Bytes::from(wire[2..].to_vec());
+        match Packet::decode_owned(0x30, body.clone()).unwrap() {
+            Packet::Publish { payload, .. } => {
+                assert!(payload.same_backing(&body));
+                assert_eq!(&payload[..], &(0..100u8).collect::<Vec<u8>>()[..]);
+            }
+            other => panic!("expected publish, got {other:?}"),
+        }
     }
 
     #[test]
@@ -442,39 +525,18 @@ mod tests {
 
     #[test]
     fn large_payload_multibyte_remaining_length() {
-        roundtrip(Packet::Publish {
-            topic: "big".into(),
-            payload: vec![0xAB; 300_000],
-            qos: 0,
-            retain: false,
-            dup: false,
-            packet_id: None,
-        });
+        roundtrip(publish("big", vec![0xAB; 300_000], 0, false, false, None));
     }
 
     #[test]
     fn qos2_rejected() {
-        let p = Packet::Publish {
-            topic: "t".into(),
-            payload: vec![],
-            qos: 2,
-            retain: false,
-            dup: false,
-            packet_id: Some(1),
-        };
+        let p = publish("t", vec![], 2, false, false, Some(1));
         assert!(p.encode().is_err());
     }
 
     #[test]
     fn qos1_without_id_rejected() {
-        let p = Packet::Publish {
-            topic: "t".into(),
-            payload: vec![],
-            qos: 1,
-            retain: false,
-            dup: false,
-            packet_id: None,
-        };
+        let p = publish("t", vec![], 1, false, false, None);
         assert!(p.encode().is_err());
     }
 

@@ -13,29 +13,86 @@
 //! caps_len u32 | caps utf8 | payload_len u32 | payload (possibly compressed)
 //! ```
 //! `u64::MAX` encodes "absent" for the optional u64 fields.
+//!
+//! ## Zero-copy data path
+//!
+//! The hot path never assembles a contiguous frame:
+//!
+//! - [`encode_vectored`] returns a [`WireFrame`] — a small header `Bytes`
+//!   (fixed fields + caps + payload length) and the buffer's payload
+//!   `Bytes` shared as-is (`Codec::None` adds **zero** payload copies).
+//! - [`write_frame_vectored`] / [`WireFrame::write_to`] emit both parts
+//!   with one scatter-gather write.
+//! - [`read_frame`] performs the hop's single allocation (one `Bytes` per
+//!   received frame) and [`decode_shared`] returns a `Buffer` whose
+//!   payload is a slice *view* into that allocation.
+//!
+//! The contiguous [`encode`]/[`decode`] entry points remain for
+//! borrowed-slice callers and tests; their copies are counted by
+//! [`crate::buffer::bytes`].
 
-use std::sync::Arc;
-
-use crate::buffer::{Buffer, Meta};
+use crate::buffer::{Buffer, Bytes, Meta};
 use crate::caps::Caps;
 use crate::serial::compress::{compress, decompress, Codec};
-use crate::util::{read_u32, read_u64, Error, Result};
+use crate::util::{read_u32, read_u64, write_all_vectored, Error, Result};
 
 pub const WIRE_MAGIC: &[u8; 4] = b"EPEF";
 const VERSION: u8 = 1;
 const FIXED: usize = 8 + 6 * 8;
 const ABSENT: u64 = u64::MAX;
 
-/// Encode a buffer (+ its caps) into a transport frame.
-pub fn encode(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Result<Vec<u8>> {
+/// An encoded EdgeFrame as two independently shareable parts: everything
+/// before the payload, and the payload itself. Cloning is O(1); the same
+/// frame can be fanned out to N subscribers without duplication.
+#[derive(Debug, Clone)]
+pub struct WireFrame {
+    /// Fixed fields + caps string + payload-length prefix.
+    pub header: Bytes,
+    /// Payload bytes — for `Codec::None` this *is* the buffer's payload.
+    pub payload: Bytes,
+}
+
+impl WireFrame {
+    /// Total encoded length (header + payload).
+    pub fn len(&self) -> usize {
+        self.header.len() + self.payload.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Assemble into one contiguous `Vec` (counted copy; compat/tests).
+    pub fn to_vec(&self) -> Vec<u8> {
+        crate::buffer::record_copy(self.len());
+        let mut out = Vec::with_capacity(self.len());
+        out.extend_from_slice(&self.header);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Write header + payload with one vectored call (no assembly copy).
+    pub fn write_to<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write_all_vectored(w, &[self.header.as_slice(), self.payload.as_slice()])
+    }
+}
+
+/// Encode a buffer (+ its caps) into a [`WireFrame`] without copying the
+/// payload when `codec == Codec::None`.
+pub fn encode_vectored(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Result<WireFrame> {
     let caps_str = caps.map(|c| c.to_string()).unwrap_or_default();
-    let payload = compress(codec, &buf.data)?;
-    let mut out = Vec::with_capacity(FIXED + caps_str.len() + payload.len() + 8);
-    out.extend_from_slice(WIRE_MAGIC);
-    out.push(VERSION);
-    out.push(0); // flags (reserved)
-    out.push(codec as u8);
-    out.push(0);
+    // Skip the compression round-trip entirely for the pass-through codec:
+    // the buffer's shared payload goes on the wire as-is.
+    let payload = match codec {
+        Codec::None => buf.data.clone(),
+        Codec::Zlib => Bytes::from(compress(codec, &buf.data)?),
+    };
+    let mut header = Vec::with_capacity(FIXED + caps_str.len() + 8);
+    header.extend_from_slice(WIRE_MAGIC);
+    header.push(VERSION);
+    header.push(0); // flags (reserved)
+    header.push(codec as u8);
+    header.push(0);
     for v in [
         buf.pts.unwrap_or(ABSENT),
         buf.duration.unwrap_or(ABSENT),
@@ -44,13 +101,17 @@ pub fn encode(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Result<Vec<u8>
         buf.meta.seq.unwrap_or(ABSENT),
         buf.meta.capture_universal.unwrap_or(ABSENT),
     ] {
-        out.extend_from_slice(&v.to_le_bytes());
+        header.extend_from_slice(&v.to_le_bytes());
     }
-    out.extend_from_slice(&(caps_str.len() as u32).to_le_bytes());
-    out.extend_from_slice(caps_str.as_bytes());
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&payload);
-    Ok(out)
+    header.extend_from_slice(&(caps_str.len() as u32).to_le_bytes());
+    header.extend_from_slice(caps_str.as_bytes());
+    header.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    Ok(WireFrame { header: Bytes::from(header), payload })
+}
+
+/// Encode into one contiguous `Vec` (compat; copies the payload once).
+pub fn encode(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Result<Vec<u8>> {
+    Ok(encode_vectored(buf, caps, codec)?.to_vec())
 }
 
 fn codec_from_wire(b: u8) -> Result<Codec> {
@@ -69,8 +130,16 @@ fn opt(v: u64) -> Option<u64> {
     }
 }
 
-/// Decode a transport frame into (Buffer, Option<Caps>).
-pub fn decode(frame: &[u8]) -> Result<(Buffer, Option<Caps>)> {
+/// Header fields parsed out of a frame, with the payload's byte range.
+struct ParsedHeader {
+    codec: Codec,
+    buffer: Buffer, // payload left empty; filled by the caller
+    caps: Option<Caps>,
+    payload_start: usize,
+    payload_len: usize,
+}
+
+fn parse_header(frame: &[u8]) -> Result<ParsedHeader> {
     if frame.len() < FIXED + 8 || &frame[..4] != WIRE_MAGIC {
         return Err(Error::Serial("not an EdgeFrame (bad magic/short)".into()));
     }
@@ -105,11 +174,10 @@ pub fn decode(frame: &[u8]) -> Result<(Buffer, Option<Caps>)> {
             payload_start + payload_len
         )));
     }
-    let data = decompress(codec, &frame[payload_start..])?;
     let buffer = Buffer {
         pts,
         duration,
-        data: Arc::from(data),
+        data: Bytes::new(),
         meta: Meta {
             client_id,
             seq,
@@ -118,11 +186,38 @@ pub fn decode(frame: &[u8]) -> Result<(Buffer, Option<Caps>)> {
             origin: None,
         },
     };
-    Ok((buffer, caps))
+    Ok(ParsedHeader { codec, buffer, caps, payload_start, payload_len })
+}
+
+/// Decode a shared frame into (Buffer, Option<Caps>) — the output
+/// buffer's payload is a slice view into `frame` (zero copy) for
+/// `Codec::None`; compressed frames decompress into one fresh allocation.
+pub fn decode_shared(frame: &Bytes) -> Result<(Buffer, Option<Caps>)> {
+    let p = parse_header(frame)?;
+    let mut buffer = p.buffer;
+    buffer.data = match p.codec {
+        Codec::None => frame.slice(p.payload_start..p.payload_start + p.payload_len),
+        Codec::Zlib => Bytes::from(decompress(p.codec, &frame[p.payload_start..])?),
+    };
+    Ok((buffer, p.caps))
+}
+
+/// Decode a borrowed frame (compat; copies the payload out once).
+pub fn decode(frame: &[u8]) -> Result<(Buffer, Option<Caps>)> {
+    let p = parse_header(frame)?;
+    let mut buffer = p.buffer;
+    buffer.data = match p.codec {
+        Codec::None => Bytes::copy_from_slice(&frame[p.payload_start..]),
+        Codec::Zlib => Bytes::from(decompress(p.codec, &frame[p.payload_start..])?),
+    };
+    Ok((buffer, p.caps))
 }
 
 /// Read one length-prefixed EdgeFrame from a stream reader.
-pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>> {
+///
+/// This is the receive hop's single payload allocation; decode the result
+/// with [`decode_shared`] to keep it shared.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Bytes> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let n = u32::from_le_bytes(len) as usize;
@@ -131,13 +226,21 @@ pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Vec<u8>> {
     }
     let mut buf = vec![0u8; n];
     r.read_exact(&mut buf)?;
-    Ok(buf)
+    Ok(Bytes::from(buf))
 }
 
-/// Write one length-prefixed frame.
+/// Write one length-prefixed frame from a contiguous slice.
 pub fn write_frame<W: std::io::Write>(w: &mut W, frame: &[u8]) -> Result<()> {
     w.write_all(&(frame.len() as u32).to_le_bytes())?;
     w.write_all(frame)?;
+    Ok(())
+}
+
+/// Write one length-prefixed [`WireFrame`] with a single vectored call
+/// (length prefix + header + payload; no assembly copy).
+pub fn write_frame_vectored<W: std::io::Write>(w: &mut W, frame: &WireFrame) -> Result<()> {
+    let len = (frame.len() as u32).to_le_bytes();
+    write_all_vectored(w, &[&len[..], frame.header.as_slice(), frame.payload.as_slice()])?;
     Ok(())
 }
 
@@ -175,6 +278,32 @@ mod tests {
     }
 
     #[test]
+    fn vectored_encode_shares_payload_for_none_codec() {
+        let b = sample_buffer();
+        let f = encode_vectored(&b, Some(&Caps::video(4, 4, 30)), Codec::None).unwrap();
+        assert!(f.payload.same_backing(&b.data), "encode must not copy the payload");
+        assert_eq!(f.to_vec(), encode(&b, Some(&Caps::video(4, 4, 30)), Codec::None).unwrap());
+    }
+
+    #[test]
+    fn decode_shared_is_a_view_into_the_frame() {
+        let b = sample_buffer();
+        let frame = Bytes::from(encode(&b, None, Codec::None).unwrap());
+        let (b2, _) = decode_shared(&frame).unwrap();
+        assert_eq!(b2, b);
+        assert!(b2.data.same_backing(&frame), "decode must not copy the payload");
+    }
+
+    #[test]
+    fn decode_shared_zlib_allocates_fresh() {
+        let b = Buffer::new(vec![3u8; 10_000]);
+        let frame = Bytes::from(encode(&b, None, Codec::Zlib).unwrap());
+        let (b2, _) = decode_shared(&frame).unwrap();
+        assert_eq!(&b2.data[..], &b.data[..]);
+        assert!(!b2.data.same_backing(&frame));
+    }
+
+    #[test]
     fn absent_fields_stay_absent() {
         let b = Buffer::new(vec![1]);
         let frame = encode(&b, None, Codec::None).unwrap();
@@ -209,9 +338,25 @@ mod tests {
         write_frame(&mut wire, &frame).unwrap();
         write_frame(&mut wire, &frame).unwrap();
         let mut r = std::io::Cursor::new(wire);
-        assert_eq!(read_frame(&mut r).unwrap(), frame);
-        assert_eq!(read_frame(&mut r).unwrap(), frame);
+        assert_eq!(&read_frame(&mut r).unwrap()[..], frame.as_slice());
+        assert_eq!(&read_frame(&mut r).unwrap()[..], frame.as_slice());
         assert!(read_frame(&mut r).is_err()); // EOF
+    }
+
+    #[test]
+    fn vectored_framing_matches_contiguous() {
+        let b = sample_buffer();
+        let vf = encode_vectored(&b, Some(&Caps::video(4, 4, 30)), Codec::None).unwrap();
+        let mut wire_v = Vec::new();
+        write_frame_vectored(&mut wire_v, &vf).unwrap();
+        let mut wire_c = Vec::new();
+        write_frame(&mut wire_c, &vf.to_vec()).unwrap();
+        assert_eq!(wire_v, wire_c);
+        let mut r = std::io::Cursor::new(wire_v);
+        let received = read_frame(&mut r).unwrap();
+        let (b2, c2) = decode_shared(&received).unwrap();
+        assert_eq!(b2, b);
+        assert_eq!(c2.unwrap(), Caps::video(4, 4, 30));
     }
 
     #[test]

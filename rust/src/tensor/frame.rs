@@ -8,6 +8,7 @@
 //!
 //! Sparse is a separate per-tensor encoding — see [`crate::tensor::sparse`].
 
+use crate::buffer::Bytes;
 use crate::tensor::{DType, TensorInfo, TensorsInfo, MAX_RANK, MAX_TENSORS};
 use crate::util::{read_u32, Error, Result};
 
@@ -161,9 +162,20 @@ pub fn flexible_to_static(buf: &[u8]) -> Result<(TensorsInfo, Vec<u8>)> {
     let f = decode_flexible(buf)?;
     let mut payload = Vec::with_capacity(buf.len());
     for r in &f.ranges {
+        crate::buffer::record_copy(r.len());
         payload.extend_from_slice(&buf[r.clone()]);
     }
     Ok((f.info, payload))
+}
+
+/// Zero-copy variant of [`flexible_to_static`]: the tensor payloads of a
+/// flexible frame are laid out contiguously after the header (validated
+/// by [`decode_flexible`]), so the static payload is a slice view into
+/// the shared frame — no copy.
+pub fn flexible_to_static_shared(buf: &Bytes) -> Result<(TensorsInfo, Bytes)> {
+    let f = decode_flexible(buf)?;
+    let start = f.ranges.first().map(|r| r.start).unwrap_or(buf.len());
+    Ok((f.info, buf.slice(start..buf.len())))
 }
 
 #[cfg(test)]
@@ -234,6 +246,19 @@ mod tests {
         let t = info(&[4]);
         let bad = vec![0u8; 3];
         assert!(encode_flexible(&[(t, &bad)]).is_err());
+    }
+
+    #[test]
+    fn flexible_to_static_shared_is_a_view() {
+        let mut ti = TensorsInfo::default();
+        ti.push(info(&[2, 2])).unwrap();
+        ti.push(TensorInfo::new(DType::U8, &[3]).unwrap()).unwrap();
+        let payload: Vec<u8> = (0..ti.frame_size() as u8).collect();
+        let flex = Bytes::from(static_to_flexible(&ti, &payload).unwrap());
+        let (info2, shared) = flexible_to_static_shared(&flex).unwrap();
+        assert_eq!(info2, ti);
+        assert_eq!(&shared[..], payload.as_slice());
+        assert!(shared.same_backing(&flex), "flex->static must not copy");
     }
 
     #[test]

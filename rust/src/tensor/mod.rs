@@ -10,7 +10,10 @@ pub mod info;
 pub mod sparse;
 
 pub use dtype::DType;
-pub use frame::{decode_flexible, encode_flexible, flexible_to_static, static_to_flexible, FlexFrame, Format};
+pub use frame::{
+    decode_flexible, encode_flexible, flexible_to_static, flexible_to_static_shared,
+    static_to_flexible, FlexFrame, Format,
+};
 pub use info::{TensorInfo, TensorsInfo, MAX_RANK, MAX_TENSORS};
 
 /// Helpers to view/build f32 tensor payloads (the models are f32-native).

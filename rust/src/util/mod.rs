@@ -56,6 +56,39 @@ pub fn read_u64(buf: &[u8], off: usize) -> Result<u64> {
     Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
 }
 
+/// Write several buffers with one vectored syscall where possible
+/// (scatter-gather transport writes: frame header + shared payload leave
+/// userspace without ever being assembled into one contiguous buffer).
+///
+/// Handles partial vectored writes by finishing each part with
+/// `write_all`; equivalent to the unstable `Write::write_all_vectored`.
+pub fn write_all_vectored<W: std::io::Write>(w: &mut W, parts: &[&[u8]]) -> std::io::Result<()> {
+    use std::io::{ErrorKind, IoSlice};
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    if total == 0 {
+        return Ok(());
+    }
+    let slices: Vec<IoSlice<'_>> = parts.iter().map(|p| IoSlice::new(p)).collect();
+    let mut written = match w.write_vectored(&slices) {
+        Ok(n) => n,
+        Err(e) if e.kind() == ErrorKind::Interrupted => 0,
+        Err(e) => return Err(e),
+    };
+    if written == total {
+        return Ok(());
+    }
+    // Partial write (or a writer that ignores vectoring): finish each part.
+    for part in parts {
+        if written >= part.len() {
+            written -= part.len();
+            continue;
+        }
+        w.write_all(&part[written..])?;
+        written = 0;
+    }
+    Ok(())
+}
+
 /// Human-readable byte size (for metrics reports).
 pub fn human_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -100,6 +133,36 @@ mod tests {
         assert_eq!(human_bytes(10), "10 B");
         assert_eq!(human_bytes(2048), "2.0 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024), "3.0 MiB");
+    }
+
+    #[test]
+    fn write_all_vectored_concatenates_parts() {
+        let mut out = Vec::new();
+        write_all_vectored(&mut out, &[b"ab", b"", b"cde", b"f"]).unwrap();
+        assert_eq!(out, b"abcdef");
+        write_all_vectored(&mut out, &[]).unwrap();
+        assert_eq!(out, b"abcdef");
+    }
+
+    #[test]
+    fn write_all_vectored_survives_partial_writers() {
+        /// Writer that accepts at most one byte per call.
+        struct Trickle(Vec<u8>);
+        impl std::io::Write for Trickle {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if buf.is_empty() {
+                    return Ok(0);
+                }
+                self.0.push(buf[0]);
+                Ok(1)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = Trickle(Vec::new());
+        write_all_vectored(&mut w, &[b"xy", b"z", b"12"]).unwrap();
+        assert_eq!(w.0, b"xyz12");
     }
 
     #[test]

@@ -5,6 +5,12 @@
 //! and upload prefix subscriptions, filtering happens publisher-side, slow
 //! subscribers drop messages (no backpressure onto the publisher). Wire
 //! format is two length-prefixed frames per message: topic, payload.
+//!
+//! The data path is zero-copy: [`PubSocket::send_parts`] fans a shared
+//! payload (e.g. a [`crate::serial::wire::WireFrame`]'s header + payload)
+//! out to every subscriber without duplication, and [`SubSocket::recv`]
+//! returns the payload as a [`Bytes`] — the receive hop's single
+//! allocation.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -14,12 +20,20 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::util::{Error, Result};
+use crate::buffer::Bytes;
+use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_info};
 
 const SUB_CMD: u8 = 1;
 const UNSUB_CMD: u8 = 2;
 const MSG_CMD: u8 = 3;
+
+/// One queued outbound message: shared topic + up to two shared payload
+/// parts (scatter-gather; part order is preserved on the wire).
+struct OutMsg {
+    topic: Bytes,
+    parts: [Bytes; 2],
+}
 
 fn write_chunk(w: &mut impl Write, cmd: u8, a: &[u8], b: &[u8]) -> std::io::Result<()> {
     w.write_all(&[cmd])?;
@@ -28,6 +42,22 @@ fn write_chunk(w: &mut impl Write, cmd: u8, a: &[u8], b: &[u8]) -> std::io::Resu
     w.write_all(&(b.len() as u32).to_le_bytes())?;
     w.write_all(b)?;
     Ok(())
+}
+
+/// Vectored emit of one PUB message: command byte, topic, and both
+/// payload parts leave in a single scatter-gather write — the shared
+/// payload is never assembled into a contiguous buffer.
+fn write_msg(w: &mut impl Write, msg: &OutMsg) -> std::io::Result<()> {
+    let body_len = msg.parts[0].len() + msg.parts[1].len();
+    let mut head = Vec::with_capacity(1 + 4 + msg.topic.len() + 4);
+    head.push(MSG_CMD);
+    head.extend_from_slice(&(msg.topic.len() as u32).to_le_bytes());
+    head.extend_from_slice(&msg.topic);
+    head.extend_from_slice(&(body_len as u32).to_le_bytes());
+    write_all_vectored(
+        w,
+        &[head.as_slice(), msg.parts[0].as_slice(), msg.parts[1].as_slice()],
+    )
 }
 
 fn read_exact_vec(r: &mut impl Read, limit: usize) -> Result<Vec<u8>> {
@@ -43,7 +73,7 @@ fn read_exact_vec(r: &mut impl Read, limit: usize) -> Result<Vec<u8>> {
 }
 
 struct SubConn {
-    outbox: SyncSender<(Arc<[u8]>, Arc<[u8]>)>,
+    outbox: SyncSender<OutMsg>,
     prefixes: Vec<Vec<u8>>,
 }
 
@@ -90,7 +120,7 @@ impl PubSocket {
                             stream.set_nodelay(true).ok();
                             let id = next_id;
                             next_id += 1;
-                            let (tx, rx) = sync_channel::<(Arc<[u8]>, Arc<[u8]>)>(depth);
+                            let (tx, rx) = sync_channel::<OutMsg>(depth);
                             a_conns
                                 .lock()
                                 .unwrap()
@@ -118,14 +148,22 @@ impl PubSocket {
         self.addr
     }
 
-    /// Publish to all subscribers whose prefix matches `topic`.
+    /// Publish a borrowed payload (copied once into a shared allocation,
+    /// then fanned out copy-free).
     pub fn send(&self, topic: &[u8], payload: &[u8]) {
-        let t: Arc<[u8]> = Arc::from(topic);
-        let p: Arc<[u8]> = Arc::from(payload);
+        self.send_parts(topic, [Bytes::copy_from_slice(payload), Bytes::new()]);
+    }
+
+    /// Publish shared payload parts to all subscribers whose prefix
+    /// matches `topic` — the parts are concatenated on the wire and never
+    /// duplicated per subscriber.
+    pub fn send_parts(&self, topic: &[u8], parts: [Bytes; 2]) {
+        let t = Bytes::copy_from_slice(topic);
         let conns = self.conns.lock().unwrap();
         for c in conns.values() {
-            if c.prefixes.iter().any(|pre| topic.starts_with(pre)) {
-                match c.outbox.try_send((t.clone(), p.clone())) {
+            if c.prefixes.iter().any(|pre| topic.starts_with(pre.as_slice())) {
+                let msg = OutMsg { topic: t.clone(), parts: [parts[0].clone(), parts[1].clone()] };
+                match c.outbox.try_send(msg) {
                     Ok(()) => {
                         self.stats_sent.fetch_add(1, Ordering::Relaxed);
                     }
@@ -174,7 +212,7 @@ impl Drop for PubSocket {
 fn spawn_sub_threads(
     id: u64,
     stream: TcpStream,
-    rx: Receiver<(Arc<[u8]>, Arc<[u8]>)>,
+    rx: Receiver<OutMsg>,
     conns: Arc<Mutex<HashMap<u64, SubConn>>>,
     shutdown: Arc<AtomicBool>,
 ) {
@@ -186,8 +224,8 @@ fn spawn_sub_threads(
     std::thread::Builder::new()
         .name(format!("zmq-pub-wr-{id}"))
         .spawn(move || {
-            for (topic, payload) in rx {
-                if write_chunk(&mut wstream, MSG_CMD, &topic, &payload).is_err() {
+            for msg in rx {
+                if write_msg(&mut wstream, &msg).is_err() {
                     break;
                 }
             }
@@ -243,8 +281,9 @@ pub struct SubSocket {
     stream: TcpStream,
 }
 
-/// A received (topic, payload) message.
-pub type ZmqMessage = (Vec<u8>, Vec<u8>);
+/// A received (topic, payload) message. The payload is the receive hop's
+/// single allocation, shared onward as a [`Bytes`].
+pub type ZmqMessage = (Vec<u8>, Bytes);
 
 impl SubSocket {
     pub fn connect(addr: &str) -> Result<SubSocket> {
@@ -274,7 +313,7 @@ impl SubSocket {
         }
         let topic = read_exact_vec(&mut self.stream, 1 << 20)?;
         let payload = read_exact_vec(&mut self.stream, 512 << 20)?;
-        Ok((topic, payload))
+        Ok((topic, Bytes::from(payload)))
     }
 
     pub fn set_timeout(&mut self, d: Option<Duration>) -> Result<()> {
@@ -313,7 +352,18 @@ mod tests {
         p.send(b"camleft", b"frame");
         let (t, pl) = s.recv().unwrap();
         assert_eq!(t, b"camleft");
-        assert_eq!(pl, b"frame");
+        assert_eq!(&pl[..], b"frame");
+    }
+
+    #[test]
+    fn send_parts_concatenates_on_the_wire() {
+        let p = PubSocket::bind("127.0.0.1:0").unwrap();
+        let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
+        s.subscribe(b"t").unwrap();
+        assert!(p.wait_subscribers(1, Duration::from_secs(2)));
+        p.send_parts(b"t", [Bytes::from(b"head-".to_vec()), Bytes::from(b"payload".to_vec())]);
+        let (_, pl) = s.recv().unwrap();
+        assert_eq!(&pl[..], b"head-payload");
     }
 
     #[test]
@@ -348,8 +398,8 @@ mod tests {
         s2.subscribe(b"t").unwrap();
         assert!(p.wait_subscribers(2, Duration::from_secs(2)));
         p.send(b"t", b"x");
-        assert_eq!(s1.recv().unwrap().1, b"x");
-        assert_eq!(s2.recv().unwrap().1, b"x");
+        assert_eq!(&s1.recv().unwrap().1[..], b"x");
+        assert_eq!(&s2.recv().unwrap().1[..], b"x");
     }
 
     #[test]
@@ -371,9 +421,11 @@ mod tests {
         let mut s = SubSocket::connect(&p.addr().to_string()).unwrap();
         s.subscribe(b"t").unwrap();
         assert!(p.wait_subscribers(1, Duration::from_secs(2)));
-        // Subscriber never reads; flood the publisher.
+        // Subscriber never reads; flood the publisher. Shared payload: the
+        // 64 KiB frame is allocated once, not per send.
+        let payload = Bytes::from(vec![0u8; 65536]);
         for _ in 0..2000 {
-            p.send(b"t", &[0u8; 65536]);
+            p.send_parts(b"t", [payload.clone(), Bytes::new()]);
         }
         let st = p.stats();
         assert!(st.dropped_slow > 0, "expected drops, stats {st:?}");
@@ -388,7 +440,7 @@ mod tests {
         assert!(p.wait_subscribers(1, Duration::from_secs(2)));
         p.send(b"c", b"via-channel");
         let (_, pl) = rx.recv_timeout(Duration::from_secs(2)).unwrap();
-        assert_eq!(pl, b"via-channel");
+        assert_eq!(&pl[..], b"via-channel");
     }
 
     #[test]

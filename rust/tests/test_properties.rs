@@ -98,6 +98,52 @@ fn prop_flexbuf_decoder_never_panics_on_garbage() {
 }
 
 #[test]
+fn prop_bytes_slice_matches_vec_slicing() {
+    use edgepipe::buffer::Bytes;
+    testkit::check(200, |g| {
+        let data = g.vec_u8(512);
+        let b = Bytes::from(data.clone());
+        // Random nested slicing must agree with plain Vec slicing and
+        // always share the original backing allocation.
+        let mut view = b.slice(..);
+        let mut lo = 0usize;
+        let mut hi = data.len();
+        for _ in 0..g.usize(1, 6) {
+            let len = hi - lo;
+            let a = g.usize(0, len);
+            let z = g.usize(a, len);
+            view = view.slice(a..z);
+            lo += a;
+            hi = lo + (z - a);
+            assert_eq!(&view[..], &data[lo..hi]);
+            assert_eq!(view.len(), hi - lo);
+            assert!(view.same_backing(&b));
+        }
+    });
+}
+
+#[test]
+fn prop_bytes_wire_roundtrip_preserves_payload_views() {
+    use edgepipe::buffer::{Buffer, Bytes};
+    testkit::check(100, |g| {
+        let payload = g.vec_u8(1024);
+        let b = Buffer::new(payload.clone());
+        let frame =
+            Bytes::from(wire::encode(&b, None, Codec::None).unwrap());
+        let (b2, _) = wire::decode_shared(&frame).unwrap();
+        assert_eq!(&b2.data[..], payload.as_slice());
+        assert!(b2.data.same_backing(&frame), "decode_shared must not copy");
+        // Slicing the decoded view keeps both content and backing.
+        if !b2.data.is_empty() {
+            let cut = g.usize(0, b2.data.len() - 1);
+            let tail = b2.data.slice(cut..);
+            assert_eq!(&tail[..], &payload[cut..]);
+            assert!(tail.same_backing(&frame));
+        }
+    });
+}
+
+#[test]
 fn prop_wire_frame_roundtrip() {
     testkit::check(150, |g| {
         let mut b = edgepipe::buffer::Buffer::new(g.vec_u8(2048));

@@ -1,0 +1,186 @@
+//! Zero-copy invariants of the among-device wire path: pointer/backing
+//! assertions that tee fan-out, wire decode, tensor demux, and broker
+//! fan-out never duplicate payload bytes.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use edgepipe::buffer::{bytes_copied, Buffer, Bytes};
+use edgepipe::caps::Caps;
+use edgepipe::elements::basic::{AppSink, AppSrc};
+use edgepipe::elements::TensorDemux;
+use edgepipe::mqtt::{Broker, ClientOptions, MqttClient};
+use edgepipe::pipeline::Pipeline;
+use edgepipe::serial::{wire, Codec};
+use edgepipe::tensor::{DType, TensorInfo, TensorsInfo};
+
+/// Serialise tests that measure the process-global copy counter so a
+/// concurrently running test can't pollute the delta.
+fn counter_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[test]
+fn wire_decode_shares_the_received_frame_allocation() {
+    // wire::encode's compat assembly records copies — hold the counter
+    // lock so the fan-out copy-budget tests see a clean delta.
+    let _guard = counter_lock();
+    let buf = Buffer::new(vec![7u8; 4096]).with_pts(11);
+    let frame = Bytes::from(wire::encode(&buf, Some(&Caps::video(8, 8, 30)), Codec::None).unwrap());
+    let (decoded, caps) = wire::decode_shared(&frame).unwrap();
+    assert_eq!(&decoded.data[..], &buf.data[..]);
+    assert!(decoded.data.same_backing(&frame), "decode copied the payload");
+    assert!(caps.is_some());
+}
+
+#[test]
+fn wire_encode_vectored_shares_the_buffer_payload() {
+    let buf = Buffer::new(vec![3u8; 100_000]);
+    let wf = wire::encode_vectored(&buf, None, Codec::None).unwrap();
+    assert!(wf.payload.same_backing(&buf.data), "encode copied the payload");
+    assert_eq!(wf.payload.len(), 100_000);
+}
+
+#[test]
+fn tee_fanout_shares_one_payload_across_sinks() {
+    let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[16]).unwrap());
+    let mut p = Pipeline::new();
+    let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+    let (k1, r1) = AppSink::new(4);
+    let (k2, r2) = AppSink::new(4);
+    let s = p.add("src", Box::new(src)).unwrap();
+    let a = p.add("k1", Box::new(k1)).unwrap();
+    let b = p.add("k2", Box::new(k2)).unwrap();
+    // Implicit tee: one src pad linked to two sinks.
+    p.link(s, a).unwrap();
+    p.link(s, b).unwrap();
+    let _r = p.start().unwrap();
+    let original = Buffer::new((0..16).collect());
+    let backing = original.data.clone();
+    h.push(original).unwrap();
+    let o1 = r1.recv_timeout(Duration::from_secs(2)).unwrap();
+    let o2 = r2.recv_timeout(Duration::from_secs(2)).unwrap();
+    assert!(o1.data.same_backing(&backing), "tee copied for sink 1");
+    assert!(o2.data.same_backing(&backing), "tee copied for sink 2");
+}
+
+#[test]
+fn demux_outputs_are_views_into_the_combined_frame() {
+    let mut info = TensorsInfo::default();
+    info.push(TensorInfo::new(DType::U8, &[2]).unwrap()).unwrap();
+    info.push(TensorInfo::new(DType::U8, &[3]).unwrap()).unwrap();
+    let mut p = Pipeline::new();
+    let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+    let (k0, r0) = AppSink::new(4);
+    let (k1, r1) = AppSink::new(4);
+    let s = p.add("s", Box::new(src)).unwrap();
+    let d = p.add("d", Box::new(TensorDemux::new(2))).unwrap();
+    let a = p.add("k0", Box::new(k0)).unwrap();
+    let b = p.add("k1", Box::new(k1)).unwrap();
+    p.link(s, d).unwrap();
+    p.link_pads(d, 0, a, 0).unwrap();
+    p.link_pads(d, 1, b, 0).unwrap();
+    let _r = p.start().unwrap();
+    let combined = Buffer::new(vec![1, 2, 3, 4, 5]);
+    let backing = combined.data.clone();
+    h.push(combined).unwrap();
+    let o0 = r0.recv_timeout(Duration::from_secs(2)).unwrap();
+    let o1 = r1.recv_timeout(Duration::from_secs(2)).unwrap();
+    assert_eq!(&o0.data[..], &[1, 2]);
+    assert_eq!(&o1.data[..], &[3, 4, 5]);
+    assert!(o0.data.same_backing(&backing), "demux copied tensor 0");
+    assert!(o1.data.same_backing(&backing), "demux copied tensor 1");
+}
+
+/// Publish `frames` H-ish frames through a real broker to `n_subs`
+/// subscribers and return (delivered, counted-copy delta).
+fn broker_roundtrip(n_subs: usize, frames: usize, payload_len: usize) -> (u64, u64) {
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let addr = broker.addr().to_string();
+    let mut rxs = Vec::new();
+    let mut subs = Vec::new();
+    for i in 0..n_subs {
+        let c = MqttClient::connect(
+            &addr,
+            ClientOptions { client_id: format!("zc-sub-{i}"), ..Default::default() },
+        )
+        .unwrap();
+        rxs.push(c.subscribe("zc/topic").unwrap());
+        subs.push(c);
+    }
+    let publ = MqttClient::connect(
+        &addr,
+        ClientOptions { client_id: "zc-pub".into(), ..Default::default() },
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+
+    let buf = Buffer::new(vec![0xEEu8; payload_len]).with_pts(5);
+    let caps = Caps::video(64, 64, 30);
+    let copied0 = bytes_copied();
+    for _ in 0..frames {
+        let wf = wire::encode_vectored(&buf, Some(&caps), Codec::None).unwrap();
+        publ.publish_frame("zc/topic", &wf, false).unwrap();
+    }
+    let mut delivered = 0u64;
+    for rx in &rxs {
+        for _ in 0..frames {
+            let msg = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+            let (out, _) = wire::decode_shared(&msg.payload).unwrap();
+            assert_eq!(out.len(), payload_len);
+            assert!(
+                out.data.same_backing(&msg.payload),
+                "subscriber decode copied the payload"
+            );
+            delivered += 1;
+        }
+    }
+    let copied = bytes_copied() - copied0;
+    publ.disconnect();
+    for c in &subs {
+        c.disconnect();
+    }
+    (delivered, copied)
+}
+
+#[test]
+fn broker_fanout_payload_copies_independent_of_subscriber_count() {
+    let _guard = counter_lock();
+    let payload = 64 * 64 * 3;
+    let (d1, c1) = broker_roundtrip(1, 8, payload);
+    let (d4, c4) = broker_roundtrip(4, 8, payload);
+    assert_eq!(d1, 8);
+    assert_eq!(d4, 32);
+    // The whole pub/sub path is copy-free: encode shares the buffer,
+    // the broker shares one encoded head+payload across subscribers, and
+    // each receive is one socket allocation + slice views. Any counted
+    // copies would scale with subscriber count; both must be ~zero.
+    let per_frame_1 = c1 as f64 / d1 as f64 / payload as f64;
+    let per_frame_4 = c4 as f64 / d4 as f64 / payload as f64;
+    assert!(per_frame_1 <= 0.01, "1-sub path copied {per_frame_1:.3} payloads/frame");
+    assert!(per_frame_4 <= 0.01, "4-sub path copied {per_frame_4:.3} payloads/frame");
+}
+
+#[test]
+fn query_exchange_stays_under_copy_budget() {
+    let _guard = counter_lock();
+    // In-memory replica of one query request hop: encode -> framed write
+    // -> framed read -> decode. Budget: encode 0 copies, decode 0 (the
+    // read allocation is not a payload copy).
+    let payload = 32 * 1024;
+    let buf = Buffer::new(vec![9u8; payload]);
+    let copied0 = bytes_copied();
+    let wf = wire::encode_vectored(&buf, None, Codec::None).unwrap();
+    let mut sock = Vec::new();
+    wire::write_frame_vectored(&mut sock, &wf).unwrap();
+    let mut cur = std::io::Cursor::new(&sock[..]);
+    let frame = wire::read_frame(&mut cur).unwrap();
+    let (out, _) = wire::decode_shared(&frame).unwrap();
+    assert_eq!(&out.data[..], &buf.data[..]);
+    let copied = bytes_copied() - copied0;
+    assert_eq!(copied, 0, "query hop counted {copied} copied bytes");
+}

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Run the wire-path bench suite with short CI-friendly windows and write
+# BENCH_wirepath.json at the repo root (override window/runs/out via
+# EDGEPIPE_BENCH_SECS / EDGEPIPE_BENCH_RUNS / EDGEPIPE_BENCH_OUT).
+set -euo pipefail
+
+repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+
+export EDGEPIPE_BENCH_SECS="${EDGEPIPE_BENCH_SECS:-2}"
+export EDGEPIPE_BENCH_RUNS="${EDGEPIPE_BENCH_RUNS:-1}"
+export EDGEPIPE_BENCH_OUT="${EDGEPIPE_BENCH_OUT:-$repo_root/BENCH_wirepath.json}"
+
+cd "$repo_root/rust"
+cargo bench --bench bench_wirepath
+
+echo "bench report: $EDGEPIPE_BENCH_OUT"
