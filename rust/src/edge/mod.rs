@@ -21,7 +21,7 @@ use crate::caps::Caps;
 use crate::clock::PipelineClock;
 use crate::coordinator::discovery::AdWatcher;
 use crate::mqtt::{ClientOptions, MqttClient};
-use crate::serial::wire;
+use crate::serial::wire::{self, LinkCodec};
 use crate::serial::Codec;
 use crate::tensor::TensorsInfo;
 use crate::util::{Error, Result};
@@ -32,8 +32,8 @@ pub struct EdgeSensor {
     topic: String,
     caps: Caps,
     clock: PipelineClock,
-    codec: Codec,
     seq: u64,
+    link: LinkCodec,
 }
 
 impl EdgeSensor {
@@ -53,13 +53,14 @@ impl EdgeSensor {
             topic: topic.to_string(),
             caps: Caps::tensors(info),
             clock: PipelineClock::start(),
-            codec: Codec::None,
             seq: 0,
+            link: LinkCodec::new(Codec::None, ""),
         })
     }
 
+    /// `Codec::Auto` gets a per-link adaptive state (keyed by topic).
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.codec = codec;
+        self.link = LinkCodec::new(codec, &format!("edge_sensor.{}", self.topic));
         self
     }
 
@@ -77,7 +78,7 @@ impl EdgeSensor {
         buf.meta.remote_base_universal = Some(self.clock.base_universal);
         self.seq += 1;
         buf.meta.seq = Some(self.seq);
-        let frame = wire::encode_vectored(&buf, Some(&self.caps), self.codec)?;
+        let frame = self.link.encode(&buf, Some(&self.caps))?;
         self.client.publish_frame(&self.topic, &frame, false)
     }
 

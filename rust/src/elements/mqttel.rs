@@ -16,7 +16,7 @@ use crate::metrics;
 use crate::mqtt::{ClientOptions, Message, MqttClient};
 use crate::ntp::{NtpServer, SyncedClock};
 use crate::serial::flexbuf::{self, Value};
-use crate::serial::wire;
+use crate::serial::wire::{self, LinkCodec};
 use crate::serial::Codec;
 use crate::util::{Error, Result};
 use crate::log_warn;
@@ -29,12 +29,12 @@ fn sync_topic(topic: &str) -> String {
 pub struct MqttSink {
     pub broker: String,
     pub topic: String,
-    pub codec: Codec,
     /// Enable §4.2.3 timestamp sync: run an NTP responder and advertise it.
     pub enable_sync: bool,
     client: Option<MqttClient>,
     ntp: Option<NtpServer>,
     caps: Option<Caps>,
+    link: LinkCodec,
 }
 
 impl MqttSink {
@@ -42,17 +42,25 @@ impl MqttSink {
         Self {
             broker: broker.to_string(),
             topic: topic.to_string(),
-            codec: Codec::None,
             enable_sync: true,
             client: None,
             ntp: None,
             caps: None,
+            link: LinkCodec::new(Codec::None, ""),
         }
     }
 
+    /// `Codec::Auto` gets a per-link adaptive state (keyed by topic) that
+    /// samples compression ratios into `codec.auto.mqttsink.<topic>.*`.
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.codec = codec;
+        self.link = LinkCodec::new(codec, &format!("mqttsink.{}", self.topic));
         self
+    }
+
+    /// The configured codec (`Auto` reports the policy, not the per-frame
+    /// resolution).
+    pub fn codec(&self) -> Codec {
+        self.link.codec()
     }
 
     pub fn with_sync(mut self, enable: bool) -> Self {
@@ -103,8 +111,11 @@ impl Element for MqttSink {
                     b.meta.capture_universal = Some(ctx.clock.pts_to_universal(pts));
                 }
                 // Zero-copy hop: the EdgeFrame shares the buffer payload
+                // (or deflates it in-place into a single-allocation frame)
                 // and publish_frame emits it with one vectored write.
-                let frame = wire::encode_vectored(&b, self.caps.as_ref(), self.codec)
+                let frame = self
+                    .link
+                    .encode(&b, self.caps.as_ref())
                     .map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global()
                     .counter(&format!("mqttsink.{}", ctx.name))
@@ -298,6 +309,20 @@ mod tests {
         h.push(Buffer::new(vec![7, 7, 7, 7])).unwrap();
         let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
         assert_eq!(&out.data[..], &[7, 7, 7, 7]);
+        drop(h);
+        let _ = pr.stop(Duration::from_secs(5));
+        let _ = sr.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn pubsub_with_auto_codec() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let (pr, sr, h, rx) = pubsub_pair(&broker.addr().to_string(), "t/auto", Codec::Auto);
+        // Tiny incompressible-ish and larger compressible payloads both
+        // arrive intact regardless of which codec Auto picked per frame.
+        h.push(Buffer::new(vec![1, 2, 3, 4])).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+        assert_eq!(&out.data[..], &[1, 2, 3, 4]);
         drop(h);
         let _ = pr.stop(Duration::from_secs(5));
         let _ = sr.stop(Duration::from_secs(5));

@@ -30,7 +30,7 @@ use crate::coordinator::discovery::{self, AdWatcher, ServiceAd};
 use crate::element::{Ctx, Element, Item};
 use crate::metrics;
 use crate::mqtt::MqttClient;
-use crate::serial::wire::{self, WireFrame};
+use crate::serial::wire::{self, LinkCodec, WireFrame};
 use crate::serial::Codec;
 use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_info, log_warn};
@@ -309,11 +309,24 @@ pub struct QueryServerSink {
     pub pair_id: String,
     table: Option<Arc<ConnTable>>,
     caps: Option<Caps>,
+    link: LinkCodec,
 }
 
 impl QueryServerSink {
     pub fn new(pair_id: &str) -> Self {
-        Self { pair_id: pair_id.to_string(), table: None, caps: None }
+        Self {
+            pair_id: pair_id.to_string(),
+            table: None,
+            caps: None,
+            link: LinkCodec::new(Codec::None, ""),
+        }
+    }
+
+    /// Codec for response frames (`Codec::Auto` adapts per link, sampling
+    /// into `codec.auto.queryserver.<pair_id>.*`).
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.link = LinkCodec::new(codec, &format!("queryserver.{}", self.pair_id));
+        self
     }
 }
 
@@ -339,7 +352,9 @@ impl Element for QueryServerSink {
                 let Some(id) = b.meta.client_id else {
                     return Err(Error::element(&ctx.name, "response buffer without client id"));
                 };
-                let frame = wire::encode_vectored(&b, self.caps.as_ref(), Codec::None)
+                let frame = self
+                    .link
+                    .encode(&b, self.caps.as_ref())
                     .map_err(|e| Error::element(&ctx.name, e))?;
                 // A vanished client is not a pipeline error (R4: clients
                 // come and go); drop the response.
@@ -371,6 +386,7 @@ pub struct QueryClient {
     in_caps: Option<Caps>,
     out_caps: Option<Caps>,
     seq: u64,
+    link: LinkCodec,
 }
 
 impl QueryClient {
@@ -384,6 +400,7 @@ impl QueryClient {
             in_caps: None,
             out_caps: None,
             seq: 0,
+            link: LinkCodec::new(Codec::None, ""),
         }
     }
 
@@ -398,11 +415,20 @@ impl QueryClient {
             in_caps: None,
             out_caps: None,
             seq: 0,
+            link: LinkCodec::new(Codec::None, ""),
         })
     }
 
     pub fn with_timeout(mut self, t: Duration) -> Self {
         self.timeout = t;
+        self
+    }
+
+    /// Codec for request frames (`Codec::Auto` adapts per link, sampling
+    /// into `codec.auto.query.<operation>.*`). The server decodes via the
+    /// wire flag, so no server-side configuration is needed.
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        self.link = LinkCodec::new(codec, &format!("query.{}", self.operation));
         self
     }
 
@@ -448,7 +474,7 @@ impl QueryClient {
         let mut req = b.clone();
         self.seq += 1;
         req.meta.seq = Some(self.seq);
-        let frame = wire::encode_vectored(&req, self.in_caps.as_ref(), Codec::None)?;
+        let frame = self.link.encode(&req, self.in_caps.as_ref())?;
         let stream = self.conn.as_mut().unwrap();
         let send = wire::write_frame_vectored(stream, &frame);
         let resp = send.and_then(|_| wire::read_frame(stream));
@@ -572,6 +598,40 @@ mod tests {
         let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(&out.data[..], &[2, 4, 6, 8]);
         assert_eq!(out.pts, Some(99));
+        drop(h);
+        let _ = cr.stop(Duration::from_secs(5));
+        let _ = server.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn tcp_query_with_compressed_hops() {
+        // Zlib on the request hop, zlib on the response hop; both sides
+        // self-configure from the wire flag.
+        let port = free_port();
+        let mut p = Pipeline::new();
+        let src = QueryServerSrc::new("op-gz")
+            .with_pair_id("gz-rt")
+            .with_bind(&format!("127.0.0.1:{port}"));
+        let f = TensorFilter::custom(Box::new(|b: &Buffer| {
+            Ok(b.data.iter().map(|&x| x.wrapping_mul(2)).collect())
+        }));
+        let s = p.add("ssrc", Box::new(src)).unwrap();
+        let fi = p.add("f", Box::new(f)).unwrap();
+        let k = p
+            .add("ssink", Box::new(QueryServerSink::new("gz-rt").with_codec(Codec::Zlib)))
+            .unwrap();
+        p.link(s, fi).unwrap();
+        p.link(fi, k).unwrap();
+        let server = p.start().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+
+        let client =
+            QueryClient::tcp("op-gz", &format!("127.0.0.1:{port}")).with_codec(Codec::Zlib);
+        let (cr, h, rx) = client_pipeline(client);
+        h.push(Buffer::new(vec![1, 2, 3, 4]).with_pts(7)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(&out.data[..], &[2, 4, 6, 8]);
+        assert_eq!(out.pts, Some(7));
         drop(h);
         let _ = cr.stop(Duration::from_secs(5));
         let _ = server.stop(Duration::from_secs(5));

@@ -10,7 +10,7 @@ use std::time::Duration;
 use crate::caps::Caps;
 use crate::element::{Ctx, Element, Item};
 use crate::metrics;
-use crate::serial::wire;
+use crate::serial::wire::{self, LinkCodec};
 use crate::serial::Codec;
 use crate::util::{Error, Result};
 use crate::zmq::{PubSocket, SubSocket, ZmqMessage};
@@ -19,19 +19,33 @@ use crate::zmq::{PubSocket, SubSocket, ZmqMessage};
 pub struct ZmqSink {
     pub bind: String,
     pub topic: String,
-    pub codec: Codec,
     socket: Option<PubSocket>,
     caps: Option<Caps>,
+    link: LinkCodec,
 }
 
 impl ZmqSink {
     pub fn new(bind: &str, topic: &str) -> Self {
-        Self { bind: bind.to_string(), topic: topic.to_string(), codec: Codec::None, socket: None, caps: None }
+        Self {
+            bind: bind.to_string(),
+            topic: topic.to_string(),
+            socket: None,
+            caps: None,
+            link: LinkCodec::new(Codec::None, ""),
+        }
     }
 
+    /// `Codec::Auto` gets a per-link adaptive state (keyed by topic) that
+    /// samples compression ratios into `codec.auto.zmqsink.<topic>.*`.
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.codec = codec;
+        self.link = LinkCodec::new(codec, &format!("zmqsink.{}", self.topic));
         self
+    }
+
+    /// The configured codec (`Auto` reports the policy, not the per-frame
+    /// resolution).
+    pub fn codec(&self) -> Codec {
+        self.link.codec()
     }
 
     /// Bound address (after start).
@@ -60,12 +74,15 @@ impl Element for ZmqSink {
                 let sock =
                     self.socket.as_ref().ok_or_else(|| Error::element(&ctx.name, "not started"))?;
                 b.meta.remote_base_universal = Some(ctx.clock.base_universal);
-                // Zero-copy hop: header + shared payload fan out to all
-                // subscribers without assembling a contiguous frame.
-                let frame = wire::encode_vectored(&b, self.caps.as_ref(), self.codec)
+                // Zero-copy hop: header + shared (possibly in-place
+                // deflated) payload fan out to all subscribers without
+                // assembling a contiguous frame.
+                let frame = self
+                    .link
+                    .encode(&b, self.caps.as_ref())
                     .map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global().counter(&format!("zmqsink.{}", ctx.name)).add_bytes(frame.len() as u64);
-                sock.send_parts(self.topic.as_bytes(), [frame.header, frame.payload]);
+                sock.send_frame(self.topic.as_bytes(), &frame);
                 Ok(())
             }
             Item::Eos => Ok(()),

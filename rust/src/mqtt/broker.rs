@@ -12,6 +12,12 @@
 //! `head ++ payload` with a vectored write, where the payload is the
 //! shared slice view produced by the connection's packet read — zero
 //! broker-side payload copies regardless of subscriber count.
+//!
+//! Compression is end-to-end, never hop-by-hop here: a publisher using
+//! `Codec::Zlib`/`Codec::Auto` deflates each frame exactly once, and the
+//! broker fans the *compressed* body out as the same shared bytes — it
+//! never inflates, re-deflates, or even parses the EdgeFrame payload
+//! (asserted by `bench_wirepath`'s fan-out deflate-ops audit).
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};

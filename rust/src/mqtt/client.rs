@@ -197,7 +197,10 @@ impl MqttClient {
 
     /// Publish an already-encoded [`WireFrame`] (QoS 0): PUBLISH head,
     /// frame header, and shared frame payload leave in one vectored write
-    /// — zero payload copies end-to-end.
+    /// — zero payload copies end-to-end. Compressed frames arrive here
+    /// already deflated in place (header + payload are two views into one
+    /// allocation), so the compressed hop costs one allocation total on
+    /// the send side.
     pub fn publish_frame(&self, topic_name: &str, frame: &WireFrame, retain: bool) -> Result<()> {
         topic::validate_name(topic_name)?;
         let head = packet::publish_head(topic_name, 0, retain, false, None, frame.len())?;

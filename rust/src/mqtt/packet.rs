@@ -106,6 +106,9 @@ pub fn put_remaining(out: &mut Vec<u8>, mut rem: usize) {
 /// header, remaining length, topic, optional packet id. Writing
 /// `head ++ payload` yields a complete wire packet — the hot path pairs
 /// this with a vectored write so the (shared) payload is never copied.
+/// The payload is opaque here: compressed EdgeFrames ride through with
+/// `payload_len` set to the *compressed* frame length, so the MQTT layer
+/// never inflates or re-deflates what the wire codec produced.
 pub fn publish_head(
     topic: &str,
     qos: u8,
@@ -124,7 +127,10 @@ pub fn publish_head(
     if var_len > MAX_REMAINING {
         return Err(Error::Mqtt(format!("packet too large: {var_len}")));
     }
-    let mut head = Vec::with_capacity(7 + topic.len());
+    // Worst case: flags(1) + remaining-length(4) + topic-len(2) + topic +
+    // packet-id(2); the old `7 + topic` capacity re-allocated on every
+    // multi-megabyte (multibyte remaining-length) QoS1 publish.
+    let mut head = Vec::with_capacity(9 + topic.len());
     let mut flags = 0x30 | (qos << 1);
     if retain {
         flags |= 0x01;

@@ -1,19 +1,46 @@
 //! Frame compression for inter-pipeline transmission (R3; gst-gz analog).
 //!
 //! zlib via `flate2`. Transport elements apply this per-frame when
-//! `compress=zlib` is configured; the wire flag travels in the EdgeFrame
-//! header so receivers self-configure.
+//! `compress=zlib` (or `compress=auto`) is configured; the wire flag
+//! travels in the EdgeFrame header so receivers self-configure.
+//!
+//! ## Streaming API (the one-allocation compressed hop)
+//!
+//! The hot path never materialises an intermediate compressed buffer:
+//!
+//! - [`deflate_into`] deflates a payload **directly onto the tail of the
+//!   frame being assembled**, so `wire::encode_vectored` emits a zlib
+//!   `WireFrame` whose header and compressed payload share one backing
+//!   allocation.
+//! - [`inflate_guarded`] inflates a received frame view into a single
+//!   output buffer, enforcing the decompressed-size limit *incrementally*
+//!   while the stream is inflating (a zlib bomb is rejected mid-stream,
+//!   and never causes more than `max` bytes of output to be reserved),
+//!   and rejecting truncated streams instead of silently returning a
+//!   prefix.
+//!
+//! [`AutoCodec`] implements the adaptive `Codec::Auto` mode: it samples
+//! the per-link compression ratio and stops paying for deflate when the
+//! stream is incompressible (pre-compressed video, encrypted blobs),
+//! re-probing periodically in case the content changes. Decisions are
+//! recorded in the per-link `metrics` registry.
 
-use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::{Error, Result};
 
 /// Compression codec for transport frames.
+///
+/// The `u8` value of `None`/`Zlib` is the on-wire codec flag. `Auto` is a
+/// *policy*, not a wire codec: encoders resolve it to `None` or `Zlib`
+/// per frame before the header is written, so it never travels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[repr(u8)]
 pub enum Codec {
     #[default]
-    None,
-    Zlib,
+    None = 0,
+    Zlib = 1,
+    Auto = 2,
 }
 
 impl Codec {
@@ -21,6 +48,7 @@ impl Codec {
         match self {
             Codec::None => "none",
             Codec::Zlib => "zlib",
+            Codec::Auto => "auto",
         }
     }
 
@@ -28,37 +56,230 @@ impl Codec {
         Ok(match s {
             "none" => Codec::None,
             "zlib" | "gz" => Codec::Zlib,
+            "auto" => Codec::Auto,
             other => return Err(Error::Serial(format!("unknown codec `{other}`"))),
         })
     }
 }
 
 /// Max decompressed size we accept (guards hostile frames): 256 MiB.
-const MAX_DECOMPRESSED: u64 = 256 * 1024 * 1024;
+pub const MAX_DECOMPRESSED: u64 = 256 * 1024 * 1024;
+
+/// Process-wide count of deflate operations (each call that compresses
+/// one payload). The broker fan-out bench asserts this grows once per
+/// *published* frame, never per subscriber.
+static DEFLATES: AtomicU64 = AtomicU64::new(0);
+
+/// Total deflate operations so far in this process.
+pub fn deflate_ops() -> u64 {
+    DEFLATES.load(Ordering::Relaxed)
+}
+
+/// Streaming compressor: zlib-deflate `data` appended directly onto
+/// `out` (the frame being assembled). Returns the number of compressed
+/// bytes written. No intermediate compressed buffer is allocated; `out`
+/// grows in place as the encoder needs space.
+pub fn deflate_into(out: &mut Vec<u8>, data: &[u8]) -> Result<usize> {
+    DEFLATES.fetch_add(1, Ordering::Relaxed);
+    let start = out.len();
+    let mut c = flate2::Compress::new(flate2::Compression::fast(), true);
+    loop {
+        // Guarantee spare output capacity so every iteration progresses.
+        if out.capacity() - out.len() < 1024 {
+            out.reserve((data.len() / 2 + 64).max(4096));
+        }
+        let consumed = c.total_in() as usize;
+        let status = c
+            .compress_vec(&data[consumed..], out, flate2::FlushCompress::Finish)
+            .map_err(|e| Error::Serial(format!("deflate: {e}")))?;
+        if status == flate2::Status::StreamEnd {
+            return Ok(out.len() - start);
+        }
+        // Status::Ok / Status::BufError: more output space needed; the
+        // reserve at the top of the loop provides it.
+    }
+}
+
+/// Streaming inflater: decompress a zlib stream (typically a payload view
+/// into a received frame) into one fresh buffer.
+///
+/// The `max` output limit is enforced *while* inflating: output capacity
+/// is grown geometrically but never reserved past `max`, and the moment
+/// the stream wants to produce byte `max + 1` the frame is rejected with
+/// [`Error::Serial`] — a zlib bomb cannot make us allocate its claimed
+/// size. Truncated streams (input exhausted before the stream end marker)
+/// are also rejected instead of yielding a silent prefix.
+pub fn inflate_guarded(data: &[u8], max: u64) -> Result<Vec<u8>> {
+    let mut d = flate2::Decompress::new(true);
+    let limit = max.min(usize::MAX as u64) as usize;
+    // Start from the input size, not the (attacker-controlled) claimed
+    // output size: a tiny bomb must not trigger a huge up-front reserve.
+    let initial = data.len().saturating_mul(3).max(64).min(limit.max(1));
+    let mut out: Vec<u8> = Vec::with_capacity(initial);
+    loop {
+        if out.len() == out.capacity() {
+            if out.len() >= limit {
+                return Err(Error::Serial(format!(
+                    "decompressed payload exceeds the {max}-byte limit"
+                )));
+            }
+            // reserve_exact, clamped to the limit: plain reserve's
+            // amortized doubling could hand back capacity past `limit`,
+            // and the inflater would happily fill it.
+            let grow = out.capacity().max(1024).min(limit - out.len());
+            out.reserve_exact(grow);
+        }
+        let consumed = d.total_in() as usize;
+        let produced = out.len();
+        let status = d
+            .decompress_vec(&data[consumed..], &mut out, flate2::FlushDecompress::Finish)
+            .map_err(|e| Error::Serial(format!("inflate: {e}")))?;
+        match status {
+            flate2::Status::StreamEnd => {
+                // Belt and braces: even if the allocator rounded a
+                // reserve up past `limit`, never return an over-budget
+                // payload.
+                if out.len() > limit {
+                    return Err(Error::Serial(format!(
+                        "decompressed payload exceeds the {max}-byte limit"
+                    )));
+                }
+                return Ok(out);
+            }
+            flate2::Status::Ok | flate2::Status::BufError => {
+                let stalled = d.total_in() as usize == consumed && out.len() == produced;
+                if stalled && out.len() < out.capacity() {
+                    // Spare output space, yet neither input consumed nor
+                    // output produced: the stream ended early.
+                    return Err(Error::Serial("truncated zlib stream".into()));
+                }
+            }
+        }
+    }
+}
 
 pub fn compress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
     match codec {
         Codec::None => Ok(data.to_vec()),
         Codec::Zlib => {
-            let mut enc = flate2::write::ZlibEncoder::new(
-                Vec::with_capacity(data.len() / 2 + 64),
-                flate2::Compression::fast(),
-            );
-            enc.write_all(data).map_err(|e| Error::Serial(e.to_string()))?;
-            enc.finish().map_err(|e| Error::Serial(e.to_string()))
+            let mut out = Vec::with_capacity(data.len() / 2 + 64);
+            deflate_into(&mut out, data)?;
+            Ok(out)
         }
+        Codec::Auto => Err(Error::Serial(
+            "Codec::Auto is a policy, not a wire codec; resolve it before compressing".into(),
+        )),
     }
 }
 
 pub fn decompress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
     match codec {
         Codec::None => Ok(data.to_vec()),
-        Codec::Zlib => {
-            let mut dec = flate2::read::ZlibDecoder::new(data).take(MAX_DECOMPRESSED);
-            let mut out = Vec::with_capacity(data.len() * 2);
-            dec.read_to_end(&mut out).map_err(|e| Error::Serial(e.to_string()))?;
-            Ok(out)
+        Codec::Zlib => inflate_guarded(data, MAX_DECOMPRESSED),
+        Codec::Auto => Err(Error::Serial(
+            "Codec::Auto is a policy, not a wire codec; it never appears on received frames".into(),
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive codec (Codec::Auto)
+// ---------------------------------------------------------------------------
+
+/// Per-link adaptive codec state backing `Codec::Auto`.
+///
+/// Strategy: keep compressing while deflate earns its keep. After
+/// `strike_limit` consecutive frames whose compressed/raw ratio is at or
+/// above `max_ratio` (incompressible content — pre-compressed video,
+/// noise, ciphertext), fall back to `Codec::None` and stop paying for
+/// deflate. While in pass-through mode, re-probe one frame every
+/// `probe_interval` frames; a good ratio switches compression back on.
+///
+/// Every sampled ratio and every mode switch is recorded in the global
+/// [`crate::metrics`] registry under `codec.auto.<link>.*` so operators
+/// can see what each link decided and why.
+pub struct AutoCodec {
+    compressing: bool,
+    strikes: u32,
+    frames_since_probe: u64,
+    /// Ratios at or above this count as "not worth compressing".
+    pub max_ratio: f64,
+    /// Consecutive bad ratios before falling back to `Codec::None`.
+    pub strike_limit: u32,
+    /// Pass-through frames between re-probes.
+    pub probe_interval: u64,
+    // Metric handles resolved once at construction — the per-frame cost
+    // of recording is an atomic op, not a format!+registry lookup.
+    m_ratio: std::sync::Arc<crate::metrics::Histogram>,
+    m_zlib_frames: std::sync::Arc<crate::metrics::Counter>,
+    m_none_frames: std::sync::Arc<crate::metrics::Counter>,
+    m_to_none: std::sync::Arc<crate::metrics::Counter>,
+    m_to_zlib: std::sync::Arc<crate::metrics::Counter>,
+}
+
+impl AutoCodec {
+    pub fn new(link: &str) -> Self {
+        let m = crate::metrics::global();
+        Self {
+            compressing: true,
+            strikes: 0,
+            frames_since_probe: 0,
+            max_ratio: 0.9,
+            strike_limit: 3,
+            probe_interval: 64,
+            m_ratio: m.histogram(&format!("codec.auto.{link}.ratio")),
+            m_zlib_frames: m.counter(&format!("codec.auto.{link}.zlib_frames")),
+            m_none_frames: m.counter(&format!("codec.auto.{link}.none_frames")),
+            m_to_none: m.counter(&format!("codec.auto.{link}.to_none")),
+            m_to_zlib: m.counter(&format!("codec.auto.{link}.to_zlib")),
         }
+    }
+
+    /// Codec to use for the next frame (Zlib while the link compresses
+    /// well, None otherwise, with a periodic Zlib probe).
+    pub fn next_codec(&mut self) -> Codec {
+        if self.compressing {
+            return Codec::Zlib;
+        }
+        self.frames_since_probe += 1;
+        if self.frames_since_probe >= self.probe_interval {
+            self.frames_since_probe = 0;
+            Codec::Zlib
+        } else {
+            Codec::None
+        }
+    }
+
+    /// Record the outcome of a deflated frame (raw vs compressed bytes)
+    /// and update the mode.
+    pub fn record_zlib(&mut self, raw: usize, compressed: usize) {
+        let ratio = if raw == 0 { 1.0 } else { compressed as f64 / raw as f64 };
+        self.m_ratio.observe(ratio);
+        self.m_zlib_frames.inc();
+        if ratio >= self.max_ratio {
+            self.strikes = self.strikes.saturating_add(1);
+            if self.compressing && self.strikes >= self.strike_limit {
+                self.compressing = false;
+                self.frames_since_probe = 0;
+                self.m_to_none.inc();
+            }
+        } else {
+            self.strikes = 0;
+            if !self.compressing {
+                self.compressing = true;
+                self.m_to_zlib.inc();
+            }
+        }
+    }
+
+    /// Record a frame sent uncompressed in pass-through mode.
+    pub fn record_none(&mut self) {
+        self.m_none_frames.inc();
+    }
+
+    /// Is the link currently paying for deflate? (tests/benches)
+    pub fn is_compressing(&self) -> bool {
+        self.compressing
     }
 }
 
@@ -72,6 +293,7 @@ mod tests {
         assert_eq!(Codec::parse("none").unwrap(), Codec::None);
         assert_eq!(Codec::parse("zlib").unwrap(), Codec::Zlib);
         assert_eq!(Codec::parse("gz").unwrap(), Codec::Zlib);
+        assert_eq!(Codec::parse("auto").unwrap(), Codec::Auto);
         assert!(Codec::parse("lz99").is_err());
     }
 
@@ -80,6 +302,12 @@ mod tests {
         let data = vec![1u8, 2, 3];
         assert_eq!(compress(Codec::None, &data).unwrap(), data);
         assert_eq!(decompress(Codec::None, &data).unwrap(), data);
+    }
+
+    #[test]
+    fn auto_is_not_a_wire_codec() {
+        assert!(compress(Codec::Auto, &[1, 2, 3]).is_err());
+        assert!(decompress(Codec::Auto, &[1, 2, 3]).is_err());
     }
 
     #[test]
@@ -106,7 +334,109 @@ mod tests {
     }
 
     #[test]
+    fn deflate_into_appends_in_place() {
+        let mut frame = b"HEADER".to_vec();
+        let data = vec![9u8; 50_000];
+        let n = deflate_into(&mut frame, &data).unwrap();
+        assert_eq!(frame.len(), 6 + n);
+        assert_eq!(&frame[..6], b"HEADER");
+        assert_eq!(inflate_guarded(&frame[6..], MAX_DECOMPRESSED).unwrap(), data);
+    }
+
+    #[test]
+    fn deflate_ops_counts_compressions() {
+        let before = deflate_ops();
+        let _ = compress(Codec::Zlib, &[1, 2, 3]).unwrap();
+        assert!(deflate_ops() > before);
+    }
+
+    #[test]
     fn corrupt_stream_errors() {
         assert!(decompress(Codec::Zlib, &[1, 2, 3, 4]).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let data = vec![5u8; 20_000];
+        let c = compress(Codec::Zlib, &data).unwrap();
+        for cut in [1, c.len() / 2, c.len() - 1] {
+            let e = inflate_guarded(&c[..cut], MAX_DECOMPRESSED).unwrap_err();
+            assert!(matches!(e, Error::Serial(_)), "cut at {cut}: {e}");
+        }
+        assert!(inflate_guarded(&[], MAX_DECOMPRESSED).is_err());
+    }
+
+    #[test]
+    fn bomb_rejected_mid_stream() {
+        // 4 MiB of zeros deflates to a few KiB; inflating under a 64 KiB
+        // limit must fail once the limit is crossed, not after expanding
+        // the whole stream.
+        let raw = vec![0u8; 4 * 1024 * 1024];
+        let c = compress(Codec::Zlib, &raw).unwrap();
+        assert!(c.len() < 64 * 1024);
+        let e = inflate_guarded(&c, 64 * 1024).unwrap_err();
+        assert!(e.to_string().contains("limit"), "{e}");
+        // A payload exactly at the limit still inflates.
+        let ok = vec![3u8; 64 * 1024];
+        let c2 = compress(Codec::Zlib, &ok).unwrap();
+        assert_eq!(inflate_guarded(&c2, 64 * 1024).unwrap(), ok);
+    }
+
+    #[test]
+    fn limit_is_exact_not_capacity_rounded() {
+        // Regression: Vec's amortized growth must not smuggle in output
+        // past the limit — one byte over is rejected, exactly-at passes,
+        // for an odd limit that no power-of-two capacity lands on.
+        let limit = 100_003u64;
+        let at = vec![9u8; limit as usize];
+        let over = vec![9u8; limit as usize + 1];
+        let c_at = compress(Codec::Zlib, &at).unwrap();
+        let c_over = compress(Codec::Zlib, &over).unwrap();
+        assert_eq!(inflate_guarded(&c_at, limit).unwrap(), at);
+        assert!(inflate_guarded(&c_over, limit).is_err());
+    }
+
+    #[test]
+    fn auto_codec_disables_on_incompressible_then_reprobes() {
+        let mut auto = AutoCodec::new("test-link");
+        assert!(auto.is_compressing());
+        // Incompressible frames: ratio ~1.0 -> strikes out after 3.
+        for _ in 0..auto.strike_limit {
+            assert_eq!(auto.next_codec(), Codec::Zlib);
+            auto.record_zlib(1000, 990);
+        }
+        assert!(!auto.is_compressing());
+        // Pass-through until the probe interval elapses.
+        let mut zlib_probes = 0;
+        for _ in 0..auto.probe_interval {
+            if auto.next_codec() == Codec::Zlib {
+                zlib_probes += 1;
+                // Content turned compressible: switch back on.
+                auto.record_zlib(1000, 100);
+            } else {
+                auto.record_none();
+            }
+        }
+        assert_eq!(zlib_probes, 1, "expected exactly one probe per interval");
+        assert!(auto.is_compressing(), "good probe ratio must re-enable zlib");
+        assert_eq!(auto.next_codec(), Codec::Zlib);
+    }
+
+    #[test]
+    fn auto_codec_stays_off_while_probes_fail() {
+        let mut auto = AutoCodec::new("test-link-2");
+        for _ in 0..auto.strike_limit {
+            auto.next_codec();
+            auto.record_zlib(100, 100);
+        }
+        assert!(!auto.is_compressing());
+        for _ in 0..(3 * auto.probe_interval) {
+            if auto.next_codec() == Codec::Zlib {
+                auto.record_zlib(100, 100); // probe still incompressible
+            } else {
+                auto.record_none();
+            }
+            assert!(!auto.is_compressing());
+        }
     }
 }

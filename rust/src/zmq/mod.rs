@@ -154,6 +154,14 @@ impl PubSocket {
         self.send_parts(topic, [Bytes::copy_from_slice(payload), Bytes::new()]);
     }
 
+    /// Publish an encoded [`crate::serial::wire::WireFrame`]: the frame's
+    /// header and payload fan out as shared parts. For a compressed frame
+    /// both parts are views into ONE allocation, deflated exactly once by
+    /// the encoder regardless of subscriber count.
+    pub fn send_frame(&self, topic: &[u8], frame: &crate::serial::wire::WireFrame) {
+        self.send_parts(topic, [frame.header.clone(), frame.payload.clone()]);
+    }
+
     /// Publish shared payload parts to all subscribers whose prefix
     /// matches `topic` — the parts are concatenated on the wire and never
     /// duplicated per subscriber.

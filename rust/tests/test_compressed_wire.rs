@@ -1,0 +1,222 @@
+//! Compressed-hop invariants and hostile-input hardening for the
+//! streaming zlib wire path: single-allocation encode, guarded streaming
+//! decode (truncation, bombs, unknown codec flags), and `Codec::Auto`
+//! end-to-end behaviour.
+
+use std::time::Duration;
+
+use edgepipe::buffer::{bytes_copied, Buffer, Bytes};
+use edgepipe::caps::Caps;
+use edgepipe::mqtt::{Broker, ClientOptions, MqttClient};
+use edgepipe::serial::compress::{self, AutoCodec, Codec, MAX_DECOMPRESSED};
+use edgepipe::serial::wire;
+use edgepipe::util::rng::XorShift64;
+use edgepipe::util::Error;
+
+fn noise(n: usize, seed: u64) -> Vec<u8> {
+    let mut v = vec![0u8; n];
+    XorShift64::new(seed).fill_bytes(&mut v);
+    v
+}
+
+// ---------------------------------------------------------------------------
+// One-allocation invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zlib_encode_is_one_allocation_and_zero_counted_copies() {
+    let buf = Buffer::new(vec![7u8; 200_000]).with_pts(3);
+    let caps = Caps::video(64, 64, 30);
+    let before = bytes_copied();
+    let f = wire::encode_vectored(&buf, Some(&caps), Codec::Zlib).unwrap();
+    assert_eq!(bytes_copied(), before, "in-place deflate must not count payload copies");
+    assert!(f.header.same_backing(&f.payload), "header and compressed payload must share");
+    assert!(f.payload.len() < buf.len() / 10);
+}
+
+#[test]
+fn zlib_decode_streams_into_a_single_fresh_allocation() {
+    let buf = Buffer::new(vec![5u8; 100_000]);
+    let f = wire::encode_vectored(&buf, None, Codec::Zlib).unwrap();
+    let frame = Bytes::from(f.to_vec());
+    let before = bytes_copied();
+    let (out, _) = wire::decode_shared(&frame).unwrap();
+    assert_eq!(bytes_copied(), before, "streamed inflate must not count payload copies");
+    assert_eq!(&out.data[..], &buf.data[..]);
+    assert!(!out.data.same_backing(&frame), "inflated payload is its own allocation");
+}
+
+#[test]
+fn compressed_query_hop_roundtrips_through_stream_framing() {
+    let buf = Buffer::new(vec![9u8; 50_000]).with_pts(11);
+    let f = wire::encode_vectored(&buf, None, Codec::Zlib).unwrap();
+    let mut sock = Vec::new();
+    wire::write_frame_vectored(&mut sock, &f).unwrap();
+    let mut cur = std::io::Cursor::new(&sock[..]);
+    let received = wire::read_frame(&mut cur).unwrap();
+    let (out, _) = wire::decode_shared(&received).unwrap();
+    assert_eq!(&out.data[..], &buf.data[..]);
+    assert_eq!(out.pts, Some(11));
+}
+
+// ---------------------------------------------------------------------------
+// Hostile input
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_deflate_stream_is_serial_error() {
+    let data = vec![1u8; 40_000];
+    let c = compress::compress(Codec::Zlib, &data).unwrap();
+    for cut in [0, 1, c.len() / 3, c.len() - 1] {
+        match compress::inflate_guarded(&c[..cut], MAX_DECOMPRESSED) {
+            Err(Error::Serial(_)) => {}
+            other => panic!("cut {cut}: expected Error::Serial, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn truncated_compressed_wire_frame_is_serial_error() {
+    let buf = Buffer::new(vec![2u8; 30_000]);
+    let f = wire::encode_vectored(&buf, None, Codec::Zlib).unwrap();
+    let hlen = f.header.len();
+    let mut raw = f.to_vec();
+    // Chop the compressed tail but keep the declared payload length
+    // consistent, so the framing check passes and the inflater must
+    // detect the truncation itself.
+    raw.truncate(raw.len() - 5);
+    let plen = (f.payload.len() - 5) as u32;
+    raw[hlen - 4..hlen].copy_from_slice(&plen.to_le_bytes());
+    match wire::decode_shared(&Bytes::from(raw)) {
+        Err(Error::Serial(_)) => {}
+        other => panic!("expected Error::Serial, got {other:?}"),
+    }
+}
+
+#[test]
+fn zlib_bomb_is_rejected_mid_stream_without_inflating_it() {
+    // 8 MiB of zeros -> a few KiB of deflate. Inflating under a 256 KiB
+    // budget must fail as soon as the limit is crossed.
+    let zeros = vec![0u8; 8 * 1024 * 1024];
+    let c = compress::compress(Codec::Zlib, &zeros).unwrap();
+    assert!(c.len() < 64 * 1024, "bomb input should be tiny ({} bytes)", c.len());
+    match compress::inflate_guarded(&c, 256 * 1024) {
+        Err(Error::Serial(msg)) => assert!(msg.contains("limit"), "{msg}"),
+        other => panic!("expected Error::Serial, got {other:?}"),
+    }
+}
+
+#[test]
+fn garbage_compressed_payload_is_serial_error() {
+    // A structurally valid EdgeFrame whose "compressed" payload is noise.
+    let bogus = Buffer::new(noise(512, 3));
+    let f = wire::encode_vectored(&bogus, None, Codec::None).unwrap();
+    let mut raw = f.to_vec();
+    raw[6] = 1; // flip the codec flag to zlib; payload is not a zlib stream
+    match wire::decode_shared(&Bytes::from(raw)) {
+        Err(Error::Serial(_)) => {}
+        other => panic!("expected Error::Serial, got {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_codec_flag_byte_is_serial_error() {
+    let buf = Buffer::new(vec![1, 2, 3, 4]);
+    let f = wire::encode_vectored(&buf, None, Codec::None).unwrap();
+    for flag in [2u8, 3, 0x7F, 0xFF] {
+        let mut raw = f.to_vec();
+        raw[6] = flag;
+        match wire::decode_shared(&Bytes::from(raw.clone())) {
+            Err(Error::Serial(_)) => {}
+            other => panic!("flag {flag}: expected Error::Serial, got {other:?}"),
+        }
+        match wire::decode(&raw) {
+            Err(Error::Serial(_)) => {}
+            other => panic!("flag {flag}: expected Error::Serial, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Codec::Auto
+// ---------------------------------------------------------------------------
+
+#[test]
+fn auto_keeps_incompressible_payloads_shared() {
+    let buf = Buffer::new(noise(64 * 1024, 77));
+    let f = wire::encode_vectored(&buf, None, Codec::Auto).unwrap();
+    // The probe deflate didn't win, so the frame must be pass-through AND
+    // share the buffer's allocation (no wasted compressed copy).
+    assert!(f.payload.same_backing(&buf.data));
+    let (out, _) = wire::decode_shared(&Bytes::from(f.to_vec())).unwrap();
+    assert_eq!(&out.data[..], &buf.data[..]);
+}
+
+#[test]
+fn auto_link_state_learns_then_reprobes() {
+    let mut auto = AutoCodec::new("test.integration");
+    let caps = Caps::video(32, 32, 30);
+    let noisy = Buffer::new(noise(32 * 32 * 3, 5));
+    for _ in 0..10 {
+        wire::encode_vectored_auto(&noisy, Some(&caps), &mut auto).unwrap();
+    }
+    assert!(!auto.is_compressing(), "noise must switch the link to pass-through");
+    let tensorish = Buffer::new(vec![4u8; 32 * 32 * 3]);
+    for _ in 0..(auto.probe_interval + 2) {
+        wire::encode_vectored_auto(&tensorish, Some(&caps), &mut auto).unwrap();
+    }
+    assert!(auto.is_compressing(), "probe must re-enable zlib on compressible frames");
+    let f = wire::encode_vectored_auto(&tensorish, Some(&caps), &mut auto).unwrap();
+    assert!(f.payload.len() < tensorish.len(), "re-enabled link must compress again");
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end over a real broker
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compressed_fanout_shares_one_compressed_body() {
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let addr = broker.addr().to_string();
+    let n_subs = 3;
+    let mut rxs = Vec::new();
+    let mut subs = Vec::new();
+    for i in 0..n_subs {
+        let c = MqttClient::connect(
+            &addr,
+            ClientOptions { client_id: format!("gz-sub-{i}"), ..Default::default() },
+        )
+        .unwrap();
+        rxs.push(c.subscribe("gz/fan").unwrap());
+        subs.push(c);
+    }
+    let publ = MqttClient::connect(
+        &addr,
+        ClientOptions { client_id: "gz-pub".into(), ..Default::default() },
+    )
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+
+    let buf = Buffer::new(vec![6u8; 100_000]).with_pts(1);
+    let caps = Caps::video(64, 64, 30);
+    let frames = 5;
+    for _ in 0..frames {
+        let f = wire::encode_vectored(&buf, Some(&caps), Codec::Zlib).unwrap();
+        assert!(f.header.same_backing(&f.payload));
+        publ.publish_frame("gz/fan", &f, false).unwrap();
+    }
+    for rx in &rxs {
+        for _ in 0..frames {
+            let msg = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+            // The wire carried the compressed frame (much smaller than raw).
+            assert!(msg.payload.len() < buf.len() / 10);
+            let (out, c) = wire::decode_shared(&msg.payload).unwrap();
+            assert_eq!(&out.data[..], &buf.data[..]);
+            assert_eq!(c.unwrap(), caps);
+        }
+    }
+    publ.disconnect();
+    for c in &subs {
+        c.disconnect();
+    }
+}

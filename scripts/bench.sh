@@ -2,15 +2,40 @@
 # Run the wire-path bench suite with short CI-friendly windows and write
 # BENCH_wirepath.json at the repo root (override window/runs/out via
 # EDGEPIPE_BENCH_SECS / EDGEPIPE_BENCH_RUNS / EDGEPIPE_BENCH_OUT).
+#
+# The report is written atomically: the bench emits into a temp file and
+# only a fully successful run replaces the previous report. A bench that
+# fails partway (budget assertion, panic, build error) exits non-zero and
+# leaves the old BENCH_wirepath.json untouched.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 
 export EDGEPIPE_BENCH_SECS="${EDGEPIPE_BENCH_SECS:-2}"
 export EDGEPIPE_BENCH_RUNS="${EDGEPIPE_BENCH_RUNS:-1}"
-export EDGEPIPE_BENCH_OUT="${EDGEPIPE_BENCH_OUT:-$repo_root/BENCH_wirepath.json}"
+out="${EDGEPIPE_BENCH_OUT:-$repo_root/BENCH_wirepath.json}"
+# Canonicalize: the bench runs from rust/, so a relative EDGEPIPE_BENCH_OUT
+# would otherwise resolve against a different directory than the mktemp.
+case "$out" in
+  /*) ;;
+  *) out="$(pwd)/$out" ;;
+esac
+
+tmp="$(mktemp "${out}.XXXXXX")"
+cleanup() { rm -f "$tmp"; }
+trap cleanup EXIT
 
 cd "$repo_root/rust"
-cargo bench --bench bench_wirepath
+if ! EDGEPIPE_BENCH_OUT="$tmp" cargo bench --bench bench_wirepath; then
+  echo "bench_wirepath failed; previous report left untouched: $out" >&2
+  exit 1
+fi
 
-echo "bench report: $EDGEPIPE_BENCH_OUT"
+if [ ! -s "$tmp" ]; then
+  echo "bench_wirepath exited 0 but wrote no report; previous report left untouched: $out" >&2
+  exit 1
+fi
+
+mv "$tmp" "$out"
+trap - EXIT
+echo "bench report: $out"
