@@ -3,13 +3,34 @@
 //! One [`Inbox`] per element covers all its sink pads under a single lock
 //! so a consumer can wait on "any pad has data" (needed by mux/compositor)
 //! while producers get per-pad bounded queues with backpressure or leak.
+//!
+//! Two consumer/producer disciplines share the same queues:
+//!
+//! - **Thread mode** (blocking): `push` applies backpressure by waiting on
+//!   a condvar; `pop_any` blocks until an item arrives.
+//! - **Task mode** (cooperative, used by the worker-pool scheduler in
+//!   [`crate::element::sched`]): `try_pop_any`/`push_reserved` never
+//!   block. A full or empty queue parks the *task* — the peer re-enqueues
+//!   it through a registered [`Waker`] — instead of tying a condvar to a
+//!   pool worker. `try_reserve` grants one output slot ahead of time so a
+//!   pooled producer knows it can emit without blocking mid-`handle`.
+//!
+//! Both disciplines interoperate on one inbox: reserved slots count
+//! against capacity for blocking producers too, so the configured bound
+//! is never exceeded no matter who is pushing.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::element::Item;
 use crate::util::{Error, Result};
+
+/// Callback re-enqueueing a parked scheduler task. Registered wakers are
+/// consumed (fired once) on the next push / pop / close that makes the
+/// awaited transition possible; spurious fires are allowed — the woken
+/// task re-checks the queue state and re-parks if nothing changed.
+pub type Waker = Arc<dyn Fn() + Send + Sync>;
 
 /// Overflow policy of a link queue (GStreamer `queue leaky=` analog).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -49,18 +70,64 @@ impl Default for QueueCfg {
     }
 }
 
+/// Result of a non-blocking pop.
+#[derive(Debug)]
+pub enum TryPop {
+    /// `(pad, item)` — an item was dequeued.
+    Item(usize, Item),
+    /// Nothing queued right now; more may arrive.
+    Empty,
+    /// Closed or every pad is EOS and drained — no item will ever arrive.
+    Done,
+}
+
+/// Non-destructive variant of [`TryPop`] (used to re-check after waker
+/// registration without popping an item the caller can't process yet).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PollState {
+    Ready,
+    Empty,
+    Done,
+}
+
+/// Result of [`Inbox::try_reserve`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reserve {
+    /// One slot reserved; consume it with [`Inbox::push_reserved`] or
+    /// return it with [`Inbox::unreserve`].
+    Counted,
+    /// The pad never blocks (leaky policy, or closed — the push itself
+    /// will surface closure); nothing was counted.
+    NoNeed,
+    /// No slot available; register a producer waker and park.
+    Full,
+}
+
 struct PadQueue {
     items: VecDeque<Item>,
     buffered: usize, // count of Item::Buffer in `items`
+    /// Output slots promised to pooled producers (Leaky::No pads only);
+    /// counts against `capacity` for every producer discipline.
+    reserved: usize,
     eos: bool,
     cfg: QueueCfg,
     dropped: u64,
+    /// Pooled producers parked on this pad, fired when a slot frees.
+    producer_wakers: Vec<Waker>,
 }
 
 struct Shared {
     pads: Vec<PadQueue>,
     closed: bool,
     rr_next: usize,
+    /// The (single) pooled consumer parked on "any pad has data".
+    consumer_waker: Option<Waker>,
+}
+
+impl Shared {
+    fn take_producer_wakers(&mut self, pad: usize) -> Vec<Waker> {
+        std::mem::take(&mut self.pads[pad].producer_wakers)
+    }
 }
 
 /// Multi-pad bounded inbox.
@@ -70,13 +137,37 @@ pub struct Inbox {
     not_full: Condvar,
 }
 
+fn fire(waker: Option<Waker>) {
+    if let Some(w) = waker {
+        w();
+    }
+}
+
+fn fire_all(wakers: Vec<Waker>) {
+    for w in wakers {
+        w();
+    }
+}
+
 impl Inbox {
     pub fn new(cfgs: Vec<QueueCfg>) -> Self {
         let pads = cfgs
             .into_iter()
-            .map(|cfg| PadQueue { items: VecDeque::new(), buffered: 0, eos: false, cfg, dropped: 0 })
+            .map(|cfg| PadQueue {
+                items: VecDeque::new(),
+                buffered: 0,
+                reserved: 0,
+                eos: false,
+                cfg,
+                dropped: 0,
+                producer_wakers: Vec::new(),
+            })
             .collect();
-        Inbox { shared: Mutex::new(Shared { pads, closed: false, rr_next: 0 }), not_empty: Condvar::new(), not_full: Condvar::new() }
+        Inbox {
+            shared: Mutex::new(Shared { pads, closed: false, rr_next: 0, consumer_waker: None }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
     }
 
     pub fn n_pads(&self) -> usize {
@@ -98,21 +189,30 @@ impl Inbox {
                 s.pads[pad].eos = true;
             }
             s.pads[pad].items.push_back(item);
+            let waker = s.consumer_waker.take();
+            drop(s);
             // Caps/EOS are rare control events that may change the
             // "all pads EOS" exit condition — wake every waiter.
             self.not_empty.notify_all();
+            fire(waker);
             return Ok(());
         }
         loop {
             let p = &mut s.pads[pad];
-            if p.buffered < p.cfg.capacity {
+            // Reserved slots belong to pooled producers; honouring them
+            // here keeps the configured capacity a hard bound even when
+            // thread and task producers share one pad.
+            if p.buffered + p.reserved < p.cfg.capacity {
                 p.items.push_back(item);
                 p.buffered += 1;
+                let waker = s.consumer_waker.take();
+                drop(s);
                 // One buffer satisfies one pop; notify_one avoids the
                 // thundering-herd wakeup storm under multi-producer load
                 // (verified by bench_multiclient). Each inbox has a single
                 // consumer thread, so one wakeup is always sufficient.
                 self.not_empty.notify_one();
+                fire(waker);
                 return Ok(());
             }
             match p.cfg.leaky {
@@ -129,7 +229,10 @@ impl Inbox {
                     }
                     p.items.push_back(item);
                     p.buffered += 1;
+                    let waker = s.consumer_waker.take();
+                    drop(s);
                     self.not_empty.notify_one();
+                    fire(waker);
                     return Ok(());
                 }
                 Leaky::No => {
@@ -147,29 +250,170 @@ impl Inbox {
         }
     }
 
+    /// Reserve one output slot on a pad ahead of a non-blocking push.
+    /// Leaky and closed pads never block, so nothing is counted for them.
+    pub fn try_reserve(&self, pad: usize) -> Reserve {
+        let mut s = self.shared.lock().unwrap();
+        if pad >= s.pads.len() || s.closed {
+            return Reserve::NoNeed; // the push itself will report the error
+        }
+        let p = &mut s.pads[pad];
+        if p.cfg.leaky != Leaky::No {
+            return Reserve::NoNeed;
+        }
+        if p.buffered + p.reserved < p.cfg.capacity {
+            p.reserved += 1;
+            Reserve::Counted
+        } else {
+            Reserve::Full
+        }
+    }
+
+    /// Return an unused counted reservation (frees the slot for peers).
+    pub fn unreserve(&self, pad: usize) {
+        let mut s = self.shared.lock().unwrap();
+        if pad >= s.pads.len() {
+            return;
+        }
+        if s.pads[pad].reserved > 0 {
+            s.pads[pad].reserved -= 1;
+        }
+        let wakers = s.take_producer_wakers(pad);
+        drop(s);
+        self.not_full.notify_all();
+        fire_all(wakers);
+    }
+
+    /// Non-blocking push consuming a reservation granted by
+    /// [`Inbox::try_reserve`]. Must only be called for buffers on
+    /// `Leaky::No` pads while holding a counted reservation; control
+    /// items and leaky pads take the plain [`Inbox::push`] path (which
+    /// never blocks for them). On a closed inbox the reservation is
+    /// released and the push errors, mirroring `push`.
+    pub fn push_reserved(&self, pad: usize, item: Item) -> Result<()> {
+        if !item.is_buffer() {
+            // Control items never block, so the plain path (which already
+            // owns the bounds/closed/EOS-flag/wakeup logic) is exact.
+            return self.push(pad, item);
+        }
+        let mut s = self.shared.lock().unwrap();
+        if pad >= s.pads.len() {
+            return Err(Error::Pipeline(format!("push to pad {pad} of {}", s.pads.len())));
+        }
+        if s.closed {
+            if s.pads[pad].reserved > 0 {
+                s.pads[pad].reserved -= 1;
+            }
+            let wakers = s.take_producer_wakers(pad);
+            drop(s);
+            self.not_full.notify_all();
+            fire_all(wakers);
+            return Err(Error::Pipeline("inbox closed".into()));
+        }
+        let p = &mut s.pads[pad];
+        debug_assert!(
+            p.cfg.leaky != Leaky::No || p.reserved > 0,
+            "push_reserved without a reservation"
+        );
+        if p.cfg.leaky == Leaky::No && p.reserved > 0 {
+            p.reserved -= 1;
+        }
+        p.items.push_back(item);
+        p.buffered += 1;
+        let waker = s.consumer_waker.take();
+        drop(s);
+        self.not_empty.notify_one();
+        fire(waker);
+        Ok(())
+    }
+
+    /// Non-blocking escape hatch for pooled producers pushing a buffer
+    /// WITHOUT a reservation onto a full `Leaky::No` pad (an element that
+    /// emits more than one buffer per link per input item). Enqueues even
+    /// beyond capacity: a transient, bounded overflow is strictly better
+    /// than parking a condvar inside a pool worker, which could wedge
+    /// every pipeline sharing the pool (all K workers blocked while the
+    /// draining consumers sit in the ready queue). Leaky pads and control
+    /// items never need this — the plain `push` already cannot block for
+    /// them.
+    pub fn push_relaxed(&self, pad: usize, item: Item) -> Result<()> {
+        let mut s = self.shared.lock().unwrap();
+        if pad >= s.pads.len() {
+            return Err(Error::Pipeline(format!("push to pad {pad} of {}", s.pads.len())));
+        }
+        if s.closed {
+            return Err(Error::Pipeline("inbox closed".into()));
+        }
+        if !item.is_buffer() {
+            drop(s);
+            return self.push(pad, item);
+        }
+        let p = &mut s.pads[pad];
+        p.items.push_back(item);
+        p.buffered += 1;
+        let waker = s.consumer_waker.take();
+        drop(s);
+        self.not_empty.notify_one();
+        fire(waker);
+        Ok(())
+    }
+
+    /// Register a pooled producer parked on `pad` being full. Fired (and
+    /// cleared) when a slot frees or the inbox closes.
+    pub fn register_producer_waker(&self, pad: usize, w: Waker) {
+        let mut s = self.shared.lock().unwrap();
+        if pad < s.pads.len() {
+            s.pads[pad].producer_wakers.push(w);
+        }
+    }
+
+    /// Register the pooled consumer parked on "all pads empty". Fired
+    /// (and cleared) on the next enqueue or close.
+    pub fn set_consumer_waker(&self, w: Waker) {
+        self.shared.lock().unwrap().consumer_waker = Some(w);
+    }
+
+    fn pop_locked(s: &mut Shared) -> Option<(usize, Item, Vec<Waker>)> {
+        let n = s.pads.len();
+        if n == 0 {
+            return None;
+        }
+        let start = s.rr_next % n;
+        for off in 0..n {
+            let pad = (start + off) % n;
+            if let Some(item) = s.pads[pad].items.pop_front() {
+                let mut wakers = Vec::new();
+                if item.is_buffer() {
+                    s.pads[pad].buffered -= 1;
+                    wakers = s.take_producer_wakers(pad);
+                }
+                s.rr_next = (pad + 1) % n;
+                return Some((pad, item, wakers));
+            }
+        }
+        None
+    }
+
+    fn done_locked(s: &Shared) -> bool {
+        s.closed || (!s.pads.is_empty() && s.pads.iter().all(|p| p.eos))
+    }
+
     /// Pop the next item from any pad (round-robin across non-empty pads).
     /// Returns None when the inbox is closed or all pads are EOS-drained.
     pub fn pop_any(&self) -> Option<(usize, Item)> {
         let mut s = self.shared.lock().unwrap();
         loop {
-            let n = s.pads.len();
-            if n == 0 {
+            if s.pads.is_empty() {
                 return None;
             }
-            let start = s.rr_next % n;
-            for off in 0..n {
-                let pad = (start + off) % n;
-                if let Some(item) = s.pads[pad].items.pop_front() {
-                    if item.is_buffer() {
-                        s.pads[pad].buffered -= 1;
-                    }
-                    s.rr_next = (pad + 1) % n;
-                    self.not_full.notify_all();
-                    return Some((pad, item));
-                }
+            if let Some((pad, item, wakers)) = Self::pop_locked(&mut s) {
+                drop(s);
+                self.not_full.notify_all();
+                fire_all(wakers);
+                return Some((pad, item));
             }
             // All queues empty: finished if closed or every pad hit EOS.
-            if s.closed || s.pads.iter().all(|p| p.eos) {
+            if Self::done_locked(&s) {
                 return None;
             }
             s = self.not_empty.wait(s).ok()?;
@@ -181,20 +425,13 @@ impl Inbox {
         let deadline = std::time::Instant::now() + timeout;
         let mut s = self.shared.lock().unwrap();
         loop {
-            let n = s.pads.len();
-            let start = if n == 0 { 0 } else { s.rr_next % n };
-            for off in 0..n {
-                let pad = (start + off) % n;
-                if let Some(item) = s.pads[pad].items.pop_front() {
-                    if item.is_buffer() {
-                        s.pads[pad].buffered -= 1;
-                    }
-                    s.rr_next = (pad + 1) % n;
-                    self.not_full.notify_all();
-                    return Some(Some((pad, item)));
-                }
+            if let Some((pad, item, wakers)) = Self::pop_locked(&mut s) {
+                drop(s);
+                self.not_full.notify_all();
+                fire_all(wakers);
+                return Some(Some((pad, item)));
             }
-            if s.closed || (n > 0 && s.pads.iter().all(|p| p.eos)) {
+            if Self::done_locked(&s) {
                 return None;
             }
             let now = std::time::Instant::now();
@@ -206,12 +443,56 @@ impl Inbox {
         }
     }
 
+    /// Non-blocking pop for pooled consumers. Preserves `pop_any`'s
+    /// round-robin order and drain-before-done semantics exactly.
+    pub fn try_pop_any(&self) -> TryPop {
+        let mut s = self.shared.lock().unwrap();
+        if s.pads.is_empty() {
+            return TryPop::Done;
+        }
+        if let Some((pad, item, wakers)) = Self::pop_locked(&mut s) {
+            drop(s);
+            self.not_full.notify_all();
+            fire_all(wakers);
+            return TryPop::Item(pad, item);
+        }
+        if Self::done_locked(&s) {
+            TryPop::Done
+        } else {
+            TryPop::Empty
+        }
+    }
+
+    /// Non-destructive readiness probe (waker re-check before parking).
+    pub fn poll_state(&self) -> PollState {
+        let s = self.shared.lock().unwrap();
+        if s.pads.is_empty() {
+            return PollState::Done;
+        }
+        if s.pads.iter().any(|p| !p.items.is_empty()) {
+            return PollState::Ready;
+        }
+        if Self::done_locked(&s) {
+            PollState::Done
+        } else {
+            PollState::Empty
+        }
+    }
+
     /// Unblock all producers/consumers permanently.
     pub fn close(&self) {
         let mut s = self.shared.lock().unwrap();
         s.closed = true;
+        let consumer = s.consumer_waker.take();
+        let mut producers = Vec::new();
+        for pad in 0..s.pads.len() {
+            producers.append(&mut s.take_producer_wakers(pad));
+        }
+        drop(s);
         self.not_empty.notify_all();
         self.not_full.notify_all();
+        fire(consumer);
+        fire_all(producers);
     }
 
     /// Buffers dropped by leaky policies on a pad (stats).
@@ -225,12 +506,19 @@ impl Inbox {
         let s = self.shared.lock().unwrap();
         s.pads.get(pad).map(|p| p.buffered).unwrap_or(0)
     }
+
+    /// Outstanding counted reservations on a pad (stats/tests).
+    pub fn reserved(&self, pad: usize) -> usize {
+        let s = self.shared.lock().unwrap();
+        s.pads.get(pad).map(|p| p.reserved).unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::buffer::Buffer;
+    use std::sync::atomic::{AtomicU64, Ordering};
     use std::sync::Arc;
 
     fn buf(n: u8) -> Item {
@@ -305,13 +593,27 @@ mod tests {
     }
 
     #[test]
+    fn blocking_push_respects_reservations() {
+        // A counted reservation withholds the slot from blocking pushers
+        // until it is consumed or returned.
+        let ib = Arc::new(Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::No }]));
+        assert_eq!(ib.try_reserve(0), Reserve::Counted);
+        let ib2 = ib.clone();
+        let h = std::thread::spawn(move || ib2.push(0, buf(1)));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(ib.depth(0), 0); // pusher is parked on the reserved slot
+        ib.unreserve(0);
+        h.join().unwrap().unwrap();
+        assert_eq!(ib.depth(0), 1);
+    }
+
+    #[test]
     fn pop_any_round_robins_pads() {
         let ib = Inbox::new(vec![QueueCfg::default(), QueueCfg::default()]);
         ib.push(0, buf(10)).unwrap();
         ib.push(1, buf(20)).unwrap();
         ib.push(0, buf(11)).unwrap();
-        let pads: Vec<usize> =
-            (0..3).map(|_| ib.pop_any().unwrap().0).collect();
+        let pads: Vec<usize> = (0..3).map(|_| ib.pop_any().unwrap().0).collect();
         assert!(pads.contains(&0) && pads.contains(&1));
     }
 
@@ -379,5 +681,109 @@ mod tests {
         ib.push(0, buf(1)).unwrap();
         ib.push(0, Item::Caps(crate::caps::Caps::any())).unwrap();
         assert_eq!(ib.depth(0), 1);
+    }
+
+    // -- task-mode (non-blocking) API ------------------------------------
+
+    #[test]
+    fn try_pop_matches_pop_semantics() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        assert!(matches!(ib.try_pop_any(), TryPop::Empty));
+        ib.push(0, buf(1)).unwrap();
+        ib.push(0, Item::Eos).unwrap();
+        assert!(matches!(ib.try_pop_any(), TryPop::Item(0, Item::Buffer(_))));
+        assert!(matches!(ib.try_pop_any(), TryPop::Item(0, Item::Eos)));
+        assert!(matches!(ib.try_pop_any(), TryPop::Done));
+    }
+
+    #[test]
+    fn reserve_accounting() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 2, leaky: Leaky::No }]);
+        assert_eq!(ib.try_reserve(0), Reserve::Counted);
+        assert_eq!(ib.try_reserve(0), Reserve::Counted);
+        assert_eq!(ib.try_reserve(0), Reserve::Full);
+        assert_eq!(ib.reserved(0), 2);
+        ib.unreserve(0);
+        assert_eq!(ib.try_reserve(0), Reserve::Counted);
+        ib.push_reserved(0, buf(1)).unwrap();
+        ib.push_reserved(0, buf(2)).unwrap();
+        assert_eq!(ib.reserved(0), 0);
+        assert_eq!(ib.depth(0), 2);
+        assert_eq!(ib.try_reserve(0), Reserve::Full);
+    }
+
+    #[test]
+    fn leaky_pads_never_need_reservations() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::Downstream }]);
+        assert_eq!(ib.try_reserve(0), Reserve::NoNeed);
+    }
+
+    #[test]
+    fn push_relaxed_exceeds_capacity_without_blocking() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::No }]);
+        ib.push(0, buf(1)).unwrap();
+        ib.push_relaxed(0, buf(2)).unwrap(); // full: over-capacity enqueue
+        assert_eq!(ib.depth(0), 2);
+        assert!(matches!(ib.pop_any().unwrap().1, Item::Buffer(_)));
+        assert!(matches!(ib.pop_any().unwrap().1, Item::Buffer(_)));
+        ib.close();
+        assert!(ib.push_relaxed(0, buf(3)).is_err());
+    }
+
+    #[test]
+    fn push_reserved_on_closed_releases_and_errors() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::No }]);
+        assert_eq!(ib.try_reserve(0), Reserve::Counted);
+        ib.close();
+        assert!(ib.push_reserved(0, buf(1)).is_err());
+        assert_eq!(ib.reserved(0), 0);
+    }
+
+    #[test]
+    fn consumer_waker_fires_on_push() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        ib.set_consumer_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        ib.push(0, buf(1)).unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        // Consumed: a second push does not re-fire.
+        ib.push(0, buf(2)).unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn producer_waker_fires_on_pop_and_close() {
+        let ib = Inbox::new(vec![QueueCfg { capacity: 1, leaky: Leaky::No }]);
+        ib.push(0, buf(1)).unwrap();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        ib.register_producer_waker(0, Arc::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        let _ = ib.pop_any().unwrap(); // space freed -> waker fires
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+        let h2 = hits.clone();
+        ib.register_producer_waker(0, Arc::new(move || {
+            h2.fetch_add(1, Ordering::Relaxed);
+        }));
+        ib.close();
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn poll_state_tracks_readiness() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        assert_eq!(ib.poll_state(), PollState::Empty);
+        ib.push(0, buf(1)).unwrap();
+        assert_eq!(ib.poll_state(), PollState::Ready);
+        let _ = ib.pop_any().unwrap();
+        assert_eq!(ib.poll_state(), PollState::Empty);
+        ib.push(0, Item::Eos).unwrap();
+        assert_eq!(ib.poll_state(), PollState::Ready); // EOS still drains
+        let _ = ib.pop_any();
+        assert_eq!(ib.poll_state(), PollState::Done);
     }
 }

@@ -1,9 +1,13 @@
 //! The element model: pipe-and-filter nodes exchanging [`Item`]s over
 //! bounded link queues (GStreamer pads/queues analog).
 //!
-//! Each element runs on its own thread. Items flow push-based; caps are
-//! sticky in-band events preceding buffers; EOS propagates per pad and is
-//! forwarded downstream by the runner once every sink pad saw it.
+//! Execution is hybrid (see [`sched`]): `Compute` elements run as
+//! cooperative tasks on a process-wide worker pool, so pipeline count
+//! scales independently of thread count; `Blocking` elements (sockets,
+//! app channels, live pacing) keep a dedicated thread. Items flow
+//! push-based on both paths; caps are sticky in-band events preceding
+//! buffers; EOS propagates per pad and is forwarded downstream by the
+//! runner once every sink pad saw it.
 //!
 //! Leaky queues (the paper's `queue leaky=2` tuning knob, §5.1) drop
 //! *buffers* under overflow but never caps/EOS, so negotiation and
@@ -11,9 +15,11 @@
 
 pub mod inbox;
 pub mod registry;
+pub mod sched;
 
 pub use inbox::{Inbox, Leaky, QueueCfg};
 pub use registry::{ElementFactory, PipelineEnv, Registry};
+pub use sched::{Progress, Workload};
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -21,6 +27,8 @@ use std::sync::Arc;
 use crate::buffer::Buffer;
 use crate::caps::Caps;
 use crate::clock::PipelineClock;
+use crate::element::inbox::{Reserve, Waker};
+use crate::log_warn;
 use crate::util::Result;
 
 /// One unit travelling over a link.
@@ -68,6 +76,12 @@ pub struct Ctx {
     bus: Sender<BusMsg>,
     /// Cooperative stop flag (sources poll it).
     pub stop: Arc<std::sync::atomic::AtomicBool>,
+    /// Counted output-slot reservations per (src pad, link) when the
+    /// element runs as a pooled task; None on a dedicated thread.
+    rsv: Option<Vec<Vec<bool>>>,
+    /// One-shot flag: a pooled task pushed a buffer without a reserved
+    /// slot onto a full link (multi-buffer emitter — should be Blocking).
+    warned_unreserved: bool,
 }
 
 impl Ctx {
@@ -78,7 +92,7 @@ impl Ctx {
         bus: Sender<BusMsg>,
         stop: Arc<std::sync::atomic::AtomicBool>,
     ) -> Self {
-        Self { name, clock, downstream, bus, stop }
+        Self { name, clock, downstream, bus, stop, rsv: None, warned_unreserved: false }
     }
 
     /// True once the pipeline asked live sources to wind down.
@@ -86,9 +100,73 @@ impl Ctx {
         self.stop.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Switch pushes to the cooperative (reservation-consuming) protocol.
+    /// Called once by the scheduler when the element becomes a task.
+    pub(crate) fn enable_reservations(&mut self) {
+        self.rsv =
+            Some(self.downstream.outputs.iter().map(|links| vec![false; links.len()]).collect());
+    }
+
+    /// Reserve one output slot on every backpressured downstream link so
+    /// the next item can be pushed without blocking a pool worker.
+    /// Returns false when some link is full: a producer waker is left on
+    /// that inbox and every already-acquired slot is released first (no
+    /// hold-and-wait — two tasks fanning into each other's inboxes can
+    /// never deadlock on half-acquired reservations).
+    pub(crate) fn acquire_output_slots(&mut self, waker: &Waker) -> bool {
+        let Some(rsv) = self.rsv.as_mut() else { return true };
+        let outputs = &self.downstream.outputs;
+        for (pad, links) in outputs.iter().enumerate() {
+            for (i, (inbox, sink_pad)) in links.iter().enumerate() {
+                if rsv[pad][i] {
+                    continue;
+                }
+                match inbox.try_reserve(*sink_pad) {
+                    Reserve::Counted => rsv[pad][i] = true,
+                    Reserve::NoNeed => {}
+                    Reserve::Full => {
+                        inbox.register_producer_waker(*sink_pad, waker.clone());
+                        // Lost-wakeup guard: a slot may have freed between
+                        // the failed reserve and the registration.
+                        match inbox.try_reserve(*sink_pad) {
+                            Reserve::Counted => rsv[pad][i] = true,
+                            Reserve::NoNeed => {}
+                            Reserve::Full => {
+                                for (p2, l2) in outputs.iter().enumerate() {
+                                    for (i2, (ib2, sp2)) in l2.iter().enumerate() {
+                                        if rsv[p2][i2] {
+                                            rsv[p2][i2] = false;
+                                            ib2.unreserve(*sp2);
+                                        }
+                                    }
+                                }
+                                return false;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Return every slot still reserved (after an item that didn't push
+    /// to all links, or before parking) so peers aren't starved.
+    pub(crate) fn release_output_slots(&mut self) {
+        let Some(rsv) = self.rsv.as_mut() else { return };
+        for (pad, links) in self.downstream.outputs.iter().enumerate() {
+            for (i, (inbox, sink_pad)) in links.iter().enumerate() {
+                if rsv[pad][i] {
+                    rsv[pad][i] = false;
+                    inbox.unreserve(*sink_pad);
+                }
+            }
+        }
+    }
+
     /// Push an item out of `src_pad`, fanning out to all linked inboxes.
     /// Returns Err only when every downstream is gone (pipeline teardown).
-    pub fn push(&self, src_pad: usize, item: Item) -> Result<()> {
+    pub fn push(&mut self, src_pad: usize, item: Item) -> Result<()> {
         let Some(links) = self.downstream.outputs.get(src_pad) else {
             return Ok(()); // unlinked pad: drop silently (fakesink semantics)
         };
@@ -97,16 +175,54 @@ impl Ctx {
         }
         let mut alive = false;
         let last = links.len() - 1;
-        for (i, (inbox, pad)) in links[..last].iter().enumerate() {
-            let _ = i;
-            // Clone is cheap: buffer payloads are Arc-shared.
-            if inbox.push(*pad, item.clone()).is_ok() {
+        // Fan-out: clone for every link except the last, which consumes
+        // the item (buffer payloads are Arc-shared, so clones are cheap).
+        let mut item = Some(item);
+        for (i, (inbox, sink_pad)) in links.iter().enumerate() {
+            let it = if i == last {
+                item.take().expect("item consumed only by the last link")
+            } else {
+                item.as_ref().expect("item lives until the last link").clone()
+            };
+            // A pooled task pushes buffers through its pre-acquired slot
+            // (never blocks); control items and thread elements use the
+            // plain path.
+            let reserved = it.is_buffer() && self.rsv.as_ref().is_some_and(|r| r[src_pad][i]);
+            let pushed = if reserved {
+                if let Some(r) = self.rsv.as_mut() {
+                    r[src_pad][i] = false;
+                }
+                inbox.push_reserved(*sink_pad, it)
+            } else if it.is_buffer() && self.rsv.is_some() {
+                // Pooled task emitting more buffers than the one slot the
+                // scheduler reserved per link: grab a slot non-blockingly
+                // when one is free; a genuinely full link enqueues beyond
+                // capacity (`push_relaxed`) rather than parking a condvar
+                // inside a pool worker — with K such producers that would
+                // wedge the whole pool while the draining consumers wait
+                // in the ready queue. Warn once so the misclassified
+                // element (it should be Workload::Blocking) is visible.
+                match inbox.try_reserve(*sink_pad) {
+                    Reserve::Counted => inbox.push_reserved(*sink_pad, it),
+                    Reserve::NoNeed => inbox.push(*sink_pad, it),
+                    Reserve::Full => {
+                        if !self.warned_unreserved {
+                            self.warned_unreserved = true;
+                            log_warn!(
+                                "element",
+                                "{}: unreserved buffer push on a full link (transient over-capacity enqueue); multi-buffer emitters should be Workload::Blocking",
+                                self.name
+                            );
+                        }
+                        inbox.push_relaxed(*sink_pad, it)
+                    }
+                }
+            } else {
+                inbox.push(*sink_pad, it)
+            };
+            if pushed.is_ok() {
                 alive = true;
             }
-        }
-        let (inbox, pad) = &links[last];
-        if inbox.push(*pad, item).is_ok() {
-            alive = true;
         }
         if alive {
             Ok(())
@@ -116,11 +232,11 @@ impl Ctx {
     }
 
     /// Push a buffer out of pad 0 (the common case).
-    pub fn push_buffer(&self, buf: Buffer) -> Result<()> {
+    pub fn push_buffer(&mut self, buf: Buffer) -> Result<()> {
         self.push(0, Item::Buffer(buf))
     }
 
-    pub fn push_caps(&self, caps: Caps) -> Result<()> {
+    pub fn push_caps(&mut self, caps: Caps) -> Result<()> {
         self.push(0, Item::Caps(caps))
     }
 
@@ -129,7 +245,7 @@ impl Ctx {
     }
 
     /// Broadcast EOS on all src pads (runner calls this on teardown).
-    pub fn push_eos_all(&self) {
+    pub fn push_eos_all(&mut self) {
         for pad in 0..self.downstream.outputs.len() {
             let _ = self.push(pad, Item::Eos);
         }
@@ -152,8 +268,10 @@ impl Ctx {
     }
 }
 
-/// A pipeline element. Implementations are single-threaded (the runner
-/// gives each element its own thread) and communicate only via `Ctx`.
+/// A pipeline element. Implementations are single-threaded — the runner
+/// gives each element its own thread (`Workload::Blocking`) or drives it
+/// as a pooled task (`Workload::Compute`), never both at once — and
+/// communicate only via `Ctx`.
 pub trait Element: Send {
     /// Number of sink (input) pads. 0 = source element.
     fn n_sink_pads(&self) -> usize {
@@ -181,6 +299,13 @@ pub trait Element: Send {
         QueueCfg::default()
     }
 
+    /// Scheduling class: `Compute` (default) joins the worker pool;
+    /// override to `Blocking` when `start`/`handle`/`produce` may block
+    /// on sockets, app channels, or wall-clock pacing.
+    fn workload(&self) -> Workload {
+        Workload::Compute
+    }
+
     /// Called once before streaming starts.
     fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
         Ok(())
@@ -188,6 +313,15 @@ pub trait Element: Send {
 
     /// Handle one inbound item (non-source elements).
     fn handle(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<()>;
+
+    /// Non-blocking step model driven by both runners. The default
+    /// adapter wraps the push-based [`Element::handle`] so existing
+    /// elements keep compiling; override to yield the worker after a
+    /// bursty item (`NeedOutput`) or finish before EOS (`Done`).
+    fn process(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Progress> {
+        self.handle(pad, item, ctx)?;
+        Ok(Progress::Ready)
+    }
 
     /// Produce items (source elements). Return Ok(false) for natural EOS.
     fn produce(&mut self, _ctx: &mut Ctx) -> Result<bool> {

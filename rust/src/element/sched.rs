@@ -1,0 +1,464 @@
+//! Cooperative worker-pool scheduler: run N pipelines on K threads.
+//!
+//! The thread-per-element runner burns `pipelines x elements` OS threads
+//! before doing any work — the density bottleneck for low-power consumer
+//! devices hosting many concurrent AI pipelines (§2, §5.1 tuning). This
+//! module decouples pipeline count from thread count: a process-wide pool
+//! of K workers (`EDGEPIPE_WORKERS`, default `available_parallelism`)
+//! drives element state machines off a ready queue.
+//!
+//! Elements declare a [`Workload`] hint: `Compute` elements (converters,
+//! filters, mux/demux, tensor ops, runtime inference) become schedulable
+//! tasks; `Blocking` elements (socket-bound sources/sinks, app channels,
+//! live-paced capture) keep a dedicated thread exactly as before.
+//!
+//! A task never blocks a worker on queue state:
+//!
+//! - **Input**: [`Inbox::try_pop_any`] instead of the condvar pop; an
+//!   empty inbox parks the task with a consumer [`Waker`] that the next
+//!   push re-enqueues.
+//! - **Output**: before processing an item, the task reserves one slot on
+//!   every backpressured (`Leaky::No`) downstream link
+//!   ([`Ctx::acquire_output_slots`]); a full link parks the task with a
+//!   producer waker fired when the peer pops. Reservations already held
+//!   are released before parking (no hold-and-wait, hence no reservation
+//!   deadlock) and whenever the task parks, yields, or finishes. A slot
+//!   held across items within one turn is harmless: every sink pad has
+//!   exactly one producer (enforced by `Pipeline::link_pads`), so the
+//!   holder only ever gates itself.
+//!
+//! Leaky policies, capacity bounds, and caps/EOS ordering are enforced by
+//! the same [`Inbox`] code on both paths, so scheduler semantics match the
+//! condvar runner bit-for-bit.
+//!
+//! Observability: `sched.tasks` (spawned), `sched.parks` (task parked),
+//! `sched.steals` (task continued on a different worker than last time),
+//! `sched.polls` (step-loop iterations) in the global metrics registry.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+
+use crate::element::inbox::{PollState, TryPop, Waker};
+use crate::element::{Ctx, Element, EosTracker, Inbox, Item};
+use crate::log_debug;
+use crate::metrics::{self, Counter};
+
+/// Scheduling class of an element (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Workload {
+    /// CPU-bound, non-blocking callbacks: runs as a pooled task.
+    #[default]
+    Compute,
+    /// May block on sockets/channels/clocks: keeps a dedicated thread.
+    Blocking,
+}
+
+/// Outcome of one non-blocking element step (the `process` model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Progress {
+    /// Item handled; keep feeding.
+    Ready,
+    /// Item handled; nothing to emit until more input arrives
+    /// (informational — treated like `Ready` by both runners).
+    NeedInput,
+    /// Item handled, but yield the worker before the next item — a
+    /// cooperative fairness hint for bursty emitters. The threaded
+    /// runner (which owns its thread) treats it like `Ready`.
+    NeedOutput,
+    /// Element finished early; tear it down as if all pads saw EOS.
+    Done,
+}
+
+/// Items processed per scheduler turn before a task yields the worker.
+const STEP_BUDGET: usize = 32;
+
+// Task lifecycle states (AtomicU8).
+const PARKED: u8 = 0;
+const QUEUED: u8 = 1;
+const RUNNING: u8 = 2;
+/// Running, and a waker fired mid-step: re-enqueue instead of parking.
+const NOTIFIED: u8 = 3;
+const DONE: u8 = 4;
+
+/// Live-task countdown a pipeline joins on at teardown.
+pub struct TaskGroup {
+    live: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl TaskGroup {
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self { live: Mutex::new(n), cv: Condvar::new() })
+    }
+
+    pub fn finish(&self) {
+        let mut l = self.live.lock().unwrap();
+        *l = l.saturating_sub(1);
+        if *l == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every task in the group finished (the pool analog of
+    /// joining element threads).
+    pub fn wait(&self) {
+        let mut l = self.live.lock().unwrap();
+        while *l > 0 {
+            l = self.cv.wait(l).unwrap();
+        }
+    }
+}
+
+pub(crate) struct SchedMetrics {
+    pub tasks: Arc<Counter>,
+    pub parks: Arc<Counter>,
+    pub steals: Arc<Counter>,
+    pub polls: Arc<Counter>,
+}
+
+impl SchedMetrics {
+    fn new() -> Self {
+        let g = metrics::global();
+        Self {
+            tasks: g.counter("sched.tasks"),
+            parks: g.counter("sched.parks"),
+            steals: g.counter("sched.steals"),
+            polls: g.counter("sched.polls"),
+        }
+    }
+}
+
+/// One element running as a pooled task: the state the per-element thread
+/// used to keep on its stack.
+pub struct NodeRun {
+    element: Box<dyn Element>,
+    ctx: Ctx,
+    inbox: Option<Arc<Inbox>>,
+    tracker: EosTracker,
+    started: bool,
+    group: Arc<TaskGroup>,
+    waker: Option<Waker>,
+}
+
+impl NodeRun {
+    pub fn new(
+        element: Box<dyn Element>,
+        mut ctx: Ctx,
+        inbox: Option<Arc<Inbox>>,
+        group: Arc<TaskGroup>,
+    ) -> Self {
+        ctx.enable_reservations();
+        let tracker = EosTracker::new(inbox.as_ref().map(|i| i.n_pads()).unwrap_or(0));
+        Self { element, ctx, inbox, tracker, started: false, group, waker: None }
+    }
+
+    /// Drive the element until it parks, exhausts its budget, or ends.
+    /// Mirrors `pipeline::spawn_node`'s loop: same start/produce/handle
+    /// error paths, same EOS fan-out and bus messages, in the same order.
+    fn step(&mut self, m: &SchedMetrics) -> StepOutcome {
+        let waker = self.waker.clone().expect("waker installed at spawn");
+        if !self.started {
+            self.started = true;
+            if let Err(e) = self.element.start(&mut self.ctx) {
+                self.ctx.post_error(format!("start: {e}"));
+                self.ctx.push_eos_all();
+                self.group.finish();
+                return StepOutcome::Done;
+            }
+        }
+        let inbox = self.inbox.clone();
+        for _ in 0..STEP_BUDGET {
+            m.polls.inc();
+            if !self.ctx.acquire_output_slots(&waker) {
+                return StepOutcome::Parked; // producer waker registered
+            }
+            match &inbox {
+                None => {
+                    // Source: produce until EOS/stop/error.
+                    if self.ctx.stopped() {
+                        return self.finish();
+                    }
+                    match self.element.produce(&mut self.ctx) {
+                        Ok(true) => {}
+                        Ok(false) => return self.finish(),
+                        Err(e) => {
+                            self.ctx.post_error(format!("produce: {e}"));
+                            return self.finish();
+                        }
+                    }
+                }
+                Some(ib) => match ib.try_pop_any() {
+                    TryPop::Item(pad, item) => {
+                        let eos = matches!(item, Item::Eos);
+                        let mut yield_after = false;
+                        match self.element.process(pad, item, &mut self.ctx) {
+                            Ok(Progress::Ready) | Ok(Progress::NeedInput) => {}
+                            Ok(Progress::NeedOutput) => yield_after = true,
+                            Ok(Progress::Done) => return self.finish(),
+                            Err(e) => {
+                                self.ctx.post_error(format!("handle: {e}"));
+                                return self.finish();
+                            }
+                        }
+                        // EOS accounting runs on every handled item so the
+                        // pooled and threaded runners never diverge.
+                        if eos && self.tracker.mark(pad) {
+                            return self.finish();
+                        }
+                        if yield_after {
+                            self.ctx.release_output_slots();
+                            return StepOutcome::Yield;
+                        }
+                    }
+                    TryPop::Empty => {
+                        self.ctx.release_output_slots();
+                        ib.set_consumer_waker(waker.clone());
+                        // Re-check after registration: a push that landed
+                        // in between would otherwise be a lost wakeup.
+                        return match ib.poll_state() {
+                            PollState::Empty => StepOutcome::Parked,
+                            PollState::Ready => StepOutcome::Yield,
+                            PollState::Done => self.finish(),
+                        };
+                    }
+                    TryPop::Done => return self.finish(),
+                },
+            }
+        }
+        self.ctx.release_output_slots();
+        StepOutcome::Yield
+    }
+
+    fn finish(&mut self) -> StepOutcome {
+        self.ctx.release_output_slots();
+        self.ctx.push_eos_all();
+        self.element.stop(&mut self.ctx);
+        if self.ctx.n_src_pads_linked() == 0 {
+            self.ctx.post_eos();
+        }
+        log_debug!("pipeline", "element `{}` done", self.ctx.name);
+        self.group.finish();
+        StepOutcome::Done
+    }
+
+    /// Panic fallback: surface the crash on the bus and release the group
+    /// so teardown doesn't hang (a panicking element used to kill only
+    /// its own thread; it must not wedge a shared worker's pipelines).
+    fn abort(&mut self, what: &str) {
+        self.ctx.release_output_slots();
+        self.ctx.post_error(what);
+        self.ctx.push_eos_all();
+        self.group.finish();
+    }
+}
+
+enum StepOutcome {
+    Yield,
+    Parked,
+    Done,
+}
+
+/// A schedulable element (handle kept by the owning pipeline; wakers hold
+/// weak refs so dropped pipelines free their elements).
+pub struct Task {
+    state: AtomicU8,
+    last_worker: AtomicUsize,
+    run: Mutex<Option<NodeRun>>,
+}
+
+/// The worker pool. Exactly one process-wide instance exists
+/// ([`global`]): workers are daemon threads with no shutdown path, so
+/// constructing additional pools would leak threads (and distort the
+/// resident-thread metric the scheduler exists to minimise) — hence no
+/// public constructor.
+pub struct Scheduler {
+    ready: Mutex<VecDeque<Arc<Task>>>,
+    cv: Condvar,
+    workers: usize,
+    m: SchedMetrics,
+}
+
+/// Pool size: `EDGEPIPE_WORKERS` when set (>0), else the machine's
+/// available parallelism.
+pub fn workers_from_env() -> usize {
+    std::env::var("EDGEPIPE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+/// The process-wide scheduler (workers spawn lazily on first use).
+pub fn global() -> &'static Arc<Scheduler> {
+    static G: OnceLock<Arc<Scheduler>> = OnceLock::new();
+    G.get_or_init(|| Scheduler::start(workers_from_env()))
+}
+
+impl Scheduler {
+    /// Spawn `k` workers (named `ep-worker-<n>`). They are daemons: idle
+    /// workers block on the ready-queue condvar and never exit.
+    fn start(k: usize) -> Arc<Scheduler> {
+        let s = Arc::new(Scheduler {
+            ready: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            workers: k.max(1),
+            m: SchedMetrics::new(),
+        });
+        for i in 0..s.workers {
+            let s2 = s.clone();
+            std::thread::Builder::new()
+                .name(format!("ep-worker-{i}"))
+                .spawn(move || s2.worker_loop(i))
+                .expect("spawn scheduler worker");
+        }
+        s
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Hand an element to the pool; returns the handle the pipeline keeps
+    /// alive until teardown.
+    pub fn spawn(self: &Arc<Self>, mut run: NodeRun) -> Arc<Task> {
+        let sched = self.clone();
+        let task = Arc::new_cyclic(|weak: &Weak<Task>| {
+            let w = weak.clone();
+            run.waker = Some(Arc::new(move || {
+                if let Some(t) = w.upgrade() {
+                    sched.wake(&t);
+                }
+            }));
+            Task {
+                state: AtomicU8::new(QUEUED),
+                last_worker: AtomicUsize::new(usize::MAX),
+                run: Mutex::new(Some(run)),
+            }
+        });
+        self.m.tasks.inc();
+        self.enqueue(task.clone());
+        task
+    }
+
+    fn enqueue(&self, task: Arc<Task>) {
+        self.ready.lock().unwrap().push_back(task);
+        self.cv.notify_one();
+    }
+
+    /// Re-enqueue a parked task (called from inbox wakers). Safe from any
+    /// thread and any task state: a fire during RUNNING is latched as
+    /// NOTIFIED so the worker re-queues instead of parking.
+    fn wake(self: &Arc<Self>, task: &Arc<Task>) {
+        loop {
+            match task.state.load(Ordering::SeqCst) {
+                PARKED => {
+                    if task
+                        .state
+                        .compare_exchange(PARKED, QUEUED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        self.enqueue(task.clone());
+                        return;
+                    }
+                }
+                RUNNING => {
+                    if task
+                        .state
+                        .compare_exchange(RUNNING, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        return;
+                    }
+                }
+                _ => return, // QUEUED / NOTIFIED / DONE: nothing to do
+            }
+        }
+    }
+
+    fn worker_loop(self: Arc<Self>, id: usize) {
+        loop {
+            let task = {
+                let mut q = self.ready.lock().unwrap();
+                loop {
+                    if let Some(t) = q.pop_front() {
+                        break t;
+                    }
+                    q = self.cv.wait(q).unwrap();
+                }
+            };
+            task.state.store(RUNNING, Ordering::SeqCst);
+            let prev = task.last_worker.swap(id, Ordering::Relaxed);
+            if prev != usize::MAX && prev != id {
+                self.m.steals.inc();
+            }
+            let outcome = {
+                let mut guard = task.run.lock().unwrap_or_else(|p| p.into_inner());
+                match guard.as_mut() {
+                    Some(run) => {
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            run.step(&self.m)
+                        })) {
+                            Ok(o) => o,
+                            Err(_) => {
+                                run.abort("element panicked");
+                                StepOutcome::Done
+                            }
+                        }
+                    }
+                    None => StepOutcome::Done,
+                }
+            };
+            match outcome {
+                StepOutcome::Yield => {
+                    task.state.store(QUEUED, Ordering::SeqCst);
+                    self.enqueue(task);
+                }
+                StepOutcome::Parked => {
+                    if task
+                        .state
+                        .compare_exchange(RUNNING, PARKED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        self.m.parks.inc();
+                    } else {
+                        // A waker fired mid-step (NOTIFIED): run again.
+                        task.state.store(QUEUED, Ordering::SeqCst);
+                        self.enqueue(task);
+                    }
+                }
+                StepOutcome::Done => {
+                    task.state.store(DONE, Ordering::SeqCst);
+                    // Drop element + ctx promptly (sockets, channels).
+                    *task.run.lock().unwrap_or_else(|p| p.into_inner()) = None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_group_counts_down() {
+        let g = TaskGroup::new(2);
+        let g2 = g.clone();
+        let h = std::thread::spawn(move || g2.wait());
+        g.finish();
+        assert!(!h.is_finished());
+        g.finish();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn workers_from_env_default_positive() {
+        assert!(workers_from_env() >= 1);
+    }
+
+    #[test]
+    fn workload_defaults_to_compute() {
+        assert_eq!(Workload::default(), Workload::Compute);
+    }
+}

@@ -8,7 +8,7 @@ use std::time::Duration;
 
 use crate::buffer::Buffer;
 use crate::caps::Caps;
-use crate::element::{Ctx, Element, Item, Leaky, QueueCfg};
+use crate::element::{Ctx, Element, Item, Leaky, QueueCfg, Workload};
 use crate::metrics;
 use crate::util::{Error, Result};
 
@@ -185,6 +185,11 @@ impl Element for AppSrc {
         0
     }
 
+    /// Blocks on the app channel (`recv_timeout`): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
+    }
+
     fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
         unreachable!("appsrc has no sink pads")
     }
@@ -238,6 +243,11 @@ impl AppSink {
 impl Element for AppSink {
     fn n_src_pads(&self) -> usize {
         0
+    }
+
+    /// Blocks on the app channel (intended backpressure): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
     }
 
     fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {

@@ -1,6 +1,8 @@
 //! Tensor conversion elements: `tensor_converter` (media → tensors),
 //! `tensor_transform` (arithmetic/typecast), `tensor_decoder` (tensors →
 //! media / flexbuf) — the NNStreamer `tensor_*` filter family (§4.1).
+//! All pure compute (`Workload::Compute` default): schedulable on the
+//! worker pool, no dedicated threads.
 
 use crate::buffer::Buffer;
 use crate::caps::Caps;

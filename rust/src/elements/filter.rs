@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::buffer::Buffer;
 use crate::caps::Caps;
-use crate::element::{Ctx, Element, Item};
+use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
 use crate::runtime::Model;
 use crate::tensor::Format;
@@ -44,6 +44,13 @@ impl TensorFilter {
 }
 
 impl Element for TensorFilter {
+    /// Inference is CPU-bound, never socket-bound: explicitly schedulable
+    /// on the worker pool (the density win this refactor exists for —
+    /// many model-running pipelines share K threads).
+    fn workload(&self) -> Workload {
+        Workload::Compute
+    }
+
     fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
         match item {
             Item::Caps(c) => {

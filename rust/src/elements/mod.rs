@@ -4,6 +4,11 @@
 //! spellings) wherever they appear there: `leaky=2`, `operation=`,
 //! `sub-topic=`, `pub-topic=`, `mode=arithmetic option=...`,
 //! `framework=... model=...`, `is-live=false`, `pattern=ball`, etc.
+//!
+//! Each element declares a `Workload` scheduling class: socket-bound and
+//! app-channel elements are `Blocking` (dedicated thread), everything
+//! else is `Compute` and runs on the shared worker pool (see
+//! `element/sched.rs` and the README's classification table).
 
 pub mod basic;
 pub mod convert;

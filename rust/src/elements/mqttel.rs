@@ -11,7 +11,7 @@ use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
 use crate::caps::Caps;
-use crate::element::{Ctx, Element, Item};
+use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
 use crate::mqtt::{ClientOptions, Message, MqttClient};
 use crate::ntp::{NtpServer, SyncedClock};
@@ -72,6 +72,11 @@ impl MqttSink {
 impl Element for MqttSink {
     fn n_src_pads(&self) -> usize {
         0
+    }
+
+    /// Socket-bound (broker connect + publish writes): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
     }
 
     fn start(&mut self, ctx: &mut Ctx) -> Result<()> {
@@ -174,6 +179,11 @@ impl MqttSrc {
 impl Element for MqttSrc {
     fn n_sink_pads(&self) -> usize {
         0
+    }
+
+    /// Socket-bound (blocking subscribe receive): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
     }
 
     fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {

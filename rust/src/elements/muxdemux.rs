@@ -101,6 +101,8 @@ impl TensorMux {
 }
 
 impl Element for TensorMux {
+    // Workload::Compute (default): pure aggregation, pool-schedulable.
+
     fn n_sink_pads(&self) -> usize {
         self.n_pads
     }

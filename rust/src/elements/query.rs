@@ -27,7 +27,7 @@ use std::time::Duration;
 use crate::buffer::Buffer;
 use crate::caps::Caps;
 use crate::coordinator::discovery::{self, AdWatcher, ServiceAd};
-use crate::element::{Ctx, Element, Item};
+use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
 use crate::mqtt::MqttClient;
 use crate::serial::wire::{self, LinkCodec, WireFrame};
@@ -187,6 +187,12 @@ impl Element for QueryServerSrc {
         0
     }
 
+    /// Socket-bound (request channel receive, MQTT advertisement): keep
+    /// a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
+    }
+
     fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
         unreachable!()
     }
@@ -333,6 +339,12 @@ impl QueryServerSink {
 impl Element for QueryServerSink {
     fn n_src_pads(&self) -> usize {
         0
+    }
+
+    /// Socket-bound (response writes to client connections): keep a
+    /// thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
     }
 
     fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
@@ -489,6 +501,12 @@ impl QueryClient {
 }
 
 impl Element for QueryClient {
+    /// Socket-bound (synchronous request/response round-trip, discovery
+    /// waits): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
+    }
+
     fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
         match item {
             Item::Caps(c) => {

@@ -1,6 +1,8 @@
 //! `tensor_sparse_enc` / `tensor_sparse_dec` — converting filters between
 //! static and sparse (COO) tensor streams (§4.1: the binary representation
 //! is incompatible with static/flexible, hence dedicated elements).
+//! Both pure compute (`Workload::Compute` default): schedulable on the
+//! worker pool, no dedicated threads.
 
 use crate::caps::Caps;
 use crate::element::{Ctx, Element, Item};

@@ -10,7 +10,7 @@ use std::sync::Arc;
 use crate::buffer::Buffer;
 use crate::caps::Caps;
 use crate::clock::{sleep_until, Ns, SECOND};
-use crate::element::{Ctx, Element, EosTracker, Item};
+use crate::element::{Ctx, Element, EosTracker, Item, Workload};
 use crate::util::{Error, Result};
 use crate::util::rng::XorShift64;
 
@@ -137,6 +137,17 @@ impl VideoTestSrc {
 impl Element for VideoTestSrc {
     fn n_sink_pads(&self) -> usize {
         0
+    }
+
+    /// Live capture paces frames against the wall clock (`sleep_until`),
+    /// which must not stall a pool worker; as-fast-as-possible rendering
+    /// (`is-live=false`) is pure compute and schedulable.
+    fn workload(&self) -> Workload {
+        if self.is_live {
+            Workload::Blocking
+        } else {
+            Workload::Compute
+        }
     }
 
     fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {

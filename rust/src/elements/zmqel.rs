@@ -8,7 +8,7 @@ use std::sync::mpsc::Receiver;
 use std::time::Duration;
 
 use crate::caps::Caps;
-use crate::element::{Ctx, Element, Item};
+use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
 use crate::serial::wire::{self, LinkCodec};
 use crate::serial::Codec;
@@ -59,6 +59,11 @@ impl Element for ZmqSink {
         0
     }
 
+    /// Socket-bound (bind + fan-out writes): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
+    }
+
     fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
         self.socket = Some(PubSocket::bind(&self.bind)?);
         Ok(())
@@ -107,6 +112,11 @@ impl ZmqSrc {
 impl Element for ZmqSrc {
     fn n_sink_pads(&self) -> usize {
         0
+    }
+
+    /// Socket-bound (connect retry loop + blocking receive): keep a thread.
+    fn workload(&self) -> Workload {
+        Workload::Blocking
     }
 
     fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {

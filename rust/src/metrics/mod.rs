@@ -155,6 +155,20 @@ pub fn current_rss_kb() -> Option<u64> {
     None
 }
 
+/// Resident thread count of this process (`Threads:` in
+/// /proc/self/status) — the density metric the worker-pool scheduler
+/// optimises (threads should scale with K workers, not with
+/// pipelines x elements).
+pub fn thread_count() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("Threads:") {
+            return rest.trim().parse().ok();
+        }
+    }
+    None
+}
+
 /// CPU usage sampler: percentage of one core used between calls.
 pub struct CpuSampler {
     last_jiffies: u64,
@@ -235,6 +249,7 @@ mod tests {
     fn proc_sampling_works_on_linux() {
         assert!(peak_rss_kb().unwrap() > 0);
         assert!(current_rss_kb().unwrap() > 0);
+        assert!(thread_count().unwrap() >= 1);
         let mut s = CpuSampler::start();
         // burn a little CPU
         let mut x = 0u64;

@@ -1,9 +1,13 @@
-//! Pipeline graph + threaded runner (GStreamer core analog).
+//! Pipeline graph + hybrid runner (GStreamer core analog).
 //!
 //! Build a [`Pipeline`] by adding elements and linking pads (or parse a
-//! gst-launch-style description — [`parser`]), then [`Pipeline::start`] it:
-//! every element gets a thread, links become bounded inboxes, EOS and
-//! errors surface on the bus.
+//! gst-launch-style description — [`parser`]), then [`Pipeline::start`]
+//! it: links become bounded inboxes, EOS and errors surface on the bus.
+//! `Workload::Compute` elements are handed to the process-wide worker
+//! pool ([`crate::element::sched`]) so N pipelines share K threads;
+//! `Workload::Blocking` elements (sockets, app channels, live pacing)
+//! get a dedicated thread as before. `EDGEPIPE_SCHED=threads` forces the
+//! legacy thread-per-element runner for every node.
 
 pub mod parser;
 
@@ -15,9 +19,32 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::clock::PipelineClock;
-use crate::element::{BusMsg, Ctx, Downstream, Element, EosTracker, Inbox, Item};
+use crate::element::sched::{self, NodeRun, Task, TaskGroup};
+use crate::element::{
+    BusMsg, Ctx, Downstream, Element, EosTracker, Inbox, Item, Progress, Workload,
+};
 use crate::util::{Error, Result};
 use crate::{log_debug, log_info};
+
+/// How [`Pipeline::start`] maps elements to execution resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// `Compute` elements share the worker pool; `Blocking` ones get
+    /// threads (the default).
+    Pool,
+    /// Legacy thread-per-element runner for every node.
+    Threads,
+}
+
+impl ExecMode {
+    /// `EDGEPIPE_SCHED=threads` (or `off`) opts out of the pool.
+    pub fn from_env() -> Self {
+        match std::env::var("EDGEPIPE_SCHED").ok().as_deref() {
+            Some("threads") | Some("off") => ExecMode::Threads,
+            _ => ExecMode::Pool,
+        }
+    }
+}
 
 struct Node {
     name: String,
@@ -129,8 +156,16 @@ impl Pipeline {
         Ok(())
     }
 
-    /// Start streaming: spawn element threads. Consumes the pipeline.
+    /// Start streaming with the mode from `EDGEPIPE_SCHED` (pool unless
+    /// opted out). Consumes the pipeline.
     pub fn start(self) -> Result<Running> {
+        self.start_mode(ExecMode::from_env())
+    }
+
+    /// Start streaming: pooled tasks for compute elements, threads for
+    /// blocking ones (or threads for everything under
+    /// [`ExecMode::Threads`]). Consumes the pipeline.
+    pub fn start_mode(self, mode: ExecMode) -> Result<Running> {
         self.validate()?;
         let clock = PipelineClock::start();
         let stop = Arc::new(AtomicBool::new(false));
@@ -160,15 +195,36 @@ impl Pipeline {
         }
 
         let n_sinks = self.nodes.iter().filter(|n| n.element.n_src_pads() == 0).count();
-        let mut handles = Vec::with_capacity(self.nodes.len());
+        let mut handles = Vec::new();
+        let mut pooled: Vec<(Node, Ctx, Option<Arc<Inbox>>)> = Vec::new();
         for (i, node) in self.nodes.into_iter().enumerate() {
             let ds = Downstream { outputs: std::mem::take(&mut downstreams[i]) };
             let ctx = Ctx::new(node.name.clone(), clock, ds, bus_tx.clone(), stop.clone());
             let inbox = inboxes[i].clone();
-            handles.push(spawn_node(node, ctx, inbox)?);
+            let pool = mode == ExecMode::Pool && node.element.workload() == Workload::Compute;
+            if pool {
+                pooled.push((node, ctx, inbox));
+            } else {
+                handles.push(spawn_node(node, ctx, inbox)?);
+            }
         }
-        log_info!("pipeline", "started: {} elements, {} sinks", handles.len(), n_sinks);
-        Ok(Running { bus_rx, stop, inboxes, handles, n_sinks, finished: false })
+        let group = TaskGroup::new(pooled.len());
+        let mut tasks = Vec::with_capacity(pooled.len());
+        if !pooled.is_empty() {
+            let scheduler = sched::global();
+            for (node, ctx, inbox) in pooled {
+                tasks.push(scheduler.spawn(NodeRun::new(node.element, ctx, inbox, group.clone())));
+            }
+        }
+        log_info!(
+            "pipeline",
+            "started: {} elements ({} pooled, {} threaded), {} sinks",
+            tasks.len() + handles.len(),
+            tasks.len(),
+            handles.len(),
+            n_sinks
+        );
+        Ok(Running { bus_rx, stop, inboxes, handles, tasks, group, n_sinks, finished: false })
     }
 }
 
@@ -207,9 +263,13 @@ fn spawn_node(mut node: Node, mut ctx: Ctx, inbox: Option<Arc<Inbox>>) -> Result
                             None => break,
                             Some((pad, item)) => {
                                 let eos = matches!(item, Item::Eos);
-                                if let Err(e) = node.element.handle(pad, item, &mut ctx) {
-                                    ctx.post_error(format!("handle: {e}"));
-                                    break;
+                                match node.element.process(pad, item, &mut ctx) {
+                                    Ok(Progress::Done) => break,
+                                    Ok(_) => {}
+                                    Err(e) => {
+                                        ctx.post_error(format!("handle: {e}"));
+                                        break;
+                                    }
                                 }
                                 if eos && tracker.mark(pad) {
                                     break;
@@ -245,6 +305,10 @@ pub struct Running {
     stop: Arc<AtomicBool>,
     inboxes: Vec<Option<Arc<Inbox>>>,
     handles: Vec<JoinHandle<()>>,
+    /// Pooled-element handles; kept alive until teardown so parked tasks
+    /// (whose inbox wakers hold weak refs) stay reachable.
+    tasks: Vec<Arc<Task>>,
+    group: Arc<TaskGroup>,
     n_sinks: usize,
     finished: bool,
 }
@@ -308,6 +372,10 @@ impl Running {
         for ib in self.inboxes.iter().flatten() {
             ib.close();
         }
+        // Closing inboxes re-enqueues every parked task; each then runs
+        // its shutdown path (drain -> EOS fan-out -> stop) on a worker.
+        self.group.wait();
+        self.tasks.clear();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }

@@ -1,0 +1,111 @@
+//! Pipeline-description parser error cases: every malformed description
+//! must fail with a targeted parse/pipeline error, never a panic or a
+//! silently-wrong graph.
+
+use edgepipe::element::registry::{PipelineEnv, Registry};
+use edgepipe::pipeline::parser;
+
+fn parse(desc: &str) -> Result<edgepipe::pipeline::Pipeline, edgepipe::util::Error> {
+    parser::parse(desc, &Registry::with_builtins(), &PipelineEnv::default())
+}
+
+fn err(desc: &str) -> String {
+    match parse(desc) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("`{desc}` parsed but must fail"),
+    }
+}
+
+#[test]
+fn dangling_link_at_end() {
+    let e = err("videotestsrc !");
+    assert!(e.contains("dangling"), "{e}");
+}
+
+#[test]
+fn link_with_nothing_before_it() {
+    let e = err("! fakesink");
+    assert!(e.contains("nothing to link from"), "{e}");
+}
+
+#[test]
+fn duplicate_element_names() {
+    let e = err("identity name=x ! identity name=x ! fakesink");
+    assert!(e.contains("duplicate") && e.contains("x"), "{e}");
+}
+
+#[test]
+fn unknown_element_kind() {
+    let e = err("videotestsrc ! framepolisher ! fakesink");
+    assert!(e.contains("unknown element") && e.contains("framepolisher"), "{e}");
+}
+
+#[test]
+fn unknown_name_reference() {
+    let e = err("videotestsrc ! fakesink nosuch. ! fakesink");
+    assert!(e.contains("unknown element") && e.contains("nosuch"), "{e}");
+}
+
+#[test]
+fn malformed_leaky_value() {
+    let e = err("videotestsrc ! queue leaky=9 ! fakesink");
+    assert!(e.contains("leaky") && e.contains("9"), "{e}");
+    let e = err("videotestsrc ! queue leaky=sideways ! fakesink");
+    assert!(e.contains("sideways"), "{e}");
+}
+
+#[test]
+fn malformed_numeric_property() {
+    let e = err("videotestsrc ! queue max-size-buffers=abc ! fakesink");
+    assert!(e.contains("max-size-buffers"), "{e}");
+}
+
+#[test]
+fn stray_property_without_element() {
+    let e = err("leaky=2 videotestsrc ! fakesink");
+    assert!(e.contains("stray property"), "{e}");
+}
+
+#[test]
+fn unterminated_quote() {
+    let e = err(r#"videotestsrc ! capsfilter caps="video/x-raw ! fakesink"#);
+    assert!(e.contains("unterminated quote"), "{e}");
+}
+
+#[test]
+fn missing_required_property() {
+    let e = err("videotestsrc ! videoscale ! fakesink");
+    assert!(e.contains("width"), "{e}");
+    let e = err("mqttsink");
+    assert!(e.contains("pub-topic"), "{e}");
+}
+
+#[test]
+fn sink_pad_double_link_rejected() {
+    // Two chains ending on the same named sink pad (forward reference).
+    let e = err("videotestsrc ! k.sink_0 videotestsrc ! k.sink_0 fakesink name=k");
+    assert!(e.contains("already linked"), "{e}");
+}
+
+#[test]
+fn sink_ref_without_link() {
+    let e = err("videotestsrc ! fakesink mix.sink_0");
+    assert!(e.contains("without preceding"), "{e}");
+}
+
+#[test]
+fn pad_growth_beyond_fixed_elements() {
+    // identity has exactly one sink pad and cannot grow request pads.
+    let e = err("videotestsrc ! id.sink_3 identity name=id");
+    assert!(e.contains("cannot grow"), "{e}");
+}
+
+#[test]
+fn valid_description_still_parses() {
+    // Guard against over-tightening: the paper-style happy path works.
+    let p = parse(
+        "videotestsrc width=4 height=4 num-buffers=2 ! queue leaky=2 max-size-buffers=4 ! videoconvert ! fakesink",
+    )
+    .unwrap();
+    assert_eq!(p.n_nodes(), 4);
+}

@@ -1,0 +1,472 @@
+//! Worker-pool scheduler semantics: the pooled runner must match the
+//! thread-per-element runner observable-for-observable — delivery counts,
+//! EOS/error bus traffic, leaky-queue behavior, caps ordering — while the
+//! non-blocking inbox protocol (`try_pop_any`/`try_reserve`/
+//! `push_reserved`) stays bit-for-bit equivalent to the condvar paths on
+//! identical input sequences.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use edgepipe::buffer::Buffer;
+use edgepipe::caps::Caps;
+use edgepipe::element::inbox::{Reserve, TryPop};
+use edgepipe::element::{Ctx, Element, Inbox, Item, Leaky, QueueCfg, Workload};
+use edgepipe::pipeline::{ExecMode, Pipeline, WaitOutcome};
+use edgepipe::testkit;
+use edgepipe::util::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// Test elements (all Workload::Compute unless stated).
+// ---------------------------------------------------------------------------
+
+/// Bounded compute source: n buffers, one per produce call.
+struct CountSrc {
+    n: u64,
+    sent: u64,
+}
+
+impl Element for CountSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        if self.sent >= self.n {
+            return Ok(false);
+        }
+        ctx.push_buffer(Buffer::new(self.sent.to_le_bytes().to_vec()).with_pts(self.sent))?;
+        self.sent += 1;
+        Ok(true)
+    }
+}
+
+/// Counting compute sink; also tallies caps and EOS items.
+#[derive(Default)]
+struct Recorder {
+    buffers: Arc<AtomicU64>,
+    caps: Arc<AtomicU64>,
+    eos: Arc<AtomicU64>,
+}
+
+struct RecordSink {
+    rec: Recorder,
+}
+
+impl Element for RecordSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+    fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Buffer(_) => self.rec.buffers.fetch_add(1, Ordering::Relaxed),
+            Item::Caps(_) => self.rec.caps.fetch_add(1, Ordering::Relaxed),
+            Item::Eos => self.rec.eos.fetch_add(1, Ordering::Relaxed),
+        };
+        Ok(())
+    }
+}
+
+/// Identity filter.
+struct Pass;
+impl Element for Pass {
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if !matches!(item, Item::Eos) {
+            ctx.push(0, item)?;
+        }
+        Ok(())
+    }
+}
+
+fn chain(n: u64, stages: usize) -> (Pipeline, Recorder) {
+    let mut p = Pipeline::new();
+    let rec = Recorder::default();
+    let sink = RecordSink {
+        rec: Recorder {
+            buffers: rec.buffers.clone(),
+            caps: rec.caps.clone(),
+            eos: rec.eos.clone(),
+        },
+    };
+    let mut prev = p.add("src", Box::new(CountSrc { n, sent: 0 })).unwrap();
+    for i in 0..stages {
+        let f = p.add(&format!("pass{i}"), Box::new(Pass)).unwrap();
+        p.link(prev, f).unwrap();
+        prev = f;
+    }
+    let k = p.add("sink", Box::new(sink)).unwrap();
+    p.link(prev, k).unwrap();
+    (p, rec)
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end pool-mode pipelines.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_linear_pipeline_delivers_all_buffers_then_eos() {
+    let (p, rec) = chain(200, 3);
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+    assert_eq!(rec.buffers.load(Ordering::Relaxed), 200);
+}
+
+#[test]
+fn threads_mode_still_delivers_all() {
+    let (p, rec) = chain(200, 3);
+    let running = p.start_mode(ExecMode::Threads).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+    assert_eq!(rec.buffers.load(Ordering::Relaxed), 200);
+}
+
+#[test]
+fn pool_fanout_duplicates_stream() {
+    let mut p = Pipeline::new();
+    let c1 = Arc::new(AtomicU64::new(0));
+    let c2 = Arc::new(AtomicU64::new(0));
+    let s = p.add("src", Box::new(CountSrc { n: 50, sent: 0 })).unwrap();
+    let k1 = p
+        .add("k1", Box::new(RecordSink { rec: Recorder { buffers: c1.clone(), ..Default::default() } }))
+        .unwrap();
+    let k2 = p
+        .add("k2", Box::new(RecordSink { rec: Recorder { buffers: c2.clone(), ..Default::default() } }))
+        .unwrap();
+    p.link(s, k1).unwrap();
+    p.link(s, k2).unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+    assert_eq!(c1.load(Ordering::Relaxed), 50);
+    assert_eq!(c2.load(Ordering::Relaxed), 50);
+}
+
+#[test]
+fn pool_error_surfaces_on_bus() {
+    struct Fail;
+    impl Element for Fail {
+        fn n_src_pads(&self) -> usize {
+            0
+        }
+        fn handle(&mut self, _: usize, item: Item, _: &mut Ctx) -> Result<()> {
+            if item.is_buffer() {
+                return Err(Error::Pipeline("boom".into()));
+            }
+            Ok(())
+        }
+    }
+    let mut p = Pipeline::new();
+    let s = p.add("src", Box::new(CountSrc { n: 10, sent: 0 })).unwrap();
+    let k = p.add("fail", Box::new(Fail)).unwrap();
+    p.link(s, k).unwrap();
+    let mut running = p.start_mode(ExecMode::Pool).unwrap();
+    match running.wait(Duration::from_secs(10)) {
+        WaitOutcome::Error { element, message } => {
+            assert_eq!(element, "fail");
+            assert!(message.contains("boom"));
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+}
+
+#[test]
+fn pool_stop_interrupts_spinning_source() {
+    struct Forever;
+    impl Element for Forever {
+        fn n_sink_pads(&self) -> usize {
+            0
+        }
+        fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+            unreachable!()
+        }
+        fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+            ctx.push_buffer(Buffer::new(vec![0]))?;
+            Ok(true)
+        }
+    }
+    let mut p = Pipeline::new();
+    let count = Arc::new(AtomicU64::new(0));
+    let s = p.add("src", Box::new(Forever)).unwrap();
+    let k = p
+        .add(
+            "sink",
+            Box::new(RecordSink { rec: Recorder { buffers: count.clone(), ..Default::default() } }),
+        )
+        .unwrap();
+    p.link(s, k).unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    assert_eq!(running.stop(Duration::from_secs(10)), WaitOutcome::Eos);
+    assert!(count.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn pool_backpressure_parks_instead_of_losing() {
+    // Slow sink + tiny non-leaky queue: the spinning source must park on
+    // reservations; every buffer still arrives (no loss, no deadlock).
+    struct SlowSink {
+        count: Arc<AtomicU64>,
+    }
+    impl Element for SlowSink {
+        fn n_src_pads(&self) -> usize {
+            0
+        }
+        fn sink_queue_cfg(&self, _: usize) -> QueueCfg {
+            QueueCfg { capacity: 1, leaky: Leaky::No }
+        }
+        fn handle(&mut self, _: usize, item: Item, _: &mut Ctx) -> Result<()> {
+            if item.is_buffer() {
+                std::thread::sleep(Duration::from_millis(1));
+                self.count.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
+        }
+    }
+    let mut p = Pipeline::new();
+    let count = Arc::new(AtomicU64::new(0));
+    let s = p.add("src", Box::new(CountSrc { n: 100, sent: 0 })).unwrap();
+    let k = p.add("sink", Box::new(SlowSink { count: count.clone() })).unwrap();
+    p.link(s, k).unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    assert_eq!(count.load(Ordering::Relaxed), 100);
+}
+
+#[test]
+fn pool_leaky_queue_drops_but_conserves() {
+    // Leaky downstream queue: delivered + dropped == produced, caps/EOS
+    // never among the dropped.
+    struct LeakySink {
+        rec: Recorder,
+    }
+    impl Element for LeakySink {
+        fn n_src_pads(&self) -> usize {
+            0
+        }
+        fn sink_queue_cfg(&self, _: usize) -> QueueCfg {
+            QueueCfg { capacity: 2, leaky: Leaky::Downstream }
+        }
+        fn handle(&mut self, _: usize, item: Item, _: &mut Ctx) -> Result<()> {
+            match item {
+                Item::Buffer(_) => {
+                    std::thread::sleep(Duration::from_millis(2));
+                    self.rec.buffers.fetch_add(1, Ordering::Relaxed)
+                }
+                Item::Caps(_) => self.rec.caps.fetch_add(1, Ordering::Relaxed),
+                Item::Eos => self.rec.eos.fetch_add(1, Ordering::Relaxed),
+            };
+            Ok(())
+        }
+    }
+    struct CapsySrc {
+        n: u64,
+        sent: u64,
+    }
+    impl Element for CapsySrc {
+        fn n_sink_pads(&self) -> usize {
+            0
+        }
+        fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+            unreachable!()
+        }
+        fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+            if self.sent >= self.n {
+                return Ok(false);
+            }
+            if self.sent % 50 == 0 {
+                ctx.push_caps(Caps::video(2, 2, 30))?;
+            }
+            ctx.push_buffer(Buffer::new(vec![self.sent as u8]))?;
+            self.sent += 1;
+            Ok(true)
+        }
+    }
+    let rec = Recorder::default();
+    let sink = LeakySink {
+        rec: Recorder {
+            buffers: rec.buffers.clone(),
+            caps: rec.caps.clone(),
+            eos: rec.eos.clone(),
+        },
+    };
+    let mut p = Pipeline::new();
+    let s = p.add("src", Box::new(CapsySrc { n: 500, sent: 0 })).unwrap();
+    let k = p.add("sink", Box::new(sink)).unwrap();
+    p.link(s, k).unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    // Unthrottled source into a 2ms-per-buffer sink: the leak must fire…
+    assert!(rec.buffers.load(Ordering::Relaxed) < 500);
+    // …and every control item must survive it (10 caps, 1 EOS).
+    assert_eq!(rec.caps.load(Ordering::Relaxed), 10);
+    assert_eq!(rec.eos.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn pool_and_threads_mix_in_one_process() {
+    // Blocking elements (AppSrc/AppSink) keep threads while the middle of
+    // the pipeline runs pooled; the hybrid must roundtrip intact.
+    use edgepipe::elements::{AppSink, AppSrc};
+    let mut p = Pipeline::new();
+    let (src, h) = AppSrc::new(8, Some(Caps::video(2, 2, 30)));
+    let (sink, rx) = AppSink::new(8);
+    assert_eq!(src.workload(), Workload::Blocking);
+    let s = p.add("src", Box::new(src)).unwrap();
+    let f1 = p.add("f1", Box::new(Pass)).unwrap();
+    let f2 = p.add("f2", Box::new(Pass)).unwrap();
+    let k = p.add("sink", Box::new(sink)).unwrap();
+    p.link(s, f1).unwrap();
+    p.link(f1, f2).unwrap();
+    p.link(f2, k).unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    for i in 0..20u8 {
+        h.push(Buffer::new(vec![i]).with_pts(i as u64)).unwrap();
+    }
+    for i in 0..20u8 {
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.data[0], i, "in-order delivery");
+    }
+    drop(h);
+    assert_eq!(running.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+}
+
+#[test]
+fn pool_many_pipelines_all_complete() {
+    // 32 six-element pipelines on the shared pool: far fewer threads than
+    // elements, every pipeline still reaches EOS with full delivery.
+    let mut runnings = Vec::new();
+    let mut recs = Vec::new();
+    for _ in 0..32 {
+        let (p, rec) = chain(100, 4);
+        runnings.push(p.start_mode(ExecMode::Pool).unwrap());
+        recs.push(rec);
+    }
+    for r in runnings {
+        assert_eq!(r.wait_eos(Duration::from_secs(60)), WaitOutcome::Eos);
+    }
+    for rec in recs {
+        assert_eq!(rec.buffers.load(Ordering::Relaxed), 100);
+    }
+}
+
+#[test]
+fn sched_metrics_counters_advance() {
+    let tasks0 = edgepipe::metrics::global().counter("sched.tasks").count();
+    let (p, _rec) = chain(50, 2);
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+    let g = edgepipe::metrics::global();
+    assert!(g.counter("sched.tasks").count() >= tasks0 + 4, "src + 2 pass + sink spawned");
+    assert!(g.counter("sched.polls").count() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Inbox-level equivalence: cooperative protocol vs condvar protocol on
+// identical deterministic sequences.
+// ---------------------------------------------------------------------------
+
+fn buf(n: u8) -> Item {
+    Item::Buffer(Buffer::new(vec![n]))
+}
+
+#[test]
+fn prop_leaky_drop_counts_match_condvar_path() {
+    // Same interleaving of pushes and pops against two inboxes — one
+    // driven with push/pop_any (condvar discipline), one with
+    // try_reserve+push_reserved/try_pop_any (scheduler discipline).
+    // Leaky drop counts, queue depths, and popped sequences must match
+    // exactly.
+    testkit::check(120, |g| {
+        let cap = g.usize(1, 6);
+        let leaky = *g.choose(&[Leaky::Upstream, Leaky::Downstream]);
+        let a = Inbox::new(vec![QueueCfg { capacity: cap, leaky }]);
+        let b = Inbox::new(vec![QueueCfg { capacity: cap, leaky }]);
+        let ops = g.usize(1, 60);
+        let mut seq = 0u8;
+        for _ in 0..ops {
+            if g.bool(0.6) {
+                seq = seq.wrapping_add(1);
+                // Occasionally interleave caps to prove they never leak.
+                if seq % 13 == 0 {
+                    a.push(0, Item::Caps(Caps::any())).unwrap();
+                    b.push(0, Item::Caps(Caps::any())).unwrap();
+                }
+                a.push(0, buf(seq)).unwrap();
+                match b.try_reserve(0) {
+                    Reserve::Counted => b.push_reserved(0, buf(seq)).unwrap(),
+                    // Leaky pads never count; the plain push applies the
+                    // identical leak policy without blocking.
+                    Reserve::NoNeed => b.push(0, buf(seq)).unwrap(),
+                    Reserve::Full => panic!("leaky pad reported Full"),
+                }
+            } else {
+                let pa = a.pop_any_timeout(Duration::from_millis(0));
+                let pb = b.try_pop_any();
+                match (pa, pb) {
+                    (Some(Some((_, Item::Buffer(x)))), TryPop::Item(_, Item::Buffer(y))) => {
+                        assert_eq!(x.data[0], y.data[0], "pop order diverged");
+                    }
+                    (Some(Some((_, Item::Caps(_)))), TryPop::Item(_, Item::Caps(_))) => {}
+                    (Some(None), TryPop::Empty) => {}
+                    (x, y) => panic!("pop results diverged: {x:?} vs {y:?}"),
+                }
+            }
+            assert_eq!(a.depth(0), b.depth(0), "depths diverged");
+            assert_eq!(a.dropped(0), b.dropped(0), "drop counts diverged");
+            assert!(a.depth(0) <= cap);
+        }
+    });
+}
+
+#[test]
+fn prop_reserved_pushes_respect_capacity_and_eos() {
+    // Leaky::No under the cooperative protocol: depth+reserved never
+    // exceeds capacity, Full is reported exactly when no slot remains,
+    // and caps/EOS enqueue regardless.
+    testkit::check(120, |g| {
+        let cap = g.usize(1, 5);
+        let ib = Inbox::new(vec![QueueCfg { capacity: cap, leaky: Leaky::No }]);
+        let mut held = 0usize;
+        let ops = g.usize(1, 50);
+        for _ in 0..ops {
+            match g.usize(0, 3) {
+                0 => match ib.try_reserve(0) {
+                    Reserve::Counted => held += 1,
+                    Reserve::Full => assert_eq!(ib.depth(0) + held, cap),
+                    Reserve::NoNeed => panic!("Leaky::No pad reported NoNeed while open"),
+                },
+                1 if held > 0 => {
+                    ib.push_reserved(0, buf(7)).unwrap();
+                    held -= 1;
+                }
+                2 if held > 0 => {
+                    ib.unreserve(0);
+                    held -= 1;
+                }
+                _ => {
+                    let _ = ib.try_pop_any();
+                }
+            }
+            assert!(ib.depth(0) + held <= cap, "capacity bound violated");
+            assert_eq!(ib.reserved(0), held, "reservation ledger diverged");
+        }
+        // Control items always land, even with every slot spoken for.
+        while let Reserve::Counted = ib.try_reserve(0) {
+            held += 1;
+        }
+        ib.push(0, Item::Caps(Caps::any())).unwrap();
+        ib.push(0, Item::Eos).unwrap();
+        let mut saw_caps = false;
+        let mut saw_eos = false;
+        loop {
+            match ib.try_pop_any() {
+                TryPop::Item(_, Item::Caps(_)) => saw_caps = true,
+                TryPop::Item(_, Item::Eos) => saw_eos = true,
+                TryPop::Item(_, _) => {}
+                TryPop::Empty | TryPop::Done => break,
+            }
+        }
+        assert!(saw_caps && saw_eos, "caps/EOS dropped under reservation pressure");
+    });
+}

@@ -13,6 +13,9 @@ repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 
 export EDGEPIPE_BENCH_SECS="${EDGEPIPE_BENCH_SECS:-2}"
 export EDGEPIPE_BENCH_RUNS="${EDGEPIPE_BENCH_RUNS:-1}"
+# Density scenario: fixed pool size so the thread-reduction gate is
+# machine-independent (the bench also defaults this itself).
+export EDGEPIPE_WORKERS="${EDGEPIPE_WORKERS:-4}"
 out="${EDGEPIPE_BENCH_OUT:-$repo_root/BENCH_wirepath.json}"
 # Canonicalize: the bench runs from rust/, so a relative EDGEPIPE_BENCH_OUT
 # would otherwise resolve against a different directory than the mktemp.
