@@ -52,13 +52,18 @@ impl ServiceAd {
 
     pub fn decode(operation: &str, server_id: &str, payload: &[u8]) -> Result<ServiceAd> {
         let v = flexbuf::decode(payload)?;
+        // The load field is fully peer-controlled (a flexbuf Float off the
+        // wire): sanitize non-finite values to +inf so a hostile or buggy
+        // peer sorts last and is never preferred — and never reaches the
+        // selection sort as NaN.
+        let load = v.field("load").and_then(|f| f.as_f64()).unwrap_or(0.0);
         Ok(ServiceAd {
             operation: operation.to_string(),
             server_id: server_id.to_string(),
             host: v.field("host")?.as_str()?.to_string(),
             port: v.field("port")?.as_u64()? as u16,
             model: v.field("model")?.as_str()?.to_string(),
-            load: v.field("load").and_then(|f| f.as_f64()).unwrap_or(0.0),
+            load: if load.is_finite() { load } else { f64::INFINITY },
         })
     }
 
@@ -104,8 +109,14 @@ pub fn server_client_options(server_id: &str, ad: &ServiceAd) -> ClientOptions {
 }
 
 /// Watches `edge/query/<operation>/#` and maintains the live server set.
+///
+/// The map is keyed by `(operation, server_id)`: under a wildcard watch
+/// (`objdetect/#` spans every op below it) the same server id may appear
+/// under several operations, and they are distinct services — keying by
+/// id alone made them collide, and clearing one operation's ad removed
+/// the other operation's live entry.
 pub struct AdWatcher {
-    servers: Arc<Mutex<BTreeMap<String, ServiceAd>>>,
+    servers: Arc<Mutex<BTreeMap<(String, String), ServiceAd>>>,
     #[allow(dead_code)]
     client: MqttClient,
     rx_done: Receiver<()>,
@@ -124,7 +135,8 @@ impl AdWatcher {
                 channel_depth: 64,
             },
         )?;
-        let servers: Arc<Mutex<BTreeMap<String, ServiceAd>>> = Arc::new(Mutex::new(BTreeMap::new()));
+        let servers: Arc<Mutex<BTreeMap<(String, String), ServiceAd>>> =
+            Arc::new(Mutex::new(BTreeMap::new()));
         let s2 = servers.clone();
         // An operation may itself end in a wildcard (`objdetect/#`).
         let filter = if operation.ends_with('#') || operation.ends_with('+') {
@@ -138,19 +150,21 @@ impl AdWatcher {
             if let Some((op, id)) = split_topic(&msg.topic) {
                 let mut s = s2.lock().unwrap();
                 if msg.payload.is_empty() {
-                    s.remove(&id);
+                    s.remove(&(op, id));
                 } else if let Ok(ad) = ServiceAd::decode(&op, &id, &msg.payload) {
-                    s.insert(id, ad);
+                    s.insert((op, id), ad);
                 }
             }
         })?;
         Ok(AdWatcher { servers, client, rx_done })
     }
 
-    /// Current live servers, sorted by (load, id).
+    /// Current live servers, sorted by (load, id). `total_cmp` keeps the
+    /// sort panic-free no matter what a remote peer advertises (decode
+    /// already maps non-finite loads to +inf, which orders last).
     pub fn servers(&self) -> Vec<ServiceAd> {
         let mut v: Vec<ServiceAd> = self.servers.lock().unwrap().values().cloned().collect();
-        v.sort_by(|a, b| a.load.partial_cmp(&b.load).unwrap().then(a.server_id.cmp(&b.server_id)));
+        v.sort_by(|a, b| a.load.total_cmp(&b.load).then_with(|| a.server_id.cmp(&b.server_id)));
         v
     }
 
@@ -282,6 +296,77 @@ mod tests {
             std::thread::sleep(Duration::from_millis(30));
         }
         assert!(watcher.servers().is_empty());
+    }
+
+    #[test]
+    fn same_id_under_different_operations_does_not_collide() {
+        // Regression: a wildcard watch (`objdetect/#`) spans operations,
+        // and the same server id may legitimately exist under several of
+        // them. Keying the map by id alone made the second ad overwrite
+        // the first, and clearing one op's ad removed the OTHER op's
+        // live entry.
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let c = MqttClient::connect(&addr, ClientOptions::default()).unwrap();
+        let ssd = ad("objdetect/ssd", "srv1", 4001, 0.2);
+        let yolo = ad("objdetect/yolo", "srv1", 4002, 0.4);
+        advertise(&c, &ssd).unwrap();
+        advertise(&c, &yolo).unwrap();
+        let watcher = AdWatcher::watch(&addr, "objdetect/#").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline && watcher.servers().len() < 2 {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        let servers = watcher.servers();
+        assert_eq!(servers.len(), 2, "ads under different ops collided: {servers:?}");
+        assert!(servers.iter().any(|s| s.operation == "objdetect/ssd" && s.port == 4001));
+        assert!(servers.iter().any(|s| s.operation == "objdetect/yolo" && s.port == 4002));
+        // Clearing the ssd ad must leave the yolo ad (same id!) alive.
+        clear_advertisement(&c, &ssd).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline && watcher.servers().len() != 1 {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        let left = watcher.servers();
+        assert_eq!(left.len(), 1, "clear removed the wrong op's ad: {left:?}");
+        assert_eq!(left[0].operation, "objdetect/yolo");
+    }
+
+    #[test]
+    fn non_finite_load_sanitized_at_decode() {
+        // Regression: `load` is a fully peer-controlled flexbuf Float; a
+        // NaN used to reach `partial_cmp(..).unwrap()` and panic every
+        // watcher in the process.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut a = ad("op", "evil", 9, 0.0);
+            a.load = bad;
+            let decoded = ServiceAd::decode("op", "evil", &a.encode()).unwrap();
+            assert_eq!(decoded.load, f64::INFINITY, "{bad} not sanitized");
+        }
+        let fine = ServiceAd::decode("op", "ok", &ad("op", "ok", 1, 0.25).encode()).unwrap();
+        assert_eq!(fine.load, 0.25);
+    }
+
+    #[test]
+    fn nan_load_ad_sorts_last_and_never_panics() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let c = MqttClient::connect(&addr, ClientOptions::default()).unwrap();
+        let mut evil = ad("op", "evil", 1, 0.0);
+        evil.load = f64::NAN;
+        advertise(&c, &evil).unwrap();
+        advertise(&c, &ad("op", "busy", 2, 0.9)).unwrap();
+        let watcher = AdWatcher::watch(&addr, "op").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while Instant::now() < deadline && watcher.servers().len() < 2 {
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        let servers = watcher.servers(); // used to panic here
+        assert_eq!(servers.len(), 2);
+        assert_eq!(servers[0].server_id, "busy", "finite load must be preferred");
+        assert_eq!(servers[1].server_id, "evil");
+        assert_eq!(servers[1].load, f64::INFINITY);
+        assert_eq!(watcher.pick(&[]).unwrap().server_id, "busy");
     }
 
     #[test]

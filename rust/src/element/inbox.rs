@@ -32,6 +32,46 @@ use crate::util::{Error, Result};
 /// task re-checks the queue state and re-parks if nothing changed.
 pub type Waker = Arc<dyn Fn() + Send + Sync>;
 
+/// Consumer wakers taken during a multi-push turn (a fan-out push, an
+/// EOS broadcast), fired in ONE pass after every queue was filled instead
+/// of one interleaved fire per link. Each inbox holds at most one
+/// registered consumer waker (registration consumes), so the inline slot
+/// covers the common 1-link case without allocating; `Drop` fires any
+/// leftovers so an early-return/error path can never lose a wakeup.
+#[derive(Default)]
+pub struct WakeBatch {
+    first: Option<Waker>,
+    rest: Vec<Waker>,
+}
+
+impl WakeBatch {
+    /// Stash a waker taken by a `*_taking` push.
+    pub fn add(&mut self, w: Option<Waker>) {
+        let Some(w) = w else { return };
+        if self.first.is_none() {
+            self.first = Some(w);
+        } else {
+            self.rest.push(w);
+        }
+    }
+
+    /// Fire every collected waker (the batch is left empty).
+    pub fn fire(&mut self) {
+        if let Some(w) = self.first.take() {
+            w();
+        }
+        for w in self.rest.drain(..) {
+            w();
+        }
+    }
+}
+
+impl Drop for WakeBatch {
+    fn drop(&mut self) {
+        self.fire();
+    }
+}
+
 /// Overflow policy of a link queue (GStreamer `queue leaky=` analog).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Leaky {
@@ -177,6 +217,14 @@ impl Inbox {
     /// Push an item into a pad queue, applying the pad's overflow policy
     /// to buffers. Caps and EOS always enqueue.
     pub fn push(&self, pad: usize, item: Item) -> Result<()> {
+        self.push_taking(pad, item).map(fire)
+    }
+
+    /// [`Inbox::push`] that RETURNS the consumer waker (if one was
+    /// registered) instead of firing it, so a multi-push turn can batch
+    /// the fires into one pass — see [`WakeBatch`]. The caller MUST fire
+    /// the returned waker.
+    pub fn push_taking(&self, pad: usize, item: Item) -> Result<Option<Waker>> {
         let mut s = self.shared.lock().unwrap();
         if pad >= s.pads.len() {
             return Err(Error::Pipeline(format!("push to pad {pad} of {}", s.pads.len())));
@@ -194,8 +242,7 @@ impl Inbox {
             // Caps/EOS are rare control events that may change the
             // "all pads EOS" exit condition — wake every waiter.
             self.not_empty.notify_all();
-            fire(waker);
-            return Ok(());
+            return Ok(waker);
         }
         loop {
             let p = &mut s.pads[pad];
@@ -212,13 +259,12 @@ impl Inbox {
                 // (verified by bench_multiclient). Each inbox has a single
                 // consumer thread, so one wakeup is always sufficient.
                 self.not_empty.notify_one();
-                fire(waker);
-                return Ok(());
+                return Ok(waker);
             }
             match p.cfg.leaky {
                 Leaky::Upstream => {
                     p.dropped += 1;
-                    return Ok(()); // drop incoming
+                    return Ok(None); // drop incoming
                 }
                 Leaky::Downstream => {
                     // Drop the oldest buffered item (skip caps).
@@ -232,8 +278,7 @@ impl Inbox {
                     let waker = s.consumer_waker.take();
                     drop(s);
                     self.not_empty.notify_one();
-                    fire(waker);
-                    return Ok(());
+                    return Ok(waker);
                 }
                 Leaky::No => {
                     let (guard, timeout) = self
@@ -291,10 +336,16 @@ impl Inbox {
     /// never blocks for them). On a closed inbox the reservation is
     /// released and the push errors, mirroring `push`.
     pub fn push_reserved(&self, pad: usize, item: Item) -> Result<()> {
+        self.push_reserved_taking(pad, item).map(fire)
+    }
+
+    /// [`Inbox::push_reserved`] returning the consumer waker for batched
+    /// firing (see [`WakeBatch`]); the caller MUST fire it.
+    pub fn push_reserved_taking(&self, pad: usize, item: Item) -> Result<Option<Waker>> {
         if !item.is_buffer() {
             // Control items never block, so the plain path (which already
             // owns the bounds/closed/EOS-flag/wakeup logic) is exact.
-            return self.push(pad, item);
+            return self.push_taking(pad, item);
         }
         let mut s = self.shared.lock().unwrap();
         if pad >= s.pads.len() {
@@ -323,8 +374,7 @@ impl Inbox {
         let waker = s.consumer_waker.take();
         drop(s);
         self.not_empty.notify_one();
-        fire(waker);
-        Ok(())
+        Ok(waker)
     }
 
     /// Non-blocking escape hatch for pooled producers pushing a buffer
@@ -337,6 +387,12 @@ impl Inbox {
     /// items never need this — the plain `push` already cannot block for
     /// them.
     pub fn push_relaxed(&self, pad: usize, item: Item) -> Result<()> {
+        self.push_relaxed_taking(pad, item).map(fire)
+    }
+
+    /// [`Inbox::push_relaxed`] returning the consumer waker for batched
+    /// firing (see [`WakeBatch`]); the caller MUST fire it.
+    pub fn push_relaxed_taking(&self, pad: usize, item: Item) -> Result<Option<Waker>> {
         let mut s = self.shared.lock().unwrap();
         if pad >= s.pads.len() {
             return Err(Error::Pipeline(format!("push to pad {pad} of {}", s.pads.len())));
@@ -346,7 +402,7 @@ impl Inbox {
         }
         if !item.is_buffer() {
             drop(s);
-            return self.push(pad, item);
+            return self.push_taking(pad, item);
         }
         let p = &mut s.pads[pad];
         p.items.push_back(item);
@@ -354,8 +410,7 @@ impl Inbox {
         let waker = s.consumer_waker.take();
         drop(s);
         self.not_empty.notify_one();
-        fire(waker);
-        Ok(())
+        Ok(waker)
     }
 
     /// Register a pooled producer parked on `pad` being full. Fired (and
@@ -771,6 +826,37 @@ mod tests {
         }));
         ib.close();
         assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn push_taking_defers_consumer_wake_to_caller() {
+        let ib = Inbox::new(vec![QueueCfg::default()]);
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        ib.set_consumer_waker(Arc::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+        let w = ib.push_taking(0, buf(1)).unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 0, "taken, not fired");
+        let mut batch = WakeBatch::default();
+        batch.add(w);
+        batch.add(ib.push_taking(0, buf(2)).unwrap()); // None: already taken
+        batch.fire();
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "one wake per burst");
+    }
+
+    #[test]
+    fn wake_batch_drop_fires_leftovers() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        {
+            let mut batch = WakeBatch::default();
+            batch.add(Some(Arc::new(move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            })));
+            // Dropped without an explicit fire() — e.g. an error return.
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
     }
 
     #[test]

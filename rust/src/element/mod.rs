@@ -27,7 +27,7 @@ use std::sync::Arc;
 use crate::buffer::Buffer;
 use crate::caps::Caps;
 use crate::clock::PipelineClock;
-use crate::element::inbox::{Reserve, Waker};
+use crate::element::inbox::{Reserve, WakeBatch, Waker};
 use crate::log_warn;
 use crate::util::Result;
 
@@ -167,6 +167,17 @@ impl Ctx {
     /// Push an item out of `src_pad`, fanning out to all linked inboxes.
     /// Returns Err only when every downstream is gone (pipeline teardown).
     pub fn push(&mut self, src_pad: usize, item: Item) -> Result<()> {
+        let mut wakes = WakeBatch::default();
+        let r = self.push_with(src_pad, item, &mut wakes);
+        wakes.fire();
+        r
+    }
+
+    /// Fan-out core of [`Ctx::push`]: enqueues on every link, stashing
+    /// the consumer wakers it takes into `wakes` instead of firing them
+    /// inline — the caller fires the whole batch in one pass once every
+    /// queue of the turn is filled (see [`WakeBatch`]).
+    fn push_with(&mut self, src_pad: usize, item: Item, wakes: &mut WakeBatch) -> Result<()> {
         let Some(links) = self.downstream.outputs.get(src_pad) else {
             return Ok(()); // unlinked pad: drop silently (fakesink semantics)
         };
@@ -192,7 +203,7 @@ impl Ctx {
                 if let Some(r) = self.rsv.as_mut() {
                     r[src_pad][i] = false;
                 }
-                inbox.push_reserved(*sink_pad, it)
+                inbox.push_reserved_taking(*sink_pad, it)
             } else if it.is_buffer() && self.rsv.is_some() {
                 // Pooled task emitting more buffers than the one slot the
                 // scheduler reserved per link: grab a slot non-blockingly
@@ -203,8 +214,8 @@ impl Ctx {
                 // in the ready queue. Warn once so the misclassified
                 // element (it should be Workload::Blocking) is visible.
                 match inbox.try_reserve(*sink_pad) {
-                    Reserve::Counted => inbox.push_reserved(*sink_pad, it),
-                    Reserve::NoNeed => inbox.push(*sink_pad, it),
+                    Reserve::Counted => inbox.push_reserved_taking(*sink_pad, it),
+                    Reserve::NoNeed => inbox.push_taking(*sink_pad, it),
                     Reserve::Full => {
                         if !self.warned_unreserved {
                             self.warned_unreserved = true;
@@ -214,14 +225,27 @@ impl Ctx {
                                 self.name
                             );
                         }
-                        inbox.push_relaxed(*sink_pad, it)
+                        inbox.push_relaxed_taking(*sink_pad, it)
                     }
                 }
+            } else if it.is_buffer() {
+                // Thread-mode buffer push (`rsv` is None here — pooled
+                // buffers all took the reservation branches above). It
+                // may BLOCK on a full `Leaky::No` pad, so fire everything
+                // collected so far and let the inbox fire its own waker
+                // inline: batching across a blocking push would withhold
+                // an earlier link's only wake for the whole stall,
+                // starving (or deadlocking) a pooled consumer on the
+                // other branch of the fan-out.
+                wakes.fire();
+                inbox.push(*sink_pad, it).map(|()| None)
             } else {
-                inbox.push(*sink_pad, it)
+                // Control items (caps/EOS, any mode): never block.
+                inbox.push_taking(*sink_pad, it)
             };
-            if pushed.is_ok() {
+            if let Ok(w) = pushed {
                 alive = true;
+                wakes.add(w);
             }
         }
         if alive {
@@ -245,10 +269,15 @@ impl Ctx {
     }
 
     /// Broadcast EOS on all src pads (runner calls this on teardown).
+    /// One pass: every downstream queue receives its EOS first, then all
+    /// consumer wakers fire as a single batch — a fan-out teardown wakes
+    /// each downstream once instead of interleaving queue ops and wakes.
     pub fn push_eos_all(&mut self) {
+        let mut wakes = WakeBatch::default();
         for pad in 0..self.downstream.outputs.len() {
-            let _ = self.push(pad, Item::Eos);
+            let _ = self.push_with(pad, Item::Eos, &mut wakes);
         }
+        wakes.fire();
     }
 
     pub fn post_error(&self, message: impl std::fmt::Display) {

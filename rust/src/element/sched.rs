@@ -5,12 +5,40 @@
 //! devices hosting many concurrent AI pipelines (§2, §5.1 tuning). This
 //! module decouples pipeline count from thread count: a process-wide pool
 //! of K workers (`EDGEPIPE_WORKERS`, default `available_parallelism`)
-//! drives element state machines off a ready queue.
+//! drives element state machines off ready queues.
 //!
 //! Elements declare a [`Workload`] hint: `Compute` elements (converters,
 //! filters, mux/demux, tensor ops, runtime inference) become schedulable
 //! tasks; `Blocking` elements (socket-bound sources/sinks, app channels,
 //! live-paced capture) keep a dedicated thread exactly as before.
+//!
+//! ## Queue architecture (work stealing)
+//!
+//! At 64 pipelines x 6 elements every park/wake/yield used to serialize
+//! through ONE shared `Mutex<VecDeque>`; now each worker owns a local
+//! deque and steals when empty ([`QueueMode::Stealing`], the default):
+//!
+//! - A wake issued **on a worker thread** (the overwhelmingly common
+//!   case: a push re-enqueueing its downstream consumer) lands on that
+//!   worker's own local queue — an uncontended lock.
+//! - Wakes from **non-worker threads** (`Blocking` elements, MQTT/zmq
+//!   callback threads, pipeline spawn/teardown) fall back to a global
+//!   **injector** queue. Workers poll the injector ahead of local work
+//!   every [`INJECTOR_TICK`] turns so it can never starve behind a busy
+//!   local queue.
+//! - A worker with nothing local and an empty injector **steals** from
+//!   the front of a victim's deque (round-robin over peers) before
+//!   going to sleep.
+//!
+//! Every dequeue claims the task with a `QUEUED -> RUNNING` CAS, so a
+//! wake racing a pop can never be clobbered into a double-run: a stale
+//! queue entry simply fails the CAS and is dropped. Idle workers sleep
+//! on a signal-counting condvar; wakes issued during a worker's turn are
+//! **batched** — the sleep lock is taken once per turn (covering a whole
+//! multi-buffer burst plus an EOS fan-out), not once per enqueued task.
+//! `EDGEPIPE_SCHED_QUEUE=shared` opts the global pool back into the
+//! single shared queue (the pre-work-stealing architecture, kept as the
+//! bench comparator).
 //!
 //! A task never blocks a worker on queue state:
 //!
@@ -32,12 +60,16 @@
 //! condvar runner bit-for-bit.
 //!
 //! Observability: `sched.tasks` (spawned), `sched.parks` (task parked),
-//! `sched.steals` (task continued on a different worker than last time),
-//! `sched.polls` (step-loop iterations) in the global metrics registry.
+//! `sched.polls` (step-loop iterations), `sched.local_hits` /
+//! `sched.injector_hits` / `sched.steals` (where each dequeue came from —
+//! steals is a true cross-worker steal count), and `sched.queue_locks` /
+//! `sched.lock_waits` (ready-queue lock acquisitions / acquisitions that
+//! had to wait) in the global metrics registry.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError, Weak};
 
 use crate::element::inbox::{PollState, TryPop, Waker};
 use crate::element::{Ctx, Element, EosTracker, Inbox, Item};
@@ -52,6 +84,26 @@ pub enum Workload {
     Compute,
     /// May block on sockets/channels/clocks: keeps a dedicated thread.
     Blocking,
+}
+
+/// Ready-queue architecture of a pool (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueMode {
+    /// Per-worker deques + injector + stealing (the default).
+    #[default]
+    Stealing,
+    /// One shared queue every worker pops (the pre-work-stealing
+    /// architecture; `EDGEPIPE_SCHED_QUEUE=shared`, bench comparator).
+    Shared,
+}
+
+impl QueueMode {
+    pub fn from_env() -> Self {
+        match std::env::var("EDGEPIPE_SCHED_QUEUE").ok().as_deref() {
+            Some("shared") => QueueMode::Shared,
+            _ => QueueMode::Stealing,
+        }
+    }
 }
 
 /// Outcome of one non-blocking element step (the `process` model).
@@ -72,6 +124,10 @@ pub enum Progress {
 
 /// Items processed per scheduler turn before a task yields the worker.
 const STEP_BUDGET: usize = 32;
+
+/// Every Nth dequeue polls the injector BEFORE local work so wakes from
+/// non-worker threads can't starve behind a busy local queue.
+const INJECTOR_TICK: usize = 61;
 
 // Task lifecycle states (AtomicU8).
 const PARKED: u8 = 0;
@@ -115,6 +171,10 @@ pub(crate) struct SchedMetrics {
     pub parks: Arc<Counter>,
     pub steals: Arc<Counter>,
     pub polls: Arc<Counter>,
+    pub local_hits: Arc<Counter>,
+    pub injector_hits: Arc<Counter>,
+    pub queue_locks: Arc<Counter>,
+    pub lock_waits: Arc<Counter>,
 }
 
 impl SchedMetrics {
@@ -125,6 +185,10 @@ impl SchedMetrics {
             parks: g.counter("sched.parks"),
             steals: g.counter("sched.steals"),
             polls: g.counter("sched.polls"),
+            local_hits: g.counter("sched.local_hits"),
+            injector_hits: g.counter("sched.injector_hits"),
+            queue_locks: g.counter("sched.queue_locks"),
+            lock_waits: g.counter("sched.lock_waits"),
         }
     }
 }
@@ -263,19 +327,42 @@ enum StepOutcome {
 /// weak refs so dropped pipelines free their elements).
 pub struct Task {
     state: AtomicU8,
-    last_worker: AtomicUsize,
     run: Mutex<Option<NodeRun>>,
 }
 
-/// The worker pool. Exactly one process-wide instance exists
+/// Idle-worker bookkeeping: `idle` workers are waiting on the condvar,
+/// `signals` of them have an unconsumed wakeup. Counting signals (instead
+/// of bare notifies) makes wakeups lossless: a notify issued before the
+/// sleeper reaches `wait` is banked, not dropped.
+struct Sleep {
+    idle: usize,
+    signals: usize,
+}
+
+type ReadyQueue = Mutex<VecDeque<Arc<Task>>>;
+
+thread_local! {
+    /// (scheduler address, worker index) when this thread is a pool
+    /// worker; wake routing uses it to pick local queue vs injector.
+    static WORKER: Cell<(usize, usize)> = const { Cell::new((0, usize::MAX)) };
+    /// Wakes issued during the current worker turn whose idle-worker
+    /// signal is deferred to one end-of-turn batch.
+    static PENDING_WAKES: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The worker pool. Exactly one process-wide instance serves pipelines
 /// ([`global`]): workers are daemon threads with no shutdown path, so
-/// constructing additional pools would leak threads (and distort the
-/// resident-thread metric the scheduler exists to minimise) — hence no
-/// public constructor.
+/// constructing additional pools leaks threads (and distorts the
+/// resident-thread metric the scheduler exists to minimise) — hence only
+/// the hidden bench/test constructor [`Scheduler::start_detached`]
+/// besides the global.
 pub struct Scheduler {
-    ready: Mutex<VecDeque<Arc<Task>>>,
+    injector: ReadyQueue,
+    locals: Vec<ReadyQueue>,
+    sleep: Mutex<Sleep>,
     cv: Condvar,
     workers: usize,
+    queues: QueueMode,
     m: SchedMetrics,
 }
 
@@ -292,17 +379,21 @@ pub fn workers_from_env() -> usize {
 /// The process-wide scheduler (workers spawn lazily on first use).
 pub fn global() -> &'static Arc<Scheduler> {
     static G: OnceLock<Arc<Scheduler>> = OnceLock::new();
-    G.get_or_init(|| Scheduler::start(workers_from_env()))
+    G.get_or_init(|| Scheduler::start(workers_from_env(), QueueMode::from_env()))
 }
 
 impl Scheduler {
     /// Spawn `k` workers (named `ep-worker-<n>`). They are daemons: idle
-    /// workers block on the ready-queue condvar and never exit.
-    fn start(k: usize) -> Arc<Scheduler> {
+    /// workers block on the sleep condvar and never exit.
+    fn start(k: usize, queues: QueueMode) -> Arc<Scheduler> {
+        let k = k.max(1);
         let s = Arc::new(Scheduler {
-            ready: Mutex::new(VecDeque::new()),
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..k).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(Sleep { idle: 0, signals: 0 }),
             cv: Condvar::new(),
-            workers: k.max(1),
+            workers: k,
+            queues,
             m: SchedMetrics::new(),
         });
         for i in 0..s.workers {
@@ -315,8 +406,20 @@ impl Scheduler {
         s
     }
 
+    /// Extra pool for benches/tests that must compare queue architectures
+    /// in one process (the global pool is a singleton). The `k` workers
+    /// leak for the process lifetime — never use this on a serving path.
+    #[doc(hidden)]
+    pub fn start_detached(k: usize, queues: QueueMode) -> Arc<Scheduler> {
+        Scheduler::start(k, queues)
+    }
+
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    pub fn queue_mode(&self) -> QueueMode {
+        self.queues
     }
 
     /// Hand an element to the pool; returns the handle the pipeline keeps
@@ -330,20 +433,69 @@ impl Scheduler {
                     sched.wake(&t);
                 }
             }));
-            Task {
-                state: AtomicU8::new(QUEUED),
-                last_worker: AtomicUsize::new(usize::MAX),
-                run: Mutex::new(Some(run)),
-            }
+            Task { state: AtomicU8::new(QUEUED), run: Mutex::new(Some(run)) }
         });
         self.m.tasks.inc();
         self.enqueue(task.clone());
         task
     }
 
-    fn enqueue(&self, task: Arc<Task>) {
-        self.ready.lock().unwrap().push_back(task);
-        self.cv.notify_one();
+    /// Counted queue lock: total acquisitions + how many had to wait
+    /// (the contention the per-worker deques exist to eliminate).
+    fn lock_queue<'a>(&self, q: &'a ReadyQueue) -> MutexGuard<'a, VecDeque<Arc<Task>>> {
+        self.m.queue_locks.inc();
+        match q.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.m.lock_waits.inc();
+                q.lock().unwrap_or_else(|p| p.into_inner())
+            }
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+
+    /// True when the calling thread is one of THIS pool's workers.
+    fn current_worker(self: &Arc<Self>) -> Option<usize> {
+        let (addr, id) = WORKER.with(|w| w.get());
+        (id != usize::MAX && addr == Arc::as_ptr(self) as usize).then_some(id)
+    }
+
+    /// Make a QUEUED task runnable. On a worker thread of this pool the
+    /// task lands on that worker's own (uncontended) local queue and the
+    /// idle-worker signal is deferred to the end-of-turn batch; any other
+    /// thread routes through the injector with an immediate signal.
+    fn enqueue(self: &Arc<Self>, task: Arc<Task>) {
+        match self.current_worker() {
+            Some(id) if self.queues == QueueMode::Stealing => {
+                self.lock_queue(&self.locals[id]).push_back(task);
+                PENDING_WAKES.with(|p| p.set(p.get() + 1));
+            }
+            _ => {
+                self.lock_queue(&self.injector).push_back(task);
+                self.notify(1);
+            }
+        }
+    }
+
+    /// Grant up to `n` banked wakeups to idle workers (one sleep-lock
+    /// acquisition covers the whole batch).
+    fn notify(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut s = self.sleep.lock().unwrap();
+        let grant = n.min(s.idle.saturating_sub(s.signals));
+        s.signals += grant;
+        drop(s);
+        for _ in 0..grant {
+            self.cv.notify_one();
+        }
+    }
+
+    /// Fire the turn's deferred idle-worker signals in one batch.
+    fn flush_wakes(&self) {
+        let n = PENDING_WAKES.with(|p| p.replace(0));
+        self.notify(n);
     }
 
     /// Re-enqueue a parked task (called from inbox wakers). Safe from any
@@ -376,22 +528,87 @@ impl Scheduler {
         }
     }
 
-    fn worker_loop(self: Arc<Self>, id: usize) {
+    /// Pop entries off one queue until one wins the `QUEUED -> RUNNING`
+    /// claim CAS. A stale entry — its task already claimed by a racing
+    /// worker, re-queued elsewhere, or finished — fails the CAS and is
+    /// dropped, so a task can never run on two workers at once no matter
+    /// how wakes interleave with pops.
+    fn claim_from(&self, q: &ReadyQueue) -> Option<Arc<Task>> {
         loop {
-            let task = {
-                let mut q = self.ready.lock().unwrap();
-                loop {
-                    if let Some(t) = q.pop_front() {
-                        break t;
-                    }
-                    q = self.cv.wait(q).unwrap();
-                }
-            };
-            task.state.store(RUNNING, Ordering::SeqCst);
-            let prev = task.last_worker.swap(id, Ordering::Relaxed);
-            if prev != usize::MAX && prev != id {
-                self.m.steals.inc();
+            let task = self.lock_queue(q).pop_front()?;
+            if task
+                .state
+                .compare_exchange(QUEUED, RUNNING, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return Some(task);
             }
+        }
+    }
+
+    /// One full dequeue attempt: local, injector, then steal (see module
+    /// docs for the ordering rationale).
+    fn scan(&self, id: usize, tick: usize) -> Option<Arc<Task>> {
+        if self.queues == QueueMode::Shared {
+            let t = self.claim_from(&self.injector)?;
+            self.m.injector_hits.inc();
+            return Some(t);
+        }
+        if tick % INJECTOR_TICK == 0 {
+            if let Some(t) = self.claim_from(&self.injector) {
+                self.m.injector_hits.inc();
+                return Some(t);
+            }
+        }
+        if let Some(t) = self.claim_from(&self.locals[id]) {
+            self.m.local_hits.inc();
+            return Some(t);
+        }
+        if let Some(t) = self.claim_from(&self.injector) {
+            self.m.injector_hits.inc();
+            return Some(t);
+        }
+        for off in 1..self.workers {
+            if let Some(t) = self.claim_from(&self.locals[(id + off) % self.workers]) {
+                self.m.steals.inc();
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Block until a task is claimable. The pre-sleep re-scan runs under
+    /// the sleep lock: an enqueue landing between a failed scan and
+    /// `idle += 1` would find no idle worker to signal, so the re-scan
+    /// (which observes every push completed before it) closes that
+    /// lost-wakeup window. Lock order is sleep -> queue here; producers
+    /// take queue and sleep sequentially, never nested — no deadlock.
+    fn next_task(&self, id: usize, tick: &mut usize) -> Arc<Task> {
+        loop {
+            *tick = tick.wrapping_add(1);
+            if let Some(t) = self.scan(id, *tick) {
+                return t;
+            }
+            let mut s = self.sleep.lock().unwrap();
+            if let Some(t) = self.scan(id, *tick) {
+                return t;
+            }
+            s.idle += 1;
+            while s.signals == 0 {
+                s = self.cv.wait(s).unwrap();
+            }
+            s.signals -= 1;
+            s.idle -= 1;
+            drop(s);
+        }
+    }
+
+    fn worker_loop(self: Arc<Self>, id: usize) {
+        WORKER.with(|w| w.set((Arc::as_ptr(&self) as usize, id)));
+        let mut tick = 0usize;
+        loop {
+            let task = self.next_task(id, &mut tick);
+            // The claim CAS in next_task already moved QUEUED -> RUNNING.
             let outcome = {
                 let mut guard = task.run.lock().unwrap_or_else(|p| p.into_inner());
                 match guard.as_mut() {
@@ -433,6 +650,10 @@ impl Scheduler {
                     *task.run.lock().unwrap_or_else(|p| p.into_inner()) = None;
                 }
             }
+            // One sleep-lock pass covers every wake this turn issued —
+            // a multi-buffer burst or an EOS fan-out signals idle
+            // workers once, not once per enqueued task.
+            self.flush_wakes();
         }
     }
 }
@@ -460,5 +681,30 @@ mod tests {
     #[test]
     fn workload_defaults_to_compute() {
         assert_eq!(Workload::default(), Workload::Compute);
+    }
+
+    #[test]
+    fn queue_mode_defaults_to_stealing() {
+        assert_eq!(QueueMode::default(), QueueMode::Stealing);
+    }
+
+    #[test]
+    fn detached_pools_report_their_shape() {
+        let s = Scheduler::start_detached(2, QueueMode::Shared);
+        assert_eq!(s.workers(), 2);
+        assert_eq!(s.queue_mode(), QueueMode::Shared);
+        // Zero workers is clamped, not accepted.
+        let s1 = Scheduler::start_detached(0, QueueMode::Stealing);
+        assert_eq!(s1.workers(), 1);
+    }
+
+    #[test]
+    fn notify_banks_signals_for_idle_workers_only() {
+        let s = Scheduler::start_detached(1, QueueMode::Stealing);
+        // No worker can be idle-registered AND signalled without consuming:
+        // the grant never exceeds registered idles.
+        s.notify(1000);
+        let sl = s.sleep.lock().unwrap();
+        assert!(sl.signals <= sl.idle);
     }
 }

@@ -1,6 +1,13 @@
 //! Lightweight metrics: counters, rate meters, histograms, and the
 //! process-level CPU/RSS sampling the paper's evaluation reports
 //! (throughput, CPU usage, peak memory — §5.4).
+//!
+//! Well-known counter families registered elsewhere: `sched.*` from the
+//! work-stealing element scheduler (`tasks`/`parks`/`polls`, the
+//! `local_hits`/`injector_hits`/`steals` dequeue split, and
+//! `queue_locks`/`lock_waits` ready-queue contention — see
+//! [`crate::element::sched`]), `codec.auto.<link>.*` from the adaptive
+//! wire codec, and `appsink.<name>` delivery counters.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

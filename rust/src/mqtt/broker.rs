@@ -5,6 +5,10 @@
 //! (QoS 1 acknowledged to the publisher; delivery to subscribers is QoS 0),
 //! retained messages (service advertisements), last-will (server-death
 //! detection → R4 failover), topic wildcards, keep-alive enforcement.
+//! `$`-prefixed topics follow §4.7.2: both the live fan-out ([`route`])
+//! and retained delivery go through [`topic::matches`], which hides them
+//! from filters that start with a wildcard — `#`/`+` subscribers never
+//! see broker-internal namespaces like `$SYS`.
 //!
 //! One thread per connection + one writer thread per connection. A
 //! published frame is encoded **once**: `route` builds the outbound

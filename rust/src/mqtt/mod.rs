@@ -195,6 +195,33 @@ mod tests {
     }
 
     #[test]
+    fn dollar_topics_not_fanned_out_to_wildcard_subscribers() {
+        // Broker-side §4.7.2: a '$'-prefixed topic reaches only
+        // subscribers that name the '$' level literally — never '#'/'+'
+        // wildcard subscribers (live fan-out AND retained delivery).
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let wild = client(&broker, "wild");
+        let explicit = client(&broker, "explicit");
+        let publ = client(&broker, "pub");
+        let rx_wild = wild.subscribe("#").unwrap();
+        let rx_explicit = explicit.subscribe("$internal/#").unwrap();
+        publ.publish("$internal/stats", b"secret", true).unwrap();
+        let msg = rx_explicit.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(&msg.payload[..], b"secret");
+        assert!(
+            rx_wild.recv_timeout(Duration::from_millis(300)).is_err(),
+            "wildcard subscriber leaked a $-topic"
+        );
+        // Retained path: a late '#' subscriber must not receive it either.
+        let late = client(&broker, "late");
+        let rx_late = late.subscribe("#").unwrap();
+        assert!(rx_late.recv_timeout(Duration::from_millis(300)).is_err());
+        // Ordinary topics still fan out to '#'.
+        publ.publish("plain/stats", b"ok", false).unwrap();
+        assert_eq!(&rx_wild.recv_timeout(Duration::from_secs(2)).unwrap().payload[..], b"ok");
+    }
+
+    #[test]
     fn session_count_tracks_connections() {
         let mut broker = Broker::start("127.0.0.1:0").unwrap();
         let c1 = client(&broker, "a");

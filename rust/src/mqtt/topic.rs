@@ -40,7 +40,19 @@ pub fn validate_filter(filter: &str) -> Result<()> {
 }
 
 /// MQTT 3.1.1 §4.7 matching. Assumes both sides validated.
+///
+/// Per §4.7.2, topics whose FIRST level starts with `$` (broker-internal
+/// namespaces like `$SYS`) are invisible to filters that start with a
+/// wildcard: `#` and `+/...` must not match `$SYS/...` — only a filter
+/// that spells the `$` level out literally (`$SYS/#`) may. Without this,
+/// every wildcard subscriber leaks broker-internal traffic.
 pub fn matches(filter: &str, topic: &str) -> bool {
+    if topic.starts_with('$') {
+        let first = filter.split('/').next().unwrap_or("");
+        if first == "#" || first == "+" {
+            return false;
+        }
+    }
     let mut f = filter.split('/');
     let mut t = topic.split('/');
     loop {
@@ -98,6 +110,24 @@ mod tests {
         assert!(!matches("a/b", "/a/b"));
         assert!(matches("/+/b", "/a/b")); // '+' matches the empty first level? no:
                                           // "/a/b" splits to ["", "a", "b"], "/+/b" to ["", "+", "b"]
+    }
+
+    #[test]
+    fn dollar_topics_hidden_from_leading_wildcards() {
+        // §4.7.2: a filter starting with a wildcard must not match topics
+        // whose first level starts with '$'.
+        assert!(!matches("#", "$SYS/broker/load"));
+        assert!(!matches("#", "$SYS"));
+        assert!(!matches("+/broker/load", "$SYS/broker/load"));
+        assert!(!matches("+", "$SYS"));
+        // Spelling the $-level out literally still works.
+        assert!(matches("$SYS/#", "$SYS/broker/load"));
+        assert!(matches("$SYS/+/load", "$SYS/broker/load"));
+        assert!(matches("$SYS/broker/load", "$SYS/broker/load"));
+        // Only the FIRST topic level is special: '$' deeper in the tree
+        // is an ordinary character.
+        assert!(matches("a/#", "a/$weird/level"));
+        assert!(matches("a/+/level", "a/$weird/level"));
     }
 
     #[test]

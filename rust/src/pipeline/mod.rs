@@ -19,7 +19,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::clock::PipelineClock;
-use crate::element::sched::{self, NodeRun, Task, TaskGroup};
+use crate::element::sched::{self, NodeRun, Scheduler, Task, TaskGroup};
 use crate::element::{
     BusMsg, Ctx, Downstream, Element, EosTracker, Inbox, Item, Progress, Workload,
 };
@@ -166,6 +166,19 @@ impl Pipeline {
     /// blocking ones (or threads for everything under
     /// [`ExecMode::Threads`]). Consumes the pipeline.
     pub fn start_mode(self, mode: ExecMode) -> Result<Running> {
+        self.start_inner(mode, None)
+    }
+
+    /// Bench/test hook: run the pipeline's `Compute` elements on a
+    /// specific (detached) pool instead of [`sched::global`] — lets one
+    /// process compare queue architectures. Production code always goes
+    /// through [`Pipeline::start`].
+    #[doc(hidden)]
+    pub fn start_pooled_on(self, scheduler: &Arc<Scheduler>) -> Result<Running> {
+        self.start_inner(ExecMode::Pool, Some(scheduler))
+    }
+
+    fn start_inner(self, mode: ExecMode, on: Option<&Arc<Scheduler>>) -> Result<Running> {
         self.validate()?;
         let clock = PipelineClock::start();
         let stop = Arc::new(AtomicBool::new(false));
@@ -211,7 +224,12 @@ impl Pipeline {
         let group = TaskGroup::new(pooled.len());
         let mut tasks = Vec::with_capacity(pooled.len());
         if !pooled.is_empty() {
-            let scheduler = sched::global();
+            // The global pool spins up lazily, only when a pipeline
+            // actually has pooled elements.
+            let scheduler = match on {
+                Some(s) => s,
+                None => sched::global(),
+            };
             for (node, ctx, inbox) in pooled {
                 tasks.push(scheduler.spawn(NodeRun::new(node.element, ctx, inbox, group.clone())));
             }

@@ -12,6 +12,7 @@ use std::time::Duration;
 use edgepipe::buffer::Buffer;
 use edgepipe::caps::Caps;
 use edgepipe::element::inbox::{Reserve, TryPop};
+use edgepipe::element::sched::{QueueMode, Scheduler};
 use edgepipe::element::{Ctx, Element, Inbox, Item, Leaky, QueueCfg, Workload};
 use edgepipe::pipeline::{ExecMode, Pipeline, WaitOutcome};
 use edgepipe::testkit;
@@ -359,6 +360,163 @@ fn sched_metrics_counters_advance() {
     let g = edgepipe::metrics::global();
     assert!(g.counter("sched.tasks").count() >= tasks0 + 4, "src + 2 pass + sink spawned");
     assert!(g.counter("sched.polls").count() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Work-stealing correctness: claim CAS, wake/steal races, batch wakeups.
+// ---------------------------------------------------------------------------
+
+/// Pass-through filter that detects concurrent entry: if two workers ever
+/// run the same task at once, `handle` overlaps with itself and the
+/// violation counter trips.
+struct GuardedPass {
+    busy: Arc<std::sync::atomic::AtomicBool>,
+    violations: Arc<AtomicU64>,
+}
+
+impl Element for GuardedPass {
+    fn sink_queue_cfg(&self, _: usize) -> QueueCfg {
+        // Capacity 1 maximises park/wake/steal churn on every link.
+        QueueCfg { capacity: 1, leaky: Leaky::No }
+    }
+    fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
+        if self.busy.swap(true, Ordering::SeqCst) {
+            self.violations.fetch_add(1, Ordering::Relaxed);
+        }
+        let out = if !matches!(item, Item::Eos) { ctx.push(0, item) } else { Ok(()) };
+        self.busy.store(false, Ordering::SeqCst);
+        out
+    }
+}
+
+#[test]
+fn no_task_runs_on_two_workers_at_once_under_churn() {
+    // 8 pipelines x 3 capacity-1 stages: thousands of park/wake/steal
+    // transitions. The QUEUED->RUNNING claim CAS must keep every task on
+    // at most one worker at any instant, and no wakeup may be lost (all
+    // pipelines reach EOS with full delivery).
+    let violations = Arc::new(AtomicU64::new(0));
+    let mut runnings = Vec::new();
+    let mut recs = Vec::new();
+    for _ in 0..8 {
+        let mut p = Pipeline::new();
+        let rec = Recorder::default();
+        let sink = RecordSink {
+            rec: Recorder {
+                buffers: rec.buffers.clone(),
+                caps: rec.caps.clone(),
+                eos: rec.eos.clone(),
+            },
+        };
+        let mut prev = p.add("src", Box::new(CountSrc { n: 300, sent: 0 })).unwrap();
+        for i in 0..3 {
+            let g = p
+                .add(
+                    &format!("g{i}"),
+                    Box::new(GuardedPass {
+                        busy: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+                        violations: violations.clone(),
+                    }),
+                )
+                .unwrap();
+            p.link(prev, g).unwrap();
+            prev = g;
+        }
+        let k = p.add("sink", Box::new(sink)).unwrap();
+        p.link(prev, k).unwrap();
+        runnings.push(p.start_mode(ExecMode::Pool).unwrap());
+        recs.push(rec);
+    }
+    for r in runnings {
+        assert_eq!(r.wait_eos(Duration::from_secs(60)), WaitOutcome::Eos, "lost wakeup wedged a pipeline");
+    }
+    for rec in recs {
+        assert_eq!(rec.buffers.load(Ordering::Relaxed), 300);
+    }
+    assert_eq!(violations.load(Ordering::Relaxed), 0, "a task ran on two workers at once");
+}
+
+/// Fan-in collector: one element with several sink pads, each fed by its
+/// own source — the batch-wakeup shape (EOS fan-out + multi-producer
+/// wakes onto one consumer).
+struct Collector {
+    pads: usize,
+    rec: Recorder,
+}
+
+impl Element for Collector {
+    fn n_sink_pads(&self) -> usize {
+        self.pads
+    }
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+    fn sink_queue_cfg(&self, _: usize) -> QueueCfg {
+        QueueCfg { capacity: 2, leaky: Leaky::No }
+    }
+    fn handle(&mut self, _pad: usize, item: Item, _ctx: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Buffer(_) => self.rec.buffers.fetch_add(1, Ordering::Relaxed),
+            Item::Caps(_) => self.rec.caps.fetch_add(1, Ordering::Relaxed),
+            Item::Eos => self.rec.eos.fetch_add(1, Ordering::Relaxed),
+        };
+        Ok(())
+    }
+}
+
+#[test]
+fn fanin_batch_wakeups_conserve_items_and_eos() {
+    // 6 sources -> one 6-pad collector: every buffer and every per-pad
+    // EOS must arrive exactly once even though wakes are batched per
+    // turn and EOS fan-out fires its wakers in one pass.
+    let rec = Recorder::default();
+    let collector = Collector {
+        pads: 6,
+        rec: Recorder {
+            buffers: rec.buffers.clone(),
+            caps: rec.caps.clone(),
+            eos: rec.eos.clone(),
+        },
+    };
+    let mut p = Pipeline::new();
+    let c = p.add("collect", Box::new(collector)).unwrap();
+    for i in 0..6 {
+        let s = p.add(&format!("src{i}"), Box::new(CountSrc { n: 100, sent: 0 })).unwrap();
+        p.link_pads(s, 0, c, i).unwrap();
+    }
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    assert_eq!(rec.buffers.load(Ordering::Relaxed), 600, "fan-in lost or duplicated buffers");
+    assert_eq!(rec.eos.load(Ordering::Relaxed), 6, "batched EOS fan-out lost a pad");
+}
+
+#[test]
+fn queue_counters_split_local_and_injector() {
+    let g = edgepipe::metrics::global();
+    let l0 = g.counter("sched.local_hits").count();
+    let i0 = g.counter("sched.injector_hits").count();
+    let (p, rec) = chain(400, 4);
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    assert_eq!(rec.buffers.load(Ordering::Relaxed), 400);
+    // Spawns come from this (non-worker) thread -> injector; wakes issued
+    // on worker threads land on local queues.
+    assert!(g.counter("sched.injector_hits").count() > i0, "spawned tasks bypass the injector");
+    if edgepipe::element::sched::global().queue_mode() == QueueMode::Stealing {
+        assert!(g.counter("sched.local_hits").count() > l0, "worker-side wakes never hit local queues");
+    }
+}
+
+#[test]
+fn detached_shared_queue_pool_still_delivers() {
+    // The shared-queue comparator architecture must stay semantically
+    // identical (it is the bench baseline).
+    let pool = Scheduler::start_detached(2, QueueMode::Shared);
+    assert_eq!(pool.queue_mode(), QueueMode::Shared);
+    let (p, rec) = chain(150, 3);
+    let running = p.start_pooled_on(&pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    assert_eq!(rec.buffers.load(Ordering::Relaxed), 150);
 }
 
 // ---------------------------------------------------------------------------
