@@ -1,75 +1,380 @@
-//! E9 — R4 failover: two MQTT-hybrid servers on one operation; the
-//! primary dies mid-stream; measure the service gap until the client's
-//! next response arrives from the backup.
+//! E9 — resilient elastic offload, gated (ISSUE 6).
+//!
+//! Two scenarios, both with hard budget asserts so CI fails on
+//! resilience regressions, reported into `BENCH_failover.json`
+//! (path override: `EDGEPIPE_BENCH_OUT`):
+//!
+//! **failover** — two MQTT-hybrid servers on one operation; the primary
+//! dies mid-stream. Gates: the service gap until the first post-kill
+//! response is bounded (`RECOVERY_MS_MAX`), frame loss across the stall
+//! is bounded (leaky deadline semantics — the pipeline never errors),
+//! and the client observably re-routed or retried (metrics, not luck).
+//!
+//! **hedged tail** — a primary whose every 5th response is artificially
+//! slow, next to a fast-but-busier peer. An unhedged client eats the
+//! tail; a hedged client (`hedge-pct`) duplicates the laggard request to
+//! the second-best peer and takes whichever answers first. Gate: hedging
+//! cuts p99 by at least 25%, and at least one hedge actually won.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use edgepipe::bench;
+use edgepipe::buffer::Buffer;
+use edgepipe::caps::Caps;
 use edgepipe::element::registry::{PipelineEnv, Registry};
-use edgepipe::elements::appsink_channel;
+use edgepipe::elements::{
+    appsink_channel, AppSink, AppSrc, QueryClient, QueryServerSink, QueryServerSrc,
+    ResilienceConfig, TensorFilter,
+};
+use edgepipe::metrics;
 use edgepipe::mqtt::Broker;
-use edgepipe::pipeline::parser;
+use edgepipe::pipeline::{parser, Pipeline, Running};
+use edgepipe::tensor::{DType, TensorInfo, TensorsInfo};
+
+/// Recovery budget: dead-request timeout + rediscovery + reconnect.
+const RECOVERY_MS_MAX: u64 = 4000;
+/// Frames the 30 fps source may lose across the stall (leaky queue +
+/// deadline drops). ~3 s of stall at 30 fps, rounded up.
+const FRAME_LOSS_MAX: u64 = 90;
+/// Dropped-by-deadline budget for the client itself.
+const FRAMES_DROPPED_MAX: u64 = 30;
 
 fn free_port() -> u16 {
     std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
 }
 
-fn main() {
-    let registry = Registry::with_builtins();
-    let env = PipelineEnv::default();
-    let broker = Broker::start("127.0.0.1:0").unwrap();
-    let b = broker.addr().to_string();
-    println!("# bench_failover (E9, R4)");
+fn qcounter(name: &str, which: &str) -> u64 {
+    metrics::global().counter(&format!("query.{name}.{which}")).count()
+}
 
+// ---------------------------------------------------------------------------
+// Scenario 1: kill the primary mid-run
+// ---------------------------------------------------------------------------
+
+struct FailoverRow {
+    run: u64,
+    gap_ms: u64,
+    offered: u64,
+    delivered: u64,
+    frames_dropped: u64,
+    retries: u64,
+    reroutes: u64,
+}
+
+fn failover_runs(registry: &Registry, env: &PipelineEnv, broker: &str) -> Vec<FailoverRow> {
+    const OFFERED: u64 = 240; // 8 s at 30 fps
     let mut rows = Vec::new();
-    for run in 0..3 {
+    for run in 0..2u64 {
         let (p1, p2) = (free_port(), free_port());
-        let mk = |pair: &str, port: u16| {
+        // Primary advertises idle, backup advertises busier: selection is
+        // deterministic (always `a` first), so the kill always hits the
+        // in-use server.
+        let mk = |pair: &str, port: u16, load: &str| {
             format!(
                 "tensor_query_serversrc operation=fo{run} port={port} pair-id={pair}-{run} \
-                   protocol=mqtt-hybrid broker={b} server-id={pair}-{run} ! \
+                   protocol=mqtt-hybrid broker={broker} server-id={pair}-{run} load={load} ! \
                  tensor_filter framework=passthrough ! \
                  tensor_query_serversink operation=fo{run} pair-id={pair}-{run}"
             )
         };
-        let s1 = parser::parse(&mk("a", p1), &registry, &env).unwrap().start().unwrap();
-        let s2 = parser::parse(&mk("b", p2), &registry, &env).unwrap().start().unwrap();
+        let s1 = parser::parse(&mk("a", p1, "0.0"), registry, env).unwrap().start().unwrap();
+        let s2 = parser::parse(&mk("b", p2, "0.6"), registry, env).unwrap().start().unwrap();
         std::thread::sleep(Duration::from_millis(500));
 
+        let qc = format!("foqc{run}");
         let client = parser::parse(
             &format!(
-                "videotestsrc width=160 height=120 framerate=30 num-buffers=240 ! \
+                "videotestsrc width=160 height=120 framerate=30 num-buffers={OFFERED} ! \
                  tensor_converter ! queue leaky=2 max-size-buffers=2 ! \
-                 tensor_query_client operation=fo{run} protocol=mqtt-hybrid broker={b} timeout-ms=1000 ! \
+                 tensor_query_client name={qc} operation=fo{run} protocol=mqtt-hybrid \
+                   broker={broker} timeout-ms=1000 retry=4 backoff-ms=50 deadline-ms=900 ! \
                  appsink channel=fo{run}"
             ),
-            &registry,
-            &env,
+            registry,
+            env,
         )
         .unwrap()
         .start()
         .unwrap();
         let rx = appsink_channel(&format!("fo{run}")).unwrap();
 
-        // Warm up: 20 responses, then kill the currently-used server.
+        // Warm up: 20 responses, then kill the in-use server.
+        let mut delivered: u64 = 0;
         for _ in 0..20 {
             rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            delivered += 1;
         }
         let kill_at = Instant::now();
         let _ = s1.stop(Duration::from_secs(2));
-        // Next response that arrives AFTER the kill marks recovery.
+        // First response AFTER the kill marks recovery.
         let gap = loop {
-            let _buf = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            delivered += 1;
             let dt = kill_at.elapsed();
             if dt > Duration::from_millis(5) {
                 break dt;
             }
         };
-        rows.push(vec![format!("run {run}"), format!("{:.0}", gap.as_secs_f64() * 1000.0)]);
-        while rx.recv_timeout(Duration::from_secs(5)).is_ok() {}
+        while rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+            delivered += 1;
+        }
         let _ = client.stop(Duration::from_secs(5));
         let _ = s2.stop(Duration::from_secs(5));
+
+        let row = FailoverRow {
+            run,
+            gap_ms: gap.as_millis() as u64,
+            offered: OFFERED,
+            delivered,
+            frames_dropped: qcounter(&qc, "frames_dropped"),
+            retries: qcounter(&qc, "retries"),
+            reroutes: qcounter(&qc, "reroutes"),
+        };
+
+        // --- hard gates ---
+        assert!(
+            row.gap_ms <= RECOVERY_MS_MAX,
+            "run {run}: recovery took {} ms (budget {RECOVERY_MS_MAX} ms)",
+            row.gap_ms
+        );
+        assert!(
+            row.delivered + FRAME_LOSS_MAX >= row.offered,
+            "run {run}: lost {} frames (budget {FRAME_LOSS_MAX})",
+            row.offered - row.delivered
+        );
+        assert!(
+            row.frames_dropped <= FRAMES_DROPPED_MAX,
+            "run {run}: client dropped {} frames (budget {FRAMES_DROPPED_MAX})",
+            row.frames_dropped
+        );
+        assert!(
+            row.retries + row.reroutes >= 1,
+            "run {run}: no observable failover (retries=0, reroutes=0)"
+        );
+        rows.push(row);
     }
-    bench::table("Failover service gap", &["run", "gap ms"], &rows);
-    println!("\n(Gap = dead-request timeout + rediscovery + reconnect; bounded by timeout-ms=1000.)");
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Scenario 2: hedged tail-cutting
+// ---------------------------------------------------------------------------
+
+/// Server pipeline whose filter sleeps `tail_ms` on every 5th request.
+fn tail_server(op: &str, pair: &str, sid: &str, broker: &str, load: f64, tail_ms: u64) -> Running {
+    let src = QueryServerSrc::new(op)
+        .with_pair_id(pair)
+        .with_server_id(sid)
+        .with_bind("127.0.0.1:0")
+        .with_hybrid(broker)
+        .with_advertised_load(load);
+    let n = Arc::new(AtomicU64::new(0));
+    let f = TensorFilter::custom(Box::new(move |b: &Buffer| {
+        if tail_ms > 0 && n.fetch_add(1, Ordering::Relaxed) % 5 == 4 {
+            std::thread::sleep(Duration::from_millis(tail_ms));
+        }
+        Ok(b.data.to_vec())
+    }));
+    let mut p = Pipeline::new();
+    let s = p.add("ssrc", Box::new(src)).unwrap();
+    let fi = p.add("f", Box::new(f)).unwrap();
+    let k = p.add("ssink", Box::new(QueryServerSink::new(pair))).unwrap();
+    p.link(s, fi).unwrap();
+    p.link(fi, k).unwrap();
+    p.start().unwrap()
+}
+
+/// Push `n` frames one at a time through a fresh client, returning the
+/// per-frame round-trip times in milliseconds (sorted ascending).
+fn measure_rtts(name: &str, client: QueryClient, n: usize) -> Vec<f64> {
+    let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[16]).unwrap());
+    let mut p = Pipeline::new();
+    let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+    let (sink, rx) = AppSink::new(4);
+    let s = p.add("src", Box::new(src)).unwrap();
+    let c = p.add(name, Box::new(client)).unwrap();
+    let k = p.add("sink", Box::new(sink)).unwrap();
+    p.link(s, c).unwrap();
+    p.link(c, k).unwrap();
+    let running = p.start().unwrap();
+
+    let mut rtts = Vec::with_capacity(n);
+    for i in 0..n {
+        let t0 = Instant::now();
+        h.push(Buffer::new(vec![i as u8; 16])).unwrap();
+        rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        rtts.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    drop(h);
+    let _ = running.stop(Duration::from_secs(5));
+    rtts.sort_by(|a, b| a.total_cmp(b));
+    rtts
+}
+
+fn pctile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct HedgeStats {
+    p50_plain_ms: f64,
+    p99_plain_ms: f64,
+    p50_hedged_ms: f64,
+    p99_hedged_ms: f64,
+    hedges: u64,
+    hedge_wins: u64,
+}
+
+fn hedged_tail(broker: &str) -> HedgeStats {
+    const N: usize = 100;
+    const TAIL_MS: u64 = 80;
+
+    // Unhedged baseline: its own operation so health/RTT state is clean.
+    let sp = tail_server("hb-plain", "hbp-s", "slow", broker, 0.0, TAIL_MS);
+    let fp = tail_server("hb-plain", "hbp-f", "fast", broker, 0.5, 0);
+    std::thread::sleep(Duration::from_millis(500));
+    let plain = measure_rtts(
+        "hbqc_plain",
+        QueryClient::hybrid("hb-plain", broker).unwrap().with_timeout(Duration::from_secs(5)),
+        N,
+    );
+    let _ = sp.stop(Duration::from_secs(5));
+    let _ = fp.stop(Duration::from_secs(5));
+
+    // Hedged run: identical topology, hedge at the p50 of observed RTTs.
+    let sh = tail_server("hb-hedged", "hbh-s", "slow", broker, 0.0, TAIL_MS);
+    let fh = tail_server("hb-hedged", "hbh-f", "fast", broker, 0.5, 0);
+    std::thread::sleep(Duration::from_millis(500));
+    let hedged = measure_rtts(
+        "hbqc_hedged",
+        QueryClient::hybrid("hb-hedged", broker)
+            .unwrap()
+            .with_timeout(Duration::from_secs(5))
+            .with_resilience(ResilienceConfig { hedge_pct: Some(0.5), ..Default::default() }),
+        N,
+    );
+    let _ = sh.stop(Duration::from_secs(5));
+    let _ = fh.stop(Duration::from_secs(5));
+
+    let stats = HedgeStats {
+        p50_plain_ms: pctile(&plain, 0.5),
+        p99_plain_ms: pctile(&plain, 0.99),
+        p50_hedged_ms: pctile(&hedged, 0.5),
+        p99_hedged_ms: pctile(&hedged, 0.99),
+        hedges: qcounter("hbqc_hedged", "hedges"),
+        hedge_wins: qcounter("hbqc_hedged", "hedge_wins"),
+    };
+
+    // --- hard gates ---
+    assert!(
+        stats.p99_plain_ms >= TAIL_MS as f64 * 0.8,
+        "tail did not materialize: unhedged p99 {:.1} ms",
+        stats.p99_plain_ms
+    );
+    assert!(stats.hedge_wins >= 1, "no hedge ever won against an {TAIL_MS} ms tail");
+    assert!(
+        stats.p99_hedged_ms <= stats.p99_plain_ms * 0.75,
+        "hedging failed to cut the tail: p99 {:.1} -> {:.1} ms",
+        stats.p99_plain_ms,
+        stats.p99_hedged_ms
+    );
+    stats
+}
+
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let registry = Registry::with_builtins();
+    let env = PipelineEnv::default();
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    println!("# bench_failover (E9, R4 / ISSUE 6)");
+
+    let rows = failover_runs(&registry, &env, &b);
+    bench::table(
+        "Failover service gap",
+        &["run", "gap ms", "delivered/offered", "dropped", "retries", "reroutes"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    format!("{}", r.run),
+                    format!("{}", r.gap_ms),
+                    format!("{}/{}", r.delivered, r.offered),
+                    format!("{}", r.frames_dropped),
+                    format!("{}", r.retries),
+                    format!("{}", r.reroutes),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let h = hedged_tail(&b);
+    bench::table(
+        "Hedged tail (every 5th response +80 ms on the primary)",
+        &["client", "p50 ms", "p99 ms"],
+        &[
+            vec!["plain".into(), format!("{:.1}", h.p50_plain_ms), format!("{:.1}", h.p99_plain_ms)],
+            vec![
+                "hedged".into(),
+                format!("{:.1}", h.p50_hedged_ms),
+                format!("{:.1}", h.p99_hedged_ms),
+            ],
+        ],
+    );
+    println!("\nhedges fired: {}  hedge wins: {}", h.hedges, h.hedge_wins);
+
+    // ---- JSON report (hand-rolled; no serde offline) ----
+    let out_path =
+        std::env::var("EDGEPIPE_BENCH_OUT").unwrap_or_else(|_| "BENCH_failover.json".to_string());
+    let generated = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let failover_json = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"run\": {}, \"gap_ms\": {}, \"offered\": {}, \"delivered\": {}, \
+                 \"frames_dropped\": {}, \"retries\": {}, \"reroutes\": {}}}",
+                r.run, r.gap_ms, r.offered, r.delivered, r.frames_dropped, r.retries, r.reroutes
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        concat!(
+            "{{\n",
+            "  \"schema\": 1,\n",
+            "  \"bench\": \"failover\",\n",
+            "  \"generated_unix\": {generated},\n",
+            "  \"budgets\": {{\"recovery_ms_max\": {rec}, \"frame_loss_max\": {loss}, ",
+            "\"frames_dropped_max\": {drop}, \"hedged_p99_ratio_max\": 0.75}},\n",
+            "  \"failover\": [\n{failover}\n  ],\n",
+            "  \"hedged_tail\": {{\"p50_plain_ms\": {p50p:.2}, \"p99_plain_ms\": {p99p:.2}, ",
+            "\"p50_hedged_ms\": {p50h:.2}, \"p99_hedged_ms\": {p99h:.2}, ",
+            "\"hedges\": {hedges}, \"hedge_wins\": {wins}}}\n",
+            "}}\n"
+        ),
+        generated = generated,
+        rec = RECOVERY_MS_MAX,
+        loss = FRAME_LOSS_MAX,
+        drop = FRAMES_DROPPED_MAX,
+        failover = failover_json,
+        p50p = h.p50_plain_ms,
+        p99p = h.p99_plain_ms,
+        p50h = h.p50_hedged_ms,
+        p99h = h.p99_hedged_ms,
+        hedges = h.hedges,
+        wins = h.hedge_wins,
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
 }

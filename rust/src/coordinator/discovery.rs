@@ -13,6 +13,7 @@
 //! (§4.2.2's `/objdetect/#` example).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -115,8 +116,16 @@ pub fn server_client_options(server_id: &str, ad: &ServiceAd) -> ClientOptions {
 /// under several operations, and they are distinct services — keying by
 /// id alone made them collide, and clearing one operation's ad removed
 /// the other operation's live entry.
+///
+/// Each entry carries a **birth**: a process-wide counter stamped when
+/// the ad appears while absent from the map (first sighting, or
+/// re-advertisement after the retained ad was cleared by death/last-will).
+/// A load-refresh republish of a live ad keeps its birth. The peer-health
+/// layer ([`crate::coordinator::health`]) uses a birth change to clear a
+/// server's failure history — the fix for the former append-only failover
+/// blacklist that kept a restarted server unreachable forever.
 pub struct AdWatcher {
-    servers: Arc<Mutex<BTreeMap<(String, String), ServiceAd>>>,
+    servers: Arc<Mutex<BTreeMap<(String, String), (ServiceAd, u64)>>>,
     #[allow(dead_code)]
     client: MqttClient,
     rx_done: Receiver<()>,
@@ -135,7 +144,7 @@ impl AdWatcher {
                 channel_depth: 64,
             },
         )?;
-        let servers: Arc<Mutex<BTreeMap<(String, String), ServiceAd>>> =
+        let servers: Arc<Mutex<BTreeMap<(String, String), (ServiceAd, u64)>>> =
             Arc::new(Mutex::new(BTreeMap::new()));
         let s2 = servers.clone();
         // An operation may itself end in a wildcard (`objdetect/#`).
@@ -152,7 +161,13 @@ impl AdWatcher {
                 if msg.payload.is_empty() {
                     s.remove(&(op, id));
                 } else if let Ok(ad) = ServiceAd::decode(&op, &id, &msg.payload) {
-                    s.insert((op, id), ad);
+                    // Keep the birth across in-place updates (load
+                    // refresh); stamp a new one when the ad (re)appears.
+                    let birth = match s.get(&(op.clone(), id.clone())) {
+                        Some((_, b)) => *b,
+                        None => next_birth(),
+                    };
+                    s.insert((op, id), (ad, birth));
                 }
             }
         })?;
@@ -163,8 +178,18 @@ impl AdWatcher {
     /// sort panic-free no matter what a remote peer advertises (decode
     /// already maps non-finite loads to +inf, which orders last).
     pub fn servers(&self) -> Vec<ServiceAd> {
-        let mut v: Vec<ServiceAd> = self.servers.lock().unwrap().values().cloned().collect();
-        v.sort_by(|a, b| a.load.total_cmp(&b.load).then_with(|| a.server_id.cmp(&b.server_id)));
+        self.entries().into_iter().map(|(ad, _)| ad).collect()
+    }
+
+    /// Live servers with their ad births, sorted like [`servers`]. The
+    /// health layer feeds this to `HealthMap::note_ads`/`select` so a
+    /// restarted server (new birth) sheds its failure history.
+    pub fn entries(&self) -> Vec<(ServiceAd, u64)> {
+        let mut v: Vec<(ServiceAd, u64)> =
+            self.servers.lock().unwrap().values().cloned().collect();
+        v.sort_by(|(a, _), (b, _)| {
+            a.load.total_cmp(&b.load).then_with(|| a.server_id.cmp(&b.server_id))
+        });
         v
     }
 
@@ -187,6 +212,13 @@ impl AdWatcher {
             let _ = self.rx_done.recv_timeout(Duration::from_millis(20));
         }
     }
+}
+
+/// Process-wide monotonic ad-birth stamp (shared across watchers so a
+/// client that recreates its watcher still sees births advance).
+fn next_birth() -> u64 {
+    static BIRTH: AtomicU64 = AtomicU64::new(1);
+    BIRTH.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Validate an operation name (becomes a topic level).
@@ -367,6 +399,42 @@ mod tests {
         assert_eq!(servers[1].server_id, "evil");
         assert_eq!(servers[1].load, f64::INFINITY);
         assert_eq!(watcher.pick(&[]).unwrap().server_id, "busy");
+    }
+
+    #[test]
+    fn rebirth_on_clear_and_readvertise_but_not_on_refresh() {
+        // Regression (failover blacklist expiry): the health layer keys
+        // "did this server restart?" off the ad birth, so a clear (death)
+        // followed by a re-advertise under the SAME server_id must bump
+        // the birth — while an in-place load refresh must NOT.
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let addr = broker.addr().to_string();
+        let c = MqttClient::connect(&addr, ClientOptions::default()).unwrap();
+        let mut a = ad("op", "reborn", 7, 0.1);
+        advertise(&c, &a).unwrap();
+        let watcher = AdWatcher::watch(&addr, "op").unwrap();
+        watcher.wait_any(Duration::from_secs(3)).unwrap();
+        let birth0 = watcher.entries()[0].1;
+
+        // Load refresh: same retained topic republished while live.
+        a.load = 0.8;
+        advertise(&c, &a).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while Instant::now() < deadline && watcher.entries()[0].0.load != 0.8 {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(watcher.entries()[0].1, birth0, "load refresh must keep birth");
+
+        // Death (ad cleared) then restart (re-advertise, same id).
+        clear_advertisement(&c, &a).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(3);
+        while Instant::now() < deadline && !watcher.servers().is_empty() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(watcher.servers().is_empty());
+        advertise(&c, &a).unwrap();
+        watcher.wait_any(Duration::from_secs(3)).unwrap();
+        assert!(watcher.entries()[0].1 > birth0, "re-advertise after clear must bump birth");
     }
 
     #[test]

@@ -1,0 +1,499 @@
+//! Peer-health model for elastic query offload (R4): per-server circuit
+//! breaker, consecutive-failure tracking, and a latency EWMA + recent-RTT
+//! ring, combined with the advertised load into a selection score.
+//!
+//! One [`HealthMap`] is shared by every `QueryClient` watching the same
+//! operation (see [`shared`]), so observations made by one client
+//! pipeline (server X is timing out) immediately steer every other
+//! client in the process away from X — and the half-open probe budget is
+//! spent once per process, not once per client.
+//!
+//! ## Breaker state machine
+//!
+//! ```text
+//!            N consecutive failures
+//!   Closed ──────────────────────────▶ Open (until = now + base·2^(opens-1), capped)
+//!     ▲                                  │ open interval elapsed
+//!     │ probe succeeds                   ▼
+//!     └────────────────────────────── HalfOpen (probe budget)
+//!                                        │ probe fails
+//!                                        └──────▶ Open (longer)
+//! ```
+//!
+//! `allow()` is the gate: `Closed` always passes, `Open` passes only once
+//! the open interval has elapsed (transitioning to `HalfOpen`), and
+//! `HalfOpen` passes while probe budget remains. A probe whose outcome is
+//! never reported (caller died mid-request) does not wedge the peer: the
+//! budget refreshes after another open interval in `HalfOpen`.
+//!
+//! A *fresh advertisement* — the `AdWatcher` birth counter bumping because
+//! the server's retained ad was cleared (death) and re-published
+//! (restart) — resets the peer's failure history entirely. This is the
+//! fix for the former permanent blacklist: a crashed server that restarts
+//! under the same `server_id` becomes selectable the moment it
+//! re-advertises.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::discovery::ServiceAd;
+
+/// Minimum recorded RTT samples before [`HealthMap::rtt_percentile`]
+/// reports (hedging stays off until the latency profile is warm).
+pub const MIN_RTT_SAMPLES: usize = 8;
+
+/// Recent-RTT ring capacity per peer.
+const RTT_RING: usize = 128;
+
+/// Circuit-breaker + scoring knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakerConfig {
+    /// Consecutive failures that open the breaker.
+    pub failure_threshold: u32,
+    /// First open interval; doubles on every re-open, capped at `open_max`.
+    pub open_base: Duration,
+    pub open_max: Duration,
+    /// Requests allowed through while `HalfOpen`.
+    pub probe_budget: u32,
+    /// Latency EWMA weight for new samples.
+    pub ewma_alpha: f64,
+    /// Selection-score penalty per consecutive failure (in advertised-load
+    /// units: one failure outweighs a `0.5` load difference by default).
+    pub failure_penalty: f64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        Self {
+            failure_threshold: 3,
+            open_base: Duration::from_millis(500),
+            open_max: Duration::from_secs(30),
+            probe_budget: 1,
+            ewma_alpha: 0.2,
+            failure_penalty: 0.5,
+        }
+    }
+}
+
+/// Observable breaker state of a peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+#[derive(Debug)]
+struct Peer {
+    state: BreakerState,
+    consecutive_failures: u32,
+    /// How many times the breaker opened without an intervening success
+    /// (drives the exponential open interval).
+    opens: u32,
+    /// When the current `Open` interval ends / the `HalfOpen` budget
+    /// refreshes.
+    until: Instant,
+    probes_left: u32,
+    ewma_us: Option<f64>,
+    rtts_us: Vec<f64>,
+    rtt_next: usize,
+    /// Ad birth this state was observed under; a newer birth resets it.
+    birth: u64,
+}
+
+impl Peer {
+    fn new(birth: u64) -> Self {
+        Self {
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            opens: 0,
+            until: Instant::now(),
+            probes_left: 0,
+            ewma_us: None,
+            rtts_us: Vec::new(),
+            rtt_next: 0,
+            birth,
+        }
+    }
+
+    fn reset(&mut self, birth: u64) {
+        // A restarted server keeps its latency profile (same hardware,
+        // same model) but sheds all failure history.
+        self.state = BreakerState::Closed;
+        self.consecutive_failures = 0;
+        self.opens = 0;
+        self.probes_left = 0;
+        self.birth = birth;
+    }
+
+    fn open_interval(&self, cfg: &BreakerConfig) -> Duration {
+        let exp = self.opens.saturating_sub(1).min(16);
+        cfg.open_max.min(cfg.open_base.saturating_mul(1u32 << exp))
+    }
+}
+
+/// Shared per-operation peer-health table.
+pub struct HealthMap {
+    peers: Mutex<HashMap<String, Peer>>,
+    cfg: BreakerConfig,
+}
+
+impl HealthMap {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        Self { peers: Mutex::new(HashMap::new()), cfg }
+    }
+
+    pub fn config(&self) -> &BreakerConfig {
+        &self.cfg
+    }
+
+    /// Fold a discovery snapshot in: a peer whose ad birth advanced (its
+    /// retained ad was cleared and re-published — i.e. it restarted) has
+    /// its failure history cleared so it is immediately selectable again.
+    pub fn note_ads(&self, ads: &[(ServiceAd, u64)]) {
+        let mut peers = self.peers.lock().unwrap();
+        for (ad, birth) in ads {
+            let p = peers.entry(ad.server_id.clone()).or_insert_with(|| Peer::new(*birth));
+            if p.birth != *birth {
+                p.reset(*birth);
+            }
+        }
+    }
+
+    /// Breaker gate; consumes a half-open probe when one is granted.
+    /// Unknown peers are allowed (and tracked from first outcome).
+    pub fn allow(&self, id: &str) -> bool {
+        let mut peers = self.peers.lock().unwrap();
+        let Some(p) = peers.get_mut(id) else { return true };
+        let now = Instant::now();
+        match p.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if now < p.until {
+                    return false;
+                }
+                p.state = BreakerState::HalfOpen;
+                p.probes_left = self.cfg.probe_budget;
+                p.until = now + p.open_interval(&self.cfg); // budget refresh point
+                p.probes_left -= 1;
+                true
+            }
+            BreakerState::HalfOpen => {
+                if p.probes_left == 0 && now >= p.until {
+                    // Probe outcome was never reported; refresh the budget
+                    // rather than wedging the peer in HalfOpen forever.
+                    p.probes_left = self.cfg.probe_budget;
+                    p.until = now + p.open_interval(&self.cfg);
+                }
+                if p.probes_left > 0 {
+                    p.probes_left -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Like [`allow`] but without consuming a probe — for reroute checks
+    /// and scoring, where no request is about to be sent.
+    pub fn would_allow(&self, id: &str) -> bool {
+        let peers = self.peers.lock().unwrap();
+        match peers.get(id) {
+            None => true,
+            Some(p) => match p.state {
+                BreakerState::Closed => true,
+                BreakerState::HalfOpen => p.probes_left > 0 || Instant::now() >= p.until,
+                BreakerState::Open => Instant::now() >= p.until,
+            },
+        }
+    }
+
+    /// Record a completed request. Closes the breaker (from any state)
+    /// and folds the RTT into the EWMA + recent-sample ring.
+    pub fn record_success(&self, id: &str, rtt_us: f64) {
+        let mut peers = self.peers.lock().unwrap();
+        let p = peers.entry(id.to_string()).or_insert_with(|| Peer::new(0));
+        p.state = BreakerState::Closed;
+        p.consecutive_failures = 0;
+        p.opens = 0;
+        p.probes_left = 0;
+        let a = self.cfg.ewma_alpha;
+        p.ewma_us = Some(match p.ewma_us {
+            None => rtt_us,
+            Some(e) => a * rtt_us + (1.0 - a) * e,
+        });
+        if p.rtts_us.len() < RTT_RING {
+            p.rtts_us.push(rtt_us);
+        } else {
+            p.rtts_us[p.rtt_next] = rtt_us;
+        }
+        p.rtt_next = (p.rtt_next + 1) % RTT_RING;
+    }
+
+    /// Record a failed request (connect error, write/read error, timeout).
+    /// Returns `true` when this failure transitioned the breaker to
+    /// `Open` (callers count `breaker_open` metrics on that edge).
+    pub fn record_failure(&self, id: &str) -> bool {
+        let mut peers = self.peers.lock().unwrap();
+        let p = peers.entry(id.to_string()).or_insert_with(|| Peer::new(0));
+        p.consecutive_failures += 1;
+        let opened = match p.state {
+            // A failed half-open probe re-opens with a longer interval.
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => p.consecutive_failures >= self.cfg.failure_threshold,
+            BreakerState::Open => false,
+        };
+        if opened {
+            p.state = BreakerState::Open;
+            p.opens += 1;
+            p.probes_left = 0;
+            p.until = Instant::now() + p.open_interval(&self.cfg);
+        }
+        opened
+    }
+
+    pub fn state(&self, id: &str) -> BreakerState {
+        self.peers.lock().unwrap().get(id).map(|p| p.state).unwrap_or(BreakerState::Closed)
+    }
+
+    pub fn consecutive_failures(&self, id: &str) -> u32 {
+        self.peers.lock().unwrap().get(id).map(|p| p.consecutive_failures).unwrap_or(0)
+    }
+
+    /// Latency EWMA in microseconds, if any sample has been recorded.
+    pub fn ewma_us(&self, id: &str) -> Option<f64> {
+        self.peers.lock().unwrap().get(id).and_then(|p| p.ewma_us)
+    }
+
+    /// Percentile (0..=100) over the peer's recent-RTT ring; `None` until
+    /// [`MIN_RTT_SAMPLES`] samples exist (hedging stays off while cold).
+    pub fn rtt_percentile(&self, id: &str, pct: f64) -> Option<f64> {
+        let peers = self.peers.lock().unwrap();
+        let p = peers.get(id)?;
+        if p.rtts_us.len() < MIN_RTT_SAMPLES {
+            return None;
+        }
+        let mut v = p.rtts_us.clone();
+        drop(peers);
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((v.len() - 1) as f64 * (pct / 100.0).clamp(0.0, 1.0)).round() as usize;
+        Some(v[idx])
+    }
+
+    /// Selection score: advertised load plus observed-health penalties
+    /// (lower is better). Consecutive failures dominate; the latency EWMA
+    /// breaks ties between equally-loaded healthy peers.
+    pub fn score(&self, ad: &ServiceAd) -> f64 {
+        let peers = self.peers.lock().unwrap();
+        let (fails, ewma) = peers
+            .get(&ad.server_id)
+            .map(|p| (p.consecutive_failures, p.ewma_us.unwrap_or(0.0)))
+            .unwrap_or((0, 0.0));
+        ad.load + self.cfg.failure_penalty * fails as f64 + ewma / 1e6
+    }
+
+    /// Health-aware selection: candidates ranked by [`score`], gated by
+    /// the breaker via [`allow`] (so a granted pick consumes a half-open
+    /// probe). `avoid` demotes a peer (the one we just failed on, or the
+    /// hedge primary) to last resort without blacklisting it.
+    pub fn select(&self, ads: &[(ServiceAd, u64)], avoid: Option<&str>) -> Option<ServiceAd> {
+        self.note_ads(ads);
+        let mut ranked: Vec<&ServiceAd> = ads.iter().map(|(ad, _)| ad).collect();
+        ranked.sort_by(|a, b| {
+            self.score(a).total_cmp(&self.score(b)).then_with(|| a.server_id.cmp(&b.server_id))
+        });
+        if let Some(av) = avoid {
+            let (rest, avoided): (Vec<_>, Vec<_>) =
+                ranked.into_iter().partition(|ad| ad.server_id != av);
+            ranked = rest;
+            ranked.extend(avoided);
+        }
+        ranked.into_iter().find(|ad| self.allow(&ad.server_id)).cloned()
+    }
+}
+
+/// Process-wide shared maps, keyed by scope (the query operation): every
+/// `QueryClient` on one operation shares observations. The first caller's
+/// config wins for that scope.
+pub fn shared(scope: &str, cfg: BreakerConfig) -> Arc<HealthMap> {
+    static MAPS: OnceLock<Mutex<HashMap<String, Arc<HealthMap>>>> = OnceLock::new();
+    MAPS.get_or_init(|| Mutex::new(HashMap::new()))
+        .lock()
+        .unwrap()
+        .entry(scope.to_string())
+        .or_insert_with(|| Arc::new(HealthMap::new(cfg)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 3,
+            open_base: Duration::from_millis(40),
+            open_max: Duration::from_millis(400),
+            probe_budget: 1,
+            ..BreakerConfig::default()
+        }
+    }
+
+    fn ad(id: &str, load: f64) -> ServiceAd {
+        ServiceAd {
+            operation: "op".into(),
+            server_id: id.into(),
+            host: "127.0.0.1".into(),
+            port: 1,
+            model: "m".into(),
+            load,
+        }
+    }
+
+    #[test]
+    fn closes_to_open_after_threshold() {
+        let h = HealthMap::new(cfg());
+        assert!(!h.record_failure("s"));
+        assert!(!h.record_failure("s"));
+        assert_eq!(h.state("s"), BreakerState::Closed);
+        assert!(h.record_failure("s"), "third failure must open");
+        assert_eq!(h.state("s"), BreakerState::Open);
+        assert!(!h.allow("s"), "open breaker blocks immediately");
+        assert!(!h.would_allow("s"));
+    }
+
+    #[test]
+    fn open_expires_into_half_open_probe_budget() {
+        let h = HealthMap::new(cfg());
+        for _ in 0..3 {
+            h.record_failure("s");
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.would_allow("s"));
+        assert!(h.allow("s"), "expired open grants a probe");
+        assert_eq!(h.state("s"), BreakerState::HalfOpen);
+        assert!(!h.allow("s"), "probe budget of 1 is spent");
+    }
+
+    #[test]
+    fn probe_success_closes_probe_failure_reopens_longer() {
+        let h = HealthMap::new(cfg());
+        for _ in 0..3 {
+            h.record_failure("s");
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.allow("s"));
+        assert!(h.record_failure("s"), "failed probe re-opens");
+        assert_eq!(h.state("s"), BreakerState::Open);
+        // Second open interval is doubled: not yet expired after base.
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!h.allow("s"), "re-open interval must be longer than base");
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.allow("s"));
+        h.record_success("s", 1000.0);
+        assert_eq!(h.state("s"), BreakerState::Closed);
+        assert_eq!(h.consecutive_failures("s"), 0);
+        // After a success the exponential restarts from base.
+        for _ in 0..3 {
+            h.record_failure("s");
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.allow("s"), "open interval resets after success");
+    }
+
+    #[test]
+    fn unreported_probe_does_not_wedge_half_open() {
+        let h = HealthMap::new(cfg());
+        for _ in 0..3 {
+            h.record_failure("s");
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.allow("s")); // probe granted, outcome never reported
+        assert!(!h.allow("s"));
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.allow("s"), "budget refreshes after another interval");
+    }
+
+    #[test]
+    fn ewma_and_percentile() {
+        let h = HealthMap::new(cfg());
+        assert!(h.ewma_us("s").is_none());
+        assert!(h.rtt_percentile("s", 95.0).is_none());
+        for _ in 0..MIN_RTT_SAMPLES - 1 {
+            h.record_success("s", 1000.0);
+        }
+        assert!(h.rtt_percentile("s", 95.0).is_none(), "below sample floor");
+        h.record_success("s", 1000.0);
+        assert_eq!(h.rtt_percentile("s", 50.0), Some(1000.0));
+        h.record_success("s", 100_000.0);
+        assert!(h.rtt_percentile("s", 99.0).unwrap() > 50_000.0);
+        assert!(h.ewma_us("s").unwrap() > 1000.0);
+    }
+
+    #[test]
+    fn score_combines_load_and_health() {
+        let h = HealthMap::new(cfg());
+        let idle = ad("idle", 0.1);
+        let busy = ad("busy", 0.6);
+        assert!(h.score(&idle) < h.score(&busy));
+        // One failure on the idle peer outweighs the 0.5 load gap.
+        h.record_failure("idle");
+        assert!(h.score(&idle) > h.score(&busy));
+        // Latency EWMA breaks ties between healthy peers.
+        h.record_success("idle", 1000.0); // resets failures
+        h.record_success("busy", 900_000.0);
+        let slow = ad("busy", 0.1);
+        assert!(h.score(&idle) < h.score(&slow));
+    }
+
+    #[test]
+    fn select_skips_open_breaker_and_demotes_avoided() {
+        let h = HealthMap::new(cfg());
+        let ads = vec![(ad("a", 0.0), 1), (ad("b", 0.3), 1)];
+        assert_eq!(h.select(&ads, None).unwrap().server_id, "a");
+        assert_eq!(h.select(&ads, Some("a")).unwrap().server_id, "b", "avoid demotes");
+        for _ in 0..3 {
+            h.record_failure("b");
+        }
+        assert_eq!(
+            h.select(&ads, Some("a")).unwrap().server_id,
+            "a",
+            "avoided peer is last resort, not blacklisted"
+        );
+        for _ in 0..3 {
+            h.record_failure("a");
+        }
+        assert!(h.select(&ads, None).is_none(), "all breakers open -> none");
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(h.select(&ads, None).is_some(), "expiry re-admits probes");
+    }
+
+    #[test]
+    fn fresh_ad_birth_resets_failure_history() {
+        let h = HealthMap::new(cfg());
+        h.note_ads(&[(ad("s", 0.0), 7)]); // selection sees the ad first
+        for _ in 0..3 {
+            h.record_failure("s");
+        }
+        h.note_ads(&[(ad("s", 0.0), 7)]);
+        assert_eq!(h.state("s"), BreakerState::Open, "same birth keeps state");
+        // A later birth means the retained ad was cleared and re-published
+        // — the server restarted.
+        h.note_ads(&[(ad("s", 0.0), 8)]);
+        assert_eq!(h.state("s"), BreakerState::Closed);
+        assert_eq!(h.consecutive_failures("s"), 0);
+        assert!(h.allow("s"));
+    }
+
+    #[test]
+    fn shared_maps_are_per_scope() {
+        let a = shared("health-test-scope-a", cfg());
+        let a2 = shared("health-test-scope-a", cfg());
+        let b = shared("health-test-scope-b", cfg());
+        a.record_failure("x");
+        assert_eq!(a2.consecutive_failures("x"), 1, "same scope shares state");
+        assert_eq!(b.consecutive_failures("x"), 0);
+    }
+}

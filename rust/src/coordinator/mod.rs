@@ -1,7 +1,10 @@
 //! Among-device coordination: capability-based service discovery,
-//! server selection and failover (R3/R4) — the layer the query elements
-//! and NNStreamer-Edge analog build on.
+//! server selection, peer health (circuit breakers + latency tracking)
+//! and failover (R3/R4) — the layer the query elements and
+//! NNStreamer-Edge analog build on.
 
 pub mod discovery;
+pub mod health;
 
 pub use discovery::{advertise, clear_advertisement, AdWatcher, ServiceAd};
+pub use health::{BreakerConfig, BreakerState, HealthMap};

@@ -84,6 +84,13 @@ pub fn prop_u64(props: &Props, key: &str, default: u64) -> Result<u64> {
     }
 }
 
+pub fn prop_f64(props: &Props, key: &str, default: f64) -> Result<f64> {
+    match props.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| Error::Parse(format!("bad {key}={v}"))),
+    }
+}
+
 pub fn prop_bool(props: &Props, key: &str, default: bool) -> Result<bool> {
     match props.get(key).map(|s| s.as_str()) {
         None => Ok(default),

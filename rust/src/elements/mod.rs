@@ -25,13 +25,13 @@ pub use convert::{ArithOp, DecoderMode, TensorConverter, TensorDecoder, TensorTr
 pub use filter::TensorFilter;
 pub use muxdemux::{IfOp, TensorDemux, TensorIf, TensorMux};
 pub use mqttel::{MqttSink, MqttSrc};
-pub use query::{QueryClient, QueryProtocol, QueryServerSink, QueryServerSrc};
+pub use query::{QueryClient, QueryProtocol, QueryServerSink, QueryServerSrc, ResilienceConfig};
 pub use sparsel::{SparseDec, SparseEnc};
 pub use video::{Compositor, PadCfg, Pattern, VideoConvert, VideoScale, VideoTestSrc};
 pub use zmqel::{ZmqSink, ZmqSrc};
 
 use crate::caps::Caps;
-use crate::element::registry::{prop_bool, prop_str, prop_u32, prop_u64, require_str, Props, Registry};
+use crate::element::registry::{prop_bool, prop_f64, prop_str, prop_u32, prop_u64, require_str, Props, Registry};
 use crate::element::Element as _;
 use crate::element::Leaky;
 use crate::serial::Codec;
@@ -248,18 +248,41 @@ pub fn register_all(r: &mut Registry) {
     });
 
     r.register("tensor_query_client", |p, _e| {
+        use std::time::Duration;
         let op = require_str(p, "operation", "tensor_query_client")?;
         let proto = QueryProtocol::parse(prop_str(p, "protocol", "tcp"))?;
-        let timeout = std::time::Duration::from_millis(prop_u64(p, "timeout-ms", 5000)?);
+        let timeout = Duration::from_millis(prop_u64(p, "timeout-ms", 5000)?);
+        // Resilience policy (see rust/src/README.md "Resilient elastic
+        // offload"): defaults come from ResilienceConfig.
+        let mut cfg = ResilienceConfig::default();
+        cfg.retry = prop_u32(p, "retry", cfg.retry)?.max(1);
+        cfg.backoff = Duration::from_millis(prop_u64(p, "backoff-ms", cfg.backoff.as_millis() as u64)?);
+        cfg.backoff_max =
+            Duration::from_millis(prop_u64(p, "backoff-max-ms", cfg.backoff_max.as_millis() as u64)?);
+        let deadline = prop_u64(p, "deadline-ms", 0)?;
+        cfg.deadline = (deadline > 0).then(|| Duration::from_millis(deadline));
+        let hedge = prop_f64(p, "hedge-pct", 0.0)?;
+        if !(0.0..=1.0).contains(&hedge) {
+            return Err(Error::Parse(format!("bad hedge-pct={hedge} (want 0..=1)")));
+        }
+        cfg.hedge_pct = (hedge > 0.0).then_some(hedge);
+        cfg.reroute_load = prop_f64(p, "reroute-load", cfg.reroute_load)?;
+        cfg.breaker.failure_threshold =
+            prop_u32(p, "breaker-threshold", cfg.breaker.failure_threshold)?.max(1);
+        cfg.breaker.open_base = Duration::from_millis(
+            prop_u64(p, "breaker-open-ms", cfg.breaker.open_base.as_millis() as u64)?,
+        );
         match proto {
             QueryProtocol::TcpRaw => {
                 let server = require_str(p, "server", "tensor_query_client")?;
-                Ok(Box::new(QueryClient::tcp(op, server).with_timeout(timeout)))
+                Ok(Box::new(QueryClient::tcp(op, server).with_timeout(timeout).with_resilience(cfg)))
             }
             QueryProtocol::MqttHybrid => {
                 let broker = prop_str(p, "broker", "");
                 let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
-                Ok(Box::new(QueryClient::hybrid(op, &broker)?.with_timeout(timeout)))
+                Ok(Box::new(
+                    QueryClient::hybrid(op, &broker)?.with_timeout(timeout).with_resilience(cfg),
+                ))
             }
         }
     });
@@ -268,7 +291,8 @@ pub fn register_all(r: &mut Registry) {
         let mut src = QueryServerSrc::new(op)
             .with_pair_id(prop_str(p, "pair-id", op))
             .with_bind(&format!("127.0.0.1:{}", prop_u32(p, "port", 0)?))
-            .with_model_label(prop_str(p, "model-label", "model"));
+            .with_model_label(prop_str(p, "model-label", "model"))
+            .with_advertised_load(prop_f64(p, "load", 0.0)?);
         if let Some(id) = p.get("server-id") {
             src = src.with_server_id(id);
         }
@@ -341,6 +365,25 @@ mod tests {
         let cfg = el.sink_queue_cfg(0);
         assert_eq!(cfg.capacity, 4);
         assert_eq!(cfg.leaky, Leaky::Downstream);
+    }
+
+    #[test]
+    fn query_client_resilience_props_parsed() {
+        let r = registry();
+        let env = PipelineEnv::default();
+        let mut p = Props::new();
+        p.insert("operation".into(), "obj".into());
+        p.insert("server".into(), "127.0.0.1:9000".into());
+        p.insert("retry".into(), "5".into());
+        p.insert("backoff-ms".into(), "20".into());
+        p.insert("deadline-ms".into(), "250".into());
+        p.insert("hedge-pct".into(), "0.95".into());
+        p.insert("reroute-load".into(), "0.8".into());
+        p.insert("breaker-threshold".into(), "2".into());
+        p.insert("breaker-open-ms".into(), "100".into());
+        assert!(r.make("tensor_query_client", &p, &env).is_ok());
+        p.insert("hedge-pct".into(), "1.5".into());
+        assert!(r.make("tensor_query_client", &p, &env).is_err());
     }
 
     #[test]

@@ -22,16 +22,18 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::buffer::Buffer;
 use crate::caps::Caps;
 use crate::coordinator::discovery::{self, AdWatcher, ServiceAd};
+use crate::coordinator::health::{self, BreakerConfig, HealthMap};
 use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
 use crate::mqtt::MqttClient;
 use crate::serial::wire::{self, LinkCodec, WireFrame};
 use crate::serial::Codec;
+use crate::util::rng::XorShift64;
 use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_info, log_warn};
 
@@ -118,6 +120,7 @@ pub struct QueryServerSrc {
     pub broker: String,
     pub server_id: String,
     pub model_label: String,
+    pub advertised_load: f64,
     rx: Option<Receiver<(Option<Caps>, Buffer)>>,
     mqtt: Option<MqttClient>,
     ad: Option<ServiceAd>,
@@ -136,6 +139,7 @@ impl QueryServerSrc {
             broker: String::new(),
             server_id: format!("srv-{}-{}", std::process::id(), next_server_seq()),
             model_label: "model".to_string(),
+            advertised_load: 0.0,
             rx: None,
             mqtt: None,
             ad: None,
@@ -168,6 +172,14 @@ impl QueryServerSrc {
 
     pub fn with_model_label(mut self, m: &str) -> Self {
         self.model_label = m.to_string();
+        self
+    }
+
+    /// Load figure advertised in the discovery ad (`load=` property).
+    /// Clients rank peers by it; useful for steering selection in tests
+    /// and benches, and for operators that know a device is busy.
+    pub fn with_advertised_load(mut self, load: f64) -> Self {
+        self.advertised_load = load.clamp(0.0, 1.0);
         self
     }
 
@@ -240,7 +252,7 @@ impl Element for QueryServerSrc {
                 host: "127.0.0.1".to_string(),
                 port: self.port,
                 model: self.model_label.clone(),
-                load: 0.0,
+                load: self.advertised_load,
             };
             let client =
                 MqttClient::connect(&self.broker, discovery::server_client_options(&self.server_id, &ad))?;
@@ -386,7 +398,57 @@ impl Element for QueryServerSink {
 
 enum Endpoint {
     Fixed(String),
-    Discovered { watcher: AdWatcher, current: Option<ServiceAd>, failed: Vec<String> },
+    Discovered { watcher: AdWatcher, current: Option<ServiceAd> },
+}
+
+/// Resilience policy of a [`QueryClient`] (see the README's "Resilient
+/// elastic offload" section; all knobs are parseable element properties).
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Attempts per frame (`retry=`, includes the first try; min 1).
+    pub retry: u32,
+    /// Base retry backoff (`backoff-ms=`); doubles per attempt with
+    /// ±50% jitter, capped at `backoff_max`.
+    pub backoff: Duration,
+    pub backoff_max: Duration,
+    /// Per-frame budget (`deadline-ms=`). When set, a frame whose budget
+    /// is spent is DROPPED (leaky semantics — the pipeline keeps flowing);
+    /// when unset, exhausted retries error the pipeline (strict).
+    pub deadline: Option<Duration>,
+    /// Hedge percentile (`hedge-pct=`): duplicate a request to the
+    /// second-best peer once it has been outstanding longer than this
+    /// percentile of the primary's observed RTTs; first answer wins.
+    /// `None` disables hedging.
+    pub hedge_pct: Option<f64>,
+    /// Advertised-load threshold (`reroute-load=`) above which the client
+    /// re-routes mid-stream to a meaningfully better peer.
+    pub reroute_load: f64,
+    /// Circuit-breaker knobs (shared per operation via
+    /// [`health::shared`]).
+    pub breaker: BreakerConfig,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            retry: 3,
+            backoff: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(1),
+            deadline: None,
+            hedge_pct: None,
+            reroute_load: 0.9,
+            breaker: BreakerConfig::default(),
+        }
+    }
+}
+
+/// Minimum score improvement another peer must offer before a loaded
+/// current peer is abandoned mid-stream (anti-flap margin).
+const REROUTE_MARGIN: f64 = 0.1;
+
+fn jitter_seed() -> u64 {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    (std::process::id() as u64) << 32 | SEQ.fetch_add(1, Ordering::Relaxed)
 }
 
 /// Drop-in `tensor_filter` replacement that offloads inference.
@@ -399,6 +461,15 @@ pub struct QueryClient {
     out_caps: Option<Caps>,
     seq: u64,
     link: LinkCodec,
+    cfg: ResilienceConfig,
+    /// Shared per-operation peer health; lazily created so builder order
+    /// (`with_resilience` after construction) can't lose the config.
+    health: Option<Arc<HealthMap>>,
+    /// Peer we most recently failed on (demoted, not blacklisted).
+    last_failed: Option<String>,
+    /// Cached connection to the last hedge target.
+    hedge_conn: Option<(String, TcpStream)>,
+    rng: XorShift64,
 }
 
 impl QueryClient {
@@ -413,6 +484,11 @@ impl QueryClient {
             out_caps: None,
             seq: 0,
             link: LinkCodec::new(Codec::None, ""),
+            cfg: ResilienceConfig::default(),
+            health: None,
+            last_failed: None,
+            hedge_conn: None,
+            rng: XorShift64::new(jitter_seed()),
         }
     }
 
@@ -422,12 +498,17 @@ impl QueryClient {
         Ok(Self {
             operation: operation.to_string(),
             timeout: Duration::from_secs(5),
-            endpoint: Endpoint::Discovered { watcher, current: None, failed: Vec::new() },
+            endpoint: Endpoint::Discovered { watcher, current: None },
             conn: None,
             in_caps: None,
             out_caps: None,
             seq: 0,
             link: LinkCodec::new(Codec::None, ""),
+            cfg: ResilienceConfig::default(),
+            health: None,
+            last_failed: None,
+            hedge_conn: None,
+            rng: XorShift64::new(jitter_seed()),
         })
     }
 
@@ -444,58 +525,439 @@ impl QueryClient {
         self
     }
 
-    fn connect(&mut self) -> Result<()> {
-        let addr = match &mut self.endpoint {
+    /// Retry/backoff/deadline/hedge/breaker policy.
+    pub fn with_resilience(mut self, cfg: ResilienceConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Inject a specific health map (tests/benches); by default the
+    /// process-shared per-operation map is used.
+    pub fn with_health(mut self, h: Arc<HealthMap>) -> Self {
+        self.health = Some(h);
+        self
+    }
+
+    fn health(&mut self) -> Arc<HealthMap> {
+        if self.health.is_none() {
+            self.health = Some(health::shared(&self.operation, self.cfg.breaker));
+        }
+        self.health.as_ref().unwrap().clone()
+    }
+
+    /// Health key of the currently-targeted peer: `server_id` for
+    /// discovered peers, the address for fixed endpoints.
+    fn peer_key(&self) -> String {
+        match &self.endpoint {
             Endpoint::Fixed(a) => a.clone(),
-            Endpoint::Discovered { watcher, current, failed } => {
-                let ad = watcher
-                    .pick(failed)
-                    .or_else(|| watcher.wait_any(Duration::from_secs(3)))
-                    .ok_or_else(|| {
-                        Error::Transport(format!("no servers for operation `{}`", self.operation))
-                    })?;
-                log_info!("query", "client: using server `{}` at {}", ad.server_id, ad.endpoint());
+            Endpoint::Discovered { current, .. } => {
+                current.as_ref().map(|ad| ad.server_id.clone()).unwrap_or_default()
+            }
+        }
+    }
+
+    fn counter(name: &str, which: &str) -> Arc<metrics::Counter> {
+        metrics::global().counter(&format!("query.{name}.{which}"))
+    }
+
+    /// Exponential backoff with ±50% jitter, capped.
+    fn backoff_delay(&mut self, attempt: u32) -> Duration {
+        let exp = attempt.saturating_sub(1).min(10);
+        let base = self.cfg.backoff_max.min(self.cfg.backoff.saturating_mul(1u32 << exp));
+        base.mul_f64(0.5 + self.rng.f32() as f64)
+    }
+
+    /// Remaining per-attempt read/connect budget: the configured timeout,
+    /// clipped by what is left of the frame deadline.
+    fn attempt_budget(&self, deadline: Option<Instant>) -> Result<Duration> {
+        let mut budget = self.timeout;
+        if let Some(dl) = deadline {
+            let left = dl.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Transport("frame deadline exhausted".into()));
+            }
+            budget = budget.min(left);
+        }
+        Ok(budget.max(Duration::from_millis(1)))
+    }
+
+    /// Record a failure against the current peer, open-count the breaker
+    /// metric, tear the connection down, and demote the peer for the next
+    /// selection.
+    fn fail_current(&mut self, name: &str) {
+        let key = self.peer_key();
+        self.conn = None;
+        if key.is_empty() {
+            return;
+        }
+        if self.health().record_failure(&key) {
+            Self::counter(name, "breaker_open").inc();
+            log_warn!("query", "{name}: breaker OPEN for `{key}`");
+        }
+        self.last_failed = Some(key.clone());
+        if let Endpoint::Discovered { current, .. } = &mut self.endpoint {
+            if let Some(ad) = current.take() {
+                log_warn!("query", "{name}: server `{}` failed; failing over", ad.server_id);
+            }
+        }
+    }
+
+    /// Health-aware (re)connect. Discovered endpoints rank live ads by
+    /// advertised load + observed health, gated by each peer's breaker;
+    /// fixed endpoints respect their own breaker.
+    fn connect(&mut self, deadline: Option<Instant>, name: &str) -> Result<()> {
+        let budget = self.attempt_budget(deadline)?;
+        let health = self.health();
+        let addr = match &mut self.endpoint {
+            Endpoint::Fixed(a) => {
+                if !health.allow(a) {
+                    return Err(Error::Transport(format!("breaker open for {a}")));
+                }
+                a.clone()
+            }
+            Endpoint::Discovered { watcher, current } => {
+                let avoid = self.last_failed.clone();
+                let wait_until = Instant::now()
+                    + deadline
+                        .map(|dl| dl.saturating_duration_since(Instant::now()))
+                        .unwrap_or(Duration::from_secs(3))
+                        .min(Duration::from_secs(3));
+                let ad = loop {
+                    if let Some(ad) = health.select(&watcher.entries(), avoid.as_deref()) {
+                        break ad;
+                    }
+                    if Instant::now() >= wait_until {
+                        return Err(Error::Transport(format!(
+                            "no selectable servers for operation `{}`",
+                            self.operation
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                };
+                log_info!("query", "{name}: using server `{}` at {}", ad.server_id, ad.endpoint());
                 let ep = ad.endpoint();
                 *current = Some(ad);
                 ep
             }
         };
-        let stream = TcpStream::connect(&addr)
-            .map_err(|e| Error::Transport(format!("query connect {addr}: {e}")))?;
+        let stream = connect_within(&addr, budget).map_err(|e| {
+            self.fail_current(name);
+            Error::Transport(format!("query connect {addr}: {e}"))
+        })?;
         stream.set_nodelay(true).ok();
-        stream.set_read_timeout(Some(self.timeout))?;
         self.conn = Some(stream);
         Ok(())
     }
 
-    fn mark_failed(&mut self) {
-        self.conn = None;
-        if let Endpoint::Discovered { current, failed, .. } = &mut self.endpoint {
-            if let Some(ad) = current.take() {
-                log_warn!("query", "client: server `{}` failed; failing over", ad.server_id);
-                failed.push(ad.server_id);
+    /// Mid-stream re-route check: abandon the current (healthy, connected)
+    /// peer when its ad vanished, its breaker opened, or its advertised
+    /// load crossed `reroute_load` while a meaningfully better peer is
+    /// available.
+    fn maybe_reroute(&mut self, name: &str) {
+        if self.conn.is_none() {
+            return;
+        }
+        let health = self.health();
+        let reroute_load = self.cfg.reroute_load;
+        let (reroute, why) = {
+            let Endpoint::Discovered { watcher, current } = &self.endpoint else { return };
+            let Some(cur) = current else { return };
+            let entries = watcher.entries();
+            health.note_ads(&entries);
+            match entries.iter().find(|(ad, _)| ad.server_id == cur.server_id) {
+                None => (true, "ad vanished"),
+                Some((ad, _)) => {
+                    if !health.would_allow(&ad.server_id) {
+                        (true, "breaker open")
+                    } else if ad.load >= reroute_load
+                        && entries.iter().any(|(o, _)| {
+                            o.server_id != ad.server_id
+                                && health.would_allow(&o.server_id)
+                                && health.score(o) + REROUTE_MARGIN < health.score(ad)
+                        })
+                    {
+                        (true, "load threshold")
+                    } else {
+                        (false, "")
+                    }
+                }
+            }
+        };
+        if reroute {
+            if let Endpoint::Discovered { current, .. } = &mut self.endpoint {
+                if let Some(ad) = current.take() {
+                    log_info!("query", "{name}: re-routing away from `{}` ({why})", ad.server_id);
+                }
+            }
+            if let Some(c) = self.conn.take() {
+                let _ = c.shutdown(std::net::Shutdown::Both);
+            }
+            Self::counter(name, "reroutes").inc();
+        }
+    }
+
+    /// Best allowed hedge target: ranked like selection, excluding the
+    /// primary, without consuming a probe (the hedge send is speculative).
+    fn hedge_target(&mut self, primary: &str) -> Option<ServiceAd> {
+        let health = self.health();
+        let Endpoint::Discovered { watcher, .. } = &self.endpoint else { return None };
+        let entries = watcher.entries();
+        let mut ranked: Vec<&ServiceAd> = entries
+            .iter()
+            .map(|(ad, _)| ad)
+            .filter(|ad| ad.server_id != primary && health.would_allow(&ad.server_id))
+            .collect();
+        ranked.sort_by(|a, b| {
+            health.score(a).total_cmp(&health.score(b)).then_with(|| a.server_id.cmp(&b.server_id))
+        });
+        ranked.first().map(|ad| (*ad).clone())
+    }
+
+    /// One attempt at one frame: reroute check, (re)connect, then a plain
+    /// or hedged exchange within the attempt budget.
+    fn attempt(
+        &mut self,
+        b: &Buffer,
+        seq: u64,
+        deadline: Option<Instant>,
+        name: &str,
+    ) -> Result<(Buffer, Option<Caps>)> {
+        self.maybe_reroute(name);
+        if self.conn.is_none() {
+            self.connect(deadline, name)?;
+        }
+        let budget = self.attempt_budget(deadline)?;
+        let mut req = b.clone();
+        req.meta.seq = Some(seq);
+        let frame = self.link.encode(&req, self.in_caps.as_ref())?;
+
+        if let Some(pct) = self.cfg.hedge_pct {
+            let primary = self.peer_key();
+            let hedge_after = self
+                .health()
+                .rtt_percentile(&primary, pct)
+                .map(|us| Duration::from_micros(us as u64).max(Duration::from_millis(1)));
+            if let Some(delay) = hedge_after {
+                if delay < budget {
+                    if let Some(target) = self.hedge_target(&primary) {
+                        return self.exchange_hedged(&frame, seq, budget, delay, target, name);
+                    }
+                }
+            }
+        }
+        self.exchange_plain(&frame, seq, budget, name)
+    }
+
+    /// Plain request/response on the current connection.
+    fn exchange_plain(
+        &mut self,
+        frame: &WireFrame,
+        seq: u64,
+        budget: Duration,
+        name: &str,
+    ) -> Result<(Buffer, Option<Caps>)> {
+        let key = self.peer_key();
+        let health = self.health();
+        let stream = self.conn.as_mut().unwrap();
+        stream.set_read_timeout(Some(budget))?;
+        let t0 = Instant::now();
+        let r = wire::write_frame_vectored(stream, frame)
+            .and_then(|_| read_response(stream, seq));
+        match r {
+            Ok(rc) => {
+                health.record_success(&key, t0.elapsed().as_micros() as f64);
+                Ok(rc)
+            }
+            Err(e) => {
+                self.fail_current(name);
+                Err(e)
             }
         }
     }
 
-    /// One request/response exchange.
-    fn exchange(&mut self, b: &Buffer) -> Result<(Buffer, Option<Caps>)> {
-        if self.conn.is_none() {
-            self.connect()?;
-        }
-        let mut req = b.clone();
-        self.seq += 1;
-        req.meta.seq = Some(self.seq);
-        let frame = self.link.encode(&req, self.in_caps.as_ref())?;
-        let stream = self.conn.as_mut().unwrap();
-        let send = wire::write_frame_vectored(stream, &frame);
-        let resp = send.and_then(|_| wire::read_frame(stream));
-        match resp {
-            Ok(f) => wire::decode_shared(&f),
-            Err(e) => {
-                self.mark_failed();
-                Err(e)
+    /// Hedged exchange: the primary request runs on its own thread; if no
+    /// answer lands within `delay`, the same frame is duplicated to
+    /// `target` (second-best peer) and the first answer wins. The loser's
+    /// socket is shut down (cancellation) so a stale response can never be
+    /// mistaken for a later frame's.
+    fn exchange_hedged(
+        &mut self,
+        frame: &WireFrame,
+        seq: u64,
+        budget: Duration,
+        delay: Duration,
+        target: ServiceAd,
+        name: &str,
+    ) -> Result<(Buffer, Option<Caps>)> {
+        type Verdict = (bool, Result<(Buffer, Option<Caps>)>, f64, Option<TcpStream>);
+        let health = self.health();
+        let primary_key = self.peer_key();
+        let end = Instant::now() + budget;
+
+        let mut pstream = self.conn.take().unwrap();
+        pstream.set_read_timeout(Some(budget))?;
+        let pcancel = pstream.try_clone().ok();
+        let (tx, rx) = std::sync::mpsc::channel::<Verdict>();
+        let ptx = tx.clone();
+        let pframe = frame.clone();
+        std::thread::Builder::new()
+            .name("query-hedge-pri".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let r = wire::write_frame_vectored(&mut pstream, &pframe)
+                    .and_then(|_| read_response(&mut pstream, seq));
+                let _ = ptx.send((true, r, t0.elapsed().as_micros() as f64, Some(pstream)));
+            })
+            .map_err(|e| Error::Transport(format!("spawn hedge: {e}")))?;
+
+        // Fast path: primary answers before the hedge trigger.
+        match rx.recv_timeout(delay) {
+            Ok((_, Ok(rc), rtt, stream)) => {
+                self.conn = stream;
+                health.record_success(&primary_key, rtt);
+                return Ok(rc);
             }
+            Ok((_, Err(e), _, _)) => {
+                // Primary failed outright before the hedge even fired;
+                // let the outer retry loop handle re-selection.
+                self.fail_current(name);
+                return Err(e);
+            }
+            Err(_) => {} // still outstanding -> hedge
+        }
+
+        Self::counter(name, "hedges").inc();
+        let hedge_budget = end.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+        let hkey = target.server_id.clone();
+        let haddr = target.endpoint();
+        // Reuse the cached hedge connection when it points at the same
+        // peer; otherwise dial fresh within the remaining budget.
+        let cached = match self.hedge_conn.take() {
+            Some((id, s)) if id == hkey => Some(s),
+            _ => None,
+        };
+        let hcancel: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
+        let hc2 = hcancel.clone();
+        let htx = tx;
+        let hframe = frame.clone();
+        std::thread::Builder::new()
+            .name("query-hedge-alt".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                let run = || -> Result<((Buffer, Option<Caps>), TcpStream)> {
+                    let mut s = match cached {
+                        Some(s) => s,
+                        None => {
+                            let s = connect_within(&haddr, hedge_budget)
+                                .map_err(|e| Error::Transport(format!("hedge connect {haddr}: {e}")))?;
+                            s.set_nodelay(true).ok();
+                            s
+                        }
+                    };
+                    s.set_read_timeout(Some(hedge_budget))?;
+                    *hc2.lock().unwrap() = s.try_clone().ok();
+                    wire::write_frame_vectored(&mut s, &hframe)?;
+                    let rc = read_response(&mut s, seq)?;
+                    Ok((rc, s))
+                };
+                match run() {
+                    Ok((rc, s)) => {
+                        let _ = htx.send((false, Ok(rc), t0.elapsed().as_micros() as f64, Some(s)));
+                    }
+                    Err(e) => {
+                        let _ = htx.send((false, Err(e), 0.0, None));
+                    }
+                }
+            })
+            .map_err(|e| Error::Transport(format!("spawn hedge: {e}")))?;
+
+        let cancel = |s: &Option<TcpStream>| {
+            if let Some(s) = s {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        };
+        let mut first_err: Option<Error> = None;
+        loop {
+            let left = end.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left.max(Duration::from_millis(1))) {
+                Ok((from_primary, Ok(rc), rtt, stream)) => {
+                    if from_primary {
+                        // Primary won after all: cancel the hedge.
+                        cancel(&hcancel.lock().unwrap());
+                        self.conn = stream;
+                        health.record_success(&primary_key, rtt);
+                    } else {
+                        // Hedge won: cancel the primary read — its late
+                        // response must never alias a future frame's.
+                        Self::counter(name, "hedge_wins").inc();
+                        cancel(&pcancel);
+                        self.conn = None;
+                        if let Some(s) = stream {
+                            self.hedge_conn = Some((hkey.clone(), s));
+                        }
+                        health.record_success(&hkey, rtt);
+                    }
+                    return Ok(rc);
+                }
+                Ok((from_primary, Err(e), _, _)) => {
+                    // One racer failed; keep waiting for the other.
+                    let key = if from_primary { &primary_key } else { &hkey };
+                    if health.record_failure(key) {
+                        Self::counter(name, "breaker_open").inc();
+                        log_warn!("query", "{name}: breaker OPEN for `{key}`");
+                    }
+                    if let Some(first) = first_err.take() {
+                        // Both failed: tear down without re-recording.
+                        self.conn = None;
+                        self.last_failed = Some(primary_key.clone());
+                        if let Endpoint::Discovered { current, .. } = &mut self.endpoint {
+                            current.take();
+                        }
+                        return Err(first);
+                    }
+                    first_err = Some(e);
+                }
+                Err(_) => {
+                    // Budget exhausted with both still outstanding.
+                    cancel(&pcancel);
+                    cancel(&hcancel.lock().unwrap());
+                    self.fail_current(name);
+                    return Err(Error::Transport("hedged query timed out".into()));
+                }
+            }
+        }
+    }
+}
+
+/// `TcpStream::connect` with a timeout when the address parses to a
+/// socket address (it always does for discovery ads; a hostname falls
+/// back to the blocking resolver path).
+fn connect_within(addr: &str, budget: Duration) -> std::io::Result<TcpStream> {
+    match addr.parse::<std::net::SocketAddr>() {
+        Ok(sa) => TcpStream::connect_timeout(&sa, budget),
+        Err(_) => TcpStream::connect(addr),
+    }
+}
+
+/// Read response frames until the one matching `seq` arrives. Responses
+/// echo the request seq (the server round-trips buffer meta), so an
+/// earlier frame's late response on a reused connection is drained
+/// instead of being delivered as the answer to the current request. A
+/// response from the future (seq ahead) can only mean protocol
+/// corruption. Servers that strip meta (seq `None`) skip the check.
+fn read_response(stream: &mut TcpStream, seq: u64) -> Result<(Buffer, Option<Caps>)> {
+    loop {
+        let f = wire::read_frame(stream)?;
+        let (buf, caps) = wire::decode_shared(&f)?;
+        match buf.meta.seq {
+            Some(s) if s < seq => {
+                log_debug!("query", "draining stale response seq {s} (waiting for {seq})");
+                continue;
+            }
+            Some(s) if s > seq => {
+                return Err(Error::Transport(format!("response seq {s} ahead of request {seq}")));
+            }
+            _ => return Ok((buf, caps)),
         }
     }
 }
@@ -514,19 +976,58 @@ impl Element for QueryClient {
                 Ok(())
             }
             Item::Buffer(b) => {
-                let t0 = std::time::Instant::now();
-                // Try current server, then fail over once (R4).
-                let (resp, caps) = match self.exchange(&b) {
-                    Ok(r) => r,
-                    Err(first) => match self.exchange(&b) {
-                        Ok(r) => r,
-                        Err(_second) => {
-                            return Err(Error::element(
-                                &ctx.name,
-                                format!("query failed (no failover target): {first}"),
-                            ))
+                let t0 = Instant::now();
+                let deadline = self.cfg.deadline.map(|d| t0 + d);
+                // One seq per FRAME, reused verbatim on every retry of it,
+                // so servers can dedup retransmissions (the old code
+                // re-incremented on the failover retry).
+                self.seq += 1;
+                let seq = self.seq;
+                let max_attempts = self.cfg.retry.max(1);
+                let mut attempt = 0u32;
+                let result = loop {
+                    attempt += 1;
+                    match self.attempt(&b, seq, deadline, &ctx.name) {
+                        Ok(r) => break Ok(r),
+                        Err(e) => {
+                            if attempt >= max_attempts || ctx.stopped() {
+                                break Err(e);
+                            }
+                            let delay = self.backoff_delay(attempt);
+                            if let Some(dl) = deadline {
+                                if Instant::now() + delay >= dl {
+                                    break Err(e);
+                                }
+                            }
+                            Self::counter(&ctx.name, "retries").inc();
+                            log_debug!(
+                                "query",
+                                "{}: attempt {attempt} failed ({e}); retrying in {delay:?}",
+                                ctx.name
+                            );
+                            std::thread::sleep(delay);
                         }
-                    },
+                    }
+                };
+                let (resp, caps) = match result {
+                    Ok(r) => r,
+                    Err(e) => {
+                        if deadline.is_some() {
+                            // Leaky semantics: the frame's budget is spent;
+                            // drop it rather than stalling the pipeline.
+                            Self::counter(&ctx.name, "frames_dropped").inc();
+                            log_warn!(
+                                "query",
+                                "{}: dropping frame seq {seq} after {attempt} attempts: {e}",
+                                ctx.name
+                            );
+                            return Ok(());
+                        }
+                        return Err(Error::element(
+                            &ctx.name,
+                            format!("query failed after {attempt} attempts: {e}"),
+                        ));
+                    }
                 };
                 metrics::global().observe(
                     &format!("query.{}.rtt_us", ctx.name),
@@ -542,6 +1043,7 @@ impl Element for QueryClient {
                 out.pts = b.pts; // response inherits the request timestamp
                 out.duration = b.duration;
                 out.meta.client_id = None;
+                out.meta.seq = None;
                 ctx.push_buffer(out)?;
                 Ok(())
             }
@@ -550,7 +1052,12 @@ impl Element for QueryClient {
     }
 
     fn stop(&mut self, _ctx: &mut Ctx) {
-        self.conn = None;
+        if let Some(c) = self.conn.take() {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some((_, c)) = self.hedge_conn.take() {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
     }
 }
 

@@ -7,7 +7,10 @@
 //! `local_hits`/`injector_hits`/`steals` dequeue split, and
 //! `queue_locks`/`lock_waits` ready-queue contention — see
 //! [`crate::element::sched`]), `codec.auto.<link>.*` from the adaptive
-//! wire codec, and `appsink.<name>` delivery counters.
+//! wire codec, `appsink.<name>` delivery counters, and
+//! `query.<name>.{retries,hedges,hedge_wins,reroutes,breaker_open,frames_dropped}`
+//! plus the `query.<name>.rtt_us` histogram from the resilient offload
+//! client ([`crate::elements::QueryClient`]).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,272 @@
+//! Fault-injecting TCP proxy for resilience tests.
+//!
+//! Sits between a query client and a real server (or nothing at all) and
+//! misbehaves on command, so every branch of the offload resilience
+//! policy — breaker transitions, backoff, deadline drops, hedging — can
+//! be exercised deterministically:
+//!
+//! ```ignore
+//! let proxy = FaultProxy::start(&server_addr)?;   // forwards by default
+//! proxy.set(Fault::BlackHole);                    // accept, read, never reply
+//! proxy.set(Fault::Delay(Duration::from_millis(200))); // slow-loris
+//! proxy.rst_all();                                // RST every live conn
+//! proxy.set(Fault::Deny);                         // refuse new conns
+//! ```
+//!
+//! The fault mode is sampled per I/O pump iteration, so flipping it
+//! mid-stream affects connections that are already established —
+//! exactly what a hang or a sudden overload looks like from the client.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::Result;
+
+/// What the proxy does with traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Forward bytes both ways (healthy).
+    Pass,
+    /// Refuse new connections (accepted then immediately RST-closed;
+    /// from the client this is indistinguishable from a dead peer).
+    Deny,
+    /// Accept and read, but never forward upstream — the client's read
+    /// blocks until its own timeout (a hung peer).
+    BlackHole,
+    /// Forward, but hold every chunk for this long first (a slow peer —
+    /// inflates observed RTT without failing anything).
+    Delay(Duration),
+}
+
+/// A TCP proxy whose behavior is switchable at runtime.
+pub struct FaultProxy {
+    addr: String,
+    mode: Arc<Mutex<Fault>>,
+    accepted: Arc<AtomicU64>,
+    live: Arc<Mutex<Vec<TcpStream>>>,
+    stop: Arc<AtomicBool>,
+    pumps: Arc<AtomicUsize>,
+}
+
+impl FaultProxy {
+    /// Start a proxy on an ephemeral port forwarding to `upstream`.
+    pub fn start(upstream: &str) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        listener.set_nonblocking(true)?;
+        let mode = Arc::new(Mutex::new(Fault::Pass));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let pumps = Arc::new(AtomicUsize::new(0));
+
+        let up = upstream.to_string();
+        let (m, a, l, s, p) =
+            (mode.clone(), accepted.clone(), live.clone(), stop.clone(), pumps.clone());
+        std::thread::Builder::new()
+            .name("fault-proxy-accept".into())
+            .spawn(move || {
+                while !s.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((client, _)) => {
+                            a.fetch_add(1, Ordering::Relaxed);
+                            if *m.lock().unwrap() == Fault::Deny {
+                                // Linger 0 -> RST on drop, like a closed port.
+                                let _ = client.shutdown(Shutdown::Both);
+                                continue;
+                            }
+                            let Ok(server) = TcpStream::connect(&up) else {
+                                let _ = client.shutdown(Shutdown::Both);
+                                continue;
+                            };
+                            client.set_nodelay(true).ok();
+                            server.set_nodelay(true).ok();
+                            for (mut from, mut to) in [
+                                (client.try_clone(), server.try_clone()),
+                                (server.try_clone(), client.try_clone()),
+                            ]
+                            .into_iter()
+                            .filter_map(|(f, t)| f.ok().zip(t.ok()))
+                            {
+                                if let Ok(c) = from.try_clone() {
+                                    l.lock().unwrap().push(c);
+                                }
+                                let (m2, s2, p2) = (m.clone(), s.clone(), p.clone());
+                                p.fetch_add(1, Ordering::Relaxed);
+                                std::thread::Builder::new()
+                                    .name("fault-proxy-pump".into())
+                                    .spawn(move || {
+                                        pump(&mut from, &mut to, &m2, &s2);
+                                        p2.fetch_sub(1, Ordering::Relaxed);
+                                    })
+                                    .ok();
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .map_err(|e| crate::util::Error::Transport(format!("spawn proxy: {e}")))?;
+
+        Ok(Self { addr, mode, accepted, live, stop, pumps })
+    }
+
+    /// Address clients should connect to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Switch the fault mode; affects new traffic immediately, including
+    /// established connections (their pumps sample the mode per chunk).
+    pub fn set(&self, f: Fault) {
+        *self.mode.lock().unwrap() = f;
+    }
+
+    /// Connections accepted so far (Deny'd ones included) — lets tests
+    /// assert on reconnect-attempt counts (backoff pacing).
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Hard-reset every live proxied connection (mid-stream RST from the
+    /// client's point of view).
+    pub fn rst_all(&self) {
+        let mut live = self.live.lock().unwrap();
+        for c in live.drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Live pump threads (0 once all proxied conns are torn down).
+    pub fn pump_count(&self) -> usize {
+        self.pumps.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.rst_all();
+    }
+}
+
+/// One-directional byte pump, fault mode sampled per chunk. Read timeout
+/// keeps the thread responsive to `stop` even while black-holed.
+fn pump(from: &mut TcpStream, to: &mut TcpStream, mode: &Mutex<Fault>, stop: &AtomicBool) {
+    let _ = from.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let n = match from.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        };
+        match *mode.lock().unwrap() {
+            Fault::Pass => {}
+            Fault::Deny => {} // only affects new connections
+            Fault::BlackHole => continue, // swallow the chunk
+            Fault::Delay(d) => std::thread::sleep(d),
+        }
+        if to.write_all(&buf[..n]).is_err() {
+            break;
+        }
+    }
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// Echo server for proxy tests.
+    fn echo_server() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for conn in l.incoming() {
+                let Ok(mut c) = conn else { break };
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 1024];
+                    while let Ok(n) = c.read(&mut buf) {
+                        if n == 0 || c.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn pass_forwards_both_ways() {
+        let proxy = FaultProxy::start(&echo_server()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut out = [0u8; 4];
+        c.read_exact(&mut out).unwrap();
+        assert_eq!(&out, b"ping");
+        assert_eq!(proxy.accepted(), 1);
+    }
+
+    #[test]
+    fn deny_refuses_new_connections() {
+        let proxy = FaultProxy::start(&echo_server()).unwrap();
+        proxy.set(Fault::Deny);
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+        // Either the write or the read must fail: the conn was closed
+        // without ever reaching the upstream.
+        let dead = c.write_all(b"ping").is_err() || c.read(&mut [0u8; 4]).map(|n| n == 0).unwrap_or(true);
+        assert!(dead);
+        assert_eq!(proxy.accepted(), 1);
+    }
+
+    #[test]
+    fn black_hole_swallows_and_delay_slows() {
+        let proxy = FaultProxy::start(&echo_server()).unwrap();
+        proxy.set(Fault::BlackHole);
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        c.write_all(b"ping").unwrap();
+        assert!(c.read(&mut [0u8; 4]).is_err(), "black hole must not answer");
+
+        proxy.set(Fault::Delay(Duration::from_millis(150)));
+        let mut c2 = TcpStream::connect(proxy.addr()).unwrap();
+        let t0 = std::time::Instant::now();
+        c2.write_all(b"pong").unwrap();
+        let mut out = [0u8; 4];
+        c2.read_exact(&mut out).unwrap();
+        assert_eq!(&out, b"pong");
+        assert!(t0.elapsed() >= Duration::from_millis(140), "delay not applied");
+    }
+
+    #[test]
+    fn rst_all_kills_established_conns() {
+        let proxy = FaultProxy::start(&echo_server()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.write_all(b"ping").unwrap();
+        let mut out = [0u8; 4];
+        c.read_exact(&mut out).unwrap();
+        proxy.rst_all();
+        c.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let gone = matches!(c.read(&mut [0u8; 4]), Ok(0) | Err(_));
+        assert!(gone, "connection should be dead after rst_all");
+    }
+}

@@ -10,6 +10,8 @@
 //! });
 //! ```
 
+pub mod fault;
+
 use crate::util::rng::XorShift64;
 
 /// Value generator handed to a property closure.

@@ -1,0 +1,358 @@
+//! Fault-injected resilience tests for query offload (ISSUE 6).
+//!
+//! Every scenario drives a real client pipeline against a real server
+//! (or a fault-injecting proxy in front of one) and asserts the policy
+//! layer's behavior: breaker transitions, backoff pacing, seq-stable
+//! retransmits, leaky deadline drops, hedged tail-cutting, and recovery
+//! after a peer restarts under the same server id.
+
+use std::net::TcpListener;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use edgepipe::buffer::Buffer;
+use edgepipe::caps::Caps;
+use edgepipe::coordinator::discovery::{self, ServiceAd};
+use edgepipe::coordinator::health::{self, BreakerConfig, BreakerState, HealthMap};
+use edgepipe::elements::{
+    AppSink, AppSrc, AppSrcHandle, QueryClient, QueryServerSink, QueryServerSrc, ResilienceConfig,
+    TensorFilter,
+};
+use edgepipe::metrics;
+use edgepipe::mqtt::{Broker, MqttClient};
+use edgepipe::pipeline::{Pipeline, Running, WaitOutcome};
+use edgepipe::serial::{wire, Codec};
+use edgepipe::tensor::{DType, TensorInfo, TensorsInfo};
+use edgepipe::testkit::fault::{Fault, FaultProxy};
+
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+/// Server pipeline (serversrc -> x2 filter -> serversink) on `port`.
+fn start_server(pair: &str, op: &str, port: u16, broker: Option<&str>, server_id: &str) -> Running {
+    let mut src = QueryServerSrc::new(op)
+        .with_pair_id(pair)
+        .with_server_id(server_id)
+        .with_bind(&format!("127.0.0.1:{port}"));
+    if let Some(b) = broker {
+        src = src.with_hybrid(b);
+    }
+    let mut p = Pipeline::new();
+    let f = TensorFilter::custom(Box::new(|b: &Buffer| {
+        Ok(b.data.iter().map(|&x| x.wrapping_mul(2)).collect())
+    }));
+    let s = p.add("ssrc", Box::new(src)).unwrap();
+    let fi = p.add("f", Box::new(f)).unwrap();
+    let k = p.add("ssink", Box::new(QueryServerSink::new(pair))).unwrap();
+    p.link(s, fi).unwrap();
+    p.link(fi, k).unwrap();
+    p.start().unwrap()
+}
+
+/// Client pipeline around `client`, named `name` (unique per test so the
+/// global `query.<name>.*` metrics don't cross-talk).
+fn client_pipeline(name: &str, client: QueryClient) -> (Running, AppSrcHandle, Receiver<Buffer>) {
+    let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[4]).unwrap());
+    let mut p = Pipeline::new();
+    let (src, h) = AppSrc::new(8, Some(Caps::tensors(&info)));
+    let (sink, rx) = AppSink::new(8);
+    let s = p.add("src", Box::new(src)).unwrap();
+    let c = p.add(name, Box::new(client)).unwrap();
+    let k = p.add("sink", Box::new(sink)).unwrap();
+    p.link(s, c).unwrap();
+    p.link(c, k).unwrap();
+    (p.start().unwrap(), h, rx)
+}
+
+fn counter(name: &str, which: &str) -> u64 {
+    metrics::global().counter(&format!("query.{name}.{which}")).count()
+}
+
+// ---------------------------------------------------------------------------
+// Connect refused: backoff pacing + breaker opens
+// ---------------------------------------------------------------------------
+
+#[test]
+fn refused_connect_backs_off_and_opens_breaker() {
+    let addr = format!("127.0.0.1:{}", free_port()); // nothing listening
+    let breaker = BreakerConfig {
+        failure_threshold: 3,
+        open_base: Duration::from_millis(200),
+        ..Default::default()
+    };
+    let hm = Arc::new(HealthMap::new(breaker));
+    let client = QueryClient::tcp("op-refused", &addr)
+        .with_timeout(Duration::from_millis(500))
+        .with_resilience(ResilienceConfig {
+            retry: 4,
+            backoff: Duration::from_millis(60),
+            breaker,
+            ..Default::default()
+        })
+        .with_health(hm.clone());
+    let (mut running, h, _rx) = client_pipeline("qc_refuse", client);
+    let t0 = Instant::now();
+    h.push(Buffer::new(vec![1, 2, 3, 4])).unwrap();
+    match running.wait(Duration::from_secs(10)) {
+        WaitOutcome::Error { element, .. } => assert_eq!(element, "qc_refuse"),
+        other => panic!("expected element error, got {other:?}"),
+    }
+    let elapsed = t0.elapsed();
+    // 3 retries with exponential backoff (60/120/240ms, jitter >= 0.5x):
+    // a hot reconnect loop would finish in single-digit milliseconds.
+    assert!(elapsed >= Duration::from_millis(150), "no backoff pacing: {elapsed:?}");
+    assert_eq!(hm.state(&addr), BreakerState::Open, "breaker should be open");
+    assert!(counter("qc_refuse", "retries") >= 3, "retries counter");
+    assert!(counter("qc_refuse", "breaker_open") >= 1, "breaker_open counter");
+}
+
+// ---------------------------------------------------------------------------
+// Mid-stream RST: retry reconnects and the stream continues
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mid_stream_rst_recovers_via_retry() {
+    let port = free_port();
+    let server = start_server("rst", "op-rst", port, None, "rst");
+    std::thread::sleep(Duration::from_millis(200));
+    let proxy = FaultProxy::start(&format!("127.0.0.1:{port}")).unwrap();
+
+    let client = QueryClient::tcp("op-rst", proxy.addr())
+        .with_timeout(Duration::from_secs(2))
+        .with_resilience(ResilienceConfig {
+            backoff: Duration::from_millis(20),
+            ..Default::default()
+        });
+    let (cr, h, rx) = client_pipeline("qc_rst", client);
+
+    h.push(Buffer::new(vec![1, 2, 3, 4])).unwrap();
+    assert_eq!(&rx.recv_timeout(Duration::from_secs(5)).unwrap().data[..], &[2, 4, 6, 8]);
+
+    proxy.rst_all();
+    std::thread::sleep(Duration::from_millis(100));
+
+    h.push(Buffer::new(vec![2, 4, 6, 8])).unwrap();
+    let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(&out.data[..], &[4, 8, 12, 16]);
+    assert!(counter("qc_rst", "retries") >= 1, "RST must cost at least one retry");
+
+    drop(h);
+    let _ = cr.stop(Duration::from_secs(5));
+    let _ = server.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// Read-timeout hang: deadline drops the frame, pipeline keeps flowing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hung_peer_with_deadline_drops_frame_and_continues() {
+    let port = free_port();
+    let server = start_server("hang", "op-hang", port, None, "hang");
+    std::thread::sleep(Duration::from_millis(200));
+    let proxy = FaultProxy::start(&format!("127.0.0.1:{port}")).unwrap();
+    proxy.set(Fault::BlackHole);
+
+    let client = QueryClient::tcp("op-hang", proxy.addr())
+        .with_timeout(Duration::from_millis(200))
+        .with_resilience(ResilienceConfig {
+            retry: 3,
+            backoff: Duration::from_millis(30),
+            deadline: Some(Duration::from_millis(450)),
+            // Keep the breaker out of the picture: this test is about
+            // leaky deadline semantics only.
+            breaker: BreakerConfig { failure_threshold: 100, ..Default::default() },
+            ..Default::default()
+        });
+    let (cr, h, rx) = client_pipeline("qc_hang", client);
+
+    // Frame 1 is black-holed: every attempt times out, the deadline
+    // expires, and the frame is DROPPED — the pipeline must not error.
+    h.push(Buffer::new(vec![9, 9, 9, 9])).unwrap();
+    std::thread::sleep(Duration::from_millis(700));
+    assert_eq!(counter("qc_hang", "frames_dropped"), 1, "frame 1 should be dropped");
+
+    // Heal the path: frame 2 flows normally on the same pipeline.
+    proxy.set(Fault::Pass);
+    h.push(Buffer::new(vec![1, 2, 3, 4])).unwrap();
+    let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(&out.data[..], &[2, 4, 6, 8], "pipeline must survive the drop");
+    assert!(rx.try_recv().is_err(), "dropped frame must not be delivered late");
+
+    drop(h);
+    let _ = cr.stop(Duration::from_secs(5));
+    let _ = server.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// Seq stability: the retransmit of a frame carries the SAME seq
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retry_reuses_frame_seq() {
+    // Hand-rolled server: connection 1 reads the request and dies without
+    // answering; connection 2 reads the retransmit and echoes it back.
+    // The two observed seqs must be identical (the old client bumped seq
+    // again on retry, defeating server-side dedup).
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    let (stx, srx) = std::sync::mpsc::channel::<Option<u64>>();
+    std::thread::spawn(move || {
+        let (mut c1, _) = l.accept().unwrap();
+        let f = wire::read_frame(&mut c1).unwrap();
+        let (b1, _) = wire::decode_shared(&f).unwrap();
+        stx.send(b1.meta.seq).unwrap();
+        drop(c1); // die mid-exchange
+
+        let (mut c2, _) = l.accept().unwrap();
+        let f = wire::read_frame(&mut c2).unwrap();
+        let (b2, caps) = wire::decode_shared(&f).unwrap();
+        stx.send(b2.meta.seq).unwrap();
+        let out = wire::encode(&b2, caps.as_ref(), Codec::None).unwrap();
+        wire::write_frame(&mut c2, &out).unwrap();
+        std::thread::sleep(Duration::from_millis(500)); // let the client read it
+    });
+
+    let client = QueryClient::tcp("op-seq", &addr)
+        .with_timeout(Duration::from_secs(2))
+        .with_resilience(ResilienceConfig {
+            backoff: Duration::from_millis(20),
+            ..Default::default()
+        });
+    let (cr, h, rx) = client_pipeline("qc_seq", client);
+    h.push(Buffer::new(vec![7, 7, 7, 7])).unwrap();
+    let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(&out.data[..], &[7, 7, 7, 7]); // echo server: no transform
+
+    let seq1 = srx.recv_timeout(Duration::from_secs(1)).unwrap();
+    let seq2 = srx.recv_timeout(Duration::from_secs(1)).unwrap();
+    assert!(seq1.is_some(), "request must carry a seq");
+    assert_eq!(seq1, seq2, "retransmit must reuse the original frame's seq");
+
+    drop(h);
+    let _ = cr.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// Slow-loris peer: hedged request cuts the tail via the second-best peer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_loris_peer_hedges_to_second_best() {
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    let p_slow = free_port();
+    let p_fast = free_port();
+    let s_slow = start_server("hslow", "op-hedge", p_slow, None, "slow");
+    let s_fast = start_server("hfast", "op-hedge", p_fast, None, "fast");
+    std::thread::sleep(Duration::from_millis(200));
+
+    // The slow peer sits behind a delaying proxy; both are advertised
+    // manually so the ads point at the proxy, not the server itself.
+    let proxy = FaultProxy::start(&format!("127.0.0.1:{p_slow}")).unwrap();
+    proxy.set(Fault::Delay(Duration::from_millis(60)));
+    let proxy_port: u16 = proxy.addr().rsplit(':').next().unwrap().parse().unwrap();
+    let ad_slow = ServiceAd {
+        operation: "op-hedge".into(),
+        server_id: "slow".into(),
+        host: "127.0.0.1".into(),
+        port: proxy_port,
+        model: "m".into(),
+        load: 0.0, // idle -> preferred primary
+    };
+    let ad_fast = ServiceAd {
+        operation: "op-hedge".into(),
+        server_id: "fast".into(),
+        host: "127.0.0.1".into(),
+        port: p_fast,
+        model: "m".into(),
+        load: 0.5, // busier -> second-best, hedge target
+    };
+    let mc1 = MqttClient::connect(&b, discovery::server_client_options("slow", &ad_slow)).unwrap();
+    discovery::advertise(&mc1, &ad_slow).unwrap();
+    let mc2 = MqttClient::connect(&b, discovery::server_client_options("fast", &ad_fast)).unwrap();
+    discovery::advertise(&mc2, &ad_fast).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    let client = QueryClient::hybrid("op-hedge", &b)
+        .unwrap()
+        .with_timeout(Duration::from_secs(2))
+        .with_resilience(ResilienceConfig {
+            hedge_pct: Some(0.5),
+            ..Default::default()
+        });
+    let (cr, h, rx) = client_pipeline("qc_hedge", client);
+
+    // Warm the primary's RTT profile past MIN_RTT_SAMPLES (8).
+    for i in 0..10u8 {
+        h.push(Buffer::new(vec![i, i, i, i])).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(out.data[0], i.wrapping_mul(2));
+    }
+
+    // Now hang the primary completely: only a hedge to `fast` can answer.
+    proxy.set(Fault::BlackHole);
+    let t0 = Instant::now();
+    h.push(Buffer::new(vec![21, 0, 0, 21])).unwrap();
+    let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(&out.data[..], &[42, 0, 0, 42]);
+    assert!(
+        t0.elapsed() < Duration::from_millis(1500),
+        "hedge should beat the 2s primary timeout, took {:?}",
+        t0.elapsed()
+    );
+    assert!(counter("qc_hedge", "hedges") >= 1, "hedge must fire");
+    assert!(counter("qc_hedge", "hedge_wins") >= 1, "hedge must win");
+
+    drop(h);
+    let _ = cr.stop(Duration::from_secs(5));
+    let _ = s_slow.stop(Duration::from_secs(5));
+    let _ = s_fast.stop(Duration::from_secs(5));
+}
+
+// ---------------------------------------------------------------------------
+// Rebirth: a server that crashes and re-advertises under the same id is
+// usable again (the old append-only blacklist kept it banned forever)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn restarted_server_with_same_id_is_reselected() {
+    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let b = broker.addr().to_string();
+    let p1 = free_port();
+    let s1 = start_server("rb1", "op-rebirth", p1, Some(&b), "reborn");
+    std::thread::sleep(Duration::from_millis(400));
+
+    let client = QueryClient::hybrid("op-rebirth", &b)
+        .unwrap()
+        .with_timeout(Duration::from_secs(1))
+        .with_resilience(ResilienceConfig {
+            retry: 4,
+            backoff: Duration::from_millis(50),
+            ..Default::default()
+        });
+    let (cr, h, rx) = client_pipeline("qc_rebirth", client);
+    h.push(Buffer::new(vec![1, 0, 0, 1])).unwrap();
+    assert_eq!(&rx.recv_timeout(Duration::from_secs(5)).unwrap().data[..], &[2, 0, 0, 2]);
+
+    // Kill the server, then resurrect it: same server_id, NEW port — the
+    // fresh ad must both un-ban the id and carry the new endpoint.
+    let _ = s1.stop(Duration::from_secs(5));
+    std::thread::sleep(Duration::from_millis(300));
+    let p2 = free_port();
+    let s2 = start_server("rb2", "op-rebirth", p2, Some(&b), "reborn");
+    std::thread::sleep(Duration::from_millis(400));
+
+    h.push(Buffer::new(vec![2, 0, 0, 2])).unwrap();
+    let out = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(&out.data[..], &[4, 0, 0, 4]);
+    // The failure history for `reborn` was reset by the fresh ad.
+    let hm = health::shared("op-rebirth", BreakerConfig::default());
+    assert_eq!(hm.consecutive_failures("reborn"), 0);
+
+    drop(h);
+    let _ = cr.stop(Duration::from_secs(5));
+    let _ = s2.stop(Duration::from_secs(5));
+}

@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
-# Run the wire-path bench suite with short CI-friendly windows and write
-# BENCH_wirepath.json at the repo root (override window/runs/out via
-# EDGEPIPE_BENCH_SECS / EDGEPIPE_BENCH_RUNS / EDGEPIPE_BENCH_OUT).
+# Run the gated bench suites with short CI-friendly windows and write
+# BENCH_wirepath.json + BENCH_failover.json at the repo root (override
+# window/runs via EDGEPIPE_BENCH_SECS / EDGEPIPE_BENCH_RUNS; output paths
+# via EDGEPIPE_BENCH_OUT / EDGEPIPE_BENCH_FAILOVER_OUT).
 #
-# The report is written atomically: the bench emits into a temp file and
+# Each report is written atomically: the bench emits into a temp file and
 # only a fully successful run replaces the previous report. A bench that
 # fails partway (budget assertion, panic, build error) exits non-zero and
-# leaves the old BENCH_wirepath.json untouched.
+# leaves the old report untouched.
 set -euo pipefail
 
 repo_root="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -16,29 +17,33 @@ export EDGEPIPE_BENCH_RUNS="${EDGEPIPE_BENCH_RUNS:-1}"
 # Density scenario: fixed pool size so the thread-reduction gate is
 # machine-independent (the bench also defaults this itself).
 export EDGEPIPE_WORKERS="${EDGEPIPE_WORKERS:-4}"
-out="${EDGEPIPE_BENCH_OUT:-$repo_root/BENCH_wirepath.json}"
-# Canonicalize: the bench runs from rust/, so a relative EDGEPIPE_BENCH_OUT
-# would otherwise resolve against a different directory than the mktemp.
-case "$out" in
-  /*) ;;
-  *) out="$(pwd)/$out" ;;
-esac
 
-tmp="$(mktemp "${out}.XXXXXX")"
-cleanup() { rm -f "$tmp"; }
-trap cleanup EXIT
+# Canonicalize: benches run from rust/, so a relative output path would
+# otherwise resolve against a different directory than the mktemp.
+canon() {
+  case "$1" in
+    /*) printf '%s' "$1" ;;
+    *) printf '%s' "$(pwd)/$1" ;;
+  esac
+}
 
-cd "$repo_root/rust"
-if ! EDGEPIPE_BENCH_OUT="$tmp" cargo bench --bench bench_wirepath; then
-  echo "bench_wirepath failed; previous report left untouched: $out" >&2
-  exit 1
-fi
+# run_bench <bench-name> <final-report-path>
+run_bench() {
+  local name="$1" out="$2" tmp
+  tmp="$(mktemp "${out}.XXXXXX")"
+  # shellcheck disable=SC2064
+  trap "rm -f '$tmp'" RETURN
+  if ! (cd "$repo_root/rust" && EDGEPIPE_BENCH_OUT="$tmp" cargo bench --bench "$name"); then
+    echo "$name failed; previous report left untouched: $out" >&2
+    return 1
+  fi
+  if [ ! -s "$tmp" ]; then
+    echo "$name exited 0 but wrote no report; previous report left untouched: $out" >&2
+    return 1
+  fi
+  mv "$tmp" "$out"
+  echo "bench report: $out"
+}
 
-if [ ! -s "$tmp" ]; then
-  echo "bench_wirepath exited 0 but wrote no report; previous report left untouched: $out" >&2
-  exit 1
-fi
-
-mv "$tmp" "$out"
-trap - EXIT
-echo "bench report: $out"
+run_bench bench_wirepath "$(canon "${EDGEPIPE_BENCH_OUT:-$repo_root/BENCH_wirepath.json}")"
+run_bench bench_failover "$(canon "${EDGEPIPE_BENCH_FAILOVER_OUT:-$repo_root/BENCH_failover.json}")"
