@@ -267,9 +267,11 @@ impl HealthMap {
         self.peers.lock().unwrap().get(id).and_then(|p| p.ewma_us)
     }
 
-    /// Percentile (0..=100) over the peer's recent-RTT ring; `None` until
+    /// Percentile over the peer's recent-RTT ring. `frac` is the same
+    /// 0..=1 fraction as the `hedge-pct` element property (0.95 → p95),
+    /// NOT a 0..100 percent — callers must not pre-scale. `None` until
     /// [`MIN_RTT_SAMPLES`] samples exist (hedging stays off while cold).
-    pub fn rtt_percentile(&self, id: &str, pct: f64) -> Option<f64> {
+    pub fn rtt_percentile(&self, id: &str, frac: f64) -> Option<f64> {
         let peers = self.peers.lock().unwrap();
         let p = peers.get(id)?;
         if p.rtts_us.len() < MIN_RTT_SAMPLES {
@@ -278,7 +280,7 @@ impl HealthMap {
         let mut v = p.rtts_us.clone();
         drop(peers);
         v.sort_by(|a, b| a.total_cmp(b));
-        let idx = ((v.len() - 1) as f64 * (pct / 100.0).clamp(0.0, 1.0)).round() as usize;
+        let idx = ((v.len() - 1) as f64 * frac.clamp(0.0, 1.0)).round() as usize;
         Some(v[idx])
     }
 
@@ -420,16 +422,35 @@ mod tests {
     fn ewma_and_percentile() {
         let h = HealthMap::new(cfg());
         assert!(h.ewma_us("s").is_none());
-        assert!(h.rtt_percentile("s", 95.0).is_none());
+        assert!(h.rtt_percentile("s", 0.95).is_none());
         for _ in 0..MIN_RTT_SAMPLES - 1 {
             h.record_success("s", 1000.0);
         }
-        assert!(h.rtt_percentile("s", 95.0).is_none(), "below sample floor");
+        assert!(h.rtt_percentile("s", 0.95).is_none(), "below sample floor");
         h.record_success("s", 1000.0);
-        assert_eq!(h.rtt_percentile("s", 50.0), Some(1000.0));
+        assert_eq!(h.rtt_percentile("s", 0.5), Some(1000.0));
         h.record_success("s", 100_000.0);
-        assert!(h.rtt_percentile("s", 99.0).unwrap() > 50_000.0);
+        assert!(h.rtt_percentile("s", 0.99).unwrap() > 50_000.0);
         assert!(h.ewma_us("s").unwrap() > 1000.0);
+    }
+
+    /// Regression for the hedge-delay unit bug: `hedge-pct` is a 0..1
+    /// fraction, and feeding that fraction straight in must land on the
+    /// configured tail percentile — not near the minimum RTT (which a
+    /// percent-expecting implementation would return for e.g. 0.95/100).
+    #[test]
+    fn percentile_fraction_tracks_tail_not_min() {
+        let h = HealthMap::new(cfg());
+        for i in 1..=100u32 {
+            h.record_success("s", f64::from(i) * 1000.0); // 1ms..100ms
+        }
+        let p95 = h.rtt_percentile("s", 0.95).unwrap();
+        let p50 = h.rtt_percentile("s", 0.5).unwrap();
+        assert!((94_000.0..=97_000.0).contains(&p95), "p95 ≈ 95ms, got {p95}");
+        assert!((49_000.0..=52_000.0).contains(&p50), "p50 ≈ 50ms, got {p50}");
+        let min = h.rtt_percentile("s", 0.0).unwrap();
+        assert_eq!(min, 1000.0);
+        assert!(p95 > 10.0 * min, "hedge delay must track the tail, not the min RTT");
     }
 
     #[test]

@@ -266,12 +266,20 @@ pub fn register_all(r: &mut Registry) {
             return Err(Error::Parse(format!("bad hedge-pct={hedge} (want 0..=1)")));
         }
         cfg.hedge_pct = (hedge > 0.0).then_some(hedge);
-        cfg.reroute_load = prop_f64(p, "reroute-load", cfg.reroute_load)?;
+        let reroute = prop_f64(p, "reroute-load", cfg.reroute_load)?;
+        if !(0.0..=1.0).contains(&reroute) {
+            return Err(Error::Parse(format!("bad reroute-load={reroute} (want 0..=1)")));
+        }
+        cfg.reroute_load = reroute;
         cfg.breaker.failure_threshold =
             prop_u32(p, "breaker-threshold", cfg.breaker.failure_threshold)?.max(1);
-        cfg.breaker.open_base = Duration::from_millis(
-            prop_u64(p, "breaker-open-ms", cfg.breaker.open_base.as_millis() as u64)?,
-        );
+        let open_ms = prop_u64(p, "breaker-open-ms", cfg.breaker.open_base.as_millis() as u64)?;
+        if open_ms == 0 {
+            // A zero open interval means the breaker re-closes instantly,
+            // i.e. it never actually sheds load from a failing peer.
+            return Err(Error::Parse("bad breaker-open-ms=0 (want >= 1)".into()));
+        }
+        cfg.breaker.open_base = Duration::from_millis(open_ms);
         match proto {
             QueryProtocol::TcpRaw => {
                 let server = require_str(p, "server", "tensor_query_client")?;
@@ -384,6 +392,12 @@ mod tests {
         assert!(r.make("tensor_query_client", &p, &env).is_ok());
         p.insert("hedge-pct".into(), "1.5".into());
         assert!(r.make("tensor_query_client", &p, &env).is_err());
+        p.insert("hedge-pct".into(), "0.95".into());
+        p.insert("reroute-load".into(), "-0.1".into());
+        assert!(r.make("tensor_query_client", &p, &env).is_err(), "negative reroute-load");
+        p.insert("reroute-load".into(), "0.8".into());
+        p.insert("breaker-open-ms".into(), "0".into());
+        assert!(r.make("tensor_query_client", &p, &env).is_err(), "zero breaker-open-ms");
     }
 
     #[test]

@@ -415,10 +415,10 @@ pub struct ResilienceConfig {
     /// is spent is DROPPED (leaky semantics — the pipeline keeps flowing);
     /// when unset, exhausted retries error the pipeline (strict).
     pub deadline: Option<Duration>,
-    /// Hedge percentile (`hedge-pct=`): duplicate a request to the
-    /// second-best peer once it has been outstanding longer than this
-    /// percentile of the primary's observed RTTs; first answer wins.
-    /// `None` disables hedging.
+    /// Hedge percentile as a 0..=1 fraction (`hedge-pct=`; 0.95 → p95):
+    /// duplicate a request to the second-best peer once it has been
+    /// outstanding longer than this percentile of the primary's observed
+    /// RTTs; first answer wins. `None` disables hedging.
     pub hedge_pct: Option<f64>,
     /// Advertised-load threshold (`reroute-load=`) above which the client
     /// re-routes mid-stream to a meaningfully better peer.
@@ -838,6 +838,8 @@ impl QueryClient {
         };
         let hcancel: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
         let hc2 = hcancel.clone();
+        let hcancelled = Arc::new(AtomicBool::new(false));
+        let hcancelled2 = hcancelled.clone();
         let htx = tx;
         let hframe = frame.clone();
         std::thread::Builder::new()
@@ -856,6 +858,15 @@ impl QueryClient {
                     };
                     s.set_read_timeout(Some(hedge_budget))?;
                     *hc2.lock().unwrap() = s.try_clone().ok();
+                    // Handshake with `cancel_hedge`: the canceller sets the
+                    // flag BEFORE shutting down the registered handle, and we
+                    // check it AFTER registering — so either we abort here
+                    // before sending, or the cancel hits our live socket and
+                    // errors the write/read. No window where a cancelled
+                    // hedge still completes against the peer.
+                    if hcancelled2.load(Ordering::SeqCst) {
+                        return Err(Error::Transport("hedge cancelled before send".into()));
+                    }
                     wire::write_frame_vectored(&mut s, &hframe)?;
                     let rc = read_response(&mut s, seq)?;
                     Ok((rc, s))
@@ -876,6 +887,10 @@ impl QueryClient {
                 let _ = s.shutdown(std::net::Shutdown::Both);
             }
         };
+        let cancel_hedge = || {
+            hcancelled.store(true, Ordering::SeqCst);
+            cancel(&hcancel.lock().unwrap());
+        };
         let mut first_err: Option<Error> = None;
         loop {
             let left = end.saturating_duration_since(Instant::now());
@@ -883,7 +898,7 @@ impl QueryClient {
                 Ok((from_primary, Ok(rc), rtt, stream)) => {
                     if from_primary {
                         // Primary won after all: cancel the hedge.
-                        cancel(&hcancel.lock().unwrap());
+                        cancel_hedge();
                         self.conn = stream;
                         health.record_success(&primary_key, rtt);
                     } else {
@@ -920,7 +935,7 @@ impl QueryClient {
                 Err(_) => {
                     // Budget exhausted with both still outstanding.
                     cancel(&pcancel);
-                    cancel(&hcancel.lock().unwrap());
+                    cancel_hedge();
                     self.fail_current(name);
                     return Err(Error::Transport("hedged query timed out".into()));
                 }
