@@ -40,6 +40,15 @@
 //! and fan-in delivery must conserve every buffer. Emits the
 //! `sched.{steals,local_hits,injector_hits}` split.
 //!
+//! A **batching** section (schema 5) gates cross-pipeline adaptive
+//! inference batching: M=64 pipelines share one model behind a
+//! `BatchCollector` (simulated accelerator with a fixed per-dispatch
+//! cost) vs the same M pipelines running unbatched single-frame
+//! dispatches. Gates: batched throughput-per-model >= 1.5x unbatched
+//! nominal (>= 1.2x CI floor), mean batch size > 1, and M=1 batched
+//! within 5% of unbatched nominal (>= 0.8x CI floor — the adaptive
+//! target must add no latency when there is nothing to coalesce).
+//!
 //! Emits `BENCH_wirepath.json` (path override: `EDGEPIPE_BENCH_OUT`) so
 //! the perf trajectory is tracked across PRs. Knobs: `EDGEPIPE_BENCH_SECS`
 //! (window per case) and `EDGEPIPE_BENCH_RUNS` (best-of-N).
@@ -49,15 +58,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use edgepipe::bench::{self, CASES};
-use edgepipe::buffer::{bytes_copied, record_copy, Buffer};
+use edgepipe::buffer::{bytes_copied, record_copy, Buffer, Bytes};
 use edgepipe::caps::Caps;
 use edgepipe::element::sched::{self, QueueMode, Scheduler};
 use edgepipe::element::{Ctx, Element, Item, Leaky};
-use edgepipe::elements::{Identity, Queue};
+use edgepipe::elements::{Identity, Queue, TensorFilter};
 use edgepipe::metrics;
 use edgepipe::mqtt::packet::{self, Packet};
 use edgepipe::mqtt::{Broker, ClientOptions, MqttClient};
 use edgepipe::pipeline::{ExecMode, Pipeline};
+use edgepipe::runtime::{BatchCfg, BatchCollector, InferenceBackend};
 use edgepipe::serial::compress::{self, AutoCodec};
 use edgepipe::serial::{wire, Codec};
 use edgepipe::util::rng::XorShift64;
@@ -534,6 +544,126 @@ fn dequeue_snapshot() -> (u64, u64, u64) {
     )
 }
 
+// ---------------------------------------------------------------------------
+// Cross-pipeline batching scenario (schema 5): M pipelines share one model
+// behind a BatchCollector vs per-frame unbatched dispatch of the same work.
+// ---------------------------------------------------------------------------
+
+const BATCH_LABEL: &str = "bench_sim";
+/// Per-`infer_batch`-call overhead, the cost batching amortises (a PJRT
+/// dispatch / accelerator launch stand-in).
+const DISPATCH_SPIN: u64 = 20_000;
+/// Per-frame compute inside a dispatch.
+const FRAME_SPIN: u64 = 2_000;
+
+fn spin(iters: u64) {
+    let mut acc = 0u64;
+    for i in 0..iters {
+        acc = acc.wrapping_add(std::hint::black_box(i));
+    }
+    std::hint::black_box(acc);
+}
+
+/// Simulated accelerator: a fixed dispatch cost per `infer_batch` call
+/// plus a small per-frame cost, echoing payloads. Counts calls and frames
+/// so the bench can report the realised mean batch size.
+struct SimAccel {
+    dispatches: Arc<AtomicU64>,
+    frames: Arc<AtomicU64>,
+}
+
+impl InferenceBackend for SimAccel {
+    fn label(&self) -> &str {
+        "sim-accel"
+    }
+
+    fn negotiate(&mut self, incoming: &Caps) -> Result<Caps> {
+        Ok(incoming.clone())
+    }
+
+    fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+        spin(DISPATCH_SPIN);
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.frames.fetch_add(inputs.len() as u64, Ordering::Relaxed);
+        let mut out = Vec::with_capacity(inputs.len());
+        for b in inputs {
+            spin(FRAME_SPIN);
+            out.push(b.to_vec());
+        }
+        Ok(out)
+    }
+}
+
+/// Unthrottled source that emits sticky caps before flooding frames
+/// (`tensor_filter` rejects buffers before caps).
+struct InferSrc {
+    caps_sent: bool,
+}
+
+impl Element for InferSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        if !self.caps_sent {
+            self.caps_sent = true;
+            ctx.push_caps(Caps::any())?;
+            return Ok(true);
+        }
+        ctx.push_buffer(Buffer::new(vec![0u8; 64]))?;
+        Ok(true)
+    }
+}
+
+/// M src ! tensor_filter ! sink pipelines on the worker pool for `window`.
+/// The batched arm shares ONE collector (max_batch=64, 2ms budget) across
+/// all M filters; the unbatched arm gives each filter its own direct
+/// SimAccel, paying the dispatch cost per frame. Returns (delivered
+/// frames/sec, mean frames per `infer_batch` call).
+fn run_batching(m: usize, batched: bool, window: Duration) -> (f64, f64) {
+    let dispatches = Arc::new(AtomicU64::new(0));
+    let frames = Arc::new(AtomicU64::new(0));
+    let mk = || SimAccel { dispatches: dispatches.clone(), frames: frames.clone() };
+    let collector = if batched {
+        Some(BatchCollector::new(
+            BATCH_LABEL,
+            Box::new(mk()),
+            BatchCfg { max_batch: 64, timeout: Duration::from_millis(2) },
+        ))
+    } else {
+        None
+    };
+    let counts: Vec<Arc<AtomicU64>> = (0..m).map(|_| Arc::new(AtomicU64::new(0))).collect();
+    let runnings: Vec<_> = counts
+        .iter()
+        .map(|c| {
+            let mut p = Pipeline::new();
+            let s = p.add("src", Box::new(InferSrc { caps_sent: false })).unwrap();
+            let filter = match &collector {
+                Some(col) => TensorFilter::batched(col.clone()),
+                None => TensorFilter::new(Box::new(mk())),
+            };
+            let f = p.add("filter", Box::new(filter)).unwrap();
+            let k = p.add("sink", Box::new(DensitySink { count: c.clone() })).unwrap();
+            p.link(s, f).unwrap();
+            p.link(f, k).unwrap();
+            p.start_mode(ExecMode::Pool).unwrap()
+        })
+        .collect();
+    std::thread::sleep(window);
+    let delivered: u64 = counts.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    for r in runnings {
+        let _ = r.stop(Duration::from_secs(10));
+    }
+    let d = dispatches.load(Ordering::Relaxed);
+    let fr = frames.load(Ordering::Relaxed);
+    let mean_batch = if d == 0 { f64::NAN } else { fr as f64 / d as f64 };
+    (delivered as f64 / window.as_secs_f64(), mean_batch)
+}
+
 fn json_case(
     label: &str,
     kind: &str,
@@ -914,13 +1044,93 @@ fn main() {
         shared_lpi.1
     );
 
+    // ---- Cross-pipeline inference batching ------------------------------
+    // M=64 pipelines sharing one simulated accelerator through a
+    // BatchCollector vs the same pipelines paying the dispatch cost per
+    // frame. Best-of-N per arm; flush counters are process-global, so
+    // their deltas accumulate across the batched M=64 runs only.
+    let mut b64_fps = 0.0f64;
+    let mut b64_mean = f64::NAN;
+    let mut unb64_fps = 0.0f64;
+    let mut b1_fps = 0.0f64;
+    let mut unb1_fps = 0.0f64;
+    let mut flushes_full = 0u64;
+    let mut flushes_timer = 0u64;
+    let flush_snapshot = || {
+        let g = metrics::global();
+        (
+            g.counter(&format!("batch.{BATCH_LABEL}.flushes_full")).count(),
+            g.counter(&format!("batch.{BATCH_LABEL}.flushes_timer")).count(),
+        )
+    };
+    for run in 0..runs.max(1) {
+        let snap = flush_snapshot();
+        let (fps, mean) = run_batching(64, true, window);
+        let now = flush_snapshot();
+        flushes_full += now.0 - snap.0;
+        flushes_timer += now.1 - snap.1;
+        if run == 0 || fps > b64_fps {
+            b64_fps = fps;
+            b64_mean = mean;
+        }
+        let (fps, _) = run_batching(64, false, window);
+        unb64_fps = unb64_fps.max(fps);
+        let (fps, _) = run_batching(1, true, window);
+        b1_fps = b1_fps.max(fps);
+        let (fps, _) = run_batching(1, false, window);
+        unb1_fps = unb1_fps.max(fps);
+    }
+    let batch_speedup = b64_fps / unb64_fps.max(1e-9);
+    let m1_batch_ratio = b1_fps / unb1_fps.max(1e-9);
+    bench::table(
+        &format!("Cross-pipeline batching — M pipelines, one shared model, {workers} workers"),
+        &["pipelines", "batched fps", "unbatched fps", "speedup", "mean batch"],
+        &[
+            vec![
+                "64".into(),
+                format!("{b64_fps:.0}"),
+                format!("{unb64_fps:.0}"),
+                format!("{batch_speedup:.2}x"),
+                format!("{b64_mean:.1}"),
+            ],
+            vec![
+                "1".into(),
+                format!("{b1_fps:.0}"),
+                format!("{unb1_fps:.0}"),
+                format!("{m1_batch_ratio:.2}x"),
+                "1.0 (adaptive)".into(),
+            ],
+        ],
+    );
+    println!(
+        "batch flush split (batched M=64 runs): full={flushes_full} timer={flushes_timer}"
+    );
+    // Acceptance: amortising the per-dispatch cost across coalesced frames
+    // must lift throughput-per-model >=1.5x nominal at M=64; the tripwire
+    // keeps jitter headroom for short CI windows on shared runners.
+    assert!(
+        batch_speedup >= 1.2,
+        "M=64 batched throughput is {batch_speedup:.2}x unbatched, below the 1.2x CI floor (1.5x nominal)"
+    );
+    assert!(
+        b64_mean > 1.0,
+        "mean batch size {b64_mean:.2} — the collector never coalesced frames"
+    );
+    // The adaptive dispatch target (min(max_batch, members)) must make
+    // M=1 batched indistinguishable from direct dispatch: nominal within
+    // 5%, CI floor 0.8x (no waiting-for-a-batch-that-never-fills).
+    assert!(
+        m1_batch_ratio >= 0.8,
+        "M=1 batched throughput is {m1_batch_ratio:.2}x of unbatched — batching added single-stream latency"
+    );
+
     let out_path = std::env::var("EDGEPIPE_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_wirepath.json".to_string());
     let json = format!(
         concat!(
             "{{\n",
             "  \"bench\": \"wirepath\",\n",
-            "  \"schema\": 4,\n",
+            "  \"schema\": 5,\n",
             "  \"status\": \"measured\",\n",
             "  \"secs_per_case\": {},\n",
             "  \"runs\": {},\n",
@@ -951,6 +1161,21 @@ fn main() {
             "    \"fanin\": {{\"pipelines\": {}, \"sources\": {}, \"buffers_per_source\": {}, ",
             "\"shared_fps\": {:.1}, \"stealing_fps\": {:.1}, \"conserved\": true}},\n",
             "    \"sched\": {{\"local_hits\": {}, \"injector_hits\": {}, \"steals\": {}}}\n",
+            "  }},\n",
+            "  \"batching\": {{\n",
+            "    \"workers\": {},\n",
+            "    \"pipelines\": 64,\n",
+            "    \"max_batch\": 64,\n",
+            "    \"timeout_ms\": 2,\n",
+            "    \"m64_batched_fps\": {:.1},\n",
+            "    \"m64_unbatched_fps\": {:.1},\n",
+            "    \"m64_speedup\": {:.3},\n",
+            "    \"m64_mean_batch\": {:.2},\n",
+            "    \"m1_batched_fps\": {:.1},\n",
+            "    \"m1_unbatched_fps\": {:.1},\n",
+            "    \"m1_batched_vs_unbatched\": {:.3},\n",
+            "    \"flushes_full\": {},\n",
+            "    \"flushes_timer\": {}\n",
             "  }}\n",
             "}}\n"
         ),
@@ -990,6 +1215,16 @@ fn main() {
         sl,
         si,
         ssteal,
+        workers,
+        b64_fps,
+        unb64_fps,
+        batch_speedup,
+        b64_mean,
+        b1_fps,
+        unb1_fps,
+        m1_batch_ratio,
+        flushes_full,
+        flushes_timer,
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("\nwrote {out_path}"),

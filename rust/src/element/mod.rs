@@ -82,6 +82,11 @@ pub struct Ctx {
     /// One-shot flag: a pooled task pushed a buffer without a reserved
     /// slot onto a full link (multi-buffer emitter — should be Blocking).
     warned_unreserved: bool,
+    /// This element's pooled-task waker (None on a dedicated thread).
+    /// Elements hand it to external completion sources — e.g. a
+    /// [`crate::runtime::BatchCollector`] — so finishing async work
+    /// re-queues the parked task.
+    task_waker: Option<Waker>,
 }
 
 impl Ctx {
@@ -92,7 +97,29 @@ impl Ctx {
         bus: Sender<BusMsg>,
         stop: Arc<std::sync::atomic::AtomicBool>,
     ) -> Self {
-        Self { name, clock, downstream, bus, stop, rsv: None, warned_unreserved: false }
+        Self {
+            name,
+            clock,
+            downstream,
+            bus,
+            stop,
+            rsv: None,
+            warned_unreserved: false,
+            task_waker: None,
+        }
+    }
+
+    /// Install this element's pooled-task waker (scheduler, at spawn).
+    pub(crate) fn set_task_waker(&mut self, w: Waker) {
+        self.task_waker = Some(w);
+    }
+
+    /// The element's own task waker when it runs as a pooled task; None
+    /// on a dedicated thread (thread elements block inline instead of
+    /// parking). Firing it re-queues the task, which re-enters
+    /// [`Element::pump`].
+    pub fn task_waker(&self) -> Option<Waker> {
+        self.task_waker.clone()
     }
 
     /// True once the pipeline asked live sources to wind down.
@@ -297,6 +324,22 @@ impl Ctx {
     }
 }
 
+/// Outcome of an [`Element::pump`] poll (async in-flight work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Async {
+    /// No async work pending — the runner proceeds to pop input.
+    Idle,
+    /// Async work completed and output was pushed this call; the runner
+    /// re-acquires output slots before anything else (the push consumed
+    /// the reservations it was holding).
+    Delivered,
+    /// Async work still in flight — the runner parks the task without
+    /// popping input (per-pipeline order: nothing overtakes the
+    /// in-flight frame). The element must have handed its task waker to
+    /// whatever completes the work, or the task sleeps forever.
+    Pending,
+}
+
 /// A pipeline element. Implementations are single-threaded — the runner
 /// gives each element its own thread (`Workload::Blocking`) or drives it
 /// as a pooled task (`Workload::Compute`), never both at once — and
@@ -350,6 +393,15 @@ pub trait Element: Send {
     fn process(&mut self, pad: usize, item: Item, ctx: &mut Ctx) -> Result<Progress> {
         self.handle(pad, item, ctx)?;
         Ok(Progress::Ready)
+    }
+
+    /// Poll async in-flight work (pooled runner only; called each turn
+    /// with output slots already acquired, before popping input). Thread
+    /// runners never call it — thread-mode elements finish async work
+    /// inline in `handle` (blocking their own thread is fine there).
+    /// Default: no async work, ever.
+    fn pump(&mut self, _ctx: &mut Ctx) -> Result<Async> {
+        Ok(Async::Idle)
     }
 
     /// Produce items (source elements). Return Ok(false) for natural EOS.

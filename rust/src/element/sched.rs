@@ -72,7 +72,7 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError, Weak};
 
 use crate::element::inbox::{PollState, TryPop, Waker};
-use crate::element::{Ctx, Element, EosTracker, Inbox, Item};
+use crate::element::{Async, Ctx, Element, EosTracker, Inbox, Item};
 use crate::log_debug;
 use crate::metrics::{self, Counter};
 
@@ -201,6 +201,9 @@ pub struct NodeRun {
     inbox: Option<Arc<Inbox>>,
     tracker: EosTracker,
     started: bool,
+    /// All sink pads saw EOS but async in-flight work ([`Element::pump`])
+    /// is still draining; finish once the element reports `Async::Idle`.
+    draining: bool,
     group: Arc<TaskGroup>,
     waker: Option<Waker>,
 }
@@ -214,7 +217,7 @@ impl NodeRun {
     ) -> Self {
         ctx.enable_reservations();
         let tracker = EosTracker::new(inbox.as_ref().map(|i| i.n_pads()).unwrap_or(0));
-        Self { element, ctx, inbox, tracker, started: false, group, waker: None }
+        Self { element, ctx, inbox, tracker, started: false, draining: false, group, waker: None }
     }
 
     /// Drive the element until it parks, exhausts its budget, or ends.
@@ -236,6 +239,25 @@ impl NodeRun {
             m.polls.inc();
             if !self.ctx.acquire_output_slots(&waker) {
                 return StepOutcome::Parked; // producer waker registered
+            }
+            // Async in-flight work first (e.g. a batched inference the
+            // element is waiting on): its output must go downstream
+            // before any new input is popped, or per-pipeline frame
+            // order breaks.
+            match self.element.pump(&mut self.ctx) {
+                Ok(Async::Idle) => {}
+                Ok(Async::Delivered) => continue, // re-acquire spent slots
+                Ok(Async::Pending) => {
+                    self.ctx.release_output_slots();
+                    return StepOutcome::Parked; // completion fires our waker
+                }
+                Err(e) => {
+                    self.ctx.post_error(format!("pump: {e}"));
+                    return self.finish();
+                }
+            }
+            if self.draining {
+                return self.finish(); // EOS seen and async work drained
             }
             match &inbox {
                 None => {
@@ -266,9 +288,12 @@ impl NodeRun {
                             }
                         }
                         // EOS accounting runs on every handled item so the
-                        // pooled and threaded runners never diverge.
+                        // pooled and threaded runners never diverge. Defer
+                        // the actual finish through `draining` so async
+                        // in-flight work (pump) delivers before teardown.
                         if eos && self.tracker.mark(pad) {
-                            return self.finish();
+                            self.draining = true;
+                            continue;
                         }
                         if yield_after {
                             self.ctx.release_output_slots();
@@ -428,11 +453,15 @@ impl Scheduler {
         let sched = self.clone();
         let task = Arc::new_cyclic(|weak: &Weak<Task>| {
             let w = weak.clone();
-            run.waker = Some(Arc::new(move || {
+            let waker: Waker = Arc::new(move || {
                 if let Some(t) = w.upgrade() {
                     sched.wake(&t);
                 }
-            }));
+            });
+            // The element gets its own task waker too, for async
+            // completion sources (batch collectors) to re-queue it.
+            run.ctx.set_task_waker(waker.clone());
+            run.waker = Some(waker);
             Task { state: AtomicU8::new(QUEUED), run: Mutex::new(Some(run)) }
         });
         self.m.tasks.inc();

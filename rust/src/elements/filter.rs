@@ -5,41 +5,93 @@
 //! `framework=passthrough` is the transport-isolation stand-in used by the
 //! Fig 7 query benches; `framework=custom` wraps a closure (tests; also
 //! the paper's custom-filter sub-plugin mechanism).
+//!
+//! Execution goes through the public batch-first [`InferenceBackend`]
+//! trait. Two modes:
+//!
+//! - **Direct** (the default): one `infer_buffer` per frame on this
+//!   element's own task, exactly the pre-PR 7 behaviour.
+//! - **Batched** (`batch=B [batch-timeout-ms=T]`): ready frames are
+//!   submitted to a per-model shared [`BatchCollector`] that coalesces
+//!   frames from every pipeline running the same model into one
+//!   `infer_batch` call (dispatch at B frames or T ms, whichever first)
+//!   and demuxes results back in order. A pooled filter parks on its
+//!   task waker while its frame is in flight ([`Element::pump`]); a
+//!   thread-mode filter blocks inline on the frame's [`Slot`].
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::buffer::Buffer;
-use crate::caps::Caps;
-use crate::element::{Ctx, Element, Item, Workload};
+use crate::element::{Async, Ctx, Element, Item, Workload};
 use crate::metrics;
-use crate::runtime::Model;
-use crate::tensor::Format;
+use crate::runtime::{BatchCollector, Model, Slot};
 use crate::util::{Error, Result};
 
-type CustomFn = Box<dyn FnMut(&Buffer) -> Result<Vec<u8>> + Send>;
+pub use crate::runtime::backend::{
+    CustomBackend, CustomFn, InferenceBackend, PassthroughBackend, PjrtBackend,
+};
 
-enum Backend {
-    Pjrt(Arc<Model>),
-    Passthrough,
-    Custom(CustomFn),
+/// One frame submitted to the collector and not yet delivered
+/// downstream. At most one exists per filter (per-pipeline order).
+struct Inflight {
+    /// The original buffer: pts/duration/meta are rewrapped around the
+    /// inference output on delivery.
+    buf: Buffer,
+    slot: Arc<Slot>,
+    t0: Instant,
+}
+
+enum Exec {
+    /// Per-frame inference on this element's own task.
+    Direct(Box<dyn InferenceBackend>),
+    /// Frames go through the shared per-model collector.
+    Batched { collector: Arc<BatchCollector>, inflight: Option<Inflight>, registered: bool },
 }
 
 pub struct TensorFilter {
-    backend: Backend,
+    exec: Exec,
     caps_ok: bool,
 }
 
 impl TensorFilter {
+    /// Direct (unbatched) filter over any [`InferenceBackend`].
+    pub fn new(backend: Box<dyn InferenceBackend>) -> Self {
+        Self { exec: Exec::Direct(backend), caps_ok: false }
+    }
+
+    /// Batched filter: frames route through the shared `collector`
+    /// (obtain one from `runtime::models().collector(dir, name, cfg)`).
+    pub fn batched(collector: Arc<BatchCollector>) -> Self {
+        Self { exec: Exec::Batched { collector, inflight: None, registered: false }, caps_ok: false }
+    }
+
     pub fn pjrt(model: Arc<Model>) -> Self {
-        Self { backend: Backend::Pjrt(model), caps_ok: false }
+        Self::new(Box::new(PjrtBackend::new(model)))
     }
 
     pub fn passthrough() -> Self {
-        Self { backend: Backend::Passthrough, caps_ok: false }
+        Self::new(Box::new(PassthroughBackend))
     }
 
     pub fn custom(f: CustomFn) -> Self {
-        Self { backend: Backend::Custom(f), caps_ok: false }
+        Self::new(Box::new(CustomBackend::new(f)))
+    }
+
+    fn observe_latency(ctx: &Ctx, t0: Instant) {
+        metrics::global()
+            .observe(&format!("filter.{}.latency_us", ctx.name), t0.elapsed().as_micros() as f64);
+    }
+
+    /// Deliver a completed in-flight frame downstream (batched mode).
+    fn deliver(
+        ctx: &mut Ctx,
+        inflight: Inflight,
+        result: Result<Vec<u8>>,
+    ) -> Result<()> {
+        let payload = result.map_err(|e| Error::element(&ctx.name, e))?;
+        Self::observe_latency(ctx, inflight.t0);
+        ctx.push_buffer(inflight.buf.map_payload(payload))
     }
 }
 
@@ -51,72 +103,94 @@ impl Element for TensorFilter {
         Workload::Compute
     }
 
+    fn start(&mut self, _ctx: &mut Ctx) -> Result<()> {
+        if let Exec::Batched { collector, registered, .. } = &mut self.exec {
+            collector.register_member();
+            *registered = true;
+        }
+        Ok(())
+    }
+
     fn handle(&mut self, _pad: usize, item: Item, ctx: &mut Ctx) -> Result<()> {
         match item {
             Item::Caps(c) => {
-                match &self.backend {
-                    Backend::Pjrt(model) => {
-                        if !c.is_tensors() {
-                            return Err(Error::element(
-                                &ctx.name,
-                                format!("tensor_filter needs tensors caps, got `{c}`"),
-                            ));
-                        }
-                        if c.tensor_format().map_err(|e| Error::element(&ctx.name, e))?
-                            != Format::Static
-                        {
-                            return Err(Error::element(&ctx.name, "needs static tensors"));
-                        }
-                        let want = model.input_info().map_err(|e| Error::element(&ctx.name, e))?;
-                        if let Ok(got) = c.tensors_info() {
-                            if got != want {
-                                return Err(Error::element(
-                                    &ctx.name,
-                                    format!(
-                                        "model `{}` expects {} got {}",
-                                        model.manifest.name,
-                                        want.dimensions_string(),
-                                        got.dimensions_string()
-                                    ),
-                                ));
-                            }
-                        }
-                        let out = model.output_info().map_err(|e| Error::element(&ctx.name, e))?;
-                        self.caps_ok = true;
-                        ctx.push_caps(Caps::tensors(&out))
-                    }
-                    Backend::Passthrough => {
-                        self.caps_ok = true;
-                        ctx.push_caps(c)
-                    }
-                    Backend::Custom(_) => {
-                        self.caps_ok = true;
-                        ctx.push_caps(c)
-                    }
+                let out = match &mut self.exec {
+                    Exec::Direct(backend) => backend.negotiate(&c),
+                    Exec::Batched { collector, .. } => collector.negotiate(&c),
                 }
+                .map_err(|e| Error::element(&ctx.name, e))?;
+                self.caps_ok = true;
+                ctx.push_caps(out)
             }
             Item::Buffer(b) => {
                 if !self.caps_ok {
                     return Err(Error::element(&ctx.name, "buffer before caps"));
                 }
-                let t0 = std::time::Instant::now();
-                let out = match &mut self.backend {
-                    Backend::Pjrt(model) => {
-                        let payload =
-                            model.infer_bytes(&b.data).map_err(|e| Error::element(&ctx.name, e))?;
-                        b.map_payload(payload)
+                match &mut self.exec {
+                    Exec::Direct(backend) => {
+                        let t0 = Instant::now();
+                        let out =
+                            backend.infer_buffer(&b).map_err(|e| Error::element(&ctx.name, e))?;
+                        Self::observe_latency(ctx, t0);
+                        ctx.push_buffer(out)
                     }
-                    Backend::Passthrough => b,
-                    Backend::Custom(f) => {
-                        let payload = f(&b)?;
-                        b.map_payload(payload)
+                    Exec::Batched { collector, inflight, .. } => {
+                        debug_assert!(inflight.is_none(), "runner pops no input while inflight");
+                        let t0 = Instant::now();
+                        let waker = ctx.task_waker();
+                        let thread_mode = waker.is_none();
+                        let slot = collector.submit(b.data.clone(), waker);
+                        if thread_mode {
+                            // Dedicated thread: block right here.
+                            let payload = slot
+                                .wait(collector)
+                                .map_err(|e| Error::element(&ctx.name, e))?;
+                            Self::observe_latency(ctx, t0);
+                            return ctx.push_buffer(b.map_payload(payload));
+                        }
+                        if let Some(r) = slot.take() {
+                            // Our submit completed the batch: the dispatch
+                            // ran inline and the result is already here.
+                            return Self::deliver(ctx, Inflight { buf: b, slot, t0 }, r);
+                        }
+                        *inflight = Some(Inflight { buf: b, slot, t0 });
+                        Ok(())
                     }
-                };
-                metrics::global()
-                    .observe(&format!("filter.{}.latency_us", ctx.name), t0.elapsed().as_micros() as f64);
-                ctx.push_buffer(out)
+                }
             }
             Item::Eos => Ok(()),
+        }
+    }
+
+    /// Batched mode: poll the in-flight frame. The pooled runner calls
+    /// this before popping input each turn, so the frame's output goes
+    /// downstream (in order) the turn after the collector completes it.
+    fn pump(&mut self, ctx: &mut Ctx) -> Result<Async> {
+        let Exec::Batched { collector, inflight, .. } = &mut self.exec else {
+            return Ok(Async::Idle);
+        };
+        if inflight.is_none() {
+            return Ok(Async::Idle);
+        }
+        // The timer daemon may have woken us for an expired budget:
+        // drive the flush from this task.
+        collector.poll_due();
+        match inflight.as_ref().and_then(|i| i.slot.take()) {
+            None => Ok(Async::Pending),
+            Some(r) => {
+                let inf = inflight.take().expect("checked non-empty above");
+                Self::deliver(ctx, inf, r)?;
+                Ok(Async::Delivered)
+            }
+        }
+    }
+
+    fn stop(&mut self, _ctx: &mut Ctx) {
+        if let Exec::Batched { collector, registered, .. } = &mut self.exec {
+            if *registered {
+                collector.deregister_member();
+                *registered = false;
+            }
         }
     }
 }
@@ -124,6 +198,8 @@ impl Element for TensorFilter {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::buffer::Buffer;
+    use crate::caps::Caps;
     use crate::elements::basic::{AppSink, AppSrc};
     use crate::pipeline::Pipeline;
     use crate::tensor::{DType, TensorInfo, TensorsInfo};
@@ -162,6 +238,33 @@ mod tests {
         let _r = p.start().unwrap();
         h.push(Buffer::new(vec![1, 2, 3])).unwrap();
         assert_eq!(&rx.recv_timeout(Duration::from_secs(2)).unwrap().data[..], &[2, 4, 6]);
+    }
+
+    #[test]
+    fn batched_filter_single_stream_roundtrip() {
+        use crate::runtime::{BatchCfg, BatchCollector};
+        let collector = BatchCollector::new(
+            "filter_rt",
+            Box::new(PassthroughBackend),
+            BatchCfg { max_batch: 8, timeout: Duration::from_millis(2) },
+        );
+        let mut p = Pipeline::new();
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[3]).unwrap());
+        let (src, h) = AppSrc::new(4, Some(Caps::tensors(&info)));
+        let (sink, rx) = AppSink::new(4);
+        let s = p.add("src", Box::new(src)).unwrap();
+        let f = p.add("f", Box::new(TensorFilter::batched(collector))).unwrap();
+        let k = p.add("k", Box::new(sink)).unwrap();
+        p.link(s, f).unwrap();
+        p.link(f, k).unwrap();
+        let _r = p.start().unwrap();
+        for i in 0..5u8 {
+            h.push(Buffer::new(vec![i, i, i])).unwrap();
+        }
+        for i in 0..5u8 {
+            let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(&got.data[..], &[i, i, i], "order preserved through the collector");
+        }
     }
 
     // PJRT-backed end-to-end filter tests live in rust/tests/ (they need

@@ -22,7 +22,9 @@ pub mod zmqel;
 
 pub use basic::{appsink_channel, appsrc_channel, AppSink, AppSrc, AppSrcHandle, CapsFilter, FakeSink, Identity, Queue, Tee};
 pub use convert::{ArithOp, DecoderMode, TensorConverter, TensorDecoder, TensorTransform};
-pub use filter::TensorFilter;
+pub use filter::{
+    CustomBackend, CustomFn, InferenceBackend, PassthroughBackend, PjrtBackend, TensorFilter,
+};
 pub use muxdemux::{IfOp, TensorDemux, TensorIf, TensorMux};
 pub use mqttel::{MqttSink, MqttSrc};
 pub use query::{QueryClient, QueryProtocol, QueryServerSink, QueryServerSrc, ResilienceConfig};
@@ -183,6 +185,46 @@ pub fn register_all(r: &mut Registry) {
 
     r.register("tensor_filter", |p, e| {
         let fw = prop_str(p, "framework", "pjrt");
+        // Batching knobs, validated BEFORE any model load so a bad value
+        // surfaces as a parse error, never an artifacts error.
+        let batch = match p.get("batch") {
+            None => None,
+            Some(v) => {
+                let b: usize = v.parse().map_err(|_| {
+                    Error::Parse(format!("bad batch={v} (want integer >= 1)"))
+                })?;
+                if b == 0 {
+                    return Err(Error::Parse(
+                        "bad batch=0 (want >= 1; batch=1 disables coalescing)".into(),
+                    ));
+                }
+                Some(b)
+            }
+        };
+        let timeout_ms = match p.get("batch-timeout-ms") {
+            None => None,
+            Some(v) => {
+                let t: u64 = v.parse().map_err(|_| {
+                    Error::Parse(format!("bad batch-timeout-ms={v} (want integer >= 1)"))
+                })?;
+                if t == 0 {
+                    return Err(Error::Parse("bad batch-timeout-ms=0 (want >= 1)".into()));
+                }
+                Some(t)
+            }
+        };
+        if batch.is_none() && timeout_ms.is_some() {
+            return Err(Error::Parse(
+                "batch-timeout-ms= without batch= (set batch=<B> to enable batching)".into(),
+            ));
+        }
+        let cfg = batch.map(|b| {
+            let mut c = crate::runtime::BatchCfg { max_batch: b, ..Default::default() };
+            if let Some(t) = timeout_ms {
+                c.timeout = std::time::Duration::from_millis(t);
+            }
+            c
+        });
         match fw {
             "pjrt" | "tensorflow-lite" | "tensorflow" => {
                 // Model path: accept a bare name or `/path/<name>.tflite`
@@ -194,10 +236,31 @@ pub fn register_all(r: &mut Registry) {
                     .unwrap_or(raw)
                     .trim_end_matches(".tflite")
                     .trim_end_matches(".hlo.txt");
-                let store = crate::runtime::store_for(&e.artifacts_dir)?;
-                Ok(Box::new(TensorFilter::pjrt(store.get(name)?)))
+                // The process-wide registry is the one constructor path:
+                // every pipeline naming the same model shares one
+                // Arc<Model> (and one collector when batching).
+                let models = crate::runtime::models();
+                match cfg {
+                    Some(cfg) => Ok(Box::new(TensorFilter::batched(models.collector(
+                        &e.artifacts_dir,
+                        name,
+                        cfg,
+                    )?))),
+                    None => Ok(Box::new(TensorFilter::pjrt(models.get(&e.artifacts_dir, name)?))),
+                }
             }
-            "passthrough" => Ok(Box::new(TensorFilter::passthrough())),
+            "passthrough" => match cfg {
+                // Per-instance collector: passthrough has no model key to
+                // share under, and batching it only matters in tests.
+                Some(cfg) => Ok(Box::new(TensorFilter::batched(
+                    crate::runtime::BatchCollector::new(
+                        "passthrough",
+                        Box::new(PassthroughBackend),
+                        cfg,
+                    ),
+                ))),
+                None => Ok(Box::new(TensorFilter::passthrough())),
+            },
             other => Err(Error::Parse(format!("tensor_filter framework `{other}` unsupported"))),
         }
     });
@@ -417,6 +480,30 @@ mod tests {
         p.insert("sink_1::zorder".into(), "2".into());
         let c = compositor_from_props(&p);
         assert_eq!(c.n_sink_pads(), 2);
+    }
+
+    #[test]
+    fn tensor_filter_batch_props_validated() {
+        let r = registry();
+        let env = PipelineEnv::default();
+        let mut p = Props::new();
+        p.insert("framework".into(), "passthrough".into());
+        p.insert("batch".into(), "8".into());
+        p.insert("batch-timeout-ms".into(), "3".into());
+        assert!(r.make("tensor_filter", &p, &env).is_ok());
+        p.insert("batch".into(), "0".into());
+        assert!(r.make("tensor_filter", &p, &env).is_err(), "batch=0");
+        p.insert("batch".into(), "eight".into());
+        assert!(r.make("tensor_filter", &p, &env).is_err(), "non-numeric batch");
+        p.insert("batch".into(), "8".into());
+        p.insert("batch-timeout-ms".into(), "0".into());
+        assert!(r.make("tensor_filter", &p, &env).is_err(), "batch-timeout-ms=0");
+        p.insert("batch-timeout-ms".into(), "soon".into());
+        assert!(r.make("tensor_filter", &p, &env).is_err(), "non-numeric timeout");
+        let mut lone = Props::new();
+        lone.insert("framework".into(), "passthrough".into());
+        lone.insert("batch-timeout-ms".into(), "3".into());
+        assert!(r.make("tensor_filter", &lone, &env).is_err(), "timeout without batch");
     }
 
     #[test]

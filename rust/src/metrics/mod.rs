@@ -7,10 +7,13 @@
 //! `local_hits`/`injector_hits`/`steals` dequeue split, and
 //! `queue_locks`/`lock_waits` ready-queue contention — see
 //! [`crate::element::sched`]), `codec.auto.<link>.*` from the adaptive
-//! wire codec, `appsink.<name>` delivery counters, and
+//! wire codec, `appsink.<name>` delivery counters,
 //! `query.<name>.{retries,hedges,hedge_wins,reroutes,breaker_open,frames_dropped}`
 //! plus the `query.<name>.rtt_us` histogram from the resilient offload
-//! client ([`crate::elements::QueryClient`]).
+//! client ([`crate::elements::QueryClient`]), and
+//! `batch.<model>.{flushes_full,flushes_timer}` counters plus the
+//! `batch.<model>.{size,occupancy}` histograms from the cross-pipeline
+//! inference batcher ([`crate::runtime::BatchCollector`]).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,239 @@
+//! Batch-first inference backend API.
+//!
+//! [`InferenceBackend`] is the seam between pipeline elements and model
+//! execution. `tensor_filter` used to hard-code a private three-arm
+//! backend enum; now it drives any `InferenceBackend` — one frame at a
+//! time through [`InferenceBackend::infer_one`], or many frames per call
+//! through [`InferenceBackend::infer_batch`] when the cross-pipeline
+//! [`BatchCollector`](super::batch::BatchCollector) coalesces load from
+//! several pipelines sharing one model.
+//!
+//! The trait is deliberately batch-first: `infer_batch` is the one
+//! required inference method, and `infer_one` is a blanket wrapper over
+//! it, so a backend written for the single-frame path is automatically
+//! correct under batching (it just never sees a batch larger than 1
+//! until a collector feeds it one).
+
+use std::sync::Arc;
+
+use crate::buffer::{Buffer, Bytes};
+use crate::caps::Caps;
+use crate::tensor::Format;
+use crate::util::{Error, Result};
+
+use super::Model;
+
+/// Custom per-frame inference closure (the paper's custom-filter
+/// sub-plugin mechanism; also the test seam). Kept source-compatible
+/// with the pre-trait `TensorFilter::custom` constructor.
+pub type CustomFn = Box<dyn FnMut(&Buffer) -> Result<Vec<u8>> + Send>;
+
+/// A model-execution backend a `tensor_filter` (or a shared
+/// [`BatchCollector`](super::batch::BatchCollector)) drives.
+///
+/// Implementations must be `Send`: a backend lives inside one element or
+/// one collector and is driven from whichever worker holds it, never
+/// from two threads at once.
+pub trait InferenceBackend: Send {
+    /// Stable label for metrics keys and error messages (model name for
+    /// PJRT backends).
+    fn label(&self) -> &str;
+
+    /// Caps negotiation hook: validate the upstream caps and return the
+    /// caps this backend's output stream carries. Errors are returned
+    /// plain; the element wraps them with its name.
+    fn negotiate(&mut self, incoming: &Caps) -> Result<Caps>;
+
+    /// Run inference on a batch of frame payloads. Must return exactly
+    /// one output payload per input, in input order — the collector
+    /// demuxes results positionally back to the originating pipelines.
+    fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>>;
+
+    /// Single-frame convenience: every unbatched caller funnels through
+    /// here, so per-frame backends only implement `infer_batch`.
+    fn infer_one(&mut self, input: &Bytes) -> Result<Vec<u8>> {
+        let mut out = self.infer_batch(std::slice::from_ref(input))?;
+        if out.len() != 1 {
+            return Err(Error::Runtime(format!(
+                "backend `{}` returned {} outputs for 1 input",
+                self.label(),
+                out.len()
+            )));
+        }
+        Ok(out.pop().expect("length checked above"))
+    }
+
+    /// Direct (unbatched) per-buffer path: runs [`Self::infer_one`] on
+    /// the payload and rewraps timestamps/meta. Passthrough overrides it
+    /// to forward the Arc-shared payload without copying; Custom
+    /// overrides it so closures observe the real [`Buffer`] (pts/meta),
+    /// exactly as before the redesign.
+    fn infer_buffer(&mut self, b: &Buffer) -> Result<Buffer> {
+        Ok(b.map_payload(self.infer_one(&b.data)?))
+    }
+}
+
+/// PJRT-compiled AOT model execution (the production path).
+pub struct PjrtBackend {
+    model: Arc<Model>,
+}
+
+impl PjrtBackend {
+    pub fn new(model: Arc<Model>) -> Self {
+        Self { model }
+    }
+
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn label(&self) -> &str {
+        &self.model.manifest.name
+    }
+
+    fn negotiate(&mut self, incoming: &Caps) -> Result<Caps> {
+        if !incoming.is_tensors() {
+            return Err(Error::Caps(format!(
+                "tensor_filter needs tensors caps, got `{incoming}`"
+            )));
+        }
+        if incoming.tensor_format()? != Format::Static {
+            return Err(Error::Caps("needs static tensors".into()));
+        }
+        let want = self.model.input_info()?;
+        if let Ok(got) = incoming.tensors_info() {
+            if got != want {
+                return Err(Error::Caps(format!(
+                    "model `{}` expects {} got {}",
+                    self.model.manifest.name,
+                    want.dimensions_string(),
+                    got.dimensions_string()
+                )));
+            }
+        }
+        Ok(Caps::tensors(&self.model.output_info()?))
+    }
+
+    fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+        self.model.infer_bytes_batch(inputs)
+    }
+}
+
+/// Transport-isolation stand-in (the Fig 7 query benches): output caps
+/// and payloads are the input, untouched and uncopied.
+pub struct PassthroughBackend;
+
+impl InferenceBackend for PassthroughBackend {
+    fn label(&self) -> &str {
+        "passthrough"
+    }
+
+    fn negotiate(&mut self, incoming: &Caps) -> Result<Caps> {
+        Ok(incoming.clone())
+    }
+
+    fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+        Ok(inputs.iter().map(|b| b.to_vec()).collect())
+    }
+
+    fn infer_buffer(&mut self, b: &Buffer) -> Result<Buffer> {
+        Ok(b.clone()) // payload is Arc-shared: no copy on the direct path
+    }
+}
+
+/// Closure-backed backend wrapping a [`CustomFn`].
+///
+/// On the direct path the closure sees the full `Buffer` (pts, meta) —
+/// bit-for-bit the pre-trait behaviour. On the batched path the
+/// collector only carries payloads, so each frame reaches the closure as
+/// a payload-only `Buffer`.
+pub struct CustomBackend {
+    f: CustomFn,
+}
+
+impl CustomBackend {
+    pub fn new(f: CustomFn) -> Self {
+        Self { f }
+    }
+}
+
+impl InferenceBackend for CustomBackend {
+    fn label(&self) -> &str {
+        "custom"
+    }
+
+    fn negotiate(&mut self, incoming: &Caps) -> Result<Caps> {
+        Ok(incoming.clone())
+    }
+
+    fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for payload in inputs {
+            out.push((self.f)(&Buffer::from_bytes(payload.clone()))?);
+        }
+        Ok(out)
+    }
+
+    fn infer_buffer(&mut self, b: &Buffer) -> Result<Buffer> {
+        Ok(b.map_payload((self.f)(b)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_one_funnels_through_infer_batch() {
+        struct Doubler;
+        impl InferenceBackend for Doubler {
+            fn label(&self) -> &str {
+                "doubler"
+            }
+            fn negotiate(&mut self, c: &Caps) -> Result<Caps> {
+                Ok(c.clone())
+            }
+            fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+                Ok(inputs.iter().map(|b| b.iter().map(|&x| x * 2).collect()).collect())
+            }
+        }
+        let mut d = Doubler;
+        let out = d.infer_one(&Bytes::from(vec![1u8, 2, 3])).unwrap();
+        assert_eq!(out, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn bad_backend_output_count_is_an_error() {
+        struct Silent;
+        impl InferenceBackend for Silent {
+            fn label(&self) -> &str {
+                "silent"
+            }
+            fn negotiate(&mut self, c: &Caps) -> Result<Caps> {
+                Ok(c.clone())
+            }
+            fn infer_batch(&mut self, _inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+                Ok(Vec::new())
+            }
+        }
+        assert!(Silent.infer_one(&Bytes::from(vec![1u8])).is_err());
+    }
+
+    #[test]
+    fn passthrough_forwards_buffer_without_copy() {
+        let b = Buffer::new(vec![9u8, 8, 7]);
+        let out = PassthroughBackend.infer_buffer(&b).unwrap();
+        assert_eq!(&out.data[..], &[9, 8, 7]);
+    }
+
+    #[test]
+    fn custom_sees_full_buffer_on_direct_path() {
+        let mut c = CustomBackend::new(Box::new(|b: &Buffer| Ok(vec![b.data.len() as u8])));
+        let out = c.infer_buffer(&Buffer::new(vec![0u8; 5])).unwrap();
+        assert_eq!(&out.data[..], &[5]);
+        let batched = c.infer_batch(&[Bytes::from(vec![0u8; 3]), Bytes::from(vec![0u8; 4])]).unwrap();
+        assert_eq!(batched, vec![vec![3], vec![4]]);
+    }
+}

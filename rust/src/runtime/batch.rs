@@ -1,0 +1,600 @@
+//! Cross-pipeline adaptive inference batching.
+//!
+//! When M pipelines run the same model, per-frame inference pays M
+//! single-frame dispatches where one batched call would do. A
+//! [`BatchCollector`] sits between `tensor_filter` instances and a
+//! shared [`InferenceBackend`]: each filter submits its ready frame and
+//! parks; the collector dispatches one `infer_batch` call when B frames
+//! are waiting or the oldest waiting frame is T ms old (`batch=` /
+//! `batch-timeout-ms=`, whichever first), then demuxes the outputs back
+//! to the submitting filters positionally — exact, in submission order.
+//!
+//! ## Adaptive target
+//!
+//! Each member (filter instance) has at most one frame in flight, so
+//! once every registered member has a frame waiting no further frame can
+//! arrive until results go back. The collector therefore dispatches at
+//! `min(B, members)`: an M=1 pipeline dispatches every frame immediately
+//! (no added latency when there is nothing to coalesce), M=64 pipelines
+//! fill real batches, and the T ms budget only pays when some member is
+//! slow, idle, or mid-shutdown.
+//!
+//! ## Scheduling
+//!
+//! Dispatch runs inline on the pooled task whose submit completed the
+//! batch (a worker was going to run that inference anyway); waiting
+//! filters park via the same waker protocol the inbox uses
+//! ([`crate::element::inbox::Waker`]), so a slow batch never wedges a
+//! worker. A process-wide `ep-batch-timer` daemon fires member wakers
+//! when a latency budget expires and the woken member drives the flush
+//! from its own pooled task ([`BatchCollector::poll_due`]); if every
+//! member is parked on downstream backpressure and nobody can run, the
+//! timer flushes the overdue batch itself — results then wait in their
+//! slots. Thread-mode filters skip wakers and block on [`Slot::wait`],
+//! which drives due-flushes on its own deadline.
+//!
+//! Per-model metrics: `batch.<model>.size` / `batch.<model>.occupancy`
+//! histograms and `batch.<model>.flushes_full` /
+//! `batch.<model>.flushes_timer` counters.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+use crate::buffer::Bytes;
+use crate::caps::Caps;
+use crate::element::inbox::Waker;
+use crate::log_warn;
+use crate::metrics::{self, Counter};
+use crate::util::{Error, Result};
+
+use super::backend::InferenceBackend;
+
+/// Batching policy of one collector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchCfg {
+    /// Dispatch when this many frames are waiting (upper bound on the
+    /// batch size; the `batch=` element property).
+    pub max_batch: usize,
+    /// Latency budget: dispatch a partial batch once the oldest waiting
+    /// frame is this old (the `batch-timeout-ms=` element property).
+    pub timeout: Duration,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        Self { max_batch: 8, timeout: Duration::from_millis(5) }
+    }
+}
+
+/// Completion cell for one submitted frame: the collector writes exactly
+/// one result; the submitting filter takes it (pooled path) or blocks on
+/// it (thread path).
+pub struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+struct SlotState {
+    result: Option<Result<Vec<u8>>>,
+    waker: Option<Waker>,
+}
+
+impl Slot {
+    fn new(waker: Option<Waker>) -> Arc<Slot> {
+        Arc::new(Slot { state: Mutex::new(SlotState { result: None, waker }), cv: Condvar::new() })
+    }
+
+    /// Take the result if the batch already ran (non-blocking).
+    pub fn take(&self) -> Option<Result<Vec<u8>>> {
+        self.state.lock().unwrap().result.take()
+    }
+
+    /// Clone the registered waker without consuming it (timer re-fires).
+    fn peek_waker(&self) -> Option<Waker> {
+        self.state.lock().unwrap().waker.clone()
+    }
+
+    /// Deliver the result; returns the waker to fire (outside the lock).
+    fn complete(&self, r: Result<Vec<u8>>) -> Option<Waker> {
+        let mut s = self.state.lock().unwrap();
+        s.result = Some(r);
+        let w = s.waker.take();
+        self.cv.notify_all();
+        w
+    }
+
+    /// Block until the result arrives (thread-mode filters own their
+    /// thread). Drives [`BatchCollector::poll_due`] every millisecond so
+    /// a lone thread-mode pipeline never depends on the timer daemon for
+    /// progress.
+    pub fn wait(&self, collector: &BatchCollector) -> Result<Vec<u8>> {
+        loop {
+            {
+                let s = self.state.lock().unwrap();
+                let (mut s, _timed_out) =
+                    self.cv.wait_timeout(s, Duration::from_millis(1)).unwrap();
+                if let Some(r) = s.result.take() {
+                    return r;
+                }
+            }
+            collector.poll_due();
+        }
+    }
+}
+
+struct PendingFrame {
+    payload: Bytes,
+    slot: Arc<Slot>,
+    since: Instant,
+}
+
+struct State {
+    pending: VecDeque<PendingFrame>,
+    /// Registered filter instances (each holds ≤ 1 frame in flight).
+    members: usize,
+    /// A batch is currently executing; leftover/new frames wait for the
+    /// dispatcher's post-run re-check rather than starting a second call.
+    dispatching: bool,
+}
+
+/// Per-model frame coalescer (see module docs).
+pub struct BatchCollector {
+    label: String,
+    cfg: BatchCfg,
+    backend: Mutex<Box<dyn InferenceBackend>>,
+    state: Mutex<State>,
+    flushes_full: Arc<Counter>,
+    flushes_timer: Arc<Counter>,
+    size_key: String,
+    occupancy_key: String,
+}
+
+impl BatchCollector {
+    /// Build a collector around a shared backend. `max_batch` is clamped
+    /// to ≥ 1 and `timeout` to ≥ 1 ms (the parser rejects zeros with a
+    /// targeted error; this guards programmatic construction).
+    pub fn new(label: &str, backend: Box<dyn InferenceBackend>, cfg: BatchCfg) -> Arc<Self> {
+        let cfg = BatchCfg {
+            max_batch: cfg.max_batch.max(1),
+            timeout: cfg.timeout.max(Duration::from_millis(1)),
+        };
+        let g = metrics::global();
+        let c = Arc::new(BatchCollector {
+            label: label.to_string(),
+            cfg,
+            backend: Mutex::new(backend),
+            state: Mutex::new(State { pending: VecDeque::new(), members: 0, dispatching: false }),
+            flushes_full: g.counter(&format!("batch.{label}.flushes_full")),
+            flushes_timer: g.counter(&format!("batch.{label}.flushes_timer")),
+            size_key: format!("batch.{label}.size"),
+            occupancy_key: format!("batch.{label}.occupancy"),
+        });
+        timer().register(&c);
+        c
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn cfg(&self) -> BatchCfg {
+        self.cfg
+    }
+
+    /// A filter instance joins (element `start`). Membership feeds the
+    /// adaptive dispatch target `min(max_batch, members)`.
+    pub fn register_member(&self) {
+        self.state.lock().unwrap().members += 1;
+    }
+
+    /// A filter instance leaves (element `stop`). Leaving can complete a
+    /// waiting batch — the adaptive target just shrank — so re-check.
+    pub fn deregister_member(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.members = st.members.saturating_sub(1);
+        }
+        self.try_dispatch();
+    }
+
+    /// Caps negotiation through the shared backend.
+    pub fn negotiate(&self, incoming: &Caps) -> Result<Caps> {
+        self.backend.lock().unwrap_or_else(|p| p.into_inner()).negotiate(incoming)
+    }
+
+    /// Hand one ready frame to the collector. Returns the frame's
+    /// completion slot; when the submit itself completed a batch the
+    /// dispatch ran inline on this thread and the slot is already ready.
+    /// `waker` (the submitter's pooled-task waker) fires on completion
+    /// and on timer flushes; thread-mode callers pass `None` and block
+    /// on [`Slot::wait`].
+    pub fn submit(&self, payload: Bytes, waker: Option<Waker>) -> Arc<Slot> {
+        let slot = Slot::new(waker);
+        {
+            let mut st = self.state.lock().unwrap();
+            st.pending.push_back(PendingFrame {
+                payload,
+                slot: slot.clone(),
+                since: Instant::now(),
+            });
+        }
+        self.try_dispatch();
+        slot
+    }
+
+    /// Flush hook: dispatch if the target is met or the budget expired.
+    /// Called by woken members ([`crate::element::Element::pump`]), by
+    /// blocked [`Slot::wait`]ers, and by the timer's backstop.
+    pub fn poll_due(&self) {
+        self.try_dispatch();
+    }
+
+    /// Core dispatch loop: drain-and-run while a batch is ready (target
+    /// met or budget expired). The state lock is never held across
+    /// `infer_batch`; `dispatching` keeps concurrent callers from
+    /// starting a second call on the same backend.
+    fn try_dispatch(&self) {
+        loop {
+            let (batch, full) = {
+                let mut st = self.state.lock().unwrap();
+                if st.dispatching || st.pending.is_empty() {
+                    return;
+                }
+                let target = self.cfg.max_batch.min(st.members.max(1));
+                let due = st
+                    .pending
+                    .front()
+                    .is_some_and(|f| f.since.elapsed() >= self.cfg.timeout);
+                if st.pending.len() < target && !due {
+                    drop(st);
+                    // Not ready: make sure the timer knows a budget is
+                    // running (cheap notify; the timer recomputes the
+                    // nearest deadline across all collectors).
+                    timer().kick();
+                    return;
+                }
+                let full = st.pending.len() >= target;
+                let n = st.pending.len().min(self.cfg.max_batch);
+                st.dispatching = true;
+                (st.pending.drain(..n).collect::<Vec<_>>(), full)
+            };
+            self.run_batch(batch, full);
+            self.state.lock().unwrap().dispatching = false;
+            // Another batch may have formed while this one ran.
+        }
+    }
+
+    /// Execute one batch and demux results positionally back to the
+    /// submitters' slots (exact: `infer_batch` guarantees one output per
+    /// input, in order). Wakers fire after every slot of the batch is
+    /// complete.
+    fn run_batch(&self, batch: Vec<PendingFrame>, full: bool) {
+        let n = batch.len();
+        if full {
+            self.flushes_full.inc();
+        } else {
+            self.flushes_timer.inc();
+        }
+        let g = metrics::global();
+        g.observe(&self.size_key, n as f64);
+        g.observe(&self.occupancy_key, n as f64 / self.cfg.max_batch as f64);
+        let payloads: Vec<Bytes> = batch.iter().map(|f| f.payload.clone()).collect();
+        // A panicking backend must not leave `dispatching` wedged: the
+        // panic becomes a per-frame error each member surfaces itself.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.backend.lock().unwrap_or_else(|p| p.into_inner()).infer_batch(&payloads)
+        }))
+        .unwrap_or_else(|_| Err(Error::Runtime(format!("backend `{}` panicked", self.label))));
+        let mut wakers: Vec<Waker> = Vec::with_capacity(n);
+        match result {
+            Ok(outs) if outs.len() == n => {
+                for (f, out) in batch.iter().zip(outs) {
+                    if let Some(w) = f.slot.complete(Ok(out)) {
+                        wakers.push(w);
+                    }
+                }
+            }
+            Ok(outs) => {
+                let msg = format!(
+                    "backend `{}` returned {} outputs for a batch of {n}",
+                    self.label,
+                    outs.len()
+                );
+                for f in &batch {
+                    if let Some(w) = f.slot.complete(Err(Error::Runtime(msg.clone()))) {
+                        wakers.push(w);
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for f in &batch {
+                    if let Some(w) = f.slot.complete(Err(Error::Runtime(msg.clone()))) {
+                        wakers.push(w);
+                    }
+                }
+            }
+        }
+        for w in wakers {
+            w();
+        }
+    }
+
+    /// Timer pass: fire waiting members' wakers once the budget expires
+    /// (the woken filter flushes from its own pooled task); if the batch
+    /// is still undispatched at 2x the budget — every member parked on
+    /// downstream backpressure, say — flush it here. Returns when this
+    /// collector next needs attention.
+    fn timer_tick(&self, now: Instant) -> Option<Instant> {
+        let mut wakers: Vec<Waker> = Vec::new();
+        let mut flush_here = false;
+        let next = {
+            let st = self.state.lock().unwrap();
+            match st.pending.front() {
+                None => None,
+                // A dispatch is running; its post-run re-check (or the
+                // next submit's kick) re-arms us.
+                Some(_) if st.dispatching => None,
+                Some(f) => {
+                    let deadline = f.since + self.cfg.timeout;
+                    if now < deadline {
+                        Some(deadline)
+                    } else if now < deadline + self.cfg.timeout {
+                        for p in st.pending.iter() {
+                            if let Some(w) = p.slot.peek_waker() {
+                                wakers.push(w);
+                            }
+                        }
+                        Some(deadline + self.cfg.timeout)
+                    } else {
+                        flush_here = true;
+                        Some(now + self.cfg.timeout)
+                    }
+                }
+            }
+        };
+        for w in wakers {
+            w();
+        }
+        if flush_here {
+            self.poll_due();
+        }
+        next
+    }
+}
+
+/// The process-wide batch timer: one daemon thread watching every live
+/// collector's oldest-frame deadline (collectors register weakly; dead
+/// ones are swept each pass).
+struct Timer {
+    collectors: Mutex<Vec<Weak<BatchCollector>>>,
+    cv: Condvar,
+}
+
+impl Timer {
+    fn register(&self, c: &Arc<BatchCollector>) {
+        self.collectors.lock().unwrap().push(Arc::downgrade(c));
+        self.cv.notify_one();
+    }
+
+    /// Wake the timer loop early so it recomputes the nearest deadline
+    /// (called whenever frames are left waiting on a budget).
+    fn kick(&self) {
+        self.cv.notify_one();
+    }
+
+    fn run(&'static self) {
+        loop {
+            let live: Vec<Arc<BatchCollector>> = {
+                let mut cs = self.collectors.lock().unwrap();
+                cs.retain(|w| w.strong_count() > 0);
+                cs.iter().filter_map(Weak::upgrade).collect()
+            };
+            let now = Instant::now();
+            let mut next: Option<Instant> = None;
+            for c in &live {
+                if let Some(d) = c.timer_tick(now) {
+                    next = Some(next.map_or(d, |n| n.min(d)));
+                }
+            }
+            let guard = self.collectors.lock().unwrap();
+            let sleep = match next {
+                Some(d) => d.saturating_duration_since(Instant::now()).max(Duration::from_micros(200)),
+                // Idle: nothing pending anywhere; kicks/registrations
+                // wake us early, the cap just bounds staleness.
+                None => Duration::from_millis(50),
+            };
+            let _ = self.cv.wait_timeout(guard, sleep).unwrap();
+        }
+    }
+}
+
+fn timer() -> &'static Timer {
+    static T: OnceLock<&'static Timer> = OnceLock::new();
+    T.get_or_init(|| {
+        let t: &'static Timer =
+            Box::leak(Box::new(Timer { collectors: Mutex::new(Vec::new()), cv: Condvar::new() }));
+        std::thread::Builder::new()
+            .name("ep-batch-timer".into())
+            .spawn(move || t.run())
+            .expect("spawn batch timer");
+        t
+    })
+}
+
+/// Log-once helper for collectors joined with a mismatched config (the
+/// first pipeline's policy wins; one model, one batching policy).
+pub(super) fn warn_cfg_mismatch(label: &str, have: BatchCfg, want: BatchCfg) {
+    log_warn!(
+        "runtime",
+        "batch collector `{label}`: ignoring cfg {want:?}; joined existing collector with {have:?}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct Echo {
+        sizes: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl InferenceBackend for Echo {
+        fn label(&self) -> &str {
+            "echo"
+        }
+        fn negotiate(&mut self, c: &Caps) -> Result<Caps> {
+            Ok(c.clone())
+        }
+        fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+            self.sizes.lock().unwrap().push(inputs.len());
+            Ok(inputs.iter().map(|b| b.to_vec()).collect())
+        }
+    }
+
+    fn echo_collector(label: &str, cfg: BatchCfg) -> (Arc<BatchCollector>, Arc<Mutex<Vec<usize>>>) {
+        let sizes = Arc::new(Mutex::new(Vec::new()));
+        let c = BatchCollector::new(label, Box::new(Echo { sizes: sizes.clone() }), cfg);
+        (c, sizes)
+    }
+
+    #[test]
+    fn full_flush_dispatches_inline_at_target() {
+        let cfg = BatchCfg { max_batch: 3, timeout: Duration::from_secs(10) };
+        let (c, sizes) = echo_collector("t_full", cfg);
+        for _ in 0..3 {
+            c.register_member();
+        }
+        let s1 = c.submit(Bytes::from(vec![1u8]), None);
+        let s2 = c.submit(Bytes::from(vec![2u8]), None);
+        assert!(s1.take().is_none(), "no dispatch below the target");
+        let s3 = c.submit(Bytes::from(vec![3u8]), None);
+        // The third submit met the target and dispatched inline.
+        assert_eq!(s1.take().unwrap().unwrap(), vec![1]);
+        assert_eq!(s2.take().unwrap().unwrap(), vec![2]);
+        assert_eq!(s3.take().unwrap().unwrap(), vec![3]);
+        assert_eq!(*sizes.lock().unwrap(), vec![3]);
+        assert_eq!(c.flushes_full.count(), 1);
+        assert_eq!(c.flushes_timer.count(), 0);
+    }
+
+    #[test]
+    fn adaptive_target_dispatches_single_member_immediately() {
+        let cfg = BatchCfg { max_batch: 64, timeout: Duration::from_secs(10) };
+        let (c, sizes) = echo_collector("t_single", cfg);
+        c.register_member();
+        let s = c.submit(Bytes::from(vec![7u8]), None);
+        // One member -> target 1 -> inline dispatch; the huge budget
+        // never comes into play.
+        assert_eq!(s.take().unwrap().unwrap(), vec![7]);
+        assert_eq!(*sizes.lock().unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn timer_flush_covers_partial_batches() {
+        let cfg = BatchCfg { max_batch: 4, timeout: Duration::from_millis(10) };
+        let (c, _sizes) = echo_collector("t_timer", cfg);
+        for _ in 0..4 {
+            c.register_member();
+        }
+        let s = c.submit(Bytes::from(vec![9u8]), None);
+        // Blocking wait drives poll_due on the budget itself, so this
+        // terminates even without the timer daemon.
+        let out = s.wait(&c).unwrap();
+        assert_eq!(out, vec![9]);
+        assert_eq!(c.flushes_timer.count(), 1);
+        assert_eq!(c.flushes_full.count(), 0);
+    }
+
+    #[test]
+    fn timer_daemon_flushes_wakerless_overdue_batch() {
+        let cfg = BatchCfg { max_batch: 8, timeout: Duration::from_millis(5) };
+        let (c, _sizes) = echo_collector("t_daemon", cfg);
+        c.register_member();
+        c.register_member();
+        let s = c.submit(Bytes::from(vec![4u8]), None);
+        // Nobody waits, nobody polls: only the ep-batch-timer backstop
+        // (overdue at 2x budget) can flush this.
+        let t0 = Instant::now();
+        let out = loop {
+            if let Some(r) = s.take() {
+                break r;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "timer backstop never flushed");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(out.unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn member_departure_completes_waiting_batch() {
+        let cfg = BatchCfg { max_batch: 8, timeout: Duration::from_secs(10) };
+        let (c, _sizes) = echo_collector("t_leave", cfg);
+        c.register_member();
+        c.register_member();
+        let s = c.submit(Bytes::from(vec![5u8]), None);
+        assert!(s.take().is_none(), "target is 2; one frame waits");
+        c.deregister_member(); // target shrinks to 1 -> dispatch
+        assert_eq!(s.take().unwrap().unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn waker_fires_on_completion() {
+        let cfg = BatchCfg { max_batch: 2, timeout: Duration::from_secs(10) };
+        let (c, _sizes) = echo_collector("t_waker", cfg);
+        c.register_member();
+        c.register_member();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = fired.clone();
+        let w: Waker = Arc::new(move || {
+            f2.fetch_add(1, Ordering::SeqCst);
+        });
+        let s1 = c.submit(Bytes::from(vec![1u8]), Some(w));
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        let _s2 = c.submit(Bytes::from(vec![2u8]), None);
+        assert!(s1.take().is_some());
+        assert!(fired.load(Ordering::SeqCst) >= 1, "completion must fire the parked waker");
+    }
+
+    #[test]
+    fn backend_error_reaches_every_slot() {
+        struct Broken;
+        impl InferenceBackend for Broken {
+            fn label(&self) -> &str {
+                "broken"
+            }
+            fn negotiate(&mut self, c: &Caps) -> Result<Caps> {
+                Ok(c.clone())
+            }
+            fn infer_batch(&mut self, _inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+                Err(Error::Runtime("boom".into()))
+            }
+        }
+        let cfg = BatchCfg { max_batch: 2, timeout: Duration::from_secs(10) };
+        let c = BatchCollector::new("t_err", Box::new(Broken), cfg);
+        c.register_member();
+        c.register_member();
+        let s1 = c.submit(Bytes::from(vec![1u8]), None);
+        let s2 = c.submit(Bytes::from(vec![2u8]), None);
+        assert!(s1.take().unwrap().is_err());
+        assert!(s2.take().unwrap().is_err());
+        // The collector survives: a later batch still dispatches.
+        let s3 = c.submit(Bytes::from(vec![3u8]), None);
+        let s4 = c.submit(Bytes::from(vec![4u8]), None);
+        assert!(s3.take().unwrap().is_err());
+        assert!(s4.take().unwrap().is_err());
+    }
+
+    #[test]
+    fn zero_cfg_values_are_clamped() {
+        let c = BatchCollector::new(
+            "t_clamp",
+            Box::new(Echo { sizes: Arc::new(Mutex::new(Vec::new())) }),
+            BatchCfg { max_batch: 0, timeout: Duration::ZERO },
+        );
+        assert_eq!(c.cfg().max_batch, 1);
+        assert!(c.cfg().timeout >= Duration::from_millis(1));
+    }
+}

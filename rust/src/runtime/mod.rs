@@ -10,14 +10,19 @@
 //! Weights are uploaded to the device ONCE at load (`PjRtBuffer`s); each
 //! inference only uploads the input tensor and executes (`execute_b`).
 
+pub mod backend;
+pub mod batch;
 pub mod manifest;
 
+pub use backend::{CustomBackend, CustomFn, InferenceBackend, PassthroughBackend, PjrtBackend};
+pub use batch::{BatchCfg, BatchCollector, Slot};
 pub use manifest::{ModelManifest, ParamSpec, TensorSpec};
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::buffer::Bytes;
 use crate::tensor::{DType, TensorInfo, TensorsInfo};
 use crate::util::{Error, Result};
 use crate::{log_debug, log_info};
@@ -143,6 +148,23 @@ impl Model {
         Ok(payload)
     }
 
+    /// Batched variant of [`Self::infer_bytes`]: one output payload per
+    /// input payload, in input order.
+    ///
+    /// The AOT artifacts are compiled at batch=1, so today this loops
+    /// `infer_bytes` per frame — the cross-pipeline batching win is the
+    /// amortized dispatch/scheduling cost (one pooled task runs M frames
+    /// back-to-back instead of M tasks interleaving), and this method is
+    /// the seam where a true multi-batch executable plugs in once
+    /// artifacts carry a batch dimension > 1.
+    pub fn infer_bytes_batch(&self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            out.push(self.infer_bytes(input)?);
+        }
+        Ok(out)
+    }
+
     /// `other/tensors` caps info of the model input (f32, innermost-first).
     pub fn input_info(&self) -> Result<TensorsInfo> {
         Ok(TensorsInfo::one(spec_to_info(&self.manifest.input)?))
@@ -172,7 +194,12 @@ fn spec_to_info(spec: &TensorSpec) -> Result<TensorInfo> {
     TensorInfo::new(DType::F32, &dims)
 }
 
-/// Shared model store: one PJRT client, models compiled once per process.
+/// Per-directory model cache: one PJRT client, models compiled once.
+///
+/// Since the PR 7 redesign this is a thin per-dir view owned by the
+/// process-wide [`ModelRegistry`] — element code should go through
+/// [`models()`] (`runtime::models().get(dir, name)`), which dedupes
+/// `Arc<Model>` loads across every pipeline in the process.
 pub struct ModelStore {
     client: xla::PjRtClient,
     dir: std::path::PathBuf,
@@ -204,17 +231,92 @@ impl ModelStore {
     }
 }
 
-/// Process-global stores keyed by artifacts dir.
-pub fn store_for(dir: &str) -> Result<Arc<ModelStore>> {
-    static STORES: OnceLock<Mutex<HashMap<String, Arc<ModelStore>>>> = OnceLock::new();
-    let stores = STORES.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut map = stores.lock().unwrap();
-    if let Some(s) = map.get(dir) {
-        return Ok(s.clone());
+/// Process-wide shared-model registry: the ONE constructor path for
+/// models in element code. Keyed by artifacts dir (one [`ModelStore`] /
+/// PJRT client per dir) and by `(dir, name)` for the per-model
+/// [`BatchCollector`]s, so M pipelines naming the same `model=` share
+/// one `Arc<Model>` and — when batching is enabled — one collector.
+pub struct ModelRegistry {
+    stores: Mutex<HashMap<String, Arc<ModelStore>>>,
+    collectors: Mutex<HashMap<(String, String), Arc<BatchCollector>>>,
+}
+
+impl ModelRegistry {
+    /// The per-dir store view (compiles lazily; cached per process).
+    pub fn store(&self, dir: &str) -> Result<Arc<ModelStore>> {
+        if let Some(s) = self.stores.lock().unwrap().get(dir) {
+            return Ok(s.clone());
+        }
+        // Client construction outside the lock; racing creates are
+        // harmless (first insert wins via the re-check below).
+        let store = Arc::new(ModelStore::new(Path::new(dir))?);
+        let mut map = self.stores.lock().unwrap();
+        Ok(map.entry(dir.to_string()).or_insert(store).clone())
     }
-    let store = Arc::new(ModelStore::new(Path::new(dir))?);
-    map.insert(dir.to_string(), store.clone());
-    Ok(store)
+
+    /// Load-or-share a model: every pipeline asking for the same
+    /// `(dir, name)` gets a clone of the same `Arc<Model>`.
+    pub fn get(&self, dir: &str, name: &str) -> Result<Arc<Model>> {
+        self.store(dir)?.get(name)
+    }
+
+    /// The shared per-model batch collector, PJRT-backed. The first
+    /// caller's `cfg` wins; later callers with a different cfg join the
+    /// existing collector (one model, one batching policy) with a
+    /// warning.
+    pub fn collector(&self, dir: &str, name: &str, cfg: BatchCfg) -> Result<Arc<BatchCollector>> {
+        let model = self.get(dir, name)?;
+        self.collector_with(dir, name, cfg, move || {
+            Ok(Box::new(PjrtBackend::new(model)) as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Like [`Self::collector`] but with a caller-supplied backend
+    /// factory (tests, custom backends). The factory only runs when no
+    /// collector exists yet for `(dir, name)`.
+    pub fn collector_with(
+        &self,
+        dir: &str,
+        name: &str,
+        cfg: BatchCfg,
+        make: impl FnOnce() -> Result<Box<dyn InferenceBackend>>,
+    ) -> Result<Arc<BatchCollector>> {
+        let key = (dir.to_string(), name.to_string());
+        if let Some(c) = self.collectors.lock().unwrap().get(&key) {
+            if c.cfg() != cfg {
+                batch::warn_cfg_mismatch(name, c.cfg(), cfg);
+            }
+            return Ok(c.clone());
+        }
+        // Build the backend (may compile a model) outside the lock.
+        let fresh = BatchCollector::new(name, make()?, cfg);
+        let mut map = self.collectors.lock().unwrap();
+        let c = map.entry(key).or_insert_with(|| fresh.clone()).clone();
+        if !Arc::ptr_eq(&c, &fresh) && c.cfg() != fresh.cfg() {
+            // Raced with another pipeline that installed a different
+            // policy first; first-wins, same as the fast path above.
+            batch::warn_cfg_mismatch(name, c.cfg(), cfg);
+        }
+        Ok(c)
+    }
+}
+
+/// The process-wide [`ModelRegistry`].
+pub fn models() -> &'static ModelRegistry {
+    static REG: OnceLock<ModelRegistry> = OnceLock::new();
+    REG.get_or_init(|| ModelRegistry {
+        stores: Mutex::new(HashMap::new()),
+        collectors: Mutex::new(HashMap::new()),
+    })
+}
+
+/// Process-global per-dir store lookup.
+///
+/// Deprecated path: kept for callers that still think in per-dir stores;
+/// new element code should use [`models()`] directly
+/// (`runtime::models().get(dir, name)`).
+pub fn store_for(dir: &str) -> Result<Arc<ModelStore>> {
+    models().store(dir)
 }
 
 #[cfg(test)]
@@ -290,6 +392,46 @@ mod tests {
         let Some(dir) = artifacts_dir() else { return };
         let store = ModelStore::new(&dir).unwrap();
         assert!(store.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn store_for_is_a_registry_view() {
+        let a = store_for("/tmp/edgepipe-test-store-view").unwrap();
+        let b = models().store("/tmp/edgepipe-test-store-view").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "store_for and the registry must share per-dir stores");
+    }
+
+    #[test]
+    fn registry_dedupes_collectors_first_cfg_wins() {
+        let cfg_a = BatchCfg { max_batch: 4, timeout: std::time::Duration::from_millis(7) };
+        let cfg_b = BatchCfg { max_batch: 16, timeout: std::time::Duration::from_millis(2) };
+        let a = models()
+            .collector_with("/tmp/edgepipe-test-collectors", "m", cfg_a, || {
+                Ok(Box::new(PassthroughBackend))
+            })
+            .unwrap();
+        let b = models()
+            .collector_with("/tmp/edgepipe-test-collectors", "m", cfg_b, || {
+                panic!("factory must not run for an existing collector")
+            })
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(b.cfg(), cfg_a, "first pipeline's batching policy wins");
+    }
+
+    #[test]
+    fn registry_shares_one_model_across_pipelines() {
+        let Some(dir) = artifacts_dir() else { return };
+        let dir = dir.to_str().unwrap().to_string();
+        let m = models().get(&dir, "detect").unwrap();
+        let base = Arc::strong_count(&m);
+        let a = models().get(&dir, "detect").unwrap();
+        let b = models().get(&dir, "detect").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(
+            Arc::strong_count(&m) >= base + 2 && Arc::strong_count(&m) >= 3,
+            "same (dir, name) must share one Arc<Model>"
+        );
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! Cross-pipeline adaptive inference batching, end to end: M pipelines
+//! share one `BatchCollector`; frames coalesce into multi-frame
+//! `infer_batch` calls and demux back to the right pipeline in order,
+//! with no added latency when there is nothing to coalesce (M=1) and no
+//! corruption under leaky queues.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use edgepipe::buffer::{Buffer, Bytes};
+use edgepipe::caps::Caps;
+use edgepipe::element::{Ctx, Element, Item, Leaky};
+use edgepipe::elements::{AppSink, AppSrc, AppSrcHandle, Queue, TensorFilter};
+use edgepipe::pipeline::{ExecMode, Pipeline, WaitOutcome};
+use edgepipe::runtime::{BatchCfg, BatchCollector, InferenceBackend};
+use edgepipe::util::Result;
+
+/// Echo backend that records every batch size it sees.
+struct RecordingEcho {
+    sizes: Arc<Mutex<Vec<usize>>>,
+    /// Per-batch artificial inference cost.
+    delay: Duration,
+}
+
+impl InferenceBackend for RecordingEcho {
+    fn label(&self) -> &str {
+        "recording-echo"
+    }
+    fn negotiate(&mut self, c: &Caps) -> Result<Caps> {
+        Ok(c.clone())
+    }
+    fn infer_batch(&mut self, inputs: &[Bytes]) -> Result<Vec<Vec<u8>>> {
+        self.sizes.lock().unwrap().push(inputs.len());
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(inputs.iter().map(|b| b.to_vec()).collect())
+    }
+}
+
+fn echo_collector(
+    label: &str,
+    cfg: BatchCfg,
+    delay: Duration,
+) -> (Arc<BatchCollector>, Arc<Mutex<Vec<usize>>>) {
+    let sizes = Arc::new(Mutex::new(Vec::new()));
+    let backend = RecordingEcho { sizes: sizes.clone(), delay };
+    (BatchCollector::new(label, Box::new(backend), cfg), sizes)
+}
+
+/// One AppSrc -> batched tensor_filter -> AppSink pipeline over a shared
+/// collector. Returns the running pipeline, its feed handle, and the
+/// sink receiver.
+fn member_pipeline(
+    collector: &Arc<BatchCollector>,
+) -> (edgepipe::pipeline::Running, AppSrcHandle, std::sync::mpsc::Receiver<Buffer>) {
+    let mut p = Pipeline::new();
+    let (src, h) = AppSrc::new(8, Some(Caps::any()));
+    let (sink, rx) = AppSink::new(64);
+    let s = p.add("src", Box::new(src)).unwrap();
+    let f = p.add("f", Box::new(TensorFilter::batched(collector.clone()))).unwrap();
+    let k = p.add("k", Box::new(sink)).unwrap();
+    p.link(s, f).unwrap();
+    p.link(f, k).unwrap();
+    (p.start_mode(ExecMode::Pool).unwrap(), h, rx)
+}
+
+#[test]
+fn m8_pipelines_form_multi_frame_batches_with_exact_demux() {
+    const M: usize = 8;
+    const ROUNDS: u8 = 6;
+    let (collector, sizes) = echo_collector(
+        "t_m8",
+        BatchCfg { max_batch: M, timeout: Duration::from_millis(2000) },
+        Duration::ZERO,
+    );
+    let mut running = Vec::new();
+    let mut feeds = Vec::new();
+    let mut sinks = Vec::new();
+    for _ in 0..M {
+        let (r, h, rx) = member_pipeline(&collector);
+        running.push(r);
+        feeds.push(h);
+        sinks.push(rx);
+    }
+    // Round-synchronized feeding: every pipeline submits one tagged
+    // frame, then we drain one result from every sink before the next
+    // round — after round 0 all members are registered, so each round is
+    // one coalesced dispatch, not M single-frame calls.
+    for seq in 0..ROUNDS {
+        for (i, h) in feeds.iter().enumerate() {
+            h.push(Buffer::new(vec![i as u8, seq])).unwrap();
+        }
+        for (i, rx) in sinks.iter().enumerate() {
+            let got = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(
+                &got.data[..],
+                &[i as u8, seq],
+                "demux routed pipeline {i}'s frame elsewhere in round {seq}"
+            );
+        }
+    }
+    drop(feeds);
+    for r in running {
+        assert_eq!(r.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    }
+    let sizes = sizes.lock().unwrap();
+    let max = sizes.iter().copied().max().unwrap_or(0);
+    assert!(
+        max >= 2,
+        "M=8 round-synchronized submits never coalesced: batch sizes {sizes:?}"
+    );
+    let frames: usize = sizes.iter().sum();
+    assert_eq!(frames, M * ROUNDS as usize, "conservation through the collector");
+}
+
+#[test]
+fn per_pipeline_frame_order_is_preserved() {
+    const M: usize = 4;
+    const N: u8 = 50;
+    let (collector, _sizes) = echo_collector(
+        "t_order",
+        BatchCfg { max_batch: M, timeout: Duration::from_millis(20) },
+        Duration::ZERO,
+    );
+    let mut running = Vec::new();
+    let mut feeds = Vec::new();
+    let mut sinks = Vec::new();
+    for _ in 0..M {
+        let (r, h, rx) = member_pipeline(&collector);
+        running.push(r);
+        feeds.push(h);
+        sinks.push(rx);
+    }
+    // Unsynchronized firehose: batches form however scheduling lands.
+    for seq in 0..N {
+        for (i, h) in feeds.iter().enumerate() {
+            h.push(Buffer::new(vec![i as u8, seq])).unwrap();
+        }
+    }
+    for (i, rx) in sinks.iter().enumerate() {
+        for seq in 0..N {
+            let got = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(got.data[0], i as u8, "cross-pipeline demux leak");
+            assert_eq!(got.data[1], seq, "pipeline {i} frames reordered");
+        }
+    }
+    drop(feeds);
+    for r in running {
+        assert_eq!(r.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    }
+}
+
+#[test]
+fn m1_adaptive_target_adds_no_batch_latency() {
+    // One member, max_batch=64, 10 s budget: the adaptive target
+    // (min(B, members)) must dispatch every frame immediately — if the
+    // filter waited for the timer this test would take minutes.
+    let (collector, sizes) = echo_collector(
+        "t_m1",
+        BatchCfg { max_batch: 64, timeout: Duration::from_secs(10) },
+        Duration::ZERO,
+    );
+    let (r, h, rx) = member_pipeline(&collector);
+    let t0 = Instant::now();
+    for seq in 0..20u8 {
+        h.push(Buffer::new(vec![seq])).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.data[0], seq);
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "M=1 frames waited on the batch budget ({:?})",
+        t0.elapsed()
+    );
+    drop(h);
+    assert_eq!(r.wait_eos(Duration::from_secs(10)), WaitOutcome::Eos);
+    assert!(sizes.lock().unwrap().iter().all(|&s| s == 1));
+}
+
+#[test]
+fn full_flush_and_timer_flush_both_counted() {
+    const LABEL: &str = "t_flush_paths";
+    let (collector, _sizes) = echo_collector(
+        LABEL,
+        BatchCfg { max_batch: 2, timeout: Duration::from_millis(30) },
+        Duration::ZERO,
+    );
+    let g = edgepipe::metrics::global();
+    let full0 = g.counter(&format!("batch.{LABEL}.flushes_full")).count();
+    let timer0 = g.counter(&format!("batch.{LABEL}.flushes_timer")).count();
+    let (r1, h1, rx1) = member_pipeline(&collector);
+    let (r2, h2, rx2) = member_pipeline(&collector);
+    // Warm-up round so both members are registered (target = 2).
+    h1.push(Buffer::new(vec![1])).unwrap();
+    h2.push(Buffer::new(vec![2])).unwrap();
+    rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+    rx2.recv_timeout(Duration::from_secs(30)).unwrap();
+    // A matched pair: the second submit completes the batch (full flush).
+    h1.push(Buffer::new(vec![3])).unwrap();
+    h2.push(Buffer::new(vec![4])).unwrap();
+    rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+    rx2.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(
+        g.counter(&format!("batch.{LABEL}.flushes_full")).count() > full0,
+        "no full flush counted"
+    );
+    // A lone frame: only the 30 ms budget can release it (timer flush).
+    h1.push(Buffer::new(vec![5])).unwrap();
+    let got = rx1.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(&got.data[..], &[5]);
+    assert!(
+        g.counter(&format!("batch.{LABEL}.flushes_timer")).count() > timer0,
+        "lone frame was not released by the latency budget"
+    );
+    drop((h1, h2));
+    assert_eq!(r1.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    assert_eq!(r2.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+}
+
+/// Sink asserting frames arrive intact and strictly in order (drops
+/// allowed, duplicates and corruption not).
+struct OrderedCountSink {
+    delivered: Arc<AtomicU64>,
+    eos: Arc<AtomicU64>,
+    last: Option<u64>,
+}
+
+impl Element for OrderedCountSink {
+    fn n_src_pads(&self) -> usize {
+        0
+    }
+    fn handle(&mut self, _: usize, item: Item, _: &mut Ctx) -> Result<()> {
+        match item {
+            Item::Buffer(b) => {
+                let mut v = [0u8; 8];
+                v.copy_from_slice(&b.data[..8]);
+                let seq = u64::from_le_bytes(v);
+                if let Some(prev) = self.last {
+                    assert!(seq > prev, "duplicate or reordered frame after leak: {prev} -> {seq}");
+                }
+                self.last = Some(seq);
+                self.delivered.fetch_add(1, Ordering::Relaxed);
+            }
+            Item::Eos => {
+                self.eos.fetch_add(1, Ordering::Relaxed);
+            }
+            Item::Caps(_) => {}
+        }
+        Ok(())
+    }
+}
+
+/// Unthrottled pooled source that emits sticky caps before flooding.
+struct CapsyFloodSrc {
+    n: u64,
+    sent: u64,
+    caps_sent: bool,
+}
+
+impl Element for CapsyFloodSrc {
+    fn n_sink_pads(&self) -> usize {
+        0
+    }
+    fn handle(&mut self, _: usize, _: Item, _: &mut Ctx) -> Result<()> {
+        unreachable!()
+    }
+    fn produce(&mut self, ctx: &mut Ctx) -> Result<bool> {
+        if !self.caps_sent {
+            self.caps_sent = true;
+            ctx.push_caps(Caps::any())?;
+            return Ok(true);
+        }
+        if self.sent >= self.n {
+            return Ok(false);
+        }
+        ctx.push_buffer(Buffer::new(self.sent.to_le_bytes().to_vec()))?;
+        self.sent += 1;
+        Ok(true)
+    }
+}
+
+#[test]
+fn leaky_inbox_conservation_with_caps() {
+    let (collector, _sizes) = echo_collector(
+        "t_leaky_caps",
+        BatchCfg { max_batch: 8, timeout: Duration::from_millis(5) },
+        Duration::from_millis(2),
+    );
+    let delivered = Arc::new(AtomicU64::new(0));
+    let eos = Arc::new(AtomicU64::new(0));
+    let mut p = Pipeline::new();
+    let s = p.add("src", Box::new(CapsyFloodSrc { n: 500, sent: 0, caps_sent: false })).unwrap();
+    let q = p.add("q", Box::new(Queue::new(2, Leaky::Downstream))).unwrap();
+    let f = p.add("f", Box::new(TensorFilter::batched(collector))).unwrap();
+    let k = p
+        .add(
+            "k",
+            Box::new(OrderedCountSink {
+                delivered: delivered.clone(),
+                eos: eos.clone(),
+                last: None,
+            }),
+        )
+        .unwrap();
+    p.link(s, q).unwrap();
+    p.link(q, f).unwrap();
+    p.link(f, k).unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(60)), WaitOutcome::Eos);
+    let d = delivered.load(Ordering::Relaxed);
+    assert!(d >= 1, "nothing delivered");
+    assert!(d <= 500, "duplication under leak");
+    assert!(d < 500, "2-deep leaky queue against a 2 ms/dispatch backend never leaked");
+    assert_eq!(eos.load(Ordering::Relaxed), 1, "EOS lost under leak");
+}
+
+#[test]
+fn batched_description_runs_end_to_end() {
+    // The parser path: batch=/batch-timeout-ms= on a passthrough filter.
+    use edgepipe::element::registry::{PipelineEnv, Registry};
+    let p = edgepipe::pipeline::parser::parse(
+        "videotestsrc width=4 height=4 is-live=false num-buffers=20 ! \
+         tensor_converter ! tensor_filter framework=passthrough batch=4 batch-timeout-ms=5 ! \
+         fakesink",
+        &Registry::with_builtins(),
+        &PipelineEnv::default(),
+    )
+    .unwrap();
+    let running = p.start_mode(ExecMode::Pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+}

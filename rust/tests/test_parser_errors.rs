@@ -101,6 +101,45 @@ fn pad_growth_beyond_fixed_elements() {
 }
 
 #[test]
+fn tensor_filter_zero_batch_rejected() {
+    let e = err("videotestsrc ! tensor_filter framework=passthrough batch=0 ! fakesink");
+    assert!(e.contains("batch=0") && e.contains(">= 1"), "{e}");
+}
+
+#[test]
+fn tensor_filter_zero_batch_timeout_rejected() {
+    let e = err(
+        "videotestsrc ! tensor_filter framework=passthrough batch=8 batch-timeout-ms=0 ! fakesink",
+    );
+    assert!(e.contains("batch-timeout-ms=0") && e.contains(">= 1"), "{e}");
+}
+
+#[test]
+fn tensor_filter_non_numeric_batch_props_rejected() {
+    let e = err("videotestsrc ! tensor_filter framework=passthrough batch=many ! fakesink");
+    assert!(e.contains("batch=many") && e.contains("integer"), "{e}");
+    let e = err(
+        "videotestsrc ! tensor_filter framework=passthrough batch=8 batch-timeout-ms=now ! fakesink",
+    );
+    assert!(e.contains("batch-timeout-ms=now") && e.contains("integer"), "{e}");
+}
+
+#[test]
+fn tensor_filter_timeout_without_batch_rejected() {
+    let e = err("videotestsrc ! tensor_filter framework=passthrough batch-timeout-ms=5 ! fakesink");
+    assert!(e.contains("without batch="), "{e}");
+}
+
+#[test]
+fn tensor_filter_batched_description_parses() {
+    let p = parse(
+        "videotestsrc num-buffers=2 ! tensor_filter framework=passthrough batch=4 batch-timeout-ms=2 ! fakesink",
+    )
+    .unwrap();
+    assert_eq!(p.n_nodes(), 3);
+}
+
+#[test]
 fn valid_description_still_parses() {
     // Guard against over-tightening: the paper-style happy path works.
     let p = parse(
