@@ -6,6 +6,13 @@
 //! fps, data rate, CPU% and RSS growth, plus the MQTT/ZMQ ratio the paper
 //! plots. Expected shape: parity at L, MQTT degradation at M/H (broker
 //! copy + slow-consumer drops).
+//!
+//! A many-subscriber table drives the broker's sharded trie `Router`
+//! in-process at `EDGEPIPE_BENCH_SUBS` subscription counts (default
+//! 1k/10k/100k), reporting per-publish cost for exact-match and
+//! wildcard-heavy workloads against a flat-list replica of the pre-trie
+//! scan at every count. The hard gates on these numbers live in
+//! `bench_wirepath` (schema 6).
 
 use std::time::Duration;
 
@@ -110,5 +117,28 @@ fn main() {
         "Pub/Sub — MQTT normalized by ZeroMQ (Fig 7 left)",
         &["case", "throughput ratio", "cpu ratio", "mem-growth ratio"],
         &ratio_rows,
+    );
+
+    // Many-subscriber routing at every count (in-process Router; the
+    // flat-cost and 2x-speedup gates live in bench_wirepath).
+    let counts = bench::manysubs::sub_counts();
+    let shards = edgepipe::mqtt::Router::new(0).shard_count();
+    let mut mrows = Vec::new();
+    for &n in &counts {
+        let exact_ns = bench::manysubs::run_exact_scaling(n, 10_000);
+        let trie_ns = bench::manysubs::run_mixed_trie(n, 5_000);
+        let flat_ns = bench::manysubs::run_mixed_flat(n, 200);
+        mrows.push(vec![
+            n.to_string(),
+            format!("{exact_ns:.0}"),
+            format!("{trie_ns:.0}"),
+            format!("{flat_ns:.0}"),
+            format!("{:.1}x", flat_ns / trie_ns.max(1e-9)),
+        ]);
+    }
+    bench::table(
+        &format!("Many-subscriber routing — {shards}-shard trie router vs flat-list scan (ns/publish)"),
+        &["subscriptions", "exact (trie)", "wildcard mix (trie)", "wildcard mix (flat)", "trie speedup"],
+        &mrows,
     );
 }

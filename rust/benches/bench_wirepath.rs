@@ -49,6 +49,17 @@
 //! within 5% of unbatched nominal (>= 0.8x CI floor — the adaptive
 //! target must add no latency when there is nothing to coalesce).
 //!
+//! A **many-subscriber** section (schema 6) gates the sharded
+//! subscription-trie router: the `Router` is driven in-process (100k
+//! real sockets are infeasible) at `EDGEPIPE_BENCH_SUBS` subscription
+//! counts (default 1k/10k/100k; CI runs 1k/8k). Gates: per-publish cost
+//! on exact-match topics grows <= 1.3x from the smallest to the largest
+//! count (flat cost in TOTAL subscriptions — the pre-trie broker was
+//! linear), and a wildcard-heavy mix must route >= 2x faster than an
+//! in-bench flat-list replica of the pre-trie `matches()` scan. The
+//! broker fan-out section runs against a multi-shard broker so the
+//! deflates-per-published-frame == 1 invariant is proven across shards.
+//!
 //! Emits `BENCH_wirepath.json` (path override: `EDGEPIPE_BENCH_OUT`) so
 //! the perf trajectory is tracked across PRs. Knobs: `EDGEPIPE_BENCH_SECS`
 //! (window per case) and `EDGEPIPE_BENCH_RUNS` (best-of-N).
@@ -65,7 +76,7 @@ use edgepipe::element::{Ctx, Element, Item, Leaky};
 use edgepipe::elements::{Identity, Queue, TensorFilter};
 use edgepipe::metrics;
 use edgepipe::mqtt::packet::{self, Packet};
-use edgepipe::mqtt::{Broker, ClientOptions, MqttClient};
+use edgepipe::mqtt::{Broker, BrokerConfig, ClientOptions, MqttClient, Router};
 use edgepipe::pipeline::{ExecMode, Pipeline};
 use edgepipe::runtime::{BatchCfg, BatchCollector, InferenceBackend};
 use edgepipe::serial::compress::{self, AutoCodec};
@@ -228,7 +239,12 @@ struct FanoutResult {
     deflates_per_published_frame: f64,
 }
 
-/// Real broker fan-out: 1 publisher, N subscribers, shared encoded frame.
+/// Routing shards for the broker fan-out section: multi-shard even on
+/// small CI runners, so the compress-once audit crosses shard locks.
+const FANOUT_SHARDS: usize = 4;
+
+/// Real broker fan-out: 1 publisher, N subscribers, shared encoded frame,
+/// multi-shard routing core.
 fn run_broker_fanout(
     w: u32,
     h: u32,
@@ -236,7 +252,12 @@ fn run_broker_fanout(
     codec: Codec,
     window: Duration,
 ) -> FanoutResult {
-    let broker = Broker::start("127.0.0.1:0").unwrap();
+    let broker = Broker::start_with(
+        "127.0.0.1:0",
+        BrokerConfig { shards: FANOUT_SHARDS, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(broker.shard_count(), FANOUT_SHARDS);
     let addr = broker.addr().to_string();
     let received = Arc::new(AtomicU64::new(0));
     let mut subs = Vec::new();
@@ -664,6 +685,13 @@ fn run_batching(m: usize, batched: bool, window: Duration) -> (f64, f64) {
     (delivered as f64 / window.as_secs_f64(), mean_batch)
 }
 
+/// Publish counts for the many-subscriber section (fixed-iteration, not
+/// windowed: per-publish cost is the measurand). The flat-list arm is
+/// O(subscriptions) per publish, so it gets far fewer iterations.
+const EXACT_PUBLISHES: u64 = 20_000;
+const MIXED_TRIE_PUBLISHES: u64 = 10_000;
+const MIXED_FLAT_PUBLISHES: u64 = 400;
+
 fn json_case(
     label: &str,
     kind: &str,
@@ -816,7 +844,7 @@ fn main() {
     let fanout = run_broker_fanout(w, h, 4, Codec::None, window);
     let fanout_z = run_broker_fanout(w, h, 4, Codec::Zlib, window);
     bench::table(
-        "Broker fan-out (H case, real sockets)",
+        &format!("Broker fan-out (H case, real sockets, {FANOUT_SHARDS} routing shards)"),
         &["codec", "subscribers", "delivered fps", "copies / delivered", "deflates / published"],
         &[
             vec![
@@ -1124,24 +1152,94 @@ fn main() {
         "M=1 batched throughput is {m1_batch_ratio:.2}x of unbatched — batching added single-stream latency"
     );
 
+    // ---- Many-subscriber routing: sharded trie vs flat-list scan --------
+    let counts = bench::manysubs::sub_counts();
+    let many_shards = Router::new(0).shard_count();
+    let mut exact_ns: Vec<(usize, f64)> = Vec::new();
+    for &n in &counts {
+        let mut best = f64::INFINITY;
+        for _ in 0..runs.max(1) {
+            best = best.min(bench::manysubs::run_exact_scaling(n, EXACT_PUBLISHES));
+        }
+        exact_ns.push((n, best));
+    }
+    // Wildcard mix at the SECOND count (10k nominal, 8k in CI) — large
+    // enough that the flat scan hurts, small enough to measure quickly.
+    let mix_n = counts.get(1).copied().unwrap_or(*counts.last().unwrap());
+    let mut mix_trie_ns = f64::INFINITY;
+    let mut mix_flat_ns = f64::INFINITY;
+    for _ in 0..runs.max(1) {
+        mix_trie_ns = mix_trie_ns.min(bench::manysubs::run_mixed_trie(mix_n, MIXED_TRIE_PUBLISHES));
+        mix_flat_ns = mix_flat_ns.min(bench::manysubs::run_mixed_flat(mix_n, MIXED_FLAT_PUBLISHES));
+    }
+    let mix_speedup = mix_flat_ns / mix_trie_ns.max(1e-9);
+    let mut mrows: Vec<Vec<String>> = exact_ns
+        .iter()
+        .map(|(n, ns)| {
+            vec![n.to_string(), "exact (1 match)".into(), format!("{ns:.0}"), "-".into()]
+        })
+        .collect();
+    mrows.push(vec![
+        mix_n.to_string(),
+        "wildcard mix (trie)".into(),
+        format!("{mix_trie_ns:.0}"),
+        format!("{mix_speedup:.1}x vs flat"),
+    ]);
+    mrows.push(vec![
+        mix_n.to_string(),
+        "wildcard mix (flat scan)".into(),
+        format!("{mix_flat_ns:.0}"),
+        "1.0x".into(),
+    ]);
+    bench::table(
+        &format!("Many-subscriber routing — {many_shards}-shard trie router, in-process"),
+        &["subscriptions", "workload", "ns / publish", "speedup"],
+        &mrows,
+    );
+    // Acceptance: flat cost in total subscription count. The 200ns
+    // epsilon absorbs timer noise on sub-microsecond publishes without
+    // weakening the gate at real scale.
+    let (n_lo, ns_lo) = exact_ns[0];
+    let (n_hi, ns_hi) = *exact_ns.last().unwrap();
+    assert!(
+        ns_hi <= ns_lo * 1.3 + 200.0,
+        "exact-match publish cost grew {:.2}x from {n_lo} to {n_hi} subscriptions \
+         ({ns_lo:.0}ns -> {ns_hi:.0}ns; flat-cost bar: 1.3x)",
+        ns_hi / ns_lo.max(1e-9),
+    );
+    assert!(
+        mix_speedup >= 2.0,
+        "trie routed the wildcard mix only {mix_speedup:.2}x faster than the flat-list \
+         scan at {mix_n} subscriptions (bar: 2x)"
+    );
+
     let out_path = std::env::var("EDGEPIPE_BENCH_OUT")
         .unwrap_or_else(|_| "BENCH_wirepath.json".to_string());
     let json = format!(
         concat!(
             "{{\n",
             "  \"bench\": \"wirepath\",\n",
-            "  \"schema\": 5,\n",
+            "  \"schema\": 6,\n",
             "  \"status\": \"measured\",\n",
             "  \"secs_per_case\": {},\n",
             "  \"runs\": {},\n",
             "  \"cases\": [\n{}\n  ],\n",
             "  \"zlib_cases\": [\n{}\n  ],\n",
             "  \"auto\": {{\"noise_disables_zlib\": {}, \"probe_reenables_zlib\": {}}},\n",
-            "  \"broker_fanout\": {{\"case\": \"H\", \"codec\": \"none\", \"subscribers\": {}, ",
+            "  \"broker_fanout\": {{\"case\": \"H\", \"codec\": \"none\", \"shards\": {}, ",
+            "\"subscribers\": {}, ",
             "\"delivered_fps\": {:.1}, \"payload_copies_per_delivered_frame\": {:.3}}},\n",
-            "  \"broker_fanout_zlib\": {{\"case\": \"H\", \"codec\": \"zlib\", \"subscribers\": {}, ",
+            "  \"broker_fanout_zlib\": {{\"case\": \"H\", \"codec\": \"zlib\", \"shards\": {}, ",
+            "\"subscribers\": {}, ",
             "\"delivered_fps\": {:.1}, \"payload_copies_per_delivered_frame\": {:.3}, ",
             "\"deflates_per_published_frame\": {:.3}}},\n",
+            "  \"many_subs\": {{\n",
+            "    \"shards\": {},\n",
+            "    \"exact\": [{}],\n",
+            "    \"exact_growth\": {:.3},\n",
+            "    \"wildcard_mix\": {{\"subs\": {}, \"trie_ns_per_publish\": {:.1}, ",
+            "\"flat_ns_per_publish\": {:.1}, \"speedup\": {:.2}}}\n",
+            "  }},\n",
             "  \"density\": {{\n",
             "    \"workers\": {},\n",
             "    \"elements_per_pipeline\": 6,\n",
@@ -1185,13 +1283,26 @@ fn main() {
         zlib_json.join(",\n"),
         auto_noise_off,
         auto_tensor_on,
+        FANOUT_SHARDS,
         fanout.subscribers,
         fanout.delivered_fps,
         fanout.copies_per_delivered_frame,
+        FANOUT_SHARDS,
         fanout_z.subscribers,
         fanout_z.delivered_fps,
         fanout_z.copies_per_delivered_frame,
         fanout_z.deflates_per_published_frame,
+        many_shards,
+        exact_ns
+            .iter()
+            .map(|(n, ns)| format!("{{\"subs\": {n}, \"ns_per_publish\": {ns:.1}}}"))
+            .collect::<Vec<_>>()
+            .join(", "),
+        ns_hi / ns_lo.max(1e-9),
+        mix_n,
+        mix_trie_ns,
+        mix_flat_ns,
+        mix_speedup,
         workers,
         m1_ratio,
         density_json.join(",\n"),

@@ -86,3 +86,143 @@ pub fn drain_counter(name: &str, settle: Duration) -> (u64, u64) {
         last = now;
     }
 }
+
+/// Many-subscriber routing drivers shared by `bench_wirepath` (gated)
+/// and `bench_pubsub` (reported): the sharded trie [`Router`] and a
+/// flat-list replica of the pre-trie broker, driven in-process — 100k
+/// real sockets are infeasible, and the cost under test is
+/// matching/fan-out, not TCP.
+pub mod manysubs {
+    use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+    use std::time::Instant;
+
+    use crate::buffer::Bytes;
+    use crate::mqtt::broker::OutMsg;
+    use crate::mqtt::{packet, topic, Router};
+
+    /// Subscription counts (`EDGEPIPE_BENCH_SUBS`, comma-separated;
+    /// default "1000,10000,100000", CI uses "1000,8000").
+    pub fn sub_counts() -> Vec<usize> {
+        std::env::var("EDGEPIPE_BENCH_SUBS")
+            .ok()
+            .map(|v| {
+                v.split(',')
+                    .filter_map(|s| s.trim().parse().ok())
+                    .filter(|n: &usize| *n > 0)
+                    .collect()
+            })
+            .filter(|v: &Vec<usize>| !v.is_empty())
+            .unwrap_or_else(|| vec![1_000, 10_000, 100_000])
+    }
+
+    fn drain_outbox(rx: &Receiver<OutMsg>) {
+        while rx.try_recv().is_ok() {}
+    }
+
+    /// ns/publish with `n` exact-match subscriptions spread over 32
+    /// first levels (so every shard holds state). Each publish matches
+    /// exactly one subscriber; flat cost means this number must not grow
+    /// with `n`.
+    pub fn run_exact_scaling(n: usize, publishes: u64) -> f64 {
+        let router = Router::new(0);
+        let (tx, rx) = sync_channel::<OutMsg>(256);
+        for i in 0..n {
+            router.session_open(i as u64, format!("s{i}"), tx.clone(), None);
+            router.subscribe(i as u64, &format!("e{}/s{i}", i % 32), 0);
+        }
+        let payload = Bytes::from(vec![0u8; 64]);
+        let t0 = Instant::now();
+        for _ in 0..publishes {
+            let (delivered, _) = router.publish("e0/s0", &payload, false);
+            debug_assert_eq!(delivered, 1);
+            drain_outbox(&rx);
+        }
+        t0.elapsed().as_nanos() as f64 / publishes as f64
+    }
+
+    /// The wildcard-heavy subscription mix: per 100 subscriptions, 60
+    /// exact, 20 `+`-filters, 20 group-`#` filters, all in per-group
+    /// namespaces so the match set per publish stays small and constant;
+    /// plus a fixed handful of global wildcard subscribers.
+    fn mixed_filters(n: usize) -> Vec<String> {
+        let mut filters: Vec<String> = (0..n)
+            .map(|i| {
+                let group = i / 100;
+                match i % 100 {
+                    0..=59 => format!("g{group}/dev/i{i}"),
+                    60..=79 => format!("g{group}/+/i{i}"),
+                    _ => format!("g{group}/dev/#"),
+                }
+            })
+            .collect();
+        for f in ["#", "+/dev/i0", "g0/#", "+/+/#"] {
+            filters.push(f.to_string());
+        }
+        filters
+    }
+
+    fn mixed_topic(k: u64, groups: usize) -> String {
+        let g = k as usize % groups;
+        // Matches that group's one exact filter + its 20 `#` filters +
+        // the constant global wildcards — never the unrelated 99% of the
+        // table.
+        format!("g{g}/dev/i{}", g * 100)
+    }
+
+    /// ns/publish for the wildcard mix through the sharded trie router.
+    pub fn run_mixed_trie(n: usize, publishes: u64) -> f64 {
+        let router = Router::new(0);
+        let (tx, rx) = sync_channel::<OutMsg>(1024);
+        for (i, f) in mixed_filters(n).iter().enumerate() {
+            router.session_open(i as u64, format!("s{i}"), tx.clone(), None);
+            router.subscribe(i as u64, f, 0);
+        }
+        let groups = (n / 100).max(1);
+        let payload = Bytes::from(vec![0u8; 64]);
+        let t0 = Instant::now();
+        for k in 0..publishes {
+            router.publish(&mixed_topic(k, groups), &payload, false);
+            drain_outbox(&rx);
+        }
+        t0.elapsed().as_nanos() as f64 / publishes as f64
+    }
+
+    struct FlatSub {
+        filter: String,
+        conn: u64,
+        outbox: SyncSender<OutMsg>,
+    }
+
+    /// ns/publish for the same mix through a replica of the pre-trie
+    /// broker: encode the head once (that invariant predates the trie),
+    /// then scan EVERY subscription's filter with the linear
+    /// [`topic::matches`].
+    pub fn run_mixed_flat(n: usize, publishes: u64) -> f64 {
+        let (tx, rx) = sync_channel::<OutMsg>(1024);
+        let subs: Vec<FlatSub> = mixed_filters(n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, filter)| FlatSub { filter, conn: i as u64, outbox: tx.clone() })
+            .collect();
+        let groups = (n / 100).max(1);
+        let payload = Bytes::from(vec![0u8; 64]);
+        let t0 = Instant::now();
+        for k in 0..publishes {
+            let topic_name = mixed_topic(k, groups);
+            let head = Bytes::from(
+                packet::publish_head(&topic_name, 0, false, false, None, payload.len()).unwrap(),
+            );
+            let mut matched: Vec<&FlatSub> =
+                subs.iter().filter(|s| topic::matches(&s.filter, &topic_name)).collect();
+            matched.sort_unstable_by_key(|s| s.conn);
+            matched.dedup_by_key(|s| s.conn);
+            for s in matched {
+                let _ = s
+                    .outbox
+                    .try_send(OutMsg::Pub { head: head.clone(), payload: payload.clone() });
+            }
+            drain_outbox(&rx);
+        }
+        t0.elapsed().as_nanos() as f64 / publishes as f64
+    }
+}

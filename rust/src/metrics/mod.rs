@@ -13,7 +13,12 @@
 //! client ([`crate::elements::QueryClient`]), and
 //! `batch.<model>.{flushes_full,flushes_timer}` counters plus the
 //! `batch.<model>.{size,occupancy}` histograms from the cross-pipeline
-//! inference batcher ([`crate::runtime::BatchCollector`]).
+//! inference batcher ([`crate::runtime::BatchCollector`]), and
+//! `broker.shard<i>.{publishes,matches,lock_waits}` from the sharded
+//! MQTT broker ([`crate::mqtt::broker::Router`]): per-shard PUBLISH
+//! count, matched subscriber deliveries (post-dedup), and shard-mutex
+//! acquisitions that had to wait — the contention topic-hash sharding
+//! exists to eliminate.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -30,6 +35,12 @@ pub struct Counter {
 impl Counter {
     pub fn inc(&self) {
         self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Bump the event count by `n` (batched increment — one atomic op
+    /// for a whole fan-out instead of one per subscriber).
+    pub fn add(&self, n: u64) {
+        self.n.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn add_bytes(&self, b: u64) {

@@ -5,53 +5,71 @@
 //! (QoS 1 acknowledged to the publisher; delivery to subscribers is QoS 0),
 //! retained messages (service advertisements), last-will (server-death
 //! detection → R4 failover), topic wildcards, keep-alive enforcement.
-//! `$`-prefixed topics follow §4.7.2: both the live fan-out ([`route`])
-//! and retained delivery go through [`topic::matches`], which hides them
-//! from filters that start with a wildcard — `#`/`+` subscribers never
-//! see broker-internal namespaces like `$SYS`.
+//! `$`-prefixed topics follow §4.7.2: both the live fan-out and retained
+//! delivery go through the [`trie`] walks, which hide them from filters
+//! that start with a wildcard — `#`/`+` subscribers never see
+//! broker-internal namespaces like `$SYS`.
+//!
+//! ## Sharded routing core
+//!
+//! All subscription and retained state lives in a [`Router`]: N shards
+//! (`EDGEPIPE_BROKER_SHARDS`, default `min(available_parallelism, 8)`),
+//! each holding a wildcard-aware subscription [`trie::SubTrie`] and a
+//! retained-topic [`trie::RetainedTrie`] behind its own mutex. A topic's
+//! shard is the hash of its FIRST level, so a PUBLISH locks exactly one
+//! shard and matches in O(topic depth) — publishes to unrelated topic
+//! namespaces never contend on a common lock, and per-publish cost stays
+//! flat in the total number of subscriptions (the pre-trie broker walked
+//! every session's filter list under one global mutex). Filters whose
+//! first level is a literal live only in that level's shard; filters
+//! starting with `+`/`#` are replicated into every shard at SUBSCRIBE
+//! time (a per-subscription cost) so the publish path still consults a
+//! single shard. Retained lookups for a new subscription walk the filter
+//! down the owning shard's retained trie (all shards for a
+//! wildcard-leading filter) instead of scanning every retained topic.
+//!
+//! Session metadata (client id, outbox, last-will, filter list) sits in a
+//! separate control-plane map touched only by connect/subscribe/teardown,
+//! never by PUBLISH. Per-shard counters land in the global metrics
+//! registry as `broker.shard<i>.{publishes,matches,lock_waits}`.
 //!
 //! One thread per connection + one writer thread per connection. A
-//! published frame is encoded **once**: `route` builds the outbound
-//! PUBLISH head a single time and every subscriber's writer emits
-//! `head ++ payload` with a vectored write, where the payload is the
-//! shared slice view produced by the connection's packet read — zero
+//! published frame is encoded **once**: [`Router::publish`] builds the
+//! outbound PUBLISH head a single time and every subscriber's writer
+//! emits `head ++ payload` with a vectored write, where the payload is
+//! the shared slice view produced by the connection's packet read — zero
 //! broker-side payload copies regardless of subscriber count.
 //!
 //! Compression is end-to-end, never hop-by-hop here: a publisher using
 //! `Codec::Zlib`/`Codec::Auto` deflates each frame exactly once, and the
 //! broker fans the *compressed* body out as the same shared bytes — it
 //! never inflates, re-deflates, or even parses the EdgeFrame payload
-//! (asserted by `bench_wirepath`'s fan-out deflate-ops audit).
+//! (asserted by `bench_wirepath`'s fan-out deflate-ops audit, which runs
+//! against a multi-shard broker).
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, TryLockError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::buffer::Bytes;
+use crate::metrics::{self, Counter};
 use crate::mqtt::packet::{self, LastWill, Packet, CONNACK_ACCEPTED};
 use crate::mqtt::topic;
+use crate::mqtt::trie::{Retained, RetainedTrie, SubTrie};
 use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_info, log_warn};
 
 /// Message queued to a connection's writer thread.
-enum OutMsg {
+pub enum OutMsg {
     Control(Packet),
     /// Fan-out publish: pre-encoded PUBLISH head + payload, both shared
     /// across every subscriber of the topic.
     Pub { head: Bytes, payload: Bytes },
     Close,
-}
-
-struct Session {
-    #[allow(dead_code)]
-    client_id: String,
-    outbox: SyncSender<OutMsg>,
-    subs: Vec<(String, u8)>,
-    will: Option<LastWill>,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -65,10 +83,292 @@ pub struct BrokerStats {
     pub bytes_out: u64,
 }
 
-struct State {
-    sessions: HashMap<u64, Session>,
-    retained: HashMap<String, Bytes>,
-    stats: BrokerStats,
+/// One subscription entry stored in a shard's trie.
+struct SubEntry {
+    conn: u64,
+    outbox: SyncSender<OutMsg>,
+}
+
+/// Shard-local routing state: the wildcard trie + retained store for the
+/// topics hashing here, plus this shard's slice of the publish stats.
+#[derive(Default)]
+struct ShardState {
+    subs: SubTrie<SubEntry>,
+    retained: RetainedTrie,
+    published: u64,
+    delivered: u64,
+    dropped_slow: u64,
+    bytes_in: u64,
+    bytes_out: u64,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+    publishes: Arc<Counter>,
+    matches: Arc<Counter>,
+    lock_waits: Arc<Counter>,
+}
+
+impl Shard {
+    fn new(idx: usize) -> Shard {
+        let g = metrics::global();
+        Shard {
+            state: Mutex::new(ShardState::default()),
+            publishes: g.counter(&format!("broker.shard{idx}.publishes")),
+            matches: g.counter(&format!("broker.shard{idx}.matches")),
+            lock_waits: g.counter(&format!("broker.shard{idx}.lock_waits")),
+        }
+    }
+
+    /// Counted shard lock: a miss on the uncontended fast path records a
+    /// `broker.shard<i>.lock_waits` tick — the contention sharding
+    /// exists to eliminate.
+    fn lock(&self) -> MutexGuard<'_, ShardState> {
+        match self.state.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.lock_waits.inc();
+                self.state.lock().unwrap_or_else(|p| p.into_inner())
+            }
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+}
+
+/// Control-plane record for one connection; never touched by PUBLISH.
+struct SessionMeta {
+    #[allow(dead_code)]
+    client_id: String,
+    outbox: SyncSender<OutMsg>,
+    subs: Vec<(String, u8)>,
+    will: Option<LastWill>,
+}
+
+/// The sharded pub/sub routing core. [`Broker`] wraps it with TCP
+/// connection handling; benches and tests drive it directly to measure
+/// matching/fan-out cost without paying for 100k real sockets.
+pub struct Router {
+    shards: Vec<Shard>,
+    sessions: Mutex<HashMap<u64, SessionMeta>>,
+    connects: AtomicU64,
+    disconnects: AtomicU64,
+}
+
+/// FNV-1a over a topic/filter's first level — the shard key.
+fn level_hash(level: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in level.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Build the shared outbound PUBLISH (head, payload) pair for a delivery.
+fn pub_msg(topic_name: &str, payload: &Bytes, retain: bool) -> Option<OutMsg> {
+    let head = packet::publish_head(topic_name, 0, retain, false, None, payload.len()).ok()?;
+    Some(OutMsg::Pub { head: Bytes::from(head), payload: payload.clone() })
+}
+
+impl Router {
+    /// A router with `shards` state shards (clamped to >= 1). Pass 0 to
+    /// resolve from `EDGEPIPE_BROKER_SHARDS`, defaulting to
+    /// `min(available_parallelism, 8)`.
+    pub fn new(shards: usize) -> Router {
+        let n = if shards == 0 { default_shards() } else { shards };
+        Router {
+            shards: (0..n.max(1)).map(Shard::new).collect(),
+            sessions: Mutex::new(HashMap::new()),
+            connects: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, topic_or_filter: &str) -> usize {
+        (level_hash(topic::first_level(topic_or_filter)) % self.shards.len() as u64) as usize
+    }
+
+    /// Shards a filter lives in: one for a literal first level, all of
+    /// them for a wildcard-leading filter (`+`/`#`) — replication at
+    /// SUBSCRIBE time keeps the publish path single-shard.
+    fn filter_shards(&self, filter: &str) -> std::ops::Range<usize> {
+        match topic::first_level(filter) {
+            "+" | "#" => 0..self.shards.len(),
+            lit => {
+                let s = (level_hash(lit) % self.shards.len() as u64) as usize;
+                s..s + 1
+            }
+        }
+    }
+
+    /// Register a connection. `id` must be unique for the router's life.
+    pub fn session_open(
+        &self,
+        id: u64,
+        client_id: String,
+        outbox: SyncSender<OutMsg>,
+        will: Option<LastWill>,
+    ) {
+        self.connects.fetch_add(1, Ordering::Relaxed);
+        self.sessions
+            .lock()
+            .unwrap()
+            .insert(id, SessionMeta { client_id, outbox, subs: Vec::new(), will });
+    }
+
+    /// Tear a connection down: drop every subscription from the shard
+    /// tries and return the last-will (if any) for the caller to fire.
+    pub fn session_close(&self, id: u64) -> Option<LastWill> {
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+        let meta = self.sessions.lock().unwrap().remove(&id)?;
+        for (filter, _) in &meta.subs {
+            for s in self.filter_shards(filter) {
+                self.shards[s].lock().subs.remove_where(filter, |e| e.conn == id);
+            }
+        }
+        meta.will
+    }
+
+    /// Add (or replace) a subscription and return the retained messages
+    /// it should receive, resolved through the retained tries of the
+    /// filter's shard(s) — no scan over unrelated retained topics.
+    pub fn subscribe(&self, id: u64, filter: &str, qos: u8) -> Vec<Retained> {
+        let outbox = {
+            let mut sessions = self.sessions.lock().unwrap();
+            let Some(meta) = sessions.get_mut(&id) else { return Vec::new() };
+            meta.subs.retain(|(f, _)| f != filter);
+            meta.subs.push((filter.to_string(), qos));
+            meta.outbox.clone()
+        };
+        let mut retained = Vec::new();
+        for s in self.filter_shards(filter) {
+            let mut st = self.shards[s].lock();
+            // Replace semantics: a re-subscribe must not double-deliver.
+            st.subs.remove_where(filter, |e| e.conn == id);
+            st.subs.insert(filter, SubEntry { conn: id, outbox: outbox.clone() });
+            st.retained.collect_matching(filter, &mut retained);
+        }
+        retained
+    }
+
+    pub fn unsubscribe(&self, id: u64, filter: &str) {
+        {
+            let mut sessions = self.sessions.lock().unwrap();
+            if let Some(meta) = sessions.get_mut(&id) {
+                meta.subs.retain(|(f, _)| f != filter);
+            }
+        }
+        for s in self.filter_shards(filter) {
+            self.shards[s].lock().subs.remove_where(filter, |e| e.conn == id);
+        }
+    }
+
+    /// The hot path: route one PUBLISH. Locks exactly the topic's shard,
+    /// matches through the trie in O(topic depth), encodes the outbound
+    /// head once, and fans the shared (head, payload) pair out to every
+    /// matched session. Returns (delivered, dropped_slow).
+    pub fn publish(&self, topic_name: &str, payload: &Bytes, retain: bool) -> (u64, u64) {
+        // Encode the outbound head ONCE; all subscribers share head + payload.
+        let Some(OutMsg::Pub { head, payload: shared }) = pub_msg(topic_name, payload, false)
+        else {
+            return (0, 0);
+        };
+        let shard = &self.shards[self.shard_of(topic_name)];
+        shard.publishes.inc();
+        let mut delivered = 0u64;
+        let mut dropped = 0u64;
+        let mut bytes = 0u64;
+        let mut st = shard.lock();
+        st.published += 1;
+        st.bytes_in += payload.len() as u64;
+        if retain {
+            if payload.is_empty() {
+                st.retained.remove(topic_name);
+            } else {
+                st.retained.insert(topic_name, payload.clone());
+            }
+        }
+        let mut matched: Vec<&SubEntry> = Vec::new();
+        st.subs.collect(topic_name, &mut matched);
+        // One delivery per session even under overlapping filters
+        // (e.g. `a/#` + `a/b`), as the flat-list broker behaved.
+        if matched.len() > 1 {
+            matched.sort_unstable_by_key(|e| e.conn);
+            matched.dedup_by_key(|e| e.conn);
+        }
+        shard.matches.add(matched.len() as u64);
+        for entry in &matched {
+            match entry.outbox.try_send(OutMsg::Pub { head: head.clone(), payload: shared.clone() })
+            {
+                Ok(()) => {
+                    delivered += 1;
+                    bytes += shared.len() as u64;
+                }
+                Err(TrySendError::Full(_)) => dropped += 1,
+                Err(TrySendError::Disconnected(_)) => {}
+            }
+        }
+        st.delivered += delivered;
+        st.dropped_slow += dropped;
+        st.bytes_out += bytes;
+        (delivered, dropped)
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// Retained topics currently stored, sorted (test helper).
+    pub fn retained_topics(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().retained.topics())
+            .map(|t| t.to_string())
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Aggregate stats across shards + the control plane.
+    pub fn stats(&self) -> BrokerStats {
+        let mut out = BrokerStats {
+            connects: self.connects.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        for s in &self.shards {
+            let st = s.lock();
+            out.published += st.published;
+            out.delivered += st.delivered;
+            out.dropped_slow += st.dropped_slow;
+            out.bytes_in += st.bytes_in;
+            out.bytes_out += st.bytes_out;
+        }
+        out
+    }
+
+    /// Every live session's outbox (shutdown broadcast).
+    fn outboxes(&self) -> Vec<SyncSender<OutMsg>> {
+        self.sessions.lock().unwrap().values().map(|s| s.outbox.clone()).collect()
+    }
+}
+
+/// `EDGEPIPE_BROKER_SHARDS`, defaulting to `min(available_parallelism, 8)`.
+fn default_shards() -> usize {
+    if let Ok(v) = std::env::var("EDGEPIPE_BROKER_SHARDS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+        log_warn!("mqtt.broker", "ignoring invalid EDGEPIPE_BROKER_SHARDS=`{v}`");
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
 }
 
 /// Broker configuration.
@@ -79,11 +379,14 @@ pub struct BrokerConfig {
     pub outbox_depth: usize,
     /// Fallback read timeout when a client requests keep_alive = 0.
     pub idle_timeout: Duration,
+    /// Routing-state shards; 0 = `EDGEPIPE_BROKER_SHARDS` or
+    /// `min(available_parallelism, 8)`.
+    pub shards: usize,
 }
 
 impl Default for BrokerConfig {
     fn default() -> Self {
-        Self { outbox_depth: 64, idle_timeout: Duration::from_secs(3600) }
+        Self { outbox_depth: 64, idle_timeout: Duration::from_secs(3600), shards: 0 }
     }
 }
 
@@ -91,7 +394,7 @@ impl Default for BrokerConfig {
 pub struct Broker {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    state: Arc<Mutex<State>>,
+    router: Arc<Router>,
     accept_thread: Option<JoinHandle<()>>,
 }
 
@@ -107,31 +410,31 @@ impl Broker {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let shutdown = Arc::new(AtomicBool::new(false));
-        let state = Arc::new(Mutex::new(State {
-            sessions: HashMap::new(),
-            retained: HashMap::new(),
-            stats: BrokerStats::default(),
-        }));
+        let router = Arc::new(Router::new(cfg.shards));
         let conn_seq = Arc::new(AtomicU64::new(1));
 
         let t_shutdown = shutdown.clone();
-        let t_state = state.clone();
+        let t_router = router.clone();
         let cfg = Arc::new(cfg);
         let accept_thread = std::thread::Builder::new()
             .name("mqtt-broker-accept".into())
             .spawn(move || {
-                log_info!("mqtt.broker", "listening on {addr}");
+                log_info!(
+                    "mqtt.broker",
+                    "listening on {addr} ({} routing shards)",
+                    t_router.shard_count()
+                );
                 while !t_shutdown.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, peer)) => {
                             let id = conn_seq.fetch_add(1, Ordering::Relaxed);
-                            let st = t_state.clone();
+                            let rt = t_router.clone();
                             let sd = t_shutdown.clone();
                             let c = cfg.clone();
                             let _ = std::thread::Builder::new()
                                 .name(format!("mqtt-conn-{id}"))
                                 .spawn(move || {
-                                    if let Err(e) = serve_conn(id, stream, st, sd, &c) {
+                                    if let Err(e) = serve_conn(id, stream, rt, sd, &c) {
                                         log_debug!("mqtt.broker", "conn {id} ({peer}): {e}");
                                     }
                                 });
@@ -147,7 +450,7 @@ impl Broker {
                 }
             })
             .expect("spawn broker accept thread");
-        Ok(Broker { addr, shutdown, state, accept_thread: Some(accept_thread) })
+        Ok(Broker { addr, shutdown, router, accept_thread: Some(accept_thread) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -155,29 +458,28 @@ impl Broker {
     }
 
     pub fn stats(&self) -> BrokerStats {
-        self.state.lock().unwrap().stats.clone()
+        self.router.stats()
     }
 
     /// Number of live sessions (for tests).
     pub fn session_count(&self) -> usize {
-        self.state.lock().unwrap().sessions.len()
+        self.router.session_count()
+    }
+
+    /// Routing shards in use.
+    pub fn shard_count(&self) -> usize {
+        self.router.shard_count()
     }
 
     /// Retained topics currently stored (for tests).
     pub fn retained_topics(&self) -> Vec<String> {
-        let mut v: Vec<String> = self.state.lock().unwrap().retained.keys().cloned().collect();
-        v.sort();
-        v
+        self.router.retained_topics()
     }
 
     pub fn stop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         // Close all sessions so conn threads unblock.
-        let sessions: Vec<SyncSender<OutMsg>> = {
-            let st = self.state.lock().unwrap();
-            st.sessions.values().map(|s| s.outbox.clone()).collect()
-        };
-        for s in sessions {
+        for s in self.router.outboxes() {
             let _ = s.try_send(OutMsg::Close);
         }
         if let Some(h) = self.accept_thread.take() {
@@ -190,50 +492,6 @@ impl Drop for Broker {
     fn drop(&mut self) {
         self.stop();
     }
-}
-
-/// Build the shared outbound PUBLISH (head, payload) pair for a delivery.
-fn pub_msg(topic_name: &str, payload: &Bytes, retain: bool) -> Option<OutMsg> {
-    let head = packet::publish_head(topic_name, 0, retain, false, None, payload.len()).ok()?;
-    Some(OutMsg::Pub { head: Bytes::from(head), payload: payload.clone() })
-}
-
-fn route(state: &Mutex<State>, topic_name: &str, payload: &Bytes, retain: bool) {
-    let mut st = state.lock().unwrap();
-    st.stats.published += 1;
-    st.stats.bytes_in += payload.len() as u64;
-    if retain {
-        if payload.is_empty() {
-            st.retained.remove(topic_name);
-        } else {
-            st.retained.insert(topic_name.to_string(), payload.clone());
-        }
-    }
-    // Encode the outbound head ONCE; all subscribers share head + payload.
-    let Some(OutMsg::Pub { head, payload: shared }) = pub_msg(topic_name, payload, false) else {
-        return;
-    };
-    let mut delivered = 0u64;
-    let mut dropped = 0u64;
-    let mut bytes = 0u64;
-    for sess in st.sessions.values() {
-        if sess.subs.iter().any(|(f, _)| topic::matches(f, topic_name)) {
-            match sess.outbox.try_send(OutMsg::Pub {
-                head: head.clone(),
-                payload: shared.clone(),
-            }) {
-                Ok(()) => {
-                    delivered += 1;
-                    bytes += shared.len() as u64;
-                }
-                Err(TrySendError::Full(_)) => dropped += 1,
-                Err(TrySendError::Disconnected(_)) => {}
-            }
-        }
-    }
-    st.stats.delivered += delivered;
-    st.stats.dropped_slow += dropped;
-    st.stats.bytes_out += bytes;
 }
 
 fn writer_loop(mut stream: TcpStream, rx: Receiver<OutMsg>) {
@@ -261,7 +519,7 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<OutMsg>) {
 fn serve_conn(
     id: u64,
     mut stream: TcpStream,
-    state: Arc<Mutex<State>>,
+    router: Arc<Router>,
     shutdown: Arc<AtomicBool>,
     cfg: &BrokerConfig,
 ) -> Result<()> {
@@ -287,14 +545,7 @@ fn serve_conn(
         .spawn(move || writer_loop(wstream, rx))
         .expect("spawn writer");
 
-    {
-        let mut st = state.lock().unwrap();
-        st.stats.connects += 1;
-        st.sessions.insert(
-            id,
-            Session { client_id: client_id.clone(), outbox: tx.clone(), subs: Vec::new(), will },
-        );
-    }
+    router.session_open(id, client_id.clone(), tx.clone(), will);
     let _ = tx.send(OutMsg::Control(Packet::ConnAck {
         session_present: false,
         code: CONNACK_ACCEPTED,
@@ -323,8 +574,8 @@ fn serve_conn(
                     break;
                 }
                 // `payload` is a shared view into this connection's packet
-                // read; route() fans it out without duplicating it.
-                route(&state, &t, &payload, retain);
+                // read; the router fans it out without duplicating it.
+                router.publish(&t, &payload, retain);
                 if qos == 1 {
                     if let Some(pid) = packet_id {
                         let _ = tx.send(OutMsg::Control(Packet::PubAck { packet_id: pid }));
@@ -333,39 +584,25 @@ fn serve_conn(
             }
             Packet::Subscribe { packet_id, filters } => {
                 let mut codes = Vec::with_capacity(filters.len());
-                let mut retained_out: Vec<(String, Bytes)> = Vec::new();
-                {
-                    let mut st = state.lock().unwrap();
-                    for (f, qos) in &filters {
-                        if topic::validate_filter(f).is_err() {
-                            codes.push(0x80);
-                            continue;
-                        }
-                        codes.push((*qos).min(1));
-                        for (rt, rp) in &st.retained {
-                            if topic::matches(f, rt) {
-                                retained_out.push((rt.clone(), rp.clone()));
-                            }
-                        }
-                        if let Some(sess) = st.sessions.get_mut(&id) {
-                            sess.subs.retain(|(ef, _)| ef != f);
-                            sess.subs.push((f.clone(), (*qos).min(1)));
-                        }
+                let mut retained_out: Vec<Retained> = Vec::new();
+                for (f, qos) in &filters {
+                    if topic::validate_filter(f).is_err() {
+                        codes.push(0x80);
+                        continue;
                     }
+                    codes.push((*qos).min(1));
+                    retained_out.extend(router.subscribe(id, f, (*qos).min(1)));
                 }
                 let _ = tx.send(OutMsg::Control(Packet::SubAck { packet_id, codes }));
-                for (rt, rp) in retained_out {
-                    if let Some(msg) = pub_msg(&rt, &rp, true) {
+                for r in retained_out {
+                    if let Some(msg) = pub_msg(&r.topic, &r.payload, true) {
                         let _ = tx.send(msg);
                     }
                 }
             }
             Packet::Unsubscribe { packet_id, filters } => {
-                {
-                    let mut st = state.lock().unwrap();
-                    if let Some(sess) = st.sessions.get_mut(&id) {
-                        sess.subs.retain(|(f, _)| !filters.contains(f));
-                    }
+                for f in &filters {
+                    router.unsubscribe(id, f);
                 }
                 let _ = tx.send(OutMsg::Control(Packet::UnsubAck { packet_id }));
             }
@@ -385,15 +622,11 @@ fn serve_conn(
     }
 
     // Teardown: remove session, fire will if unclean.
-    let will = {
-        let mut st = state.lock().unwrap();
-        st.stats.disconnects += 1;
-        st.sessions.remove(&id).and_then(|s| s.will)
-    };
+    let will = router.session_close(id);
     if !clean_disconnect {
         if let Some(w) = will {
             log_debug!("mqtt.broker", "conn {id}: firing last-will on `{}`", w.topic);
-            route(&state, &w.topic, &Bytes::from(w.payload), w.retain);
+            router.publish(&w.topic, &Bytes::from(w.payload), w.retain);
         }
     }
     let _ = tx.send(OutMsg::Close);

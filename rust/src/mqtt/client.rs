@@ -17,6 +17,7 @@ use std::time::Duration;
 use crate::buffer::Bytes;
 use crate::mqtt::packet::{self, LastWill, Packet};
 use crate::mqtt::topic;
+use crate::mqtt::trie::SubTrie;
 use crate::serial::wire::WireFrame;
 use crate::util::{write_all_vectored, Error, Result};
 use crate::{log_debug, log_warn};
@@ -42,6 +43,60 @@ struct Sub {
     handler: Handler,
 }
 
+/// Client-side subscription table: handlers in slots, a wildcard-aware
+/// [`SubTrie`] of slot indices on top. Dispatching an inbound PUBLISH is
+/// a trie walk (O(topic depth)) instead of a `matches()` scan over every
+/// subscription — the broker-side structure, mirrored for clients that
+/// hold many filters (e.g. a coordinator watching many operations).
+#[derive(Default)]
+struct SubTable {
+    trie: SubTrie<usize>,
+    slots: Vec<Option<Sub>>,
+    free: Vec<usize>,
+}
+
+impl SubTable {
+    fn add(&mut self, filter: &str, handler: Handler) {
+        let sub = Sub { filter: filter.to_string(), handler };
+        let slot = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Some(sub);
+                i
+            }
+            None => {
+                self.slots.push(Some(sub));
+                self.slots.len() - 1
+            }
+        };
+        self.trie.insert(filter, slot);
+    }
+
+    /// Drop every handler registered under `filter`.
+    fn remove_filter(&mut self, filter: &str) {
+        let slots = &mut self.slots;
+        let free = &mut self.free;
+        self.trie.remove_where(filter, |i| {
+            slots[*i] = None;
+            free.push(*i);
+            true
+        });
+    }
+
+    /// Drop one handler by slot (disconnected channel receiver).
+    fn remove_slot(&mut self, slot: usize) {
+        if let Some(sub) = self.slots[slot].take() {
+            self.trie.remove_where(&sub.filter, |i| *i == slot);
+            self.free.push(slot);
+        }
+    }
+
+    fn clear(&mut self) {
+        self.trie = SubTrie::new();
+        self.slots.clear();
+        self.free.clear();
+    }
+}
+
 /// Client connection options.
 #[derive(Debug, Clone)]
 pub struct ClientOptions {
@@ -65,7 +120,7 @@ impl Default for ClientOptions {
 
 struct Inner {
     writer: Mutex<TcpStream>,
-    subs: Mutex<Vec<Sub>>,
+    subs: Mutex<SubTable>,
     pending_acks: Mutex<HashMap<u16, SyncSender<Packet>>>,
     next_id: AtomicU16,
     connected: AtomicBool,
@@ -136,7 +191,7 @@ impl MqttClient {
 
         let inner = Arc::new(Inner {
             writer: Mutex::new(stream),
-            subs: Mutex::new(Vec::new()),
+            subs: Mutex::new(SubTable::default()),
             pending_acks: Mutex::new(HashMap::new()),
             next_id: AtomicU16::new(1),
             connected: AtomicBool::new(true),
@@ -241,19 +296,19 @@ impl MqttClient {
         let id = self.inner.alloc_id();
         // Register the handler BEFORE the broker starts sending retained
         // messages, or we'd race and drop them.
-        self.inner.subs.lock().unwrap().push(Sub { filter: filter.to_string(), handler });
+        self.inner.subs.lock().unwrap().add(filter, handler);
         let p = Packet::Subscribe { packet_id: id, filters: vec![(filter.to_string(), 0)] };
         match self.inner.request(&p, id, DEFAULT_TIMEOUT) {
             Ok(Packet::SubAck { codes, .. }) => {
                 if codes.first().copied().unwrap_or(0x80) == 0x80 {
-                    self.inner.subs.lock().unwrap().retain(|s| s.filter != filter);
+                    self.inner.subs.lock().unwrap().remove_filter(filter);
                     return Err(Error::Mqtt(format!("subscription `{filter}` refused")));
                 }
                 Ok(())
             }
             Ok(other) => Err(Error::Mqtt(format!("expected SUBACK, got {other:?}"))),
             Err(e) => {
-                self.inner.subs.lock().unwrap().retain(|s| s.filter != filter);
+                self.inner.subs.lock().unwrap().remove_filter(filter);
                 Err(e)
             }
         }
@@ -261,7 +316,7 @@ impl MqttClient {
 
     pub fn unsubscribe(&self, filter: &str) -> Result<()> {
         let id = self.inner.alloc_id();
-        self.inner.subs.lock().unwrap().retain(|s| s.filter != filter);
+        self.inner.subs.lock().unwrap().remove_filter(filter);
         let p = Packet::Unsubscribe { packet_id: id, filters: vec![filter.to_string()] };
         match self.inner.request(&p, id, DEFAULT_TIMEOUT)? {
             Packet::UnsubAck { .. } => Ok(()),
@@ -316,22 +371,25 @@ fn reader_loop(mut stream: TcpStream, inner: Arc<Inner>) {
                 // allocation; fan-out to handlers clones the view only.
                 let msg = Message { topic: t, payload, retain };
                 let mut subs = inner.subs.lock().unwrap();
-                subs.retain(|s| {
-                    if !topic::matches(&s.filter, &msg.topic) {
-                        return true;
-                    }
-                    match &s.handler {
-                        Handler::Callback(cb) => {
-                            cb(&msg);
-                            true
-                        }
+                // Trie walk instead of a linear matches() scan; indices
+                // are copied out so dead slots can be removed mid-loop.
+                let mut hits: Vec<&usize> = Vec::new();
+                subs.trie.collect(&msg.topic, &mut hits);
+                let hits: Vec<usize> = hits.into_iter().copied().collect();
+                let mut dead: Vec<usize> = Vec::new();
+                for slot in hits {
+                    let Some(sub) = &subs.slots[slot] else { continue };
+                    match &sub.handler {
+                        Handler::Callback(cb) => cb(&msg),
                         Handler::Channel(tx) => match tx.try_send(msg.clone()) {
-                            Ok(()) => true,
-                            Err(std::sync::mpsc::TrySendError::Full(_)) => true, // drop msg
-                            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => false,
+                            Ok(()) | Err(std::sync::mpsc::TrySendError::Full(_)) => {} // Full: drop msg
+                            Err(std::sync::mpsc::TrySendError::Disconnected(_)) => dead.push(slot),
                         },
                     }
-                });
+                }
+                for slot in dead {
+                    subs.remove_slot(slot);
+                }
             }
             Packet::PubAck { packet_id } => notify(&inner, packet_id, Packet::PubAck { packet_id }),
             Packet::SubAck { packet_id, codes } => {

@@ -10,8 +10,9 @@ pub mod broker;
 pub mod client;
 pub mod packet;
 pub mod topic;
+pub mod trie;
 
-pub use broker::{Broker, BrokerConfig, BrokerStats};
+pub use broker::{Broker, BrokerConfig, BrokerStats, Router};
 pub use client::{ClientOptions, Message, MqttClient};
 pub use packet::{LastWill, Packet};
 

@@ -2,8 +2,22 @@
 //! mechanism of R3: clients choose publishers dynamically by topic filter,
 //! e.g. subscribing `/objdetect/#` matches `/objdetect/mobilev3` and
 //! `/objdetect/yolov2` (§4.2.2).
+//!
+//! [`matches`] is the linear REFERENCE implementation of §4.7 semantics;
+//! the broker's production matching path is the segment-wise trie in
+//! [`crate::mqtt::trie`], whose walks are property-tested against this
+//! function over randomized topic/filter pairs
+//! (`tests/test_broker_trie.rs`) so the two can never drift.
 
 use crate::util::{Error, Result};
+
+/// First `/`-separated level of a topic or filter (`""` for a leading
+/// slash) — the broker's shard key: every topic a literal-first filter
+/// can match shares the filter's first level, so subscriptions and the
+/// topics they match always hash to the same shard.
+pub fn first_level(topic_or_filter: &str) -> &str {
+    topic_or_filter.split('/').next().unwrap_or("")
+}
 
 /// Validate a topic NAME (publish target): non-empty, no wildcards, no NUL.
 pub fn validate_name(topic: &str) -> Result<()> {

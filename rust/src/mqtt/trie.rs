@@ -1,0 +1,469 @@
+//! Segment-wise subscription/retained-topic tries — O(topic depth)
+//! matching instead of O(subscriptions) linear scans.
+//!
+//! Two structures share the level-by-level layout:
+//!
+//! - [`SubTrie`]: topic FILTERS (with `+`/`#` wildcards) mapped to
+//!   subscriber values. [`SubTrie::collect`] walks a published topic
+//!   name down the trie, visiting only the literal child for each level
+//!   plus the `+` branch and any `#` leaves passed on the way — the
+//!   cost is bounded by topic depth times the number of wildcard
+//!   branches alive at each level, independent of how many
+//!   subscriptions exist on unrelated topics.
+//! - [`RetainedTrie`]: retained topic NAMES (no wildcards) mapped to
+//!   payloads. [`RetainedTrie::collect_matching`] walks a subscription
+//!   filter down the trie (a `+` level fans out across children, a
+//!   trailing `#` collects a subtree), so a new subscriber's retained
+//!   delivery no longer scans every retained topic in the broker.
+//!
+//! Both walks reproduce the MQTT 3.1.1 §4.7 semantics already pinned by
+//! `topic::matches` tests, including the §4.7.2 rule: topics whose FIRST
+//! level starts with `$` are invisible to filters whose first level is a
+//! wildcard; `$` deeper in the tree is an ordinary character. The
+//! equivalence is enforced by randomized property tests
+//! (`tests/test_broker_trie.rs`) comparing every trie walk against the
+//! linear [`topic::matches`] reference.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::buffer::Bytes;
+
+/// One trie level: literal children, the `+` branch, and terminal values.
+struct Node<T> {
+    children: HashMap<Box<str>, Node<T>>,
+    /// Subtree for filters with `+` at this level.
+    plus: Option<Box<Node<T>>>,
+    /// Values of filters ending exactly at this level.
+    here: Vec<T>,
+    /// Values of filters ending with `#` as the NEXT level (`a/b/#`
+    /// stores at the `a/b` node; per §4.7 it matches `a/b` itself and
+    /// everything below it).
+    hash: Vec<T>,
+}
+
+impl<T> Default for Node<T> {
+    fn default() -> Self {
+        Node { children: HashMap::new(), plus: None, here: Vec::new(), hash: Vec::new() }
+    }
+}
+
+impl<T> Node<T> {
+    fn is_empty(&self) -> bool {
+        self.children.is_empty() && self.plus.is_none() && self.here.is_empty() && self.hash.is_empty()
+    }
+}
+
+/// Subscription trie: filter → values, matched by topic name.
+pub struct SubTrie<T> {
+    root: Node<T>,
+    len: usize,
+}
+
+impl<T> Default for SubTrie<T> {
+    fn default() -> Self {
+        SubTrie { root: Node::default(), len: 0 }
+    }
+}
+
+impl<T> SubTrie<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert `value` under `filter` (assumed already validated).
+    pub fn insert(&mut self, filter: &str, value: T) {
+        let mut node = &mut self.root;
+        for level in filter.split('/') {
+            match level {
+                "#" => {
+                    // validate_filter guarantees '#' is last.
+                    node.hash.push(value);
+                    self.len += 1;
+                    return;
+                }
+                "+" => node = node.plus.get_or_insert_with(Default::default),
+                lit => {
+                    if !node.children.contains_key(lit) {
+                        node.children.insert(Box::from(lit), Node::default());
+                    }
+                    node = node.children.get_mut(lit).expect("just inserted");
+                }
+            }
+        }
+        node.here.push(value);
+        self.len += 1;
+    }
+
+    /// Remove every value under `filter` for which `pred` holds,
+    /// pruning emptied branches. Returns how many were removed.
+    pub fn remove_where(&mut self, filter: &str, mut pred: impl FnMut(&T) -> bool) -> usize {
+        let levels: Vec<&str> = filter.split('/').collect();
+        let (removed, _) = remove_rec(&mut self.root, &levels, &mut pred);
+        self.len -= removed;
+        removed
+    }
+
+    /// Append every value whose filter matches `topic` to `out`.
+    ///
+    /// A session subscribed to several overlapping filters appears once
+    /// per matching filter; the caller dedups (the broker delivers one
+    /// copy per session, as the flat-list implementation did).
+    pub fn collect<'a>(&'a self, topic: &str, out: &mut Vec<&'a T>) {
+        let levels: Vec<&str> = topic.split('/').collect();
+        // §4.7.2: wildcard-leading filters never match '$'-first topics.
+        let hide_from_wildcards = topic.starts_with('$');
+        collect_rec(&self.root, &levels, hide_from_wildcards, out);
+    }
+
+    /// Convenience wrapper for tests: matching values as a fresh Vec.
+    pub fn matches<'a>(&'a self, topic: &str) -> Vec<&'a T> {
+        let mut out = Vec::new();
+        self.collect(topic, &mut out);
+        out
+    }
+}
+
+/// Recursive removal; returns (values removed, subtree now empty).
+fn remove_rec<T>(
+    node: &mut Node<T>,
+    levels: &[&str],
+    pred: &mut impl FnMut(&T) -> bool,
+) -> (usize, bool) {
+    match levels.split_first() {
+        None => {
+            let before = node.here.len();
+            node.here.retain(|v| !pred(v));
+            (before - node.here.len(), node.is_empty())
+        }
+        Some((&"#", _)) => {
+            let before = node.hash.len();
+            node.hash.retain(|v| !pred(v));
+            (before - node.hash.len(), node.is_empty())
+        }
+        Some((&"+", rest)) => {
+            let mut removed = 0;
+            if let Some(p) = node.plus.as_deref_mut() {
+                let (r, empty) = remove_rec(p, rest, pred);
+                removed = r;
+                if empty {
+                    node.plus = None;
+                }
+            }
+            (removed, node.is_empty())
+        }
+        Some((lit, rest)) => {
+            let mut removed = 0;
+            if let Some(child) = node.children.get_mut(*lit) {
+                let (r, empty) = remove_rec(child, rest, pred);
+                removed = r;
+                if empty {
+                    node.children.remove(*lit);
+                }
+            }
+            (removed, node.is_empty())
+        }
+    }
+}
+
+fn collect_rec<'a, T>(
+    node: &'a Node<T>,
+    levels: &[&str],
+    hide_from_wildcards: bool,
+    out: &mut Vec<&'a T>,
+) {
+    // Filters ending in '#' at this node match the remaining levels —
+    // including none at all ("sport/tennis/#" matches "sport/tennis").
+    if !hide_from_wildcards {
+        out.extend(node.hash.iter());
+    }
+    match levels.split_first() {
+        None => out.extend(node.here.iter()),
+        Some((level, rest)) => {
+            if !hide_from_wildcards {
+                if let Some(p) = node.plus.as_deref() {
+                    collect_rec(p, rest, false, out);
+                }
+            }
+            if let Some(child) = node.children.get(*level) {
+                // The '$'-hiding rule applies to the FIRST level only: a
+                // literal first-level match re-admits wildcards below.
+                collect_rec(child, rest, false, out);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Retained-topic trie
+// ---------------------------------------------------------------------------
+
+/// One retained message: shared topic string + shared payload view, so
+/// delivery to a new subscriber clones two Arcs, never the bytes.
+#[derive(Clone)]
+pub struct Retained {
+    pub topic: Arc<str>,
+    pub payload: Bytes,
+}
+
+#[derive(Default)]
+struct RNode {
+    children: HashMap<Box<str>, RNode>,
+    value: Option<Retained>,
+}
+
+impl RNode {
+    fn is_empty(&self) -> bool {
+        self.children.is_empty() && self.value.is_none()
+    }
+}
+
+/// Retained topics stored level-wise, queried by subscription filter.
+#[derive(Default)]
+pub struct RetainedTrie {
+    root: RNode,
+    len: usize,
+}
+
+impl RetainedTrie {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Store (or replace) the retained payload for `topic`.
+    pub fn insert(&mut self, topic: &str, payload: Bytes) {
+        let mut node = &mut self.root;
+        for level in topic.split('/') {
+            if !node.children.contains_key(level) {
+                node.children.insert(Box::from(level), RNode::default());
+            }
+            node = node.children.get_mut(level).expect("just inserted");
+        }
+        if node.value.replace(Retained { topic: Arc::from(topic), payload }).is_none() {
+            self.len += 1;
+        }
+    }
+
+    /// Clear the retained payload for `topic` (empty-payload publish).
+    pub fn remove(&mut self, topic: &str) {
+        let levels: Vec<&str> = topic.split('/').collect();
+        if rremove_rec(&mut self.root, &levels).0 {
+            self.len -= 1;
+        }
+    }
+
+    /// Append every retained message whose topic matches `filter`.
+    pub fn collect_matching(&self, filter: &str, out: &mut Vec<Retained>) {
+        let levels: Vec<&str> = filter.split('/').collect();
+        rcollect_rec(&self.root, &levels, true, out);
+    }
+
+    /// All stored topics (test/introspection helper).
+    pub fn topics(&self) -> Vec<Arc<str>> {
+        let mut out = Vec::with_capacity(self.len);
+        fn walk(node: &RNode, out: &mut Vec<Arc<str>>) {
+            if let Some(r) = &node.value {
+                out.push(r.topic.clone());
+            }
+            for child in node.children.values() {
+                walk(child, out);
+            }
+        }
+        walk(&self.root, &mut out);
+        out
+    }
+}
+
+/// Returns (value removed, subtree now empty).
+fn rremove_rec(node: &mut RNode, levels: &[&str]) -> (bool, bool) {
+    match levels.split_first() {
+        None => {
+            let removed = node.value.take().is_some();
+            (removed, node.is_empty())
+        }
+        Some((lit, rest)) => {
+            let mut removed = false;
+            if let Some(child) = node.children.get_mut(*lit) {
+                let (r, empty) = rremove_rec(child, rest);
+                removed = r;
+                if empty {
+                    node.children.remove(*lit);
+                }
+            }
+            (removed, node.is_empty())
+        }
+    }
+}
+
+/// Walk a FILTER over stored topics. `first` tracks whether we are still
+/// matching the first topic level (for the §4.7.2 `$` rule).
+fn rcollect_rec(node: &RNode, levels: &[&str], first: bool, out: &mut Vec<Retained>) {
+    match levels.split_first() {
+        None => {
+            if let Some(r) = &node.value {
+                out.push(r.clone());
+            }
+        }
+        Some((&"#", _)) => {
+            // '#' matches this level and below; at the first level it
+            // must skip '$'-prefixed children entirely.
+            fn subtree(node: &RNode, out: &mut Vec<Retained>) {
+                if let Some(r) = &node.value {
+                    out.push(r.clone());
+                }
+                for child in node.children.values() {
+                    subtree(child, out);
+                }
+            }
+            if let Some(r) = &node.value {
+                out.push(r.clone());
+            }
+            for (seg, child) in &node.children {
+                if first && seg.starts_with('$') {
+                    continue;
+                }
+                subtree(child, out);
+            }
+        }
+        Some((&"+", rest)) => {
+            for (seg, child) in &node.children {
+                if first && seg.starts_with('$') {
+                    continue;
+                }
+                rcollect_rec(child, rest, false, out);
+            }
+        }
+        Some((lit, rest)) => {
+            if let Some(child) = node.children.get(*lit) {
+                rcollect_rec(child, rest, false, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collected(trie: &SubTrie<u32>, topic: &str) -> Vec<u32> {
+        let mut v: Vec<u32> = trie.matches(topic).into_iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn exact_plus_hash_basics() {
+        let mut t = SubTrie::new();
+        t.insert("a/b/c", 1);
+        t.insert("a/+/c", 2);
+        t.insert("a/#", 3);
+        t.insert("#", 4);
+        t.insert("a/b", 5);
+        assert_eq!(collected(&t, "a/b/c"), vec![1, 2, 3, 4]);
+        assert_eq!(collected(&t, "a/b"), vec![3, 4, 5]);
+        // '#' matches the parent level itself.
+        assert_eq!(collected(&t, "a"), vec![3, 4]);
+        assert_eq!(collected(&t, "x"), vec![4]);
+        assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn dollar_topics_hidden_from_leading_wildcards() {
+        let mut t = SubTrie::new();
+        t.insert("#", 1);
+        t.insert("+/broker/load", 2);
+        t.insert("$SYS/#", 3);
+        t.insert("$SYS/broker/load", 4);
+        t.insert("$SYS/+/load", 5);
+        assert_eq!(collected(&t, "$SYS/broker/load"), vec![3, 4, 5]);
+        assert_eq!(collected(&t, "$SYS"), vec![3]);
+        // '$' deeper in the tree is ordinary.
+        t.insert("a/#", 6);
+        t.insert("a/+/level", 7);
+        assert_eq!(collected(&t, "a/$weird/level"), vec![1, 6, 7]);
+    }
+
+    #[test]
+    fn empty_levels_are_distinct() {
+        let mut t = SubTrie::new();
+        t.insert("a/b", 1);
+        t.insert("/a/b", 2);
+        t.insert("/+/b", 3);
+        assert_eq!(collected(&t, "a/b"), vec![1]);
+        assert_eq!(collected(&t, "/a/b"), vec![2, 3]);
+    }
+
+    #[test]
+    fn remove_where_prunes_branches() {
+        let mut t = SubTrie::new();
+        t.insert("a/b/c", 1);
+        t.insert("a/b/c", 2);
+        t.insert("a/+/#", 3);
+        assert_eq!(t.remove_where("a/b/c", |v| *v == 1), 1);
+        assert_eq!(collected(&t, "a/b/c"), vec![2, 3]);
+        assert_eq!(t.remove_where("a/b/c", |v| *v == 2), 1);
+        assert_eq!(t.remove_where("a/+/#", |v| *v == 3), 1);
+        assert!(t.is_empty());
+        assert!(t.root.children.is_empty(), "emptied branches must be pruned");
+        // Removing from a now-empty trie is a no-op.
+        assert_eq!(t.remove_where("a/b/c", |_| true), 0);
+    }
+
+    #[test]
+    fn retained_insert_replace_remove() {
+        let mut r = RetainedTrie::new();
+        r.insert("svc/ad", Bytes::from(b"one".as_slice().to_vec()));
+        r.insert("svc/ad", Bytes::from(b"two".as_slice().to_vec()));
+        assert_eq!(r.len(), 1);
+        let mut out = Vec::new();
+        r.collect_matching("svc/+", &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].payload.as_slice(), b"two");
+        assert_eq!(&*out[0].topic, "svc/ad");
+        r.remove("svc/ad");
+        assert!(r.is_empty());
+        assert!(r.root.children.is_empty(), "emptied branches must be pruned");
+    }
+
+    #[test]
+    fn retained_filter_walk_semantics() {
+        let mut r = RetainedTrie::new();
+        for t in ["a", "a/b", "a/b/c", "x/y", "$SYS/load", "$SYS/x/y"] {
+            r.insert(t, Bytes::from(t.as_bytes().to_vec()));
+        }
+        let q = |f: &str| {
+            let mut out = Vec::new();
+            r.collect_matching(f, &mut out);
+            let mut v: Vec<String> = out.iter().map(|m| m.topic.to_string()).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(q("a/#"), vec!["a", "a/b", "a/b/c"]);
+        assert_eq!(q("a/+"), vec!["a/b"]);
+        assert_eq!(q("#"), vec!["a", "a/b", "a/b/c", "x/y"]);
+        assert_eq!(q("+/y"), vec!["x/y"]);
+        assert_eq!(q("$SYS/#"), vec!["$SYS/load", "$SYS/x/y"]);
+        assert_eq!(q("$SYS/+"), vec!["$SYS/load"]);
+        assert!(q("b/#").is_empty());
+        let mut topics = r.topics().iter().map(|t| t.to_string()).collect::<Vec<_>>();
+        topics.sort();
+        assert_eq!(topics, vec!["$SYS/load", "$SYS/x/y", "a", "a/b", "a/b/c", "x/y"]);
+    }
+}

@@ -1,0 +1,336 @@
+//! Trie/linear equivalence and sharded-router behavior.
+//!
+//! The subscription trie ([`edgepipe::mqtt::trie::SubTrie`]) and the
+//! retained-topic trie are the broker's production matching paths; the
+//! linear [`topic::matches`] scan is the REFERENCE implementation of
+//! MQTT 3.1.1 §4.7. These property tests drive both over randomized
+//! topic/filter pairs — including `$`-first topics (§4.7.2), `#`/`+`
+//! edge cases, and empty levels — so the trie can never silently drift
+//! from the spec semantics the rest of the repo pins with unit tests.
+
+use std::sync::mpsc::sync_channel;
+
+use edgepipe::buffer::Bytes;
+use edgepipe::metrics;
+use edgepipe::mqtt::broker::OutMsg;
+use edgepipe::mqtt::topic;
+use edgepipe::mqtt::trie::{RetainedTrie, SubTrie};
+use edgepipe::mqtt::Router;
+use edgepipe::testkit;
+
+// ---------------------------------------------------------------------------
+// Randomized topic/filter generation
+// ---------------------------------------------------------------------------
+
+/// Deliberately tiny level alphabet so random topics and filters collide
+/// often — equivalence tests on disjoint namespaces would never exercise
+/// the interesting overlaps. Includes `$`-levels (§4.7.2) and the empty
+/// level (`/a/b` leading-slash semantics).
+const LEVELS: &[&str] = &["a", "b", "c", "dev0", "$SYS", "$edge", ""];
+
+fn gen_topic(g: &mut testkit::Gen) -> String {
+    let depth = g.usize(1, 4);
+    (0..depth).map(|_| *g.choose(LEVELS)).collect::<Vec<_>>().join("/")
+}
+
+/// A random VALID filter: `+` only as a whole level, `#` only last.
+fn gen_filter(g: &mut testkit::Gen) -> String {
+    let depth = g.usize(1, 4);
+    let mut levels: Vec<&str> = (0..depth)
+        .map(|_| if g.bool(0.25) { "+" } else { *g.choose(LEVELS) })
+        .collect();
+    if g.bool(0.3) {
+        if g.bool(0.5) {
+            levels.push("#");
+        } else {
+            *levels.last_mut().unwrap() = "#";
+        }
+    }
+    let mut f = levels.join("/");
+    if f.is_empty() {
+        // Sole invalid shape a draw can produce: one empty level.
+        f.push('+');
+    }
+    topic::validate_filter(&f).expect("generator must emit valid filters");
+    f
+}
+
+// ---------------------------------------------------------------------------
+// Equivalence properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_subtrie_agrees_with_linear_matches() {
+    testkit::check(300, |g| {
+        let n_filters = g.usize(1, 24);
+        let filters: Vec<String> = (0..n_filters).map(|_| gen_filter(g)).collect();
+        let mut trie = SubTrie::new();
+        for (i, f) in filters.iter().enumerate() {
+            trie.insert(f, i);
+        }
+        assert_eq!(trie.len(), filters.len());
+        for _ in 0..8 {
+            let t = gen_topic(g);
+            let mut via_trie: Vec<usize> = trie.matches(&t).into_iter().copied().collect();
+            via_trie.sort_unstable();
+            let via_linear: Vec<usize> = filters
+                .iter()
+                .enumerate()
+                .filter(|(_, f)| topic::matches(f, &t))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(
+                via_trie, via_linear,
+                "trie/linear disagree on topic `{t}` over filters {filters:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_subtrie_agrees_after_random_removals() {
+    testkit::check(150, |g| {
+        let n_filters = g.usize(2, 16);
+        let filters: Vec<String> = (0..n_filters).map(|_| gen_filter(g)).collect();
+        let mut trie = SubTrie::new();
+        for (i, f) in filters.iter().enumerate() {
+            trie.insert(f, i);
+        }
+        // Remove a random subset (by value) through their filters.
+        let mut alive = vec![true; filters.len()];
+        for (i, f) in filters.iter().enumerate() {
+            if g.bool(0.4) {
+                let removed = trie.remove_where(f, |v| *v == i);
+                assert_eq!(removed, 1, "value {i} under `{f}` must be removable");
+                alive[i] = false;
+            }
+        }
+        assert_eq!(trie.len(), alive.iter().filter(|a| **a).count());
+        for _ in 0..6 {
+            let t = gen_topic(g);
+            let mut via_trie: Vec<usize> = trie.matches(&t).into_iter().copied().collect();
+            via_trie.sort_unstable();
+            let via_linear: Vec<usize> = filters
+                .iter()
+                .enumerate()
+                .filter(|(i, f)| alive[*i] && topic::matches(f, &t))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(via_trie, via_linear, "post-removal disagree on `{t}`");
+        }
+    });
+}
+
+#[test]
+fn prop_retained_trie_agrees_with_linear_scan() {
+    testkit::check(200, |g| {
+        let n_topics = g.usize(1, 16);
+        let mut stored: Vec<String> = (0..n_topics).map(|_| gen_topic(g)).collect();
+        stored.sort();
+        stored.dedup();
+        let mut trie = RetainedTrie::new();
+        for t in &stored {
+            trie.insert(t, Bytes::from(t.as_bytes().to_vec()));
+        }
+        assert_eq!(trie.len(), stored.len());
+        for _ in 0..8 {
+            let f = gen_filter(g);
+            let mut out = Vec::new();
+            trie.collect_matching(&f, &mut out);
+            let mut via_trie: Vec<String> = out.iter().map(|r| r.topic.to_string()).collect();
+            via_trie.sort();
+            let via_linear: Vec<String> =
+                stored.iter().filter(|t| topic::matches(&f, t)).cloned().collect();
+            assert_eq!(
+                via_trie, via_linear,
+                "retained trie/linear disagree on filter `{f}` over {stored:?}"
+            );
+            // Payload must be the stored bytes, shared — not re-encoded.
+            for r in &out {
+                assert_eq!(r.payload.as_slice(), r.topic.as_bytes());
+            }
+        }
+    });
+}
+
+#[test]
+fn subtrie_pinned_edge_cases() {
+    // The §4.7 corner cases the property alphabet might hit rarely,
+    // pinned explicitly (mirrors `topic::matches` unit tests).
+    let cases: &[(&str, &str, bool)] = &[
+        ("sport/tennis/#", "sport/tennis", true), // '#' matches its parent
+        ("sport/tennis/#", "sport", false),
+        ("#", "$SYS/broker", false), // §4.7.2
+        ("+/broker", "$SYS/broker", false),
+        ("$SYS/#", "$SYS/broker", true),
+        ("$SYS/#", "$SYS", true),
+        ("a/#", "a/$weird", true), // '$' deeper is ordinary
+        ("a/+", "a/$weird", true),
+        ("+", "", true),  // empty single level
+        ("/+", "/a", true),
+        ("+/a", "/a", true), // '+' fills the empty first level
+        ("a//b", "a//b", true),
+        ("a/+/b", "a//b", true),
+    ];
+    for (filter, topic_name, expect) in cases {
+        let mut trie = SubTrie::new();
+        trie.insert(filter, 0u8);
+        assert_eq!(
+            !trie.matches(topic_name).is_empty(),
+            *expect,
+            "trie: filter `{filter}` vs topic `{topic_name}`"
+        );
+        assert_eq!(
+            topic::matches(filter, topic_name),
+            *expect,
+            "reference: filter `{filter}` vs topic `{topic_name}`"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sharded Router behavior (driven directly, no sockets)
+// ---------------------------------------------------------------------------
+
+fn drain(rx: &std::sync::mpsc::Receiver<OutMsg>) -> usize {
+    let mut n = 0;
+    while let Ok(msg) = rx.try_recv() {
+        if matches!(msg, OutMsg::Pub { .. }) {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[test]
+fn router_wildcard_filter_spans_all_shards() {
+    let router = Router::new(4);
+    assert_eq!(router.shard_count(), 4);
+    let (tx, rx) = sync_channel(64);
+    router.session_open(1, "watcher".into(), tx, None);
+    router.subscribe(1, "#", 0);
+    // Distinct first levels hash to (almost certainly) different shards;
+    // a '#' subscriber must see every one of them regardless.
+    let topics = ["a/1", "b/2", "c/3", "dev0/4", "e/5", "f/6", "g/7", "h/8"];
+    for t in &topics {
+        let (delivered, dropped) = router.publish(t, &Bytes::from(b"x".to_vec()), false);
+        assert_eq!((delivered, dropped), (1, 0), "publish on `{t}`");
+    }
+    assert_eq!(drain(&rx), topics.len());
+}
+
+#[test]
+fn router_dedups_overlapping_filters_per_session() {
+    let router = Router::new(4);
+    let (tx, rx) = sync_channel(64);
+    router.session_open(7, "c".into(), tx, None);
+    router.subscribe(7, "a/#", 0);
+    router.subscribe(7, "a/b", 0);
+    router.subscribe(7, "a/+", 0);
+    let (delivered, _) = router.publish("a/b", &Bytes::from(b"x".to_vec()), false);
+    assert_eq!(delivered, 1, "one delivery per session under overlapping filters");
+    assert_eq!(drain(&rx), 1);
+    // Re-subscribing the same filter must not double-deliver either.
+    router.subscribe(7, "a/b", 0);
+    let (delivered, _) = router.publish("a/b", &Bytes::from(b"y".to_vec()), false);
+    assert_eq!(delivered, 1);
+}
+
+#[test]
+fn router_retained_lookup_crosses_shards_for_wildcard_filters() {
+    let router = Router::new(4);
+    let (tx_pub, _rx_pub) = sync_channel(4);
+    router.session_open(1, "adv".into(), tx_pub, None);
+    // Retained topics with different first levels live in different shards.
+    for t in ["svc/a", "other/b", "third/c", "$SYS/hidden"] {
+        router.publish(t, &Bytes::from(t.as_bytes().to_vec()), true);
+    }
+    let (tx, _rx) = sync_channel(16);
+    router.session_open(2, "late".into(), tx, None);
+    // Wildcard-leading filter: retained from EVERY shard, minus '$'.
+    let mut got: Vec<String> =
+        router.subscribe(2, "#", 0).iter().map(|r| r.topic.to_string()).collect();
+    got.sort();
+    assert_eq!(got, vec!["other/b", "svc/a", "third/c"]);
+    // Literal-first filter: resolved from one shard only, still correct.
+    let got = router.subscribe(2, "svc/+", 0);
+    assert_eq!(got.len(), 1);
+    assert_eq!(&*got[0].topic, "svc/a");
+    assert_eq!(got[0].payload.as_slice(), b"svc/a");
+    // Empty-payload publish clears across the shard set.
+    router.publish("svc/a", &Bytes::from(Vec::new()), true);
+    assert!(router.subscribe(2, "svc/+", 0).is_empty());
+    assert_eq!(router.retained_topics(), vec!["$SYS/hidden", "other/b", "third/c"]);
+}
+
+#[test]
+fn router_session_close_removes_replicated_subscriptions() {
+    let router = Router::new(4);
+    let (tx, rx) = sync_channel(64);
+    router.session_open(3, "c".into(), tx, None);
+    router.subscribe(3, "#", 0); // replicated into all 4 shards
+    router.subscribe(3, "lit/x", 0);
+    assert_eq!(router.publish("lit/x", &Bytes::from(b"1".to_vec()), false).0, 1);
+    let will = router.session_close(3);
+    assert!(will.is_none());
+    assert_eq!(router.session_count(), 0);
+    for t in ["lit/x", "a/b", "c/d", "e/f"] {
+        assert_eq!(
+            router.publish(t, &Bytes::from(b"2".to_vec()), false).0,
+            0,
+            "no delivery to a closed session (topic `{t}`)"
+        );
+    }
+    drop(rx);
+}
+
+#[test]
+fn router_unsubscribe_is_scoped_to_filter_and_session() {
+    let router = Router::new(2);
+    let (tx1, rx1) = sync_channel(16);
+    let (tx2, rx2) = sync_channel(16);
+    router.session_open(1, "one".into(), tx1, None);
+    router.session_open(2, "two".into(), tx2, None);
+    router.subscribe(1, "t/+", 0);
+    router.subscribe(2, "t/+", 0);
+    router.unsubscribe(1, "t/+");
+    let (delivered, _) = router.publish("t/x", &Bytes::from(b"p".to_vec()), false);
+    assert_eq!(delivered, 1);
+    assert_eq!(drain(&rx1), 0);
+    assert_eq!(drain(&rx2), 1);
+}
+
+#[test]
+fn router_per_shard_metrics_are_registered_and_counted() {
+    let before: u64 = (0..3)
+        .map(|i| metrics::global().counter(&format!("broker.shard{i}.publishes")).count())
+        .sum();
+    let router = Router::new(3);
+    let (tx, _rx) = sync_channel(64);
+    router.session_open(1, "m".into(), tx, None);
+    router.subscribe(1, "#", 0);
+    for t in ["a/one", "b/two", "c/three", "dev0/four"] {
+        router.publish(t, &Bytes::from(b"x".to_vec()), false);
+    }
+    let names = metrics::global().counter_names();
+    for i in 0..3 {
+        for kind in ["publishes", "matches", "lock_waits"] {
+            let name = format!("broker.shard{i}.{kind}");
+            assert!(names.contains(&name), "missing counter {name}");
+        }
+    }
+    let after: u64 = (0..3)
+        .map(|i| metrics::global().counter(&format!("broker.shard{i}.publishes")).count())
+        .sum();
+    assert_eq!(after - before, 4, "each publish ticks exactly one shard");
+    let stats = router.stats();
+    assert_eq!(stats.published, 4);
+    assert_eq!(stats.delivered, 4);
+}
+
+#[test]
+fn router_shard_count_resolves_env_and_clamps() {
+    // Explicit count wins; 0 resolves from env/default but never below 1.
+    assert_eq!(Router::new(5).shard_count(), 5);
+    assert!(Router::new(0).shard_count() >= 1);
+}

@@ -17,6 +17,9 @@ export EDGEPIPE_BENCH_RUNS="${EDGEPIPE_BENCH_RUNS:-1}"
 # Density scenario: fixed pool size so the thread-reduction gate is
 # machine-independent (the bench also defaults this itself).
 export EDGEPIPE_WORKERS="${EDGEPIPE_WORKERS:-4}"
+# Many-subscriber scenario (schema 6): subscription counts for the
+# sharded-trie router gates. CI overrides to "1000,8000".
+export EDGEPIPE_BENCH_SUBS="${EDGEPIPE_BENCH_SUBS:-1000,10000,100000}"
 
 # Canonicalize: benches run from rust/, so a relative output path would
 # otherwise resolve against a different directory than the mktemp.
