@@ -21,7 +21,7 @@ use crate::caps::Caps;
 use crate::clock::PipelineClock;
 use crate::coordinator::discovery::AdWatcher;
 use crate::mqtt::{ClientOptions, MqttClient};
-use crate::serial::wire::{self, LinkCodec};
+use crate::serial::wire::{self, LinkCodec, LinkDecoder};
 use crate::serial::Codec;
 use crate::tensor::TensorsInfo;
 use crate::util::{Error, Result};
@@ -60,7 +60,15 @@ impl EdgeSensor {
 
     /// `Codec::Auto` gets a per-link adaptive state (keyed by topic).
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.link = LinkCodec::new(codec, &format!("edge_sensor.{}", self.topic));
+        let interval = self.link.keyframe_interval();
+        self.link = LinkCodec::new(codec, &format!("edge_sensor.{}", self.topic))
+            .with_keyframe_interval(interval);
+        self
+    }
+
+    /// Frames per delta-chain keyframe period (`Codec::Delta`/`Auto`).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.link.set_keyframe_interval(interval);
         self
     }
 
@@ -91,6 +99,7 @@ impl EdgeSensor {
 pub struct EdgeOutput {
     rx: Receiver<crate::mqtt::Message>,
     client: MqttClient,
+    decoder: LinkDecoder,
 }
 
 /// One received frame.
@@ -112,17 +121,29 @@ impl EdgeOutput {
             },
         )?;
         let rx = client.subscribe(topic)?;
-        Ok(EdgeOutput { rx, client })
+        let decoder = LinkDecoder::new(&format!("edge_output.{topic}"));
+        Ok(EdgeOutput { rx, client, decoder })
     }
 
     /// Blocking receive with timeout.
-    pub fn recv(&self, timeout: Duration) -> Result<EdgeFrame> {
-        let msg = self
-            .rx
-            .recv_timeout(timeout)
-            .map_err(|_| Error::Transport("edge_output: receive timeout".into()))?;
-        let (buffer, caps) = wire::decode_shared(&msg.payload)?;
-        Ok(EdgeFrame { buffer, caps })
+    ///
+    /// Delta-coded links: mid-chain frames that arrive after loss decode
+    /// to nothing and are skipped (the publisher re-keys at its next
+    /// keyframe); the timeout bounds the whole wait, not one message.
+    pub fn recv(&mut self, timeout: Duration) -> Result<EdgeFrame> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let remaining = deadline
+                .checked_duration_since(std::time::Instant::now())
+                .ok_or_else(|| Error::Transport("edge_output: receive timeout".into()))?;
+            let msg = self
+                .rx
+                .recv_timeout(remaining)
+                .map_err(|_| Error::Transport("edge_output: receive timeout".into()))?;
+            if let Some((buffer, caps)) = self.decoder.decode(&msg.payload)? {
+                return Ok(EdgeFrame { buffer, caps });
+            }
+        }
     }
 
     pub fn close(self) {
@@ -135,6 +156,8 @@ pub struct EdgeQueryClient {
     conn: TcpStream,
     caps: Option<Caps>,
     seq: u64,
+    link: LinkCodec,
+    resp_dec: LinkDecoder,
 }
 
 impl EdgeQueryClient {
@@ -144,7 +167,13 @@ impl EdgeQueryClient {
             .map_err(|e| Error::Transport(format!("edge query connect {server}: {e}")))?;
         conn.set_nodelay(true).ok();
         conn.set_read_timeout(Some(timeout))?;
-        Ok(EdgeQueryClient { conn, caps: None, seq: 0 })
+        Ok(EdgeQueryClient {
+            conn,
+            caps: None,
+            seq: 0,
+            link: LinkCodec::new(Codec::None, ""),
+            resp_dec: LinkDecoder::new("edge_query"),
+        })
     }
 
     /// Discover a server for `operation` via the broker, then connect.
@@ -154,6 +183,21 @@ impl EdgeQueryClient {
             .wait_any(timeout)
             .ok_or_else(|| Error::Transport(format!("no servers for `{operation}`")))?;
         Self::connect(&ad.endpoint(), timeout)
+    }
+
+    /// Request-hop codec (the client owns exactly one connection, so the
+    /// delta chain spans the client's lifetime).
+    pub fn with_codec(mut self, codec: Codec) -> Self {
+        let interval = self.link.keyframe_interval();
+        self.link =
+            LinkCodec::new(codec, "edge_query_client").with_keyframe_interval(interval);
+        self
+    }
+
+    /// Frames per delta-chain keyframe period (`Codec::Delta`/`Auto`).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.link.set_keyframe_interval(interval);
+        self
     }
 
     /// Declare the input stream type (sent with each request).
@@ -166,13 +210,17 @@ impl EdgeQueryClient {
         self.seq += 1;
         let mut buf = Buffer::new(payload.to_vec());
         buf.meta.seq = Some(self.seq);
-        let frame = wire::encode_vectored(&buf, self.caps.as_ref(), Codec::None)?;
+        let frame = self.link.encode(&buf, self.caps.as_ref())?;
         wire::write_frame_vectored(&mut self.conn, &frame)?;
-        let resp = wire::read_frame(&mut self.conn)?;
-        let (out, _caps) = wire::decode_shared(&resp)?;
-        // Handing an owned Vec across the library boundary is a real
-        // payload copy — keep it visible to the bytes-copied audit.
-        Ok(out.data.to_vec_counted())
+        // TCP is lossless, so a delta-coded response never desyncs; the
+        // loop only covers a server that rekeys mid-stream.
+        loop {
+            let resp = wire::read_frame(&mut self.conn)?;
+            let Some((out, _caps)) = self.resp_dec.decode(&resp)? else { continue };
+            // Handing an owned Vec across the library boundary is a real
+            // payload copy — keep it visible to the bytes-copied audit.
+            return Ok(out.data.to_vec_counted());
+        }
     }
 }
 
@@ -223,13 +271,40 @@ mod tests {
     fn pipeline_to_edge_output() {
         let broker = Broker::start("127.0.0.1:0").unwrap();
         let baddr = broker.addr().to_string();
-        let output = EdgeOutput::connect(&baddr, "feed/+").unwrap();
+        let mut output = EdgeOutput::connect(&baddr, "feed/+").unwrap();
         std::thread::sleep(Duration::from_millis(150));
         let mut sensor = EdgeSensor::connect(&baddr, "feed/a", &info4()).unwrap();
         sensor.publish(&[9, 9, 9, 9]).unwrap();
         let f = output.recv(Duration::from_secs(3)).unwrap();
         assert_eq!(&f.buffer.data[..], &[9, 9, 9, 9]);
         assert!(f.caps.unwrap().is_tensors());
+        sensor.close();
+        output.close();
+    }
+
+    #[test]
+    fn edge_sensor_delta_to_edge_output() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let baddr = broker.addr().to_string();
+        let info = TensorsInfo::one(TensorInfo::new(DType::U8, &[512]).unwrap());
+        let mut output = EdgeOutput::connect(&baddr, "feed/delta").unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        let mut sensor = EdgeSensor::connect(&baddr, "feed/delta", &info)
+            .unwrap()
+            .with_codec(Codec::Delta)
+            .with_keyframe_interval(4);
+        // Correlated frames: one byte steps per frame, rest stays put.
+        for i in 0..6u8 {
+            let mut payload = vec![7u8; 512];
+            payload[17] = i;
+            sensor.publish(&payload).unwrap();
+        }
+        for i in 0..6u8 {
+            let f = output.recv(Duration::from_secs(3)).unwrap();
+            assert_eq!(f.buffer.data.len(), 512);
+            assert_eq!(f.buffer.data[17], i);
+            assert_eq!(f.buffer.data[0], 7);
+        }
         sensor.close();
         output.close();
     }

@@ -44,6 +44,34 @@ pub fn default_broker() -> String {
     std::env::var("EDGEPIPE_BROKER").unwrap_or_else(|_| "127.0.0.1:1883".to_string())
 }
 
+/// Parse the link-codec properties shared by every transport sink:
+/// `compress=none|zlib|auto|delta|sparse` plus the optional
+/// `keyframe-interval=` (frames per delta keyframe). Nonsense is rejected
+/// at parse time, not at runtime: the interval requires a codec that can
+/// actually emit delta chains (`delta` or `auto`).
+fn codec_props(p: &Props, kind: &str) -> Result<(Codec, Option<u64>)> {
+    let codec = Codec::parse(prop_str(p, "compress", "none"))?;
+    let interval = match p.get("keyframe-interval") {
+        None => None,
+        Some(v) => {
+            let n: u64 = v.parse().map_err(|_| {
+                Error::Parse(format!("{kind}: bad keyframe-interval=`{v}` (want integer >= 1)"))
+            })?;
+            if n == 0 {
+                return Err(Error::Parse(format!("{kind}: bad keyframe-interval=0 (want >= 1)")));
+            }
+            if !matches!(codec, Codec::Delta | Codec::Auto) {
+                return Err(Error::Parse(format!(
+                    "{kind}: keyframe-interval= needs compress=delta|auto (got compress={})",
+                    codec.name()
+                )));
+            }
+            Some(n)
+        }
+    };
+    Ok((codec, interval))
+}
+
 fn compositor_from_props(props: &Props) -> Compositor {
     let mut c = Compositor::new(1);
     // Pad properties: sink_<n>::xpos / ypos / zorder
@@ -284,11 +312,13 @@ pub fn register_all(r: &mut Registry) {
         let topic = require_str(p, "pub-topic", "mqttsink")?;
         let broker = prop_str(p, "broker", "");
         let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
-        Ok(Box::new(
-            MqttSink::new(&broker, topic)
-                .with_codec(Codec::parse(prop_str(p, "compress", "none"))?)
-                .with_sync(prop_bool(p, "sync", true)?),
-        ))
+        let (codec, interval) = codec_props(p, "mqttsink")?;
+        let mut sink =
+            MqttSink::new(&broker, topic).with_codec(codec).with_sync(prop_bool(p, "sync", true)?);
+        if let Some(k) = interval {
+            sink = sink.with_keyframe_interval(k);
+        }
+        Ok(Box::new(sink))
     });
     r.register("mqttsrc", |p, _e| {
         let topic = require_str(p, "sub-topic", "mqttsrc")?;
@@ -300,9 +330,12 @@ pub fn register_all(r: &mut Registry) {
     r.register("zmqsink", |p, _e| {
         let bind = require_str(p, "bind", "zmqsink")?;
         let topic = prop_str(p, "topic", "stream");
-        Ok(Box::new(
-            ZmqSink::new(bind, topic).with_codec(Codec::parse(prop_str(p, "compress", "none"))?),
-        ))
+        let (codec, interval) = codec_props(p, "zmqsink")?;
+        let mut sink = ZmqSink::new(bind, topic).with_codec(codec);
+        if let Some(k) = interval {
+            sink = sink.with_keyframe_interval(k);
+        }
+        Ok(Box::new(sink))
     });
     r.register("zmqsrc", |p, _e| {
         let connect = require_str(p, "connect", "zmqsrc")?;
@@ -329,6 +362,18 @@ pub fn register_all(r: &mut Registry) {
             return Err(Error::Parse(format!("bad hedge-pct={hedge} (want 0..=1)")));
         }
         cfg.hedge_pct = (hedge > 0.0).then_some(hedge);
+        let (codec, interval) = codec_props(p, "tensor_query_client")?;
+        if codec == Codec::Delta && cfg.hedge_pct.is_some() {
+            // An explicit delta chain makes every non-keyframe request
+            // undecodable by a second server, so hedging would silently
+            // never fire mid-chain. `compress=auto` is fine: the client
+            // only hedges frames the codec emitted as self-contained.
+            return Err(Error::Parse(
+                "tensor_query_client: hedge-pct= cannot combine with compress=delta \
+                 (mid-chain requests are not hedgeable; use compress=auto)"
+                    .into(),
+            ));
+        }
         let reroute = prop_f64(p, "reroute-load", cfg.reroute_load)?;
         if !(0.0..=1.0).contains(&reroute) {
             return Err(Error::Parse(format!("bad reroute-load={reroute} (want 0..=1)")));
@@ -343,19 +388,22 @@ pub fn register_all(r: &mut Registry) {
             return Err(Error::Parse("bad breaker-open-ms=0 (want >= 1)".into()));
         }
         cfg.breaker.open_base = Duration::from_millis(open_ms);
-        match proto {
+        let mut client = match proto {
             QueryProtocol::TcpRaw => {
                 let server = require_str(p, "server", "tensor_query_client")?;
-                Ok(Box::new(QueryClient::tcp(op, server).with_timeout(timeout).with_resilience(cfg)))
+                QueryClient::tcp(op, server)
             }
             QueryProtocol::MqttHybrid => {
                 let broker = prop_str(p, "broker", "");
                 let broker = if broker.is_empty() { default_broker() } else { broker.to_string() };
-                Ok(Box::new(
-                    QueryClient::hybrid(op, &broker)?.with_timeout(timeout).with_resilience(cfg),
-                ))
+                QueryClient::hybrid(op, &broker)?
             }
+        };
+        client = client.with_timeout(timeout).with_resilience(cfg).with_codec(codec);
+        if let Some(k) = interval {
+            client = client.with_keyframe_interval(k);
         }
+        Ok(Box::new(client))
     });
     r.register("tensor_query_serversrc", |p, _e| {
         let op = require_str(p, "operation", "tensor_query_serversrc")?;
@@ -376,7 +424,12 @@ pub fn register_all(r: &mut Registry) {
     });
     r.register("tensor_query_serversink", |p, _e| {
         let op = require_str(p, "operation", "tensor_query_serversink")?;
-        Ok(Box::new(QueryServerSink::new(prop_str(p, "pair-id", op))))
+        let (codec, interval) = codec_props(p, "tensor_query_serversink")?;
+        let mut sink = QueryServerSink::new(prop_str(p, "pair-id", op)).with_codec(codec);
+        if let Some(k) = interval {
+            sink = sink.with_keyframe_interval(k);
+        }
+        Ok(Box::new(sink))
     });
 }
 
@@ -461,6 +514,60 @@ mod tests {
         p.insert("reroute-load".into(), "0.8".into());
         p.insert("breaker-open-ms".into(), "0".into());
         assert!(r.make("tensor_query_client", &p, &env).is_err(), "zero breaker-open-ms");
+    }
+
+    #[test]
+    fn transport_codec_props_validated() {
+        let r = registry();
+        let env = PipelineEnv::default();
+        // mqttsink: every codec arm parses; interval needs delta|auto.
+        let mut p = Props::new();
+        p.insert("pub-topic".into(), "t".into());
+        for codec in ["none", "zlib", "auto", "delta", "sparse"] {
+            p.insert("compress".into(), codec.into());
+            assert!(r.make("mqttsink", &p, &env).is_ok(), "compress={codec}");
+        }
+        p.insert("compress".into(), "lzma".into());
+        assert!(r.make("mqttsink", &p, &env).is_err(), "unknown codec");
+        p.insert("compress".into(), "delta".into());
+        p.insert("keyframe-interval".into(), "8".into());
+        assert!(r.make("mqttsink", &p, &env).is_ok());
+        p.insert("keyframe-interval".into(), "0".into());
+        assert!(r.make("mqttsink", &p, &env).is_err(), "zero interval");
+        p.insert("keyframe-interval".into(), "often".into());
+        assert!(r.make("mqttsink", &p, &env).is_err(), "non-numeric interval");
+        p.insert("keyframe-interval".into(), "8".into());
+        p.insert("compress".into(), "zlib".into());
+        assert!(r.make("mqttsink", &p, &env).is_err(), "interval without delta|auto");
+        p.insert("compress".into(), "auto".into());
+        assert!(r.make("mqttsink", &p, &env).is_ok(), "interval with auto");
+
+        // zmqsink shares the same helper.
+        let mut z = Props::new();
+        z.insert("bind".into(), "127.0.0.1:0".into());
+        z.insert("compress".into(), "delta".into());
+        z.insert("keyframe-interval".into(), "4".into());
+        assert!(r.make("zmqsink", &z, &env).is_ok());
+        z.insert("compress".into(), "sparse".into());
+        assert!(r.make("zmqsink", &z, &env).is_err(), "interval with sparse");
+
+        // Server response hop.
+        let mut s = Props::new();
+        s.insert("operation".into(), "obj".into());
+        s.insert("compress".into(), "delta".into());
+        s.insert("keyframe-interval".into(), "16".into());
+        assert!(r.make("tensor_query_serversink", &s, &env).is_ok());
+
+        // Query client: delta chains and hedging are mutually exclusive.
+        let mut q = Props::new();
+        q.insert("operation".into(), "obj".into());
+        q.insert("server".into(), "127.0.0.1:9000".into());
+        q.insert("compress".into(), "delta".into());
+        assert!(r.make("tensor_query_client", &q, &env).is_ok());
+        q.insert("hedge-pct".into(), "0.9".into());
+        assert!(r.make("tensor_query_client", &q, &env).is_err(), "hedge + delta");
+        q.insert("compress".into(), "auto".into());
+        assert!(r.make("tensor_query_client", &q, &env).is_ok(), "hedge + auto ok");
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::metrics;
 use crate::mqtt::{ClientOptions, Message, MqttClient};
 use crate::ntp::{NtpServer, SyncedClock};
 use crate::serial::flexbuf::{self, Value};
-use crate::serial::wire::{self, LinkCodec};
+use crate::serial::wire::{LinkCodec, LinkDecoder};
 use crate::serial::Codec;
 use crate::util::{Error, Result};
 use crate::log_warn;
@@ -51,9 +51,19 @@ impl MqttSink {
     }
 
     /// `Codec::Auto` gets a per-link adaptive state (keyed by topic) that
-    /// samples compression ratios into `codec.auto.mqttsink.<topic>.*`.
+    /// samples compression ratios into `codec.auto.mqttsink.<topic>.*`;
+    /// `Codec::Delta`/`Auto` additionally count keyframes/deltas into
+    /// `codec.delta.mqttsink.<topic>.*`.
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.link = LinkCodec::new(codec, &format!("mqttsink.{}", self.topic));
+        let interval = self.link.keyframe_interval();
+        self.link = LinkCodec::new(codec, &format!("mqttsink.{}", self.topic))
+            .with_keyframe_interval(interval);
+        self
+    }
+
+    /// Frames per delta-chain keyframe period (`Codec::Delta`/`Auto`).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.link.set_keyframe_interval(interval);
         self
     }
 
@@ -154,6 +164,7 @@ pub struct MqttSrc {
     synced: SyncedClock,
     last_caps: Option<Caps>,
     sync_started: bool,
+    decoder: LinkDecoder,
 }
 
 impl MqttSrc {
@@ -167,6 +178,7 @@ impl MqttSrc {
             synced: SyncedClock::new(),
             last_caps: None,
             sync_started: false,
+            decoder: LinkDecoder::new(&format!("mqttsrc.{topic}")),
         }
     }
 
@@ -231,12 +243,16 @@ impl Element for MqttSrc {
         match rx.recv_timeout(Duration::from_millis(100)) {
             Ok(msg) => {
                 // msg.payload is the socket read's single allocation; the
-                // decoded buffer is a slice view into it (zero copy).
-                let (mut buf, caps) =
-                    wire::decode_shared(&msg.payload).map_err(|e| Error::element(&ctx.name, e))?;
+                // decoded buffer is a slice view into it (zero copy). The
+                // LinkDecoder tracks this subscription's delta chain; a
+                // mid-chain delta after loss decodes to None (dropped,
+                // never corrupt) until the publisher's next keyframe.
+                let decoded =
+                    self.decoder.decode(&msg.payload).map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global()
                     .counter(&format!("mqttsrc.{}", ctx.name))
                     .add_bytes(msg.payload.len() as u64);
+                let Some((mut buf, caps)) = decoded else { return Ok(true) };
                 if let Some(c) = caps {
                     if self.last_caps.as_ref() != Some(&c) {
                         ctx.push_caps(c.clone())?;
@@ -333,6 +349,24 @@ mod tests {
         h.push(Buffer::new(vec![1, 2, 3, 4])).unwrap();
         let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
         assert_eq!(&out.data[..], &[1, 2, 3, 4]);
+        drop(h);
+        let _ = pr.stop(Duration::from_secs(5));
+        let _ = sr.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn pubsub_with_delta_codec() {
+        let broker = Broker::start("127.0.0.1:0").unwrap();
+        let (pr, sr, h, rx) = pubsub_pair(&broker.addr().to_string(), "t/delta", Codec::Delta);
+        // A correlated sequence: keyframe, then deltas; each must arrive
+        // byte-exact through the stateful decode path.
+        let mut payload = vec![9u8; 4096];
+        for i in 0..5u8 {
+            payload[i as usize * 700] = i;
+            h.push(Buffer::new(payload.clone()).with_pts(i as u64 * 1000)).unwrap();
+            let out = rx.recv_timeout(Duration::from_secs(3)).unwrap();
+            assert_eq!(&out.data[..], &payload[..], "frame {i}");
+        }
         drop(h);
         let _ = pr.stop(Duration::from_secs(5));
         let _ = sr.stop(Duration::from_secs(5));

@@ -31,7 +31,7 @@ use crate::coordinator::health::{self, BreakerConfig, HealthMap};
 use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
 use crate::mqtt::MqttClient;
-use crate::serial::wire::{self, LinkCodec, WireFrame};
+use crate::serial::wire::{self, LinkCodec, LinkDecoder, WireFrame};
 use crate::serial::Codec;
 use crate::util::rng::XorShift64;
 use crate::util::{write_all_vectored, Error, Result};
@@ -73,6 +73,11 @@ impl ConnTable {
 
     pub fn len(&self) -> usize {
         self.conns.lock().unwrap().len()
+    }
+
+    /// Ids of the currently-connected clients (codec-state pruning).
+    fn ids(&self) -> Vec<u64> {
+        self.conns.lock().unwrap().keys().copied().collect()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -222,6 +227,7 @@ impl Element for QueryServerSrc {
         self.shutdown = Some(shutdown.clone());
 
         let name = ctx.name.clone();
+        let link = format!("queryserversrc.{}", self.pair_id);
         std::thread::Builder::new()
             .name(format!("query-accept-{}", self.operation))
             .spawn(move || {
@@ -234,7 +240,7 @@ impl Element for QueryServerSrc {
                             log_debug!("query", "{name}: client {id} from {peer}");
                             let Ok(wstream) = stream.try_clone() else { continue };
                             table.insert(id, wstream);
-                            spawn_client_reader(id, stream, table.clone(), tx.clone());
+                            spawn_client_reader(id, link.clone(), stream, table.clone(), tx.clone());
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(5));
@@ -296,6 +302,7 @@ impl Element for QueryServerSrc {
 
 fn spawn_client_reader(
     id: u64,
+    link: String,
     mut stream: TcpStream,
     table: Arc<ConnTable>,
     tx: SyncSender<(Option<Caps>, Buffer)>,
@@ -303,14 +310,23 @@ fn spawn_client_reader(
     std::thread::Builder::new()
         .name(format!("query-client-{id}"))
         .spawn(move || {
+            // Per-connection decode state: delta-coded request streams
+            // re-key on reconnect (the client resets its chain), so a
+            // fresh decoder per connection is exactly right.
+            let mut decoder = LinkDecoder::new(&link);
             loop {
                 let frame = match wire::read_frame(&mut stream) {
                     Ok(f) => f,
                     Err(_) => break,
                 };
                 // One allocation per request: the decoded buffer is a
-                // slice view into the received frame.
-                let Ok((mut buf, caps)) = wire::decode_shared(&frame) else { break };
+                // slice view into the received frame. A mid-chain delta
+                // after a broken chain decodes to None and is skipped.
+                let decoded = match decoder.decode(&frame) {
+                    Ok(d) => d,
+                    Err(_) => break,
+                };
+                let Some((mut buf, caps)) = decoded else { continue };
                 buf.meta.client_id = Some(id);
                 if tx.send((caps, buf)).is_err() {
                     break;
@@ -323,11 +339,18 @@ fn spawn_client_reader(
 }
 
 /// Routes response buffers back to the tagged client connection.
+///
+/// One sink serves every connected client, but the stateful codecs
+/// (`Delta`, `Auto`) track per-receiver history — so the sink keeps one
+/// [`LinkCodec`] per client id, created on first response and pruned
+/// when the client's connection is gone.
 pub struct QueryServerSink {
     pub pair_id: String,
     table: Option<Arc<ConnTable>>,
     caps: Option<Caps>,
-    link: LinkCodec,
+    codec: Codec,
+    keyframe_interval: u64,
+    links: HashMap<u64, LinkCodec>,
 }
 
 impl QueryServerSink {
@@ -336,14 +359,25 @@ impl QueryServerSink {
             pair_id: pair_id.to_string(),
             table: None,
             caps: None,
-            link: LinkCodec::new(Codec::None, ""),
+            codec: Codec::None,
+            keyframe_interval: wire::DEFAULT_KEYFRAME_INTERVAL,
+            links: HashMap::new(),
         }
     }
 
     /// Codec for response frames (`Codec::Auto` adapts per link, sampling
-    /// into `codec.auto.queryserver.<pair_id>.*`).
+    /// into `codec.auto.queryserver.<pair_id>.*`; `Delta`/`Auto` count
+    /// keyframes/deltas into `codec.delta.queryserver.<pair_id>.*`,
+    /// aggregated across clients).
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.link = LinkCodec::new(codec, &format!("queryserver.{}", self.pair_id));
+        self.codec = codec;
+        self.links.clear();
+        self
+    }
+
+    /// Frames per delta-chain keyframe period (`Codec::Delta`/`Auto`).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.keyframe_interval = interval.max(1);
         self
     }
 }
@@ -371,19 +405,34 @@ impl Element for QueryServerSink {
                 Ok(())
             }
             Item::Buffer(b) => {
-                let table =
-                    self.table.as_ref().ok_or_else(|| Error::element(&ctx.name, "not started"))?;
+                let table = self
+                    .table
+                    .clone()
+                    .ok_or_else(|| Error::element(&ctx.name, "not started"))?;
                 let Some(id) = b.meta.client_id else {
                     return Err(Error::element(&ctx.name, "response buffer without client id"));
                 };
-                let frame = self
-                    .link
-                    .encode(&b, self.caps.as_ref())
-                    .map_err(|e| Error::element(&ctx.name, e))?;
+                let frame = {
+                    let (codec, scope, interval) =
+                        (self.codec, &self.pair_id, self.keyframe_interval);
+                    let link = self.links.entry(id).or_insert_with(|| {
+                        LinkCodec::new(codec, &format!("queryserver.{scope}"))
+                            .with_keyframe_interval(interval)
+                    });
+                    link.encode(&b, self.caps.as_ref())
+                        .map_err(|e| Error::element(&ctx.name, e))?
+                };
                 // A vanished client is not a pipeline error (R4: clients
-                // come and go); drop the response.
+                // come and go); drop the response and its codec state.
                 if let Err(e) = table.write_frame(id, &frame) {
+                    self.links.remove(&id);
                     log_debug!("query", "{}: {e}", ctx.name);
+                }
+                // Codec state for clients that disconnected without a
+                // failed write must not accumulate.
+                if self.links.len() > 2 * table.len().max(4) {
+                    let live = table.ids();
+                    self.links.retain(|cid, _| live.contains(cid));
                 }
                 Ok(())
             }
@@ -467,8 +516,12 @@ pub struct QueryClient {
     health: Option<Arc<HealthMap>>,
     /// Peer we most recently failed on (demoted, not blacklisted).
     last_failed: Option<String>,
-    /// Cached connection to the last hedge target.
-    hedge_conn: Option<(String, TcpStream)>,
+    /// Cached connection to the last hedge target, with its response
+    /// decode state (delta chains are per-connection).
+    hedge_conn: Option<(String, TcpStream, LinkDecoder)>,
+    /// Response decode state for the primary connection; replaced on
+    /// every (re)connect.
+    resp_dec: LinkDecoder,
     rng: XorShift64,
 }
 
@@ -488,6 +541,7 @@ impl QueryClient {
             health: None,
             last_failed: None,
             hedge_conn: None,
+            resp_dec: LinkDecoder::new(&format!("query.{operation}")),
             rng: XorShift64::new(jitter_seed()),
         }
     }
@@ -508,6 +562,7 @@ impl QueryClient {
             health: None,
             last_failed: None,
             hedge_conn: None,
+            resp_dec: LinkDecoder::new(&format!("query.{operation}")),
             rng: XorShift64::new(jitter_seed()),
         })
     }
@@ -518,10 +573,20 @@ impl QueryClient {
     }
 
     /// Codec for request frames (`Codec::Auto` adapts per link, sampling
-    /// into `codec.auto.query.<operation>.*`). The server decodes via the
-    /// wire flag, so no server-side configuration is needed.
+    /// into `codec.auto.query.<operation>.*`; `Delta`/`Auto` count
+    /// keyframes/deltas into `codec.delta.query.<operation>.*`). The
+    /// server decodes via the wire flag, so no server-side configuration
+    /// is needed.
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.link = LinkCodec::new(codec, &format!("query.{}", self.operation));
+        let interval = self.link.keyframe_interval();
+        self.link = LinkCodec::new(codec, &format!("query.{}", self.operation))
+            .with_keyframe_interval(interval);
+        self
+    }
+
+    /// Frames per delta-chain keyframe period (`Codec::Delta`/`Auto`).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.link.set_keyframe_interval(interval);
         self
     }
 
@@ -646,6 +711,12 @@ impl QueryClient {
         })?;
         stream.set_nodelay(true).ok();
         self.conn = Some(stream);
+        // Fresh connection, fresh codec state on BOTH directions: the
+        // server allocates a new per-connection decoder (so our next
+        // delta-codec request must re-key) and a new per-client response
+        // chain (so our response decoder must forget the old one).
+        self.link.reset_chain();
+        self.resp_dec = LinkDecoder::new(&format!("query.{}", self.operation));
         Ok(())
     }
 
@@ -731,16 +802,24 @@ impl QueryClient {
         req.meta.seq = Some(seq);
         let frame = self.link.encode(&req, self.in_caps.as_ref())?;
 
+        // A mid-chain delta request only makes sense to the connection
+        // whose chain it extends; duplicating it to a second server
+        // would just be dropped there. Keyframes (and every stateless
+        // codec) hedge fine.
+        let hedgeable = frame.header[6] != Codec::Delta as u8
+            || frame.header[5] & wire::FLAG_KEYFRAME != 0;
         if let Some(pct) = self.cfg.hedge_pct {
-            let primary = self.peer_key();
-            let hedge_after = self
-                .health()
-                .rtt_percentile(&primary, pct)
-                .map(|us| Duration::from_micros(us as u64).max(Duration::from_millis(1)));
-            if let Some(delay) = hedge_after {
-                if delay < budget {
-                    if let Some(target) = self.hedge_target(&primary) {
-                        return self.exchange_hedged(&frame, seq, budget, delay, target, name);
+            if hedgeable {
+                let primary = self.peer_key();
+                let hedge_after = self
+                    .health()
+                    .rtt_percentile(&primary, pct)
+                    .map(|us| Duration::from_micros(us as u64).max(Duration::from_millis(1)));
+                if let Some(delay) = hedge_after {
+                    if delay < budget {
+                        if let Some(target) = self.hedge_target(&primary) {
+                            return self.exchange_hedged(&frame, seq, budget, delay, target, name);
+                        }
                     }
                 }
             }
@@ -762,7 +841,7 @@ impl QueryClient {
         stream.set_read_timeout(Some(budget))?;
         let t0 = Instant::now();
         let r = wire::write_frame_vectored(stream, frame)
-            .and_then(|_| read_response(stream, seq));
+            .and_then(|_| read_response(stream, seq, &mut self.resp_dec));
         match r {
             Ok(rc) => {
                 health.record_success(&key, t0.elapsed().as_micros() as f64);
@@ -789,7 +868,8 @@ impl QueryClient {
         target: ServiceAd,
         name: &str,
     ) -> Result<(Buffer, Option<Caps>)> {
-        type Verdict = (bool, Result<(Buffer, Option<Caps>)>, f64, Option<TcpStream>);
+        type Verdict =
+            (bool, Result<(Buffer, Option<Caps>)>, f64, Option<(TcpStream, LinkDecoder)>);
         let health = self.health();
         let primary_key = self.peer_key();
         let end = Instant::now() + budget;
@@ -797,6 +877,12 @@ impl QueryClient {
         let mut pstream = self.conn.take().unwrap();
         pstream.set_read_timeout(Some(budget))?;
         let pcancel = pstream.try_clone().ok();
+        // The racer owns the connection's decode state for the duration
+        // and hands it back with the stream if it wins.
+        let mut pdec = std::mem::replace(
+            &mut self.resp_dec,
+            LinkDecoder::new(&format!("query.{}", self.operation)),
+        );
         let (tx, rx) = std::sync::mpsc::channel::<Verdict>();
         let ptx = tx.clone();
         let pframe = frame.clone();
@@ -805,15 +891,19 @@ impl QueryClient {
             .spawn(move || {
                 let t0 = Instant::now();
                 let r = wire::write_frame_vectored(&mut pstream, &pframe)
-                    .and_then(|_| read_response(&mut pstream, seq));
-                let _ = ptx.send((true, r, t0.elapsed().as_micros() as f64, Some(pstream)));
+                    .and_then(|_| read_response(&mut pstream, seq, &mut pdec));
+                let _ =
+                    ptx.send((true, r, t0.elapsed().as_micros() as f64, Some((pstream, pdec))));
             })
             .map_err(|e| Error::Transport(format!("spawn hedge: {e}")))?;
 
         // Fast path: primary answers before the hedge trigger.
         match rx.recv_timeout(delay) {
-            Ok((_, Ok(rc), rtt, stream)) => {
-                self.conn = stream;
+            Ok((_, Ok(rc), rtt, conn)) => {
+                if let Some((stream, dec)) = conn {
+                    self.conn = Some(stream);
+                    self.resp_dec = dec;
+                }
                 health.record_success(&primary_key, rtt);
                 return Ok(rc);
             }
@@ -830,10 +920,11 @@ impl QueryClient {
         let hedge_budget = end.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
         let hkey = target.server_id.clone();
         let haddr = target.endpoint();
-        // Reuse the cached hedge connection when it points at the same
-        // peer; otherwise dial fresh within the remaining budget.
+        // Reuse the cached hedge connection (and its response decode
+        // state) when it points at the same peer; otherwise dial fresh
+        // within the remaining budget.
         let cached = match self.hedge_conn.take() {
-            Some((id, s)) if id == hkey => Some(s),
+            Some((id, s, d)) if id == hkey => Some((s, d)),
             _ => None,
         };
         let hcancel: Arc<Mutex<Option<TcpStream>>> = Arc::new(Mutex::new(None));
@@ -846,14 +937,14 @@ impl QueryClient {
             .name("query-hedge-alt".into())
             .spawn(move || {
                 let t0 = Instant::now();
-                let run = || -> Result<((Buffer, Option<Caps>), TcpStream)> {
-                    let mut s = match cached {
-                        Some(s) => s,
+                let run = || -> Result<((Buffer, Option<Caps>), TcpStream, LinkDecoder)> {
+                    let (mut s, mut dec) = match cached {
+                        Some(sd) => sd,
                         None => {
                             let s = connect_within(&haddr, hedge_budget)
                                 .map_err(|e| Error::Transport(format!("hedge connect {haddr}: {e}")))?;
                             s.set_nodelay(true).ok();
-                            s
+                            (s, LinkDecoder::new(""))
                         }
                     };
                     s.set_read_timeout(Some(hedge_budget))?;
@@ -868,12 +959,13 @@ impl QueryClient {
                         return Err(Error::Transport("hedge cancelled before send".into()));
                     }
                     wire::write_frame_vectored(&mut s, &hframe)?;
-                    let rc = read_response(&mut s, seq)?;
-                    Ok((rc, s))
+                    let rc = read_response(&mut s, seq, &mut dec)?;
+                    Ok((rc, s, dec))
                 };
                 match run() {
-                    Ok((rc, s)) => {
-                        let _ = htx.send((false, Ok(rc), t0.elapsed().as_micros() as f64, Some(s)));
+                    Ok((rc, s, dec)) => {
+                        let _ = htx
+                            .send((false, Ok(rc), t0.elapsed().as_micros() as f64, Some((s, dec))));
                     }
                     Err(e) => {
                         let _ = htx.send((false, Err(e), 0.0, None));
@@ -895,11 +987,14 @@ impl QueryClient {
         loop {
             let left = end.saturating_duration_since(Instant::now());
             match rx.recv_timeout(left.max(Duration::from_millis(1))) {
-                Ok((from_primary, Ok(rc), rtt, stream)) => {
+                Ok((from_primary, Ok(rc), rtt, conn)) => {
                     if from_primary {
                         // Primary won after all: cancel the hedge.
                         cancel_hedge();
-                        self.conn = stream;
+                        if let Some((s, dec)) = conn {
+                            self.conn = Some(s);
+                            self.resp_dec = dec;
+                        }
                         health.record_success(&primary_key, rtt);
                     } else {
                         // Hedge won: cancel the primary read — its late
@@ -907,8 +1002,8 @@ impl QueryClient {
                         Self::counter(name, "hedge_wins").inc();
                         cancel(&pcancel);
                         self.conn = None;
-                        if let Some(s) = stream {
-                            self.hedge_conn = Some((hkey.clone(), s));
+                        if let Some((s, dec)) = conn {
+                            self.hedge_conn = Some((hkey.clone(), s, dec));
                         }
                         health.record_success(&hkey, rtt);
                     }
@@ -960,10 +1055,21 @@ fn connect_within(addr: &str, budget: Duration) -> std::io::Result<TcpStream> {
 /// instead of being delivered as the answer to the current request. A
 /// response from the future (seq ahead) can only mean protocol
 /// corruption. Servers that strip meta (seq `None`) skip the check.
-fn read_response(stream: &mut TcpStream, seq: u64) -> Result<(Buffer, Option<Caps>)> {
+///
+/// `dec` is this connection's response decode state (delta-coded
+/// response streams are per-connection chains); a mid-chain delta the
+/// chain can't apply is skipped like a stale response.
+fn read_response(
+    stream: &mut TcpStream,
+    seq: u64,
+    dec: &mut LinkDecoder,
+) -> Result<(Buffer, Option<Caps>)> {
     loop {
         let f = wire::read_frame(stream)?;
-        let (buf, caps) = wire::decode_shared(&f)?;
+        let Some((buf, caps)) = dec.decode(&f)? else {
+            log_debug!("query", "skipping mid-chain response frame (waiting for a keyframe)");
+            continue;
+        };
         match buf.meta.seq {
             Some(s) if s < seq => {
                 log_debug!("query", "draining stale response seq {s} (waiting for {seq})");
@@ -1070,7 +1176,7 @@ impl Element for QueryClient {
         if let Some(c) = self.conn.take() {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
-        if let Some((_, c)) = self.hedge_conn.take() {
+        if let Some((_, c, _)) = self.hedge_conn.take() {
             let _ = c.shutdown(std::net::Shutdown::Both);
         }
     }
@@ -1172,6 +1278,45 @@ mod tests {
         let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(&out.data[..], &[2, 4, 6, 8]);
         assert_eq!(out.pts, Some(7));
+        drop(h);
+        let _ = cr.stop(Duration::from_secs(5));
+        let _ = server.stop(Duration::from_secs(5));
+    }
+
+    #[test]
+    fn tcp_query_with_delta_hops() {
+        // Delta on the request hop AND per-client delta on the response
+        // hop: chains survive a correlated frame sequence end to end.
+        let port = free_port();
+        let mut p = Pipeline::new();
+        let src = QueryServerSrc::new("op-delta")
+            .with_pair_id("delta-rt")
+            .with_bind(&format!("127.0.0.1:{port}"));
+        let f = TensorFilter::custom(Box::new(|b: &Buffer| {
+            Ok(b.data.iter().map(|&x| x.wrapping_mul(2)).collect())
+        }));
+        let s = p.add("ssrc", Box::new(src)).unwrap();
+        let fi = p.add("f", Box::new(f)).unwrap();
+        let k = p
+            .add("ssink", Box::new(QueryServerSink::new("delta-rt").with_codec(Codec::Delta)))
+            .unwrap();
+        p.link(s, fi).unwrap();
+        p.link(fi, k).unwrap();
+        let server = p.start().unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+
+        let client =
+            QueryClient::tcp("op-delta", &format!("127.0.0.1:{port}")).with_codec(Codec::Delta);
+        let (cr, h, rx) = client_pipeline(client);
+        let mut payload = vec![5u8; 2048];
+        for i in 0..6u8 {
+            payload[i as usize * 300] = i;
+            h.push(Buffer::new(payload.clone()).with_pts(i as u64)).unwrap();
+            let out = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let expect: Vec<u8> = payload.iter().map(|&x| x.wrapping_mul(2)).collect();
+            assert_eq!(&out.data[..], &expect[..], "frame {i}");
+            assert_eq!(out.pts, Some(i as u64));
+        }
         drop(h);
         let _ = cr.stop(Duration::from_secs(5));
         let _ = server.stop(Duration::from_secs(5));

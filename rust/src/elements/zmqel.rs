@@ -10,7 +10,7 @@ use std::time::Duration;
 use crate::caps::Caps;
 use crate::element::{Ctx, Element, Item, Workload};
 use crate::metrics;
-use crate::serial::wire::{self, LinkCodec};
+use crate::serial::wire::{LinkCodec, LinkDecoder};
 use crate::serial::Codec;
 use crate::util::{Error, Result};
 use crate::zmq::{PubSocket, SubSocket, ZmqMessage};
@@ -36,9 +36,19 @@ impl ZmqSink {
     }
 
     /// `Codec::Auto` gets a per-link adaptive state (keyed by topic) that
-    /// samples compression ratios into `codec.auto.zmqsink.<topic>.*`.
+    /// samples compression ratios into `codec.auto.zmqsink.<topic>.*`;
+    /// `Codec::Delta`/`Auto` additionally count keyframes/deltas into
+    /// `codec.delta.zmqsink.<topic>.*`.
     pub fn with_codec(mut self, codec: Codec) -> Self {
-        self.link = LinkCodec::new(codec, &format!("zmqsink.{}", self.topic));
+        let interval = self.link.keyframe_interval();
+        self.link = LinkCodec::new(codec, &format!("zmqsink.{}", self.topic))
+            .with_keyframe_interval(interval);
+        self
+    }
+
+    /// Frames per delta-chain keyframe period (`Codec::Delta`/`Auto`).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.link.set_keyframe_interval(interval);
         self
     }
 
@@ -101,11 +111,18 @@ pub struct ZmqSrc {
     pub topic: String,
     rx: Option<Receiver<ZmqMessage>>,
     last_caps: Option<Caps>,
+    decoder: LinkDecoder,
 }
 
 impl ZmqSrc {
     pub fn new(connect: &str, topic: &str) -> Self {
-        Self { connect: connect.to_string(), topic: topic.to_string(), rx: None, last_caps: None }
+        Self {
+            connect: connect.to_string(),
+            topic: topic.to_string(),
+            rx: None,
+            last_caps: None,
+            decoder: LinkDecoder::new(&format!("zmqsrc.{topic}")),
+        }
     }
 }
 
@@ -147,10 +164,13 @@ impl Element for ZmqSrc {
         match rx.recv_timeout(Duration::from_millis(100)) {
             Ok((_topic, payload)) => {
                 // payload is the socket read's single allocation; decode
-                // into a slice view of it (zero copy).
-                let (mut buf, caps) =
-                    wire::decode_shared(&payload).map_err(|e| Error::element(&ctx.name, e))?;
+                // into a slice view of it (zero copy). Mid-chain delta
+                // frames after loss decode to None and are dropped until
+                // the publisher's next keyframe.
+                let decoded =
+                    self.decoder.decode(&payload).map_err(|e| Error::element(&ctx.name, e))?;
                 metrics::global().counter(&format!("zmqsrc.{}", ctx.name)).add_bytes(payload.len() as u64);
+                let Some((mut buf, caps)) = decoded else { return Ok(true) };
                 if let Some(c) = caps {
                     if self.last_caps.as_ref() != Some(&c) {
                         ctx.push_caps(c.clone())?;

@@ -7,7 +7,11 @@
 //! `local_hits`/`injector_hits`/`steals` dequeue split, and
 //! `queue_locks`/`lock_waits` ready-queue contention — see
 //! [`crate::element::sched`]), `codec.auto.<link>.*` from the adaptive
-//! wire codec, `appsink.<name>` delivery counters,
+//! wire codec, `codec.delta.<link>.{keyframes,deltas,bytes_saved}` from
+//! delta-coded link encoders plus `codec.delta.<link>.resyncs` from
+//! their decoders (chain breaks observed after loss/reorder — see
+//! [`crate::serial::wire::LinkDecoder`]), `appsink.<name>` delivery
+//! counters,
 //! `query.<name>.{retries,hedges,hedge_wins,reroutes,breaker_open,frames_dropped}`
 //! plus the `query.<name>.rtt_us` histogram from the resilient offload
 //! client ([`crate::elements::QueryClient`]), and

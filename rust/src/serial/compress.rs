@@ -31,9 +31,16 @@ use crate::util::{Error, Result};
 
 /// Compression codec for transport frames.
 ///
-/// The `u8` value of `None`/`Zlib` is the on-wire codec flag. `Auto` is a
-/// *policy*, not a wire codec: encoders resolve it to `None` or `Zlib`
-/// per frame before the header is written, so it never travels.
+/// The `u8` value of `None`/`Zlib`/`Delta`/`Sparse` is the on-wire codec
+/// flag. `Auto` is a *policy*, not a wire codec: encoders resolve it to
+/// one of the concrete arms per frame before the header is written, so
+/// it never travels (its discriminant is reserved and rejected on
+/// receive).
+///
+/// `Delta` and `Sparse` are *stateful link codecs*: they need the
+/// per-link history kept by `wire::LinkCodec` / `wire::LinkDecoder`
+/// (delta chains) or the stream's tensor layout (sparse COO), so the
+/// stateless [`compress`]/[`decompress`] helpers reject them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 #[repr(u8)]
 pub enum Codec {
@@ -41,6 +48,8 @@ pub enum Codec {
     None = 0,
     Zlib = 1,
     Auto = 2,
+    Delta = 3,
+    Sparse = 4,
 }
 
 impl Codec {
@@ -49,6 +58,8 @@ impl Codec {
             Codec::None => "none",
             Codec::Zlib => "zlib",
             Codec::Auto => "auto",
+            Codec::Delta => "delta",
+            Codec::Sparse => "sparse",
         }
     }
 
@@ -57,6 +68,8 @@ impl Codec {
             "none" => Codec::None,
             "zlib" | "gz" => Codec::Zlib,
             "auto" => Codec::Auto,
+            "delta" => Codec::Delta,
+            "sparse" => Codec::Sparse,
             other => return Err(Error::Serial(format!("unknown codec `{other}`"))),
         })
     }
@@ -73,6 +86,12 @@ static DEFLATES: AtomicU64 = AtomicU64::new(0);
 /// Total deflate operations so far in this process.
 pub fn deflate_ops() -> u64 {
     DEFLATES.load(Ordering::Relaxed)
+}
+
+/// Count one deflate operation performed outside [`deflate_into`]
+/// (the delta codec runs its own streaming compressor).
+pub(crate) fn note_deflate() {
+    DEFLATES.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Streaming compressor: zlib-deflate `data` appended directly onto
@@ -169,6 +188,9 @@ pub fn compress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
         Codec::Auto => Err(Error::Serial(
             "Codec::Auto is a policy, not a wire codec; resolve it before compressing".into(),
         )),
+        Codec::Delta | Codec::Sparse => Err(Error::Serial(format!(
+            "Codec::{codec:?} is a stateful link codec; use wire::LinkCodec to encode it"
+        ))),
     }
 }
 
@@ -179,6 +201,9 @@ pub fn decompress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
         Codec::Auto => Err(Error::Serial(
             "Codec::Auto is a policy, not a wire codec; it never appears on received frames".into(),
         )),
+        Codec::Delta | Codec::Sparse => Err(Error::Serial(format!(
+            "Codec::{codec:?} is a stateful link codec; use wire::LinkDecoder to decode it"
+        ))),
     }
 }
 
@@ -186,59 +211,175 @@ pub fn decompress(codec: Codec, data: &[u8]) -> Result<Vec<u8>> {
 // Adaptive codec (Codec::Auto)
 // ---------------------------------------------------------------------------
 
+/// What `Codec::Auto` should do with the next frame on a link:
+/// measure every applicable arm ([`AutoDecision::Probe`]) or emit the
+/// current steady-state arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoDecision {
+    /// Sample all applicable arms on this frame and report the sizes
+    /// via [`AutoCodec::record_probe`]; the winner is adopted.
+    Probe,
+    /// Encode with the current arm and report via
+    /// [`AutoCodec::record_arm`] / [`AutoCodec::record_none`].
+    Use(Codec),
+}
+
 /// Per-link adaptive codec state backing `Codec::Auto`.
 ///
-/// Strategy: keep compressing while deflate earns its keep. After
-/// `strike_limit` consecutive frames whose compressed/raw ratio is at or
-/// above `max_ratio` (incompressible content — pre-compressed video,
-/// noise, ciphertext), fall back to `Codec::None` and stop paying for
-/// deflate. While in pass-through mode, re-probe one frame every
-/// `probe_interval` frames; a good ratio switches compression back on.
+/// Strategy: on a probe frame (the first frame of a link, then one
+/// every `probe_interval`) the link samples the encoded size of every
+/// applicable arm — zlib always, XOR-delta when the previous frame
+/// lines up, sparse COO when the caps describe static tensors — and
+/// adopts the smallest; if even the best arm fails `max_ratio`, the
+/// link falls back to `Codec::None` and stops paying for encoding.
+/// Between probes the adopted arm keeps reporting its achieved ratio:
+/// after `strike_limit` consecutive frames at or above `max_ratio`
+/// (content drifted incompressible — pre-compressed video, noise,
+/// ciphertext) the link drops to pass-through until a probe finds an
+/// arm that pays again.
 ///
 /// Every sampled ratio and every mode switch is recorded in the global
 /// [`crate::metrics`] registry under `codec.auto.<link>.*` so operators
 /// can see what each link decided and why.
 pub struct AutoCodec {
-    compressing: bool,
+    mode: Codec,
     strikes: u32,
     frames_since_probe: u64,
     /// Ratios at or above this count as "not worth compressing".
     pub max_ratio: f64,
     /// Consecutive bad ratios before falling back to `Codec::None`.
     pub strike_limit: u32,
-    /// Pass-through frames between re-probes.
+    /// Frames between probes.
     pub probe_interval: u64,
     // Metric handles resolved once at construction — the per-frame cost
     // of recording is an atomic op, not a format!+registry lookup.
     m_ratio: std::sync::Arc<crate::metrics::Histogram>,
     m_zlib_frames: std::sync::Arc<crate::metrics::Counter>,
+    m_delta_frames: std::sync::Arc<crate::metrics::Counter>,
+    m_sparse_frames: std::sync::Arc<crate::metrics::Counter>,
     m_none_frames: std::sync::Arc<crate::metrics::Counter>,
     m_to_none: std::sync::Arc<crate::metrics::Counter>,
     m_to_zlib: std::sync::Arc<crate::metrics::Counter>,
+    m_to_delta: std::sync::Arc<crate::metrics::Counter>,
+    m_to_sparse: std::sync::Arc<crate::metrics::Counter>,
 }
 
 impl AutoCodec {
     pub fn new(link: &str) -> Self {
         let m = crate::metrics::global();
         Self {
-            compressing: true,
+            mode: Codec::Zlib,
             strikes: 0,
-            frames_since_probe: 0,
+            // Primed at the probe interval so the first `next_mode()`
+            // call probes — a fresh link measures every arm before
+            // settling. (The legacy `next_codec()` path only reads this
+            // in pass-through mode, where mode switches reset it, so
+            // its behavior is unchanged.)
+            frames_since_probe: 64,
             max_ratio: 0.9,
             strike_limit: 3,
             probe_interval: 64,
             m_ratio: m.histogram(&format!("codec.auto.{link}.ratio")),
             m_zlib_frames: m.counter(&format!("codec.auto.{link}.zlib_frames")),
+            m_delta_frames: m.counter(&format!("codec.auto.{link}.delta_frames")),
+            m_sparse_frames: m.counter(&format!("codec.auto.{link}.sparse_frames")),
             m_none_frames: m.counter(&format!("codec.auto.{link}.none_frames")),
             m_to_none: m.counter(&format!("codec.auto.{link}.to_none")),
             m_to_zlib: m.counter(&format!("codec.auto.{link}.to_zlib")),
+            m_to_delta: m.counter(&format!("codec.auto.{link}.to_delta")),
+            m_to_sparse: m.counter(&format!("codec.auto.{link}.to_sparse")),
         }
     }
 
-    /// Codec to use for the next frame (Zlib while the link compresses
-    /// well, None otherwise, with a periodic Zlib probe).
+    /// Current steady-state arm (`Codec::None` in pass-through mode).
+    pub fn mode(&self) -> Codec {
+        self.mode
+    }
+
+    fn set_mode(&mut self, mode: Codec) {
+        if self.mode == mode {
+            return;
+        }
+        self.mode = mode;
+        match mode {
+            Codec::None => {
+                self.frames_since_probe = 0;
+                self.m_to_none.inc();
+            }
+            Codec::Zlib => self.m_to_zlib.inc(),
+            Codec::Delta => self.m_to_delta.inc(),
+            Codec::Sparse => self.m_to_sparse.inc(),
+            Codec::Auto => unreachable!("Auto is never an arm"),
+        }
+    }
+
+    /// Multi-arm frame decision for `wire::LinkCodec`.
+    pub fn next_mode(&mut self) -> AutoDecision {
+        self.frames_since_probe = self.frames_since_probe.saturating_add(1);
+        if self.frames_since_probe >= self.probe_interval {
+            self.frames_since_probe = 0;
+            AutoDecision::Probe
+        } else {
+            AutoDecision::Use(self.mode)
+        }
+    }
+
+    /// Report a probe frame: `candidates` holds the sampled encoded
+    /// payload size of every applicable arm. Adopts (and returns) the
+    /// smallest arm that beats `max_ratio`, else `Codec::None`.
+    pub fn record_probe(&mut self, raw: usize, candidates: &[(Codec, usize)]) -> Codec {
+        let mut best = (Codec::None, raw);
+        for &(codec, size) in candidates {
+            if size < best.1 {
+                best = (codec, size);
+            }
+        }
+        let ratio = if raw == 0 { 1.0 } else { best.1 as f64 / raw as f64 };
+        self.m_ratio.observe(ratio);
+        if ratio >= self.max_ratio {
+            self.set_mode(Codec::None);
+        } else {
+            self.strikes = 0;
+            self.set_mode(best.0);
+        }
+        match self.mode {
+            Codec::Zlib => self.m_zlib_frames.inc(),
+            Codec::Delta => self.m_delta_frames.inc(),
+            Codec::Sparse => self.m_sparse_frames.inc(),
+            _ => self.m_none_frames.inc(),
+        }
+        self.mode
+    }
+
+    /// Record the outcome of a steady-state frame encoded with `codec`
+    /// (raw vs encoded payload bytes) and update the mode via the
+    /// strike logic.
+    pub fn record_arm(&mut self, codec: Codec, raw: usize, encoded: usize) {
+        let ratio = if raw == 0 { 1.0 } else { encoded as f64 / raw as f64 };
+        self.m_ratio.observe(ratio);
+        match codec {
+            Codec::Delta => self.m_delta_frames.inc(),
+            Codec::Sparse => self.m_sparse_frames.inc(),
+            _ => self.m_zlib_frames.inc(),
+        }
+        if ratio >= self.max_ratio {
+            self.strikes = self.strikes.saturating_add(1);
+            if self.mode != Codec::None && self.strikes >= self.strike_limit {
+                self.set_mode(Codec::None);
+            }
+        } else {
+            self.strikes = 0;
+            if self.mode == Codec::None {
+                self.set_mode(codec);
+            }
+        }
+    }
+
+    /// Codec to use for the next frame (legacy zlib-or-none path used
+    /// by [`crate::serial::wire::encode_vectored_auto`]: Zlib while the
+    /// link compresses well, None otherwise, with a periodic probe).
     pub fn next_codec(&mut self) -> Codec {
-        if self.compressing {
+        if self.mode != Codec::None {
             return Codec::Zlib;
         }
         self.frames_since_probe += 1;
@@ -253,23 +394,7 @@ impl AutoCodec {
     /// Record the outcome of a deflated frame (raw vs compressed bytes)
     /// and update the mode.
     pub fn record_zlib(&mut self, raw: usize, compressed: usize) {
-        let ratio = if raw == 0 { 1.0 } else { compressed as f64 / raw as f64 };
-        self.m_ratio.observe(ratio);
-        self.m_zlib_frames.inc();
-        if ratio >= self.max_ratio {
-            self.strikes = self.strikes.saturating_add(1);
-            if self.compressing && self.strikes >= self.strike_limit {
-                self.compressing = false;
-                self.frames_since_probe = 0;
-                self.m_to_none.inc();
-            }
-        } else {
-            self.strikes = 0;
-            if !self.compressing {
-                self.compressing = true;
-                self.m_to_zlib.inc();
-            }
-        }
+        self.record_arm(Codec::Zlib, raw, compressed);
     }
 
     /// Record a frame sent uncompressed in pass-through mode.
@@ -277,9 +402,9 @@ impl AutoCodec {
         self.m_none_frames.inc();
     }
 
-    /// Is the link currently paying for deflate? (tests/benches)
+    /// Is the link currently paying for encoding? (tests/benches)
     pub fn is_compressing(&self) -> bool {
-        self.compressing
+        self.mode != Codec::None
     }
 }
 
@@ -294,7 +419,20 @@ mod tests {
         assert_eq!(Codec::parse("zlib").unwrap(), Codec::Zlib);
         assert_eq!(Codec::parse("gz").unwrap(), Codec::Zlib);
         assert_eq!(Codec::parse("auto").unwrap(), Codec::Auto);
+        assert_eq!(Codec::parse("delta").unwrap(), Codec::Delta);
+        assert_eq!(Codec::parse("sparse").unwrap(), Codec::Sparse);
         assert!(Codec::parse("lz99").is_err());
+        for c in [Codec::None, Codec::Zlib, Codec::Auto, Codec::Delta, Codec::Sparse] {
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn stateful_codecs_rejected_by_stateless_helpers() {
+        for c in [Codec::Delta, Codec::Sparse] {
+            assert!(compress(c, &[1, 2, 3]).is_err());
+            assert!(decompress(c, &[1, 2, 3]).is_err());
+        }
     }
 
     #[test]
@@ -420,6 +558,41 @@ mod tests {
         assert_eq!(zlib_probes, 1, "expected exactly one probe per interval");
         assert!(auto.is_compressing(), "good probe ratio must re-enable zlib");
         assert_eq!(auto.next_codec(), Codec::Zlib);
+    }
+
+    #[test]
+    fn auto_first_frame_probes_and_adopts_best_arm() {
+        let mut auto = AutoCodec::new("test-link-probe");
+        // Fresh link: the very first frame is a probe.
+        assert_eq!(auto.next_mode(), AutoDecision::Probe);
+        // Delta sampled smallest -> adopted.
+        let w = auto.record_probe(1000, &[(Codec::Zlib, 400), (Codec::Delta, 50)]);
+        assert_eq!(w, Codec::Delta);
+        assert_eq!(auto.mode(), Codec::Delta);
+        assert!(auto.is_compressing());
+        // Steady state uses the adopted arm until the next probe.
+        for _ in 0..(auto.probe_interval - 1) {
+            assert_eq!(auto.next_mode(), AutoDecision::Use(Codec::Delta));
+            auto.record_arm(Codec::Delta, 1000, 50);
+        }
+        assert_eq!(auto.next_mode(), AutoDecision::Probe);
+        // Probe where nothing beats max_ratio -> pass-through.
+        assert_eq!(auto.record_probe(1000, &[(Codec::Zlib, 990), (Codec::Delta, 995)]), Codec::None);
+        assert!(!auto.is_compressing());
+    }
+
+    #[test]
+    fn auto_strikes_demote_adopted_arm() {
+        let mut auto = AutoCodec::new("test-link-strikes");
+        auto.next_mode();
+        auto.record_probe(1000, &[(Codec::Sparse, 100)]);
+        assert_eq!(auto.mode(), Codec::Sparse);
+        // Content drifts dense: consecutive bad ratios strike the arm out.
+        for _ in 0..auto.strike_limit {
+            assert!(matches!(auto.next_mode(), AutoDecision::Use(Codec::Sparse)));
+            auto.record_arm(Codec::Sparse, 1000, 990);
+        }
+        assert_eq!(auto.mode(), Codec::None);
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! XOR-delta wire codec state (`Codec::Delta`).
+//!
+//! Consecutive frames on an among-device link are rarely independent:
+//! video-like tensor streams change a few regions per frame and
+//! personalization traffic repeats most of its payload. The delta codec
+//! exploits that: each frame is XORed against the link's *previous*
+//! frame and the residue — mostly zero bytes for correlated streams —
+//! is deflated. The XOR is computed in fixed-size chunks that stream
+//! straight into the compressor, which writes onto the tail of the
+//! frame being assembled (`deflate_into` style), so a delta frame is
+//! still ONE allocation and no payload-sized scratch buffer ever
+//! exists.
+//!
+//! Loss recovery: every `keyframe_interval` frames (and whenever the
+//! chain is broken — first frame, payload size change, a non-delta
+//! frame interleaved on the link) the encoder emits a *keyframe*: a
+//! plain full-frame deflate flagged in the wire header. Every
+//! delta-codec frame also carries a wrapping `chain_seq` byte; the
+//! decoder ([`crate::serial::wire::LinkDecoder`]) applies a delta only
+//! when it is synced and the sequence matches, and otherwise drops
+//! deltas until the next keyframe rather than reconstructing a corrupt
+//! tensor. (A u8 sequence aliases after exactly 256 lost frames, but a
+//! chain never spans more than `keyframe_interval` deltas, so an
+//! aliased sequence inside a live chain is impossible; the payload
+//! length check narrows the remaining window further.)
+
+use crate::serial::compress;
+use crate::util::{Error, Result};
+
+/// Default frames per keyframe period (1 keyframe + N-1 deltas).
+pub const DEFAULT_KEYFRAME_INTERVAL: u64 = 16;
+
+/// XOR scratch chunk: big enough to keep the compressor busy, small
+/// enough to live on the stack.
+const CHUNK: usize = 8 * 1024;
+
+/// Deflate `data XOR prev` appended directly onto `out` (the frame
+/// being assembled). Returns the number of compressed bytes written.
+/// The residue is produced chunk-by-chunk into a stack buffer and
+/// streamed into the compressor — no residue-sized allocation.
+pub fn xor_deflate_into(out: &mut Vec<u8>, data: &[u8], prev: &[u8]) -> Result<usize> {
+    if data.len() != prev.len() {
+        return Err(Error::Serial(format!(
+            "delta payload {} bytes != previous frame {} bytes",
+            data.len(),
+            prev.len()
+        )));
+    }
+    compress::note_deflate();
+    let start = out.len();
+    let mut c = flate2::Compress::new(flate2::Compression::fast(), true);
+    let mut scratch = [0u8; CHUNK];
+    let mut fed = 0usize;
+    loop {
+        let end = (fed + CHUNK).min(data.len());
+        let chunk_len = end - fed;
+        for i in 0..chunk_len {
+            scratch[i] = data[fed + i] ^ prev[fed + i];
+        }
+        let last = end == data.len();
+        let flush =
+            if last { flate2::FlushCompress::Finish } else { flate2::FlushCompress::None };
+        let mut consumed = 0usize;
+        loop {
+            // Guarantee spare output capacity so every iteration progresses.
+            if out.capacity() - out.len() < 1024 {
+                out.reserve((data.len() / 2 + 64).max(4096));
+            }
+            let before = c.total_in();
+            let status = c
+                .compress_vec(&scratch[consumed..chunk_len], out, flush)
+                .map_err(|e| Error::Serial(format!("delta deflate: {e}")))?;
+            consumed += (c.total_in() - before) as usize;
+            if last {
+                if status == flate2::Status::StreamEnd {
+                    return Ok(out.len() - start);
+                }
+            } else if consumed == chunk_len {
+                break;
+            }
+        }
+        fed = end;
+    }
+}
+
+/// Reconstruct a frame from its inflated XOR residue, in place:
+/// `residue[i] ^= prev[i]`. Lengths must match (the decoder treats a
+/// mismatch as a broken chain before calling this).
+pub fn apply_delta(residue: &mut [u8], prev: &[u8]) -> Result<()> {
+    if residue.len() != prev.len() {
+        return Err(Error::Serial(format!(
+            "delta residue {} bytes != previous frame {} bytes",
+            residue.len(),
+            prev.len()
+        )));
+    }
+    for (r, &p) in residue.iter_mut().zip(prev) {
+        *r ^= p;
+    }
+    Ok(())
+}
+
+/// Encode-side delta-chain state for one link: tracks whether the
+/// receiver's previous frame matches ours (`valid`), the wrapping
+/// chain sequence, and the keyframe cadence.
+#[derive(Debug)]
+pub struct DeltaChain {
+    valid: bool,
+    seq: u8,
+    since_key: u64,
+    interval: u64,
+}
+
+impl DeltaChain {
+    pub fn new(interval: u64) -> Self {
+        Self { valid: false, seq: 0, since_key: 0, interval: interval.max(1) }
+    }
+
+    pub fn set_interval(&mut self, interval: u64) {
+        self.interval = interval.max(1);
+    }
+
+    pub fn interval(&self) -> u64 {
+        self.interval
+    }
+
+    /// Must the next delta-codec frame be a keyframe? Yes when the
+    /// chain is broken, the payload length changed (XOR needs equal
+    /// lengths), or the keyframe period elapsed.
+    pub fn needs_keyframe(&self, prev_len: Option<usize>, len: usize) -> bool {
+        !self.valid || prev_len != Some(len) || self.since_key + 1 >= self.interval
+    }
+
+    /// Record an emitted keyframe; returns the chain-seq to stamp.
+    pub fn on_keyframe(&mut self) -> u8 {
+        self.valid = true;
+        self.since_key = 0;
+        self.seq = self.seq.wrapping_add(1);
+        self.seq
+    }
+
+    /// Record an emitted delta frame; returns the chain-seq to stamp.
+    pub fn on_delta(&mut self) -> u8 {
+        debug_assert!(self.valid, "delta emitted on an invalid chain");
+        self.since_key += 1;
+        self.seq = self.seq.wrapping_add(1);
+        self.seq
+    }
+
+    /// A non-delta frame went out on this link (or the link
+    /// reconnected): the receiver's previous frame no longer matches,
+    /// so the next delta-codec frame must re-key.
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+
+    pub fn is_valid(&self) -> bool {
+        self.valid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serial::compress::{inflate_guarded, MAX_DECOMPRESSED};
+    use crate::util::rng::XorShift64;
+
+    fn roundtrip(data: &[u8], prev: &[u8]) -> Vec<u8> {
+        let mut frame = b"HDR".to_vec();
+        let n = xor_deflate_into(&mut frame, data, prev).unwrap();
+        assert_eq!(frame.len(), 3 + n);
+        assert_eq!(&frame[..3], b"HDR");
+        let mut residue = inflate_guarded(&frame[3..], MAX_DECOMPRESSED).unwrap();
+        apply_delta(&mut residue, prev).unwrap();
+        residue
+    }
+
+    #[test]
+    fn correlated_frames_deflate_small() {
+        // A frame that differs from its predecessor in a handful of
+        // bytes must produce a tiny delta (mostly-zero residue).
+        let prev = vec![42u8; 100_000];
+        let mut data = prev.clone();
+        for i in (0..data.len()).step_by(9000) {
+            data[i] = data[i].wrapping_add(1);
+        }
+        let mut out = Vec::new();
+        let n = xor_deflate_into(&mut out, &data, &prev).unwrap();
+        assert!(n < 2_000, "delta residue should deflate to almost nothing, got {n}");
+        assert_eq!(roundtrip(&data, &prev), data);
+    }
+
+    #[test]
+    fn random_frames_roundtrip_across_chunk_boundaries() {
+        let mut rng = XorShift64::new(11);
+        // Sizes straddling the XOR chunk size, including 0 and exact
+        // multiples.
+        for len in [0usize, 1, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 17] {
+            let mut data = vec![0u8; len];
+            let mut prev = vec![0u8; len];
+            rng.fill_bytes(&mut data);
+            rng.fill_bytes(&mut prev);
+            assert_eq!(roundtrip(&data, &prev), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let mut out = Vec::new();
+        assert!(xor_deflate_into(&mut out, &[1, 2, 3], &[1, 2]).is_err());
+        let mut residue = vec![1u8, 2];
+        assert!(apply_delta(&mut residue, &[0u8; 3]).is_err());
+    }
+
+    #[test]
+    fn chain_keyframe_cadence() {
+        let mut chain = DeltaChain::new(4);
+        // First frame: no history -> keyframe.
+        assert!(chain.needs_keyframe(None, 100));
+        let k = chain.on_keyframe();
+        // Three deltas fit in the period, the fourth frame re-keys.
+        for i in 0..3u8 {
+            assert!(!chain.needs_keyframe(Some(100), 100));
+            assert_eq!(chain.on_delta(), k.wrapping_add(i + 1));
+        }
+        assert!(chain.needs_keyframe(Some(100), 100), "period elapsed");
+        chain.on_keyframe();
+        // A payload size change always re-keys.
+        assert!(chain.needs_keyframe(Some(100), 101));
+        // A non-delta frame on the link breaks the chain.
+        chain.invalidate();
+        assert!(chain.needs_keyframe(Some(100), 100));
+    }
+
+    #[test]
+    fn interval_one_is_all_keyframes() {
+        let mut chain = DeltaChain::new(1);
+        chain.on_keyframe();
+        assert!(chain.needs_keyframe(Some(10), 10));
+        // 0 clamps to 1 rather than dividing by zero semantics.
+        let chain0 = DeltaChain::new(0);
+        assert_eq!(chain0.interval(), 1);
+    }
+
+    #[test]
+    fn chain_seq_wraps() {
+        let mut chain = DeltaChain::new(u64::MAX);
+        let first = chain.on_keyframe();
+        let mut last = first;
+        for _ in 0..300 {
+            last = chain.on_delta();
+        }
+        assert_eq!(last, first.wrapping_add(300));
+    }
+}

@@ -1,8 +1,11 @@
 //! Serialization for inter-pipeline transmission (§4.1–4.2):
-//! [`flexbuf`] schemaless trees, [`compress`] frame compression, and
-//! [`wire`] the EdgeFrame transport envelope.
+//! [`flexbuf`] schemaless trees, [`compress`] frame compression,
+//! [`delta`] the XOR-delta link codec, and [`wire`] the EdgeFrame
+//! transport envelope with its per-link codec stack
+//! (`LinkCodec`/`LinkDecoder`).
 
 pub mod compress;
+pub mod delta;
 pub mod flexbuf;
 pub mod wire;
 

@@ -41,13 +41,21 @@
 
 use crate::buffer::{Buffer, Bytes, Meta};
 use crate::caps::Caps;
-use crate::serial::compress::{self, AutoCodec, Codec, MAX_DECOMPRESSED};
+use crate::serial::compress::{self, AutoCodec, AutoDecision, Codec, MAX_DECOMPRESSED};
+use crate::serial::delta::{self, DeltaChain, DEFAULT_KEYFRAME_INTERVAL};
+use crate::tensor::{sparse, Format, TensorsInfo};
 use crate::util::{read_u32, read_u64, write_all_vectored, Error, Result};
 
 pub const WIRE_MAGIC: &[u8; 4] = b"EPEF";
 const VERSION: u8 = 1;
 const FIXED: usize = 8 + 6 * 8;
 const ABSENT: u64 = u64::MAX;
+
+/// Header flags-byte bit: this `Codec::Delta` frame is a keyframe (a
+/// plain full-frame deflate that re-keys the receiver's chain).
+pub const FLAG_KEYFRAME: u8 = 0x01;
+
+pub use crate::serial::delta::DEFAULT_KEYFRAME_INTERVAL;
 
 /// An encoded EdgeFrame as two independently shareable parts: everything
 /// before the payload, and the payload itself. Cloning is O(1); the same
@@ -86,15 +94,24 @@ impl WireFrame {
 }
 
 /// Append everything of an EdgeFrame header that precedes the
-/// payload-length field. `codec` must already be resolved (`None`/`Zlib`);
-/// `Auto` is a policy and never reaches the wire.
-fn push_header_fields(out: &mut Vec<u8>, buf: &Buffer, caps_str: &str, codec: Codec) {
+/// payload-length field. `codec` must already be resolved to a concrete
+/// arm; `Auto` is a policy and never reaches the wire. `flags` carries
+/// [`FLAG_KEYFRAME`] and `chain_seq` the wrapping delta-chain sequence
+/// (both 0 for non-delta codecs).
+fn push_header_fields(
+    out: &mut Vec<u8>,
+    buf: &Buffer,
+    caps_str: &str,
+    codec: Codec,
+    flags: u8,
+    chain_seq: u8,
+) {
     debug_assert!(codec != Codec::Auto, "Codec::Auto must be resolved before encoding");
     out.extend_from_slice(WIRE_MAGIC);
     out.push(VERSION);
-    out.push(0); // flags (reserved)
+    out.push(flags);
     out.push(codec as u8);
-    out.push(0);
+    out.push(chain_seq);
     for v in [
         buf.pts.unwrap_or(ABSENT),
         buf.duration.unwrap_or(ABSENT),
@@ -113,9 +130,22 @@ fn push_header_fields(out: &mut Vec<u8>, buf: &Buffer, caps_str: &str, codec: Co
 /// from the buffer as-is (zero payload copies).
 fn encode_none(buf: &Buffer, caps_str: &str) -> WireFrame {
     let mut header = Vec::with_capacity(FIXED + caps_str.len() + 8);
-    push_header_fields(&mut header, buf, caps_str, Codec::None);
+    push_header_fields(&mut header, buf, caps_str, Codec::None, 0, 0);
     header.extend_from_slice(&(buf.data.len() as u32).to_le_bytes());
     WireFrame { header: Bytes::from(header), payload: buf.data.clone() }
+}
+
+/// Freeze an assembled frame `Vec` into a [`WireFrame`] after patching
+/// the payload-length field (`n` payload bytes starting at
+/// `payload_start`): header and payload become two views into the one
+/// backing allocation.
+fn seal_frame(mut frame: Vec<u8>, payload_start: usize, n: usize) -> Result<WireFrame> {
+    if n > u32::MAX as usize {
+        return Err(Error::Serial(format!("encoded payload {n} exceeds u32 framing")));
+    }
+    frame[payload_start - 4..payload_start].copy_from_slice(&(n as u32).to_le_bytes());
+    let all = Bytes::from(frame);
+    Ok(WireFrame { header: all.slice(..payload_start), payload: all.slice(payload_start..) })
 }
 
 /// Compressed frame as ONE allocation: the streaming compressor deflates
@@ -124,16 +154,63 @@ fn encode_none(buf: &Buffer, caps_str: &str) -> WireFrame {
 /// returned as two views into that single backing buffer.
 fn encode_zlib(buf: &Buffer, caps_str: &str) -> Result<WireFrame> {
     let mut frame = Vec::with_capacity(FIXED + caps_str.len() + 8 + buf.data.len() / 2 + 64);
-    push_header_fields(&mut frame, buf, caps_str, Codec::Zlib);
+    push_header_fields(&mut frame, buf, caps_str, Codec::Zlib, 0, 0);
     frame.extend_from_slice(&0u32.to_le_bytes()); // payload_len, patched below
     let payload_start = frame.len();
     let n = compress::deflate_into(&mut frame, &buf.data)?;
-    if n > u32::MAX as usize {
-        return Err(Error::Serial(format!("compressed payload {n} exceeds u32 framing")));
+    seal_frame(frame, payload_start, n)
+}
+
+/// Delta-codec frame, same one-allocation shape as [`encode_zlib`]:
+/// keyframes (`prev == None`) deflate the full payload; delta frames
+/// stream the XOR residue against `prev` into the compressor.
+fn encode_delta_frame(
+    buf: &Buffer,
+    caps_str: &str,
+    flags: u8,
+    chain_seq: u8,
+    prev: Option<&[u8]>,
+) -> Result<WireFrame> {
+    let mut frame = Vec::with_capacity(FIXED + caps_str.len() + 8 + buf.data.len() / 2 + 64);
+    push_header_fields(&mut frame, buf, caps_str, Codec::Delta, flags, chain_seq);
+    frame.extend_from_slice(&0u32.to_le_bytes()); // payload_len, patched below
+    let payload_start = frame.len();
+    let n = match prev {
+        None => compress::deflate_into(&mut frame, &buf.data)?,
+        Some(prev) => delta::xor_deflate_into(&mut frame, &buf.data, prev)?,
+    };
+    seal_frame(frame, payload_start, n)
+}
+
+/// Sparse-codec frame: the payload is each tensor of the (static) frame
+/// re-encoded as COO, concatenated — appended straight onto the frame
+/// being assembled (one allocation, no per-tensor buffers).
+fn encode_sparse_frame(buf: &Buffer, caps_str: &str, info: &TensorsInfo) -> Result<WireFrame> {
+    let mut frame = Vec::with_capacity(FIXED + caps_str.len() + 8 + buf.data.len() / 2 + 64);
+    push_header_fields(&mut frame, buf, caps_str, Codec::Sparse, 0, 0);
+    frame.extend_from_slice(&0u32.to_le_bytes()); // payload_len, patched below
+    let payload_start = frame.len();
+    let mut off = 0;
+    for t in &info.tensors {
+        let sz = t.size();
+        sparse::encode_into(t, &buf.data[off..off + sz], &mut frame)?;
+        off += sz;
     }
-    frame[payload_start - 4..payload_start].copy_from_slice(&(n as u32).to_le_bytes());
-    let all = Bytes::from(frame);
-    Ok(WireFrame { header: all.slice(..payload_start), payload: all.slice(payload_start..) })
+    let n = frame.len() - payload_start;
+    seal_frame(frame, payload_start, n)
+}
+
+/// Predicted sparse-codec payload size for a dense tensors frame (an
+/// nnz-counting scan per tensor; no encoding happens).
+fn sparse_payload_size(info: &TensorsInfo, data: &[u8]) -> usize {
+    let mut total = 0;
+    let mut off = 0;
+    for t in &info.tensors {
+        let sz = t.size();
+        total += sparse::encoded_size(t, sparse::count_nnz(t, &data[off..off + sz]));
+        off += sz;
+    }
+    total
 }
 
 /// Encode a buffer (+ its caps) into a [`WireFrame`] without copying the
@@ -158,6 +235,9 @@ pub fn encode_vectored(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Resul
                 Ok(encode_none(buf, &caps_str))
             }
         }
+        Codec::Delta | Codec::Sparse => Err(Error::Serial(format!(
+            "Codec::{codec:?} needs per-link state; encode through wire::LinkCodec"
+        ))),
     }
 }
 
@@ -193,31 +273,272 @@ pub fn encode(buf: &Buffer, caps: Option<&Caps>, codec: Codec) -> Result<Vec<u8>
     Ok(encode_vectored(buf, caps, codec)?.to_vec())
 }
 
-/// Per-link encode state: the configured codec plus the adaptive sampler
-/// backing `Codec::Auto`. Transport elements hold one of these per link
-/// so they all share a single dispatch (and a single place to evolve the
-/// Auto policy) instead of each re-implementing it.
+/// Encode-side delta metric handles, resolved once per link.
+struct DeltaMetrics {
+    keyframes: std::sync::Arc<crate::metrics::Counter>,
+    deltas: std::sync::Arc<crate::metrics::Counter>,
+    bytes_saved: std::sync::Arc<crate::metrics::Counter>,
+}
+
+impl DeltaMetrics {
+    fn new(link: &str) -> Self {
+        let m = crate::metrics::global();
+        Self {
+            keyframes: m.counter(&format!("codec.delta.{link}.keyframes")),
+            deltas: m.counter(&format!("codec.delta.{link}.deltas")),
+            bytes_saved: m.counter(&format!("codec.delta.{link}.bytes_saved")),
+        }
+    }
+}
+
+/// Per-link encode state: the configured codec, the adaptive sampler
+/// backing `Codec::Auto`, the previous payload + delta chain backing
+/// `Codec::Delta`, and the cached tensor layout backing `Codec::Sparse`.
+/// Transport elements hold one of these per link so they all share a
+/// single dispatch (and a single place to evolve the codec policy)
+/// instead of each re-implementing it.
 pub struct LinkCodec {
     codec: Codec,
     auto: Option<AutoCodec>,
+    chain: DeltaChain,
+    /// Previous payload sent on this link (O(1) `Bytes` clone), kept
+    /// for every codec so `Auto` can sample the delta arm at any time.
+    prev: Option<Bytes>,
+    cached_caps: Option<Caps>,
+    cached_info: Option<TensorsInfo>,
+    dm: Option<DeltaMetrics>,
 }
 
 impl LinkCodec {
-    /// `link` names the per-link metrics scope (`codec.auto.<link>.*`);
-    /// it is only consulted when `codec == Codec::Auto`.
+    /// `link` names the per-link metrics scope (`codec.auto.<link>.*`,
+    /// `codec.delta.<link>.*`); it is only consulted for the stateful
+    /// codecs (`Auto`/`Delta`).
     pub fn new(codec: Codec, link: &str) -> Self {
-        Self { codec, auto: (codec == Codec::Auto).then(|| AutoCodec::new(link)) }
+        Self {
+            codec,
+            auto: (codec == Codec::Auto).then(|| AutoCodec::new(link)),
+            chain: DeltaChain::new(DEFAULT_KEYFRAME_INTERVAL),
+            prev: None,
+            cached_caps: None,
+            cached_info: None,
+            dm: (!link.is_empty() && matches!(codec, Codec::Delta | Codec::Auto))
+                .then(|| DeltaMetrics::new(link)),
+        }
     }
 
     pub fn codec(&self) -> Codec {
         self.codec
     }
 
-    /// Encode one frame with this link's codec (adaptive for `Auto`).
+    /// Frames per keyframe period for the delta arm (builder form).
+    pub fn with_keyframe_interval(mut self, interval: u64) -> Self {
+        self.set_keyframe_interval(interval);
+        self
+    }
+
+    pub fn set_keyframe_interval(&mut self, interval: u64) {
+        self.chain.set_interval(interval);
+    }
+
+    pub fn keyframe_interval(&self) -> u64 {
+        self.chain.interval()
+    }
+
+    /// Drop the link's frame history (reconnect / failover / re-route):
+    /// the receiver's state is gone or belongs to someone else, so the
+    /// next delta-codec frame must be a keyframe.
+    pub fn reset_chain(&mut self) {
+        self.chain.invalidate();
+        self.prev = None;
+    }
+
+    /// Encode one frame with this link's codec (adaptive for `Auto`,
+    /// stateful for `Delta`, layout-aware for `Sparse`).
     pub fn encode(&mut self, buf: &Buffer, caps: Option<&Caps>) -> Result<WireFrame> {
-        match &mut self.auto {
-            Some(auto) => encode_vectored_auto(buf, caps, auto),
-            None => encode_vectored(buf, caps, self.codec),
+        let f = self.encode_inner(buf, caps)?;
+        self.prev = Some(buf.data.clone());
+        Ok(f)
+    }
+
+    fn encode_inner(&mut self, buf: &Buffer, caps: Option<&Caps>) -> Result<WireFrame> {
+        match self.codec {
+            Codec::None | Codec::Zlib => {
+                self.chain.invalidate();
+                encode_vectored(buf, caps, self.codec)
+            }
+            Codec::Delta => {
+                let caps_str = caps.map(|c| c.to_string()).unwrap_or_default();
+                self.emit_delta(buf, &caps_str)
+            }
+            Codec::Sparse => {
+                self.chain.invalidate();
+                self.refresh_tensor_cache(caps);
+                let caps_str = caps.map(|c| c.to_string()).unwrap_or_default();
+                match self.sparse_applicable(buf.data.len()) {
+                    // Explicit Sparse still checks that COO pays for
+                    // *this* frame (density drifts); dense frames fall
+                    // back to plain zlib rather than growing on the wire.
+                    Some(info) if sparse_payload_size(info, &buf.data) < buf.data.len() => {
+                        encode_sparse_frame(buf, &caps_str, info)
+                    }
+                    _ => encode_zlib(buf, &caps_str),
+                }
+            }
+            Codec::Auto => self.encode_auto(buf, caps),
+        }
+    }
+
+    /// The cached tensors layout when the stream is static tensors and
+    /// the payload length matches the frame size.
+    fn sparse_applicable(&self, payload_len: usize) -> Option<&TensorsInfo> {
+        self.cached_info
+            .as_ref()
+            .filter(|info| payload_len > 0 && info.frame_size() == payload_len)
+    }
+
+    fn refresh_tensor_cache(&mut self, caps: Option<&Caps>) {
+        match caps {
+            Some(c) => {
+                if self.cached_caps.as_ref() != Some(c) {
+                    self.cached_caps = Some(c.clone());
+                    // Only static tensors have a dense payload to scan;
+                    // flexible frames carry their own schema and sparse
+                    // streams are already COO.
+                    self.cached_info = (c.is_tensors()
+                        && c.tensor_format().ok() == Some(Format::Static))
+                    .then(|| c.tensors_info().ok())
+                    .flatten();
+                }
+            }
+            None => {
+                self.cached_caps = None;
+                self.cached_info = None;
+            }
+        }
+    }
+
+    fn emit_delta(&mut self, buf: &Buffer, caps_str: &str) -> Result<WireFrame> {
+        let prev_len = self.prev.as_ref().map(|p| p.len());
+        if self.chain.needs_keyframe(prev_len, buf.data.len()) {
+            let seq = self.chain.on_keyframe();
+            let f = encode_delta_frame(buf, caps_str, FLAG_KEYFRAME, seq, None)?;
+            if let Some(dm) = &self.dm {
+                dm.keyframes.inc();
+            }
+            Ok(f)
+        } else {
+            let prev = self.prev.clone().expect("needs_keyframe is false, so prev exists");
+            let seq = self.chain.on_delta();
+            let f = encode_delta_frame(buf, caps_str, 0, seq, Some(&prev))?;
+            if let Some(dm) = &self.dm {
+                dm.deltas.inc();
+                dm.bytes_saved.add(buf.data.len().saturating_sub(f.payload.len()) as u64);
+            }
+            Ok(f)
+        }
+    }
+
+    fn encode_auto(&mut self, buf: &Buffer, caps: Option<&Caps>) -> Result<WireFrame> {
+        self.refresh_tensor_cache(caps);
+        let caps_str = caps.map(|c| c.to_string()).unwrap_or_default();
+        let raw = buf.data.len();
+        let decision = self.auto.as_mut().expect("Auto links hold a sampler").next_mode();
+        match decision {
+            AutoDecision::Probe => self.probe_auto(buf, &caps_str, raw),
+            AutoDecision::Use(Codec::Delta) => {
+                let f = self.emit_delta(buf, &caps_str)?;
+                self.auto.as_mut().unwrap().record_arm(Codec::Delta, raw, f.payload.len());
+                Ok(f)
+            }
+            AutoDecision::Use(Codec::Sparse) => {
+                self.chain.invalidate();
+                if self.sparse_applicable(raw).is_some() {
+                    let f = {
+                        let info = self.sparse_applicable(raw).unwrap();
+                        encode_sparse_frame(buf, &caps_str, info)?
+                    };
+                    self.auto.as_mut().unwrap().record_arm(Codec::Sparse, raw, f.payload.len());
+                    Ok(f)
+                } else {
+                    // Stream stopped being sparse-encodable (caps
+                    // changed): fall back to zlib until the next probe.
+                    let f = encode_zlib(buf, &caps_str)?;
+                    self.auto.as_mut().unwrap().record_arm(Codec::Zlib, raw, f.payload.len());
+                    if f.payload.len() < raw {
+                        Ok(f)
+                    } else {
+                        Ok(encode_none(buf, &caps_str))
+                    }
+                }
+            }
+            AutoDecision::Use(Codec::Zlib) => {
+                self.chain.invalidate();
+                let f = encode_zlib(buf, &caps_str)?;
+                self.auto.as_mut().unwrap().record_arm(Codec::Zlib, raw, f.payload.len());
+                if f.payload.len() < raw {
+                    Ok(f)
+                } else {
+                    Ok(encode_none(buf, &caps_str))
+                }
+            }
+            AutoDecision::Use(_) => {
+                self.chain.invalidate();
+                self.auto.as_mut().unwrap().record_none();
+                Ok(encode_none(buf, &caps_str))
+            }
+        }
+    }
+
+    /// Probe frame: sample every applicable arm's encoded size — zlib is
+    /// actually deflated (onto the frame we may emit), delta deflates
+    /// the XOR residue into scratch when the previous frame lines up,
+    /// sparse is predicted from an nnz scan — then adopt the winner. The
+    /// emitted frame is still one allocation: a delta win re-labels the
+    /// already-deflated full frame as a keyframe in place (a keyframe
+    /// *is* a full-frame deflate).
+    fn probe_auto(&mut self, buf: &Buffer, caps_str: &str, raw: usize) -> Result<WireFrame> {
+        let mut frame = Vec::with_capacity(FIXED + caps_str.len() + 8 + raw / 2 + 64);
+        push_header_fields(&mut frame, buf, caps_str, Codec::Zlib, 0, 0);
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        let payload_start = frame.len();
+        let zlib_n = compress::deflate_into(&mut frame, &buf.data)?;
+        let mut candidates = vec![(Codec::Zlib, zlib_n)];
+        if raw > 0 && self.prev.as_ref().map(|p| p.len()) == Some(raw) {
+            let prev = self.prev.clone().unwrap();
+            let mut scratch = Vec::new();
+            candidates.push((Codec::Delta, delta::xor_deflate_into(&mut scratch, &buf.data, &prev)?));
+        }
+        if let Some(info) = self.sparse_applicable(raw) {
+            candidates.push((Codec::Sparse, sparse_payload_size(info, &buf.data)));
+        }
+        let winner = self.auto.as_mut().unwrap().record_probe(raw, &candidates);
+        match winner {
+            Codec::Delta => {
+                // Adopt delta and seed the receiver's chain now: patch
+                // the codec/flags/seq bytes of the deflated full frame
+                // into a keyframe before freezing it.
+                let seq = self.chain.on_keyframe();
+                frame[5] = FLAG_KEYFRAME;
+                frame[6] = Codec::Delta as u8;
+                frame[7] = seq;
+                if let Some(dm) = &self.dm {
+                    dm.keyframes.inc();
+                }
+                seal_frame(frame, payload_start, zlib_n)
+            }
+            Codec::Zlib => {
+                self.chain.invalidate();
+                seal_frame(frame, payload_start, zlib_n)
+            }
+            Codec::Sparse => {
+                self.chain.invalidate();
+                let info = self.sparse_applicable(raw).expect("probed sparse candidate");
+                encode_sparse_frame(buf, caps_str, info)
+            }
+            _ => {
+                self.chain.invalidate();
+                Ok(encode_none(buf, caps_str))
+            }
         }
     }
 }
@@ -226,6 +547,9 @@ fn codec_from_wire(b: u8) -> Result<Codec> {
     Ok(match b {
         0 => Codec::None,
         1 => Codec::Zlib,
+        // 2 (Auto) is a policy discriminant and never travels.
+        3 => Codec::Delta,
+        4 => Codec::Sparse,
         other => return Err(Error::Serial(format!("unknown wire codec {other}"))),
     })
 }
@@ -241,6 +565,10 @@ fn opt(v: u64) -> Option<u64> {
 /// Header fields parsed out of a frame, with the payload's byte range.
 struct ParsedHeader {
     codec: Codec,
+    /// [`FLAG_KEYFRAME`] et al (meaningful for `Codec::Delta`).
+    flags: u8,
+    /// Wrapping delta-chain sequence (meaningful for `Codec::Delta`).
+    chain_seq: u8,
     buffer: Buffer, // payload left empty; filled by the caller
     caps: Option<Caps>,
     payload_start: usize,
@@ -255,6 +583,8 @@ fn parse_header(frame: &[u8]) -> Result<ParsedHeader> {
         return Err(Error::Serial(format!("EdgeFrame version {} unsupported", frame[4])));
     }
     let codec = codec_from_wire(frame[6])?;
+    let flags = frame[5];
+    let chain_seq = frame[7];
     let pts = opt(read_u64(frame, 8)?);
     let duration = opt(read_u64(frame, 16)?);
     let base_universal = opt(read_u64(frame, 24)?);
@@ -294,7 +624,7 @@ fn parse_header(frame: &[u8]) -> Result<ParsedHeader> {
             origin: None,
         },
     };
-    Ok(ParsedHeader { codec, buffer, caps, payload_start, payload_len })
+    Ok(ParsedHeader { codec, flags, chain_seq, buffer, caps, payload_start, payload_len })
 }
 
 /// Streaming-inflate a compressed payload view into one fresh
@@ -304,17 +634,67 @@ fn inflate_payload(view: &[u8]) -> Result<Bytes> {
     Ok(Bytes::from(compress::inflate_guarded(view, MAX_DECOMPRESSED)?))
 }
 
+/// Reconstruct the dense payload of a sparse-codec frame: concatenated
+/// COO tensors decoded back to dense, with the cumulative size bounded
+/// like the inflate path (each tensor is additionally capped by
+/// `sparse::MAX_DENSE_DECODED`).
+fn sparse_payload_to_dense(view: &[u8]) -> Result<Bytes> {
+    if view.is_empty() {
+        return Err(Error::Serial("sparse frame with empty payload".into()));
+    }
+    let mut dense: Vec<u8> = Vec::new();
+    let mut off = 0;
+    while off < view.len() {
+        let len = sparse::encoded_len(&view[off..])
+            .map_err(|e| Error::Serial(format!("sparse payload: {e}")))?;
+        let (_, d) = sparse::decode_prefix(&view[off..])
+            .map_err(|e| Error::Serial(format!("sparse payload: {e}")))?;
+        off += len;
+        // Single-tensor frames (the common case) skip the assembly copy.
+        if dense.is_empty() && off == view.len() {
+            return Ok(Bytes::from(d));
+        }
+        if dense.len() as u64 + d.len() as u64 > MAX_DECOMPRESSED {
+            return Err(Error::Serial(format!(
+                "sparse frame expands past the {MAX_DECOMPRESSED}-byte limit"
+            )));
+        }
+        dense.extend_from_slice(&d);
+    }
+    Ok(Bytes::from(dense))
+}
+
+/// Stateless payload decode for the codecs that need no link history.
+/// `Codec::Delta` is accepted only for keyframes (which are plain
+/// full-frame deflates); mid-chain deltas need a [`LinkDecoder`].
+fn decode_payload_stateless(frame: &Bytes, p: &ParsedHeader) -> Result<Bytes> {
+    match p.codec {
+        Codec::None => Ok(frame.slice(p.payload_start..p.payload_start + p.payload_len)),
+        Codec::Zlib => inflate_payload(&frame[p.payload_start..]),
+        Codec::Delta if p.flags & FLAG_KEYFRAME != 0 => {
+            inflate_payload(&frame[p.payload_start..])
+        }
+        Codec::Delta => Err(Error::Serial(
+            "delta frame without link state (mid-chain; decode with a LinkDecoder)".into(),
+        )),
+        Codec::Sparse => sparse_payload_to_dense(&frame[p.payload_start..]),
+        Codec::Auto => unreachable!("codec_from_wire rejects the Auto discriminant"),
+    }
+}
+
 /// Decode a shared frame into (Buffer, Option<Caps>) — the output
 /// buffer's payload is a slice view into `frame` (zero copy) for
 /// `Codec::None`; compressed frames inflate straight out of the frame
 /// view into one fresh allocation (guarded against bombs mid-stream).
+///
+/// Stateless: delta-codec frames decode only when they are keyframes.
+/// Long-lived links hold a [`LinkDecoder`], which tracks the delta
+/// chain and degrades gracefully under loss.
 pub fn decode_shared(frame: &Bytes) -> Result<(Buffer, Option<Caps>)> {
     let p = parse_header(frame)?;
+    let data = decode_payload_stateless(frame, &p)?;
     let mut buffer = p.buffer;
-    buffer.data = match p.codec {
-        Codec::None => frame.slice(p.payload_start..p.payload_start + p.payload_len),
-        _ => inflate_payload(&frame[p.payload_start..])?,
-    };
+    buffer.data = data;
     Ok((buffer, p.caps))
 }
 
@@ -324,9 +704,112 @@ pub fn decode(frame: &[u8]) -> Result<(Buffer, Option<Caps>)> {
     let mut buffer = p.buffer;
     buffer.data = match p.codec {
         Codec::None => Bytes::copy_from_slice(&frame[p.payload_start..]),
+        Codec::Sparse => sparse_payload_to_dense(&frame[p.payload_start..])?,
+        Codec::Delta if p.flags & FLAG_KEYFRAME == 0 => {
+            return Err(Error::Serial(
+                "delta frame without link state (mid-chain; decode with a LinkDecoder)".into(),
+            ))
+        }
         _ => inflate_payload(&frame[p.payload_start..])?,
     };
     Ok((buffer, p.caps))
+}
+
+/// Per-link decode state, symmetric to [`LinkCodec`]: tracks the
+/// previous reconstructed payload and the delta-chain sequence so
+/// delta frames can be applied — and, after loss or reorder breaks the
+/// chain, *detected* and dropped until the next keyframe instead of
+/// being reconstructed corrupt.
+///
+/// One `LinkDecoder` per ordered frame stream (a subscription, a TCP
+/// connection): frames from different senders must not share one.
+pub struct LinkDecoder {
+    prev: Option<Bytes>,
+    expect_seq: u8,
+    synced: bool,
+    m_resyncs: Option<std::sync::Arc<crate::metrics::Counter>>,
+}
+
+impl LinkDecoder {
+    /// `link` names the metrics scope (`codec.delta.<link>.resyncs`);
+    /// empty disables metrics (tests, short-lived links).
+    pub fn new(link: &str) -> Self {
+        Self {
+            prev: None,
+            expect_seq: 0,
+            synced: false,
+            m_resyncs: (!link.is_empty())
+                .then(|| crate::metrics::global().counter(&format!("codec.delta.{link}.resyncs"))),
+        }
+    }
+
+    /// Forget the chain (reconnect: the peer will re-key).
+    pub fn reset(&mut self) {
+        self.prev = None;
+        self.synced = false;
+    }
+
+    /// Is the delta chain currently intact? (tests/observability)
+    pub fn is_synced(&self) -> bool {
+        self.synced
+    }
+
+    /// Decode one frame of this link's ordered stream.
+    ///
+    /// `Ok(None)` means a mid-chain delta arrived while the chain is
+    /// broken (frames were lost or reordered upstream): the frame is
+    /// dropped — never delivered corrupt — and delivery resumes at the
+    /// next keyframe. Non-delta codecs decode exactly like
+    /// [`decode_shared`].
+    pub fn decode(&mut self, frame: &Bytes) -> Result<Option<(Buffer, Option<Caps>)>> {
+        let p = parse_header(frame)?;
+        let data = match p.codec {
+            Codec::Delta if p.flags & FLAG_KEYFRAME != 0 => {
+                let data = inflate_payload(&frame[p.payload_start..])?;
+                self.prev = Some(data.clone());
+                self.expect_seq = p.chain_seq.wrapping_add(1);
+                self.synced = true;
+                data
+            }
+            Codec::Delta => {
+                if !self.synced || p.chain_seq != self.expect_seq || self.prev.is_none() {
+                    self.desync();
+                    return Ok(None);
+                }
+                let prev = self.prev.clone().expect("synced chain has a previous frame");
+                let mut residue =
+                    compress::inflate_guarded(&frame[p.payload_start..], MAX_DECOMPRESSED)?;
+                if residue.len() != prev.len() {
+                    // Inconsistent chain the sequence check missed (e.g.
+                    // u8 aliasing after a very long loss window): drop,
+                    // never deliver corrupt data.
+                    self.desync();
+                    return Ok(None);
+                }
+                delta::apply_delta(&mut residue, &prev)?;
+                let data = Bytes::from(residue);
+                self.prev = Some(data.clone());
+                self.expect_seq = self.expect_seq.wrapping_add(1);
+                data
+            }
+            _ => decode_payload_stateless(frame, &p)?,
+        };
+        let mut buffer = p.buffer;
+        buffer.data = data;
+        Ok(Some((buffer, p.caps)))
+    }
+
+    /// The chain broke: count the event once per break and drop deltas
+    /// until the next keyframe.
+    fn desync(&mut self) {
+        if self.synced {
+            if let Some(m) = &self.m_resyncs {
+                m.inc();
+            }
+        }
+        self.synced = false;
+        self.prev = None;
+    }
 }
 
 /// Read one length-prefixed EdgeFrame from a stream reader.
@@ -558,5 +1041,259 @@ mod tests {
         wire.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut r = std::io::Cursor::new(wire);
         assert!(read_frame(&mut r).is_err());
+    }
+
+    // -- stateful per-link codec stack (Delta / Sparse / extended Auto) --
+
+    /// A correlated frame sequence: each frame perturbs a few bytes of
+    /// the previous one (video-like tensor traffic).
+    fn correlated_frames(n: usize, len: usize) -> Vec<Buffer> {
+        let mut cur = vec![7u8; len];
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            for j in (i % 97..len).step_by(809) {
+                cur[j] = cur[j].wrapping_add(i as u8 + 1);
+            }
+            out.push(Buffer::new(cur.clone()).with_pts(i as u64));
+        }
+        out
+    }
+
+    #[test]
+    fn delta_link_roundtrips_and_deltas_are_small() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        let mut dec = LinkDecoder::new("");
+        let frames = correlated_frames(20, 60_000);
+        let mut delta_bytes = 0usize;
+        let mut keyframes = 0;
+        for b in &frames {
+            let f = enc.encode(b, None).unwrap();
+            assert!(f.header.same_backing(&f.payload), "delta frame must be one allocation");
+            let raw = Bytes::from(f.to_vec());
+            if raw[5] & FLAG_KEYFRAME != 0 {
+                keyframes += 1;
+            } else {
+                delta_bytes += f.payload.len();
+            }
+            let (b2, _) = dec.decode(&raw).unwrap().expect("lossless link never drops");
+            assert_eq!(&b2.data[..], &b.data[..]);
+            assert_eq!(b2.pts, b.pts);
+        }
+        // 20 frames at the default interval of 16 -> exactly 2 keyframes.
+        assert_eq!(keyframes, 2);
+        // 18 correlated deltas of 60 KB frames must cost almost nothing
+        // on the wire (~1.08 MB raw).
+        assert!(delta_bytes < 20_000, "delta bytes {delta_bytes}");
+    }
+
+    #[test]
+    fn delta_payload_size_change_forces_keyframe() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        let mut dec = LinkDecoder::new("");
+        for len in [1000usize, 1000, 2000, 2000] {
+            let b = Buffer::new(vec![3u8; len]);
+            let f = Bytes::from(enc.encode(&b, None).unwrap().to_vec());
+            let (b2, _) = dec.decode(&f).unwrap().unwrap();
+            assert_eq!(b2.data.len(), len);
+        }
+    }
+
+    #[test]
+    fn decoder_drops_deltas_after_loss_until_next_keyframe() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        enc.set_keyframe_interval(8);
+        let mut dec = LinkDecoder::new("");
+        let frames = correlated_frames(24, 10_000);
+        let encoded: Vec<Bytes> =
+            frames.iter().map(|b| Bytes::from(enc.encode(b, None).unwrap().to_vec())).collect();
+        // Lose frames 2..5 (mid-chain deltas).
+        let mut delivered = Vec::new();
+        for (i, f) in encoded.iter().enumerate() {
+            if (2..5).contains(&i) {
+                continue;
+            }
+            if let Some((b, _)) = dec.decode(f).unwrap() {
+                delivered.push(i);
+                // Whatever is delivered must be byte-exact, never a
+                // corrupt reconstruction.
+                assert_eq!(&b.data[..], &frames[i].data[..], "frame {i}");
+            }
+        }
+        // Frames 5..8 are dropped (broken chain); 8 is the next
+        // keyframe and everything from there is delivered.
+        assert_eq!(delivered, vec![0, 1, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21, 22, 23]);
+        assert!(!delivered.contains(&5));
+    }
+
+    #[test]
+    fn decoder_detects_reorder() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        let mut dec = LinkDecoder::new("");
+        let frames = correlated_frames(4, 5_000);
+        let encoded: Vec<Bytes> =
+            frames.iter().map(|b| Bytes::from(enc.encode(b, None).unwrap().to_vec())).collect();
+        assert!(dec.decode(&encoded[0]).unwrap().is_some()); // keyframe
+        assert!(dec.decode(&encoded[2]).unwrap().is_none(), "skipped seq must drop");
+        assert!(dec.decode(&encoded[1]).unwrap().is_none(), "stale seq must drop");
+        assert!(!dec.is_synced());
+    }
+
+    #[test]
+    fn stateless_decode_accepts_keyframes_rejects_mid_chain_deltas() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        let frames = correlated_frames(2, 1_000);
+        let kf = Bytes::from(enc.encode(&frames[0], None).unwrap().to_vec());
+        let df = Bytes::from(enc.encode(&frames[1], None).unwrap().to_vec());
+        let (b, _) = decode_shared(&kf).unwrap();
+        assert_eq!(&b.data[..], &frames[0].data[..]);
+        let e = decode_shared(&df).unwrap_err();
+        assert!(e.to_string().contains("LinkDecoder"), "{e}");
+        assert!(decode(&df.to_vec()).is_err());
+    }
+
+    #[test]
+    fn non_delta_frame_on_link_breaks_chain_and_rekeys() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        let frames = correlated_frames(3, 2_000);
+        let f0 = Bytes::from(enc.encode(&frames[0], None).unwrap().to_vec());
+        assert!(f0[5] & FLAG_KEYFRAME != 0);
+        // Simulate a reconnect: history gone, next frame re-keys.
+        enc.reset_chain();
+        let f1 = Bytes::from(enc.encode(&frames[1], None).unwrap().to_vec());
+        assert!(f1[5] & FLAG_KEYFRAME != 0, "post-reset frame must be a keyframe");
+        let f2 = Bytes::from(enc.encode(&frames[2], None).unwrap().to_vec());
+        assert!(f2[5] & FLAG_KEYFRAME == 0);
+        // A fresh decoder (the reconnected receiver) follows from f1.
+        let mut dec = LinkDecoder::new("");
+        assert!(dec.decode(&f1).unwrap().is_some());
+        let (b2, _) = dec.decode(&f2).unwrap().unwrap();
+        assert_eq!(&b2.data[..], &frames[2].data[..]);
+    }
+
+    fn sparse_caps_and_payload(len: usize, every: usize) -> (Caps, Vec<u8>) {
+        use crate::tensor::{DType, TensorInfo, TensorsInfo};
+        let info = TensorsInfo::one(TensorInfo::new(DType::F32, &[len as u32]).unwrap());
+        let caps = Caps::tensors(&info);
+        let mut vals = vec![0f32; len];
+        for i in (0..len).step_by(every) {
+            vals[i] = i as f32 + 1.0;
+        }
+        (caps, crate::tensor::f32_to_bytes(&vals))
+    }
+
+    #[test]
+    fn sparse_link_roundtrips_and_beats_dense() {
+        let (caps, payload) = sparse_caps_and_payload(10_000, 50); // 2% density
+        let b = Buffer::new(payload.clone()).with_pts(1);
+        let mut enc = LinkCodec::new(Codec::Sparse, "");
+        let f = enc.encode(&b, Some(&caps)).unwrap();
+        assert!(f.header.same_backing(&f.payload), "sparse frame must be one allocation");
+        let raw = Bytes::from(f.to_vec());
+        assert_eq!(raw[6], Codec::Sparse as u8);
+        assert!(f.payload.len() < payload.len() / 5, "sparse payload {}", f.payload.len());
+        let (b2, c2) = decode_shared(&raw).unwrap();
+        assert_eq!(&b2.data[..], &payload[..]);
+        assert_eq!(c2.unwrap(), caps);
+        // A LinkDecoder decodes it identically.
+        let mut dec = LinkDecoder::new("");
+        let (b3, _) = dec.decode(&raw).unwrap().unwrap();
+        assert_eq!(&b3.data[..], &payload[..]);
+    }
+
+    #[test]
+    fn sparse_link_falls_back_to_zlib_when_dense_or_inapplicable() {
+        // Dense tensor payload: COO would grow the frame -> zlib flag.
+        let (caps, _) = sparse_caps_and_payload(1_000, 1);
+        let dense_vals: Vec<f32> = (1..=1000).map(|x| x as f32).collect();
+        let b = Buffer::new(crate::tensor::f32_to_bytes(&dense_vals));
+        let mut enc = LinkCodec::new(Codec::Sparse, "");
+        let raw = Bytes::from(enc.encode(&b, Some(&caps)).unwrap().to_vec());
+        assert_eq!(raw[6], Codec::Zlib as u8);
+        assert_eq!(&decode_shared(&raw).unwrap().0.data[..], &b.data[..]);
+        // No tensor caps at all -> zlib as well.
+        let b2 = Buffer::new(vec![0u8; 4_000]);
+        let raw2 = Bytes::from(enc.encode(&b2, None).unwrap().to_vec());
+        assert_eq!(raw2[6], Codec::Zlib as u8);
+    }
+
+    #[test]
+    fn auto_adopts_delta_on_correlated_stream() {
+        let mut enc = LinkCodec::new(Codec::Auto, "auto-delta-test");
+        let mut dec = LinkDecoder::new("");
+        let frames = correlated_frames(80, 30_000);
+        let mut wire_codecs = Vec::new();
+        for b in &frames {
+            let raw = Bytes::from(enc.encode(b, None).unwrap().to_vec());
+            wire_codecs.push(raw[6]);
+            let decoded = dec.decode(&raw).unwrap();
+            if let Some((b2, _)) = decoded {
+                assert_eq!(&b2.data[..], &b.data[..]);
+            }
+        }
+        // After the second probe (frame 65) saw a valid previous frame,
+        // the link must be riding the delta arm.
+        assert!(
+            wire_codecs[70..].iter().all(|&c| c == Codec::Delta as u8),
+            "steady state should be delta: {:?}",
+            &wire_codecs[60..]
+        );
+    }
+
+    #[test]
+    fn auto_adopts_sparse_on_sparse_tensors() {
+        // One nonzero value in a 400 KiB tensor: COO is ~36 bytes while
+        // even a run-length-friendly deflate of 400 KiB of zeros costs
+        // kilobytes, so the probe must adopt the sparse arm outright.
+        let (caps, payload) = sparse_caps_and_payload(100_000, 100_000);
+        let mut enc = LinkCodec::new(Codec::Auto, "auto-sparse-test");
+        let b = Buffer::new(payload);
+        for i in 0..3 {
+            let raw = Bytes::from(enc.encode(&b, Some(&caps)).unwrap().to_vec());
+            assert_eq!(raw[6], Codec::Sparse as u8, "frame {i}");
+            assert_eq!(&decode_shared(&raw).unwrap().0.data[..], &b.data[..]);
+        }
+    }
+
+    #[test]
+    fn auto_still_passes_through_on_noise() {
+        use crate::util::rng::XorShift64;
+        let mut enc = LinkCodec::new(Codec::Auto, "auto-noise-test");
+        let mut rng = XorShift64::new(3);
+        let mut none_frames = 0;
+        for i in 0..10 {
+            let mut noise = vec![0u8; 20_000];
+            rng.fill_bytes(&mut noise);
+            let b = Buffer::new(noise);
+            let f = enc.encode(&b, None).unwrap();
+            let raw = Bytes::from(f.to_vec());
+            if raw[6] == Codec::None as u8 {
+                none_frames += 1;
+                assert!(f.payload.same_backing(&b.data), "pass-through must share payload");
+            }
+            // Frame 0 is the probe; everything after must be pass-through.
+            if i > 0 {
+                assert_eq!(raw[6], Codec::None as u8, "frame {i}");
+            }
+        }
+        assert!(none_frames >= 9);
+    }
+
+    #[test]
+    fn delta_frames_survive_stream_framing() {
+        let mut enc = LinkCodec::new(Codec::Delta, "");
+        let frames = correlated_frames(3, 8_000);
+        let mut wire = Vec::new();
+        for b in &frames {
+            let f = enc.encode(b, Some(&Caps::video(4, 4, 30))).unwrap();
+            write_frame_vectored(&mut wire, &f).unwrap();
+        }
+        let mut r = std::io::Cursor::new(wire);
+        let mut dec = LinkDecoder::new("");
+        for b in &frames {
+            let raw = read_frame(&mut r).unwrap();
+            let (b2, c2) = dec.decode(&raw).unwrap().unwrap();
+            assert_eq!(&b2.data[..], &b.data[..]);
+            assert_eq!(c2.unwrap(), Caps::video(4, 4, 30));
+        }
     }
 }

@@ -16,9 +16,38 @@ use crate::util::{read_u32, Error, Result};
 pub const SPARSE_MAGIC: &[u8; 4] = b"EPSP";
 const HEADER: usize = 4 + 1 + 1 + 2 + 16 + 4;
 
+/// Max dense size a decoded sparse tensor may claim (guards hostile
+/// frames, mirroring `compress::MAX_DECOMPRESSED`): a 28-byte COO
+/// header with huge dims must not trigger a multi-GiB allocation.
+pub const MAX_DENSE_DECODED: usize = 256 * 1024 * 1024;
+
+/// The tensor's real rank: dims with trailing 1s trimmed (min 1). This
+/// is what travels in the wire rank byte — `TensorInfo` pads dims with
+/// trailing 1s, so the trimmed form is the canonical one.
+fn wire_rank(info: &TensorInfo) -> usize {
+    info.dims.iter().rposition(|&d| d != 1).map_or(1, |i| i + 1)
+}
+
+/// Count the non-zero element slots of a dense payload (the encoded-size
+/// predictor: COO stores exactly these plus the header).
+pub fn count_nnz(info: &TensorInfo, dense: &[u8]) -> usize {
+    let esz = info.dtype.size();
+    dense.chunks_exact(esz).filter(|slot| slot.iter().any(|&b| b != 0)).count()
+}
+
 /// Encode a dense tensor payload into COO. Zero elements (all-zero bytes
 /// of an element slot) are elided.
 pub fn encode(info: &TensorInfo, dense: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(HEADER + count_nnz(info, dense) * (4 + info.dtype.size()));
+    encode_into(info, dense, &mut out)?;
+    Ok(out)
+}
+
+/// Encode a dense tensor payload into COO, appended directly onto `out`
+/// (the frame being assembled — the wire path's one-allocation hop).
+/// Returns the number of bytes written. Two scans of the payload, no
+/// temporary index buffer.
+pub fn encode_into(info: &TensorInfo, dense: &[u8], out: &mut Vec<u8>) -> Result<usize> {
     if dense.len() != info.size() {
         return Err(Error::Tensor(format!(
             "dense payload {} != info size {}",
@@ -28,30 +57,31 @@ pub fn encode(info: &TensorInfo, dense: &[u8]) -> Result<Vec<u8>> {
     }
     let esz = info.dtype.size();
     let n = info.count();
-    let mut idx: Vec<u32> = Vec::new();
-    for i in 0..n {
-        let slot = &dense[i * esz..(i + 1) * esz];
-        if slot.iter().any(|&b| b != 0) {
-            idx.push(i as u32);
-        }
-    }
-    let mut out = Vec::with_capacity(HEADER + idx.len() * (4 + esz));
+    let start = out.len();
     out.extend_from_slice(SPARSE_MAGIC);
     out.push(info.dtype as u8);
-    out.push(MAX_RANK as u8);
+    out.push(wire_rank(info) as u8);
     out.extend_from_slice(&[0, 0]);
     for d in info.dims {
         out.extend_from_slice(&d.to_le_bytes());
     }
-    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-    for &i in &idx {
-        out.extend_from_slice(&i.to_le_bytes());
+    let nnz_pos = out.len();
+    out.extend_from_slice(&0u32.to_le_bytes()); // nnz, patched below
+    let mut nnz = 0u32;
+    for i in 0..n {
+        if dense[i * esz..(i + 1) * esz].iter().any(|&b| b != 0) {
+            out.extend_from_slice(&(i as u32).to_le_bytes());
+            nnz += 1;
+        }
     }
-    for &i in &idx {
-        let i = i as usize;
-        out.extend_from_slice(&dense[i * esz..(i + 1) * esz]);
+    for i in 0..n {
+        let slot = &dense[i * esz..(i + 1) * esz];
+        if slot.iter().any(|&b| b != 0) {
+            out.extend_from_slice(slot);
+        }
     }
-    Ok(out)
+    out[nnz_pos..nnz_pos + 4].copy_from_slice(&nnz.to_le_bytes());
+    Ok(out.len() - start)
 }
 
 /// Decode a COO tensor back to (info, dense payload).
@@ -60,9 +90,28 @@ pub fn decode(buf: &[u8]) -> Result<(TensorInfo, Vec<u8>)> {
         return Err(Error::Tensor("not a sparse tensor (bad magic)".into()));
     }
     let dtype = DType::from_wire(buf[4])?;
+    let rank = buf[5] as usize;
+    if rank == 0 || rank > MAX_RANK {
+        return Err(Error::Tensor(format!("sparse tensor rank {rank} out of 1..={MAX_RANK}")));
+    }
     let mut dims = [1u32; MAX_RANK];
     for (j, d) in dims.iter_mut().enumerate() {
         *d = read_u32(buf, 8 + j * 4)?;
+    }
+    if dims[rank..].iter().any(|&d| d != 1) {
+        return Err(Error::Tensor(format!(
+            "sparse tensor dims {dims:?} inconsistent with declared rank {rank}"
+        )));
+    }
+    // Hostile-input guard: the claimed dense size comes straight off the
+    // wire, so bound it (in overflow-safe math) BEFORE allocating — a
+    // 28-byte frame must not demand a multi-GiB buffer.
+    let claimed: u128 =
+        dims.iter().map(|&d| d as u128).product::<u128>() * dtype.size() as u128;
+    if claimed > MAX_DENSE_DECODED as u128 {
+        return Err(Error::Tensor(format!(
+            "sparse tensor claims {claimed} dense bytes, over the {MAX_DENSE_DECODED} limit"
+        )));
     }
     let info = TensorInfo::new(dtype, &dims)?;
     let nnz = read_u32(buf, 24)? as usize;
@@ -206,6 +255,99 @@ mod tests {
         enc[HEADER] = 2;
         enc[HEADER + 4] = 1;
         assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rank_byte_is_real_rank_and_roundtrips() {
+        // Regression: the rank byte used to be hardcoded to MAX_RANK.
+        for (dims, want_rank) in [
+            (vec![8u32], 1u8),
+            (vec![4, 20], 2),
+            (vec![2, 3, 4], 3),
+            (vec![2, 2, 2, 2], 4),
+            (vec![5, 1, 1, 1], 1), // trailing 1s trim
+        ] {
+            let info = TensorInfo::new(DType::U8, &dims).unwrap();
+            let dense: Vec<u8> = (0..info.size()).map(|x| (x % 7) as u8).collect();
+            let enc = encode(&info, &dense).unwrap();
+            assert_eq!(enc[5], want_rank, "dims {dims:?}");
+            let (info2, dense2) = decode(&enc).unwrap();
+            assert_eq!(info2.dims, info.dims);
+            assert_eq!(dense2, dense);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_rank_byte() {
+        let info = TensorInfo::new(DType::U8, &[4]).unwrap();
+        let good = encode(&info, &[0, 1, 0, 2]).unwrap();
+        for rank in [0u8, (MAX_RANK + 1) as u8, 255] {
+            let mut enc = good.clone();
+            enc[5] = rank;
+            let e = decode(&enc).unwrap_err();
+            assert!(e.to_string().contains("rank"), "rank {rank}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_dims_beyond_declared_rank() {
+        let info = TensorInfo::new(DType::U8, &[4, 3]).unwrap();
+        let dense = vec![1u8; info.size()];
+        let mut enc = encode(&info, &dense).unwrap();
+        assert_eq!(enc[5], 2);
+        enc[5] = 1; // claim rank 1 while dims[1] == 3
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn decode_bomb_rejected_before_allocating() {
+        // A header-only frame (nnz = 0) claiming huge dims passes the
+        // length check; the dense-size cap must reject it up front.
+        let info = TensorInfo::new(DType::F32, &[4]).unwrap();
+        let template = encode(&info, &[0u8; 16]).unwrap();
+        assert_eq!(template.len(), HEADER);
+        // ~64 GiB claim: 65536 * 65536 * 4 elements of f32.
+        let mut bomb = template.clone();
+        for (j, d) in [65536u32, 65536, 4, 1].iter().enumerate() {
+            bomb[8 + j * 4..12 + j * 4].copy_from_slice(&d.to_le_bytes());
+        }
+        bomb[5] = 3;
+        let e = decode(&bomb).unwrap_err();
+        assert!(e.to_string().contains("limit"), "{e}");
+        // Overflow-hostile dims (product wraps every native width) are
+        // also rejected cleanly, not wrapped into a small allocation.
+        let mut wrap = template;
+        for j in 0..MAX_RANK {
+            wrap[8 + j * 4..12 + j * 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        }
+        wrap[5] = MAX_RANK as u8;
+        assert!(decode(&wrap).is_err());
+        // At-the-limit claims still decode (an all-zero frame suffices).
+        let big = TensorInfo::new(DType::U8, &[MAX_DENSE_DECODED as u32]).unwrap();
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(SPARSE_MAGIC);
+        hdr.push(DType::U8 as u8);
+        hdr.push(1);
+        hdr.extend_from_slice(&[0, 0]);
+        for d in big.dims {
+            hdr.extend_from_slice(&d.to_le_bytes());
+        }
+        hdr.extend_from_slice(&0u32.to_le_bytes());
+        let (info2, dense2) = decode(&hdr).unwrap();
+        assert_eq!(info2.dims[0] as usize, MAX_DENSE_DECODED);
+        assert_eq!(dense2.len(), MAX_DENSE_DECODED);
+    }
+
+    #[test]
+    fn encode_into_appends_in_place() {
+        let info = TensorInfo::new(DType::U8, &[8]).unwrap();
+        let dense = [0u8, 3, 0, 0, 7, 0, 0, 1];
+        let mut out = b"FRAME".to_vec();
+        let n = encode_into(&info, &dense, &mut out).unwrap();
+        assert_eq!(out.len(), 5 + n);
+        assert_eq!(&out[..5], b"FRAME");
+        assert_eq!(&out[5..], encode(&info, &dense).unwrap().as_slice());
+        assert_eq!(count_nnz(&info, &dense), 3);
     }
 
     #[test]

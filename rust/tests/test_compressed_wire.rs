@@ -121,9 +121,12 @@ fn garbage_compressed_payload_is_serial_error() {
 
 #[test]
 fn unknown_codec_flag_byte_is_serial_error() {
+    // 2 is the Auto policy discriminant (never valid on the wire);
+    // 5..=255 are unassigned. 3 (delta) and 4 (sparse) are real codecs
+    // now and get their own stateless-rejection test below.
     let buf = Buffer::new(vec![1, 2, 3, 4]);
     let f = wire::encode_vectored(&buf, None, Codec::None).unwrap();
-    for flag in [2u8, 3, 0x7F, 0xFF] {
+    for flag in [2u8, 5, 0x7F, 0xFF] {
         let mut raw = f.to_vec();
         raw[6] = flag;
         match wire::decode_shared(&Bytes::from(raw.clone())) {
@@ -134,6 +137,27 @@ fn unknown_codec_flag_byte_is_serial_error() {
             Err(Error::Serial(_)) => {}
             other => panic!("flag {flag}: expected Error::Serial, got {other:?}"),
         }
+    }
+}
+
+#[test]
+fn stateful_codec_bytes_are_rejected_by_stateless_decode() {
+    let buf = Buffer::new(vec![1, 2, 3, 4]);
+    let f = wire::encode_vectored(&buf, None, Codec::None).unwrap();
+    // Codec byte 3 without the keyframe flag claims a mid-chain delta:
+    // undecodable without the link's previous frame.
+    let mut raw = f.to_vec();
+    raw[6] = 3;
+    match wire::decode_shared(&Bytes::from(raw)) {
+        Err(Error::Serial(msg)) => assert!(msg.contains("LinkDecoder"), "{msg}"),
+        other => panic!("mid-chain delta: expected Error::Serial, got {other:?}"),
+    }
+    // Codec byte 4 claims a sparse payload; [1,2,3,4] has no COO magic.
+    let mut raw = f.to_vec();
+    raw[6] = 4;
+    match wire::decode_shared(&Bytes::from(raw)) {
+        Err(Error::Serial(_)) => {}
+        other => panic!("bogus sparse: expected Error::Serial, got {other:?}"),
     }
 }
 
