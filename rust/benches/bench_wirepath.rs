@@ -30,15 +30,24 @@
 //! M=1 throughput cliff, and records the `sched.{tasks,parks,steals,
 //! polls}` counters.
 //!
-//! A **queue-architecture** section (schema 4) pits the work-stealing
-//! scheduler (per-worker deques + injector) against a detached
-//! shared-single-queue comparator pool (the pre-work-stealing
-//! architecture) on the steal-heavy M=64 density workload and a fan-in
-//! workload (P sources -> one multi-pad collector, the batch-wakeup
-//! shape). Gates: stealing M=64 throughput must not regress vs the
-//! shared queue, ready-queue lock WAITS per delivered item must drop,
-//! and fan-in delivery must conserve every buffer. Emits the
-//! `sched.{steals,local_hits,injector_hits}` split.
+//! A **queue-architecture** section (schema 4, three arms as of
+//! schema 8) pits the lock-free Chase-Lev scheduler (per-worker
+//! lock-free deques + batched injector drains + batch stealing, the
+//! default) against the schema-4 mutex-deque work-stealing pool AND the
+//! shared-single-queue comparator pool on the steal-heavy M=64 density
+//! workload and a fan-in workload (P sources -> one multi-pad
+//! collector, the batch-wakeup shape). All three arms run on detached
+//! pools so the comparison is independent of `EDGEPIPE_SCHED_QUEUE`
+//! (which picks the GLOBAL pool's architecture for every other
+//! scenario — the CI matrix runs the whole bench under chaselev and
+//! shared). Gates: mutex-stealing M=64 throughput must not regress vs
+//! the shared queue, Chase-Lev M=64 throughput must not regress vs the
+//! mutex-deque pool (>= 1.0x nominal, 0.9x CI floor), ready-queue lock
+//! WAITS per delivered item must drop vs shared and be ~0 (<= 0.01) on
+//! the Chase-Lev arm — its hot path acquires no mutex — and fan-in
+//! delivery must conserve every buffer on every arm. Emits the
+//! `sched.{steals,local_hits,injector_hits,stolen_tasks}` split
+//! (accumulated over the Chase-Lev runs).
 //!
 //! A **batching** section (schema 5) gates cross-pipeline adaptive
 //! inference batching: M=64 pipelines share one model behind a
@@ -658,13 +667,15 @@ fn quiesce() {
     std::thread::sleep(Duration::from_millis(50));
 }
 
-/// Snapshot of the dequeue-source counters (local/injector/steals).
-fn dequeue_snapshot() -> (u64, u64, u64) {
+/// Snapshot of the dequeue-source counters
+/// (local/injector/steals/stolen_tasks).
+fn dequeue_snapshot() -> (u64, u64, u64, u64) {
     let g = metrics::global();
     (
         g.counter("sched.local_hits").count(),
         g.counter("sched.injector_hits").count(),
         g.counter("sched.steals").count(),
+        g.counter("sched.stolen_tasks").count(),
     )
 }
 
@@ -989,12 +1000,14 @@ fn main() {
     );
 
     // ---- Density: N pipelines on K workers ------------------------------
-    // Spin BOTH pools up BEFORE taking thread baselines so their workers
+    // Spin ALL pools up BEFORE taking thread baselines so their workers
     // (which persist for the process lifetime) never pollute the deltas:
-    // the global work-stealing pool and the shared-single-queue
-    // comparator used by the queue-architecture section below.
+    // the global pool plus the three detached queue-architecture arms
+    // (Chase-Lev / mutex-stealing / shared) compared below.
     let workers = sched::global().workers() as u64;
     let shared_pool = Scheduler::start_detached(workers as usize, QueueMode::Shared);
+    let mutex_pool = Scheduler::start_detached(workers as usize, QueueMode::Stealing);
+    let chase_pool = Scheduler::start_detached(workers as usize, QueueMode::ChaseLev);
     let mut drows = Vec::new();
     let mut density_json = Vec::new();
     let mut m1_ratio = 0.0f64;
@@ -1076,18 +1089,25 @@ fn main() {
         "\nsched counters: tasks={st} parks={sp} steals={ss} polls={so} (M=1 pool/threaded {m1_ratio:.2}x)"
     );
 
-    // ---- Queue architecture: work stealing vs shared single queue -------
+    // ---- Queue architecture: chaselev vs mutex stealing vs shared -------
     // Steal-heavy M=64 density on each architecture (same K), best-of-N.
     // The shared-queue pool IS the schema-3 scheduler: every wake and
-    // every pop through one mutex.
+    // every pop through one mutex. The mutex-stealing pool is schema 4:
+    // per-worker Mutex<VecDeque> deques. The Chase-Lev pool is the
+    // schema-8 default: lock-free deques, batch steals, batched injector
+    // drains. All three are detached pools, so the arms stay what they
+    // claim to be regardless of EDGEPIPE_SCHED_QUEUE (which selects the
+    // global pool's architecture for every other scenario).
     let mut shared_fps = 0.0f64;
     let mut steal_fps = 0.0f64;
+    let mut chase_fps = 0.0f64;
     let mut shared_lpi = (0.0f64, 0.0f64); // (queue locks, lock waits) per item
     let mut steal_lpi = (0.0f64, 0.0f64);
-    // Dequeue-source split accumulated ONLY across stealing-pool runs:
-    // the counters are process-global, so raw totals would be polluted
-    // by the shared-queue comparator and the density section above.
-    let mut steal_split = (0u64, 0u64, 0u64);
+    let mut chase_lpi = (0.0f64, 0.0f64);
+    // Dequeue-source split accumulated ONLY across Chase-Lev runs: the
+    // counters are process-global, so raw totals would be polluted by
+    // the comparator arms and the density section above.
+    let mut chase_split = (0u64, 0u64, 0u64, 0u64);
     for run in 0..runs.max(1) {
         quiesce();
         let snap = lock_snapshot();
@@ -1100,32 +1120,45 @@ fn main() {
             shared_lpi = ((now.0 - snap.0) as f64 / items, (now.1 - snap.1) as f64 / items);
         }
         let snap = lock_snapshot();
-        let dsnap = dequeue_snapshot();
-        let (fps, delivered) = run_density_on(64, sched::global(), window);
+        let (fps, delivered) = run_density_on(64, &mutex_pool, window);
         quiesce();
         let now = lock_snapshot();
-        let dnow = dequeue_snapshot();
-        steal_split.0 += dnow.0 - dsnap.0;
-        steal_split.1 += dnow.1 - dsnap.1;
-        steal_split.2 += dnow.2 - dsnap.2;
         if run == 0 || fps > steal_fps {
             steal_fps = fps;
             let items = delivered.max(1) as f64;
             steal_lpi = ((now.0 - snap.0) as f64 / items, (now.1 - snap.1) as f64 / items);
+        }
+        let snap = lock_snapshot();
+        let dsnap = dequeue_snapshot();
+        let (fps, delivered) = run_density_on(64, &chase_pool, window);
+        quiesce();
+        let now = lock_snapshot();
+        let dnow = dequeue_snapshot();
+        chase_split.0 += dnow.0 - dsnap.0;
+        chase_split.1 += dnow.1 - dsnap.1;
+        chase_split.2 += dnow.2 - dsnap.2;
+        chase_split.3 += dnow.3 - dsnap.3;
+        if run == 0 || fps > chase_fps {
+            chase_fps = fps;
+            let items = delivered.max(1) as f64;
+            chase_lpi = ((now.0 - snap.0) as f64 / items, (now.1 - snap.1) as f64 / items);
         }
     }
     // Fan-in (batch-wakeup) workload on each architecture; conservation
     // is asserted inside the runner.
     let fanin_shared_fps = run_fanin_on(&shared_pool);
     quiesce();
+    let fanin_steal_fps = run_fanin_on(&mutex_pool);
+    quiesce();
     let dsnap = dequeue_snapshot();
-    let fanin_steal_fps = run_fanin_on(sched::global());
+    let fanin_chase_fps = run_fanin_on(&chase_pool);
     quiesce();
     let dnow = dequeue_snapshot();
-    let (sl, si, ssteal) = (
-        steal_split.0 + (dnow.0 - dsnap.0),
-        steal_split.1 + (dnow.1 - dsnap.1),
-        steal_split.2 + (dnow.2 - dsnap.2),
+    let (sl, si, ssteal, sbatch) = (
+        chase_split.0 + (dnow.0 - dsnap.0),
+        chase_split.1 + (dnow.1 - dsnap.1),
+        chase_split.2 + (dnow.2 - dsnap.2),
+        chase_split.3 + (dnow.3 - dsnap.3),
     );
     bench::table(
         &format!("Queue architecture — M=64 density + fan-in, {workers} workers"),
@@ -1139,18 +1172,26 @@ fn main() {
                 format!("{fanin_shared_fps:.0}"),
             ],
             vec![
-                "work stealing".into(),
+                "mutex stealing".into(),
                 format!("{steal_fps:.0}"),
                 format!("{:.3}", steal_lpi.0),
                 format!("{:.4}", steal_lpi.1),
                 format!("{fanin_steal_fps:.0}"),
             ],
+            vec![
+                "chase-lev".into(),
+                format!("{chase_fps:.0}"),
+                format!("{:.3}", chase_lpi.0),
+                format!("{:.4}", chase_lpi.1),
+                format!("{fanin_chase_fps:.0}"),
+            ],
         ],
     );
     println!(
-        "sched dequeue split (stealing-pool runs only): local_hits={sl} \
-         injector_hits={si} steals={ssteal} (steals is a true \
-         cross-worker steal count as of schema 4)"
+        "sched dequeue split (chase-lev runs only): local_hits={sl} \
+         injector_hits={si} steals={ssteal} stolen_tasks={sbatch} \
+         (steals counts successful cross-worker steal visits; \
+         stolen_tasks counts every task those visits transferred)"
     );
     // Acceptance: the steal-heavy M=64 case must not regress vs the
     // shared queue. Nominal is >=1.0x; the tripwire keeps jitter headroom
@@ -1173,6 +1214,37 @@ fn main() {
         "lock waits/item did not drop: stealing {:.4} vs shared {:.4}",
         steal_lpi.1,
         shared_lpi.1
+    );
+    // Chase-Lev gates (schema 8). Throughput: the lock-free pool must
+    // at least match the mutex-deque pool (>=1.0x nominal; the 0.9x
+    // tripwire keeps jitter headroom for short CI windows).
+    let chase_ratio = chase_fps / steal_fps.max(1e-9);
+    assert!(
+        chase_ratio >= 0.9,
+        "chase-lev M=64 throughput is {chase_ratio:.2}x of the mutex-deque pool — \
+         the lock-free hot path regressed"
+    );
+    let fanin_chase_ratio = fanin_chase_fps / fanin_shared_fps.max(1e-9);
+    assert!(
+        fanin_chase_ratio >= 0.85,
+        "chase-lev fan-in throughput is {fanin_chase_ratio:.2}x of the shared queue"
+    );
+    // Lock-free means lock-free: the Chase-Lev hot path (own-deque
+    // pushes/pops, steals) acquires no mutex, so lock WAITS per
+    // delivered item must be ~0 — the only counted locks left are the
+    // off-hot-path injector (spawn/teardown, cross-thread wakes).
+    assert!(
+        chase_lpi.1 <= 0.01,
+        "chase-lev lock waits/item is {:.4} — expected ~0 (hot-path dequeues must not lock)",
+        chase_lpi.1
+    );
+    // The steals accounting must still split true cross-worker steals
+    // from local/injector hits, and batch transfers must be visible:
+    // every steal visit moves at least the task it claims.
+    assert!(sl > 0, "chase-lev runs recorded no local dequeues — worker-side wakes misrouted");
+    assert!(
+        sbatch >= ssteal,
+        "stolen_tasks ({sbatch}) < steals ({ssteal}) — batch-steal accounting broken"
     );
 
     // ---- Cross-pipeline inference batching ------------------------------
@@ -1403,8 +1475,9 @@ fn main() {
         concat!(
             "{{\n",
             "  \"bench\": \"wirepath\",\n",
-            "  \"schema\": 7,\n",
+            "  \"schema\": 8,\n",
             "  \"status\": \"measured\",\n",
+            "  \"global_queue_mode\": \"{}\",\n",
             "  \"secs_per_case\": {},\n",
             "  \"runs\": {},\n",
             "  \"cases\": [\n{}\n  ],\n",
@@ -1435,14 +1508,20 @@ fn main() {
             "    \"workers\": {},\n",
             "    \"m64_shared_fps\": {:.1},\n",
             "    \"m64_stealing_fps\": {:.1},\n",
+            "    \"m64_chaselev_fps\": {:.1},\n",
             "    \"m64_stealing_vs_shared\": {:.3},\n",
+            "    \"m64_chaselev_vs_stealing\": {:.3},\n",
             "    \"queue_locks_per_item_shared\": {:.4},\n",
             "    \"queue_locks_per_item_stealing\": {:.4},\n",
+            "    \"queue_locks_per_item_chaselev\": {:.4},\n",
             "    \"lock_waits_per_item_shared\": {:.5},\n",
             "    \"lock_waits_per_item_stealing\": {:.5},\n",
+            "    \"lock_waits_per_item_chaselev\": {:.5},\n",
             "    \"fanin\": {{\"pipelines\": {}, \"sources\": {}, \"buffers_per_source\": {}, ",
-            "\"shared_fps\": {:.1}, \"stealing_fps\": {:.1}, \"conserved\": true}},\n",
-            "    \"sched\": {{\"local_hits\": {}, \"injector_hits\": {}, \"steals\": {}}}\n",
+            "\"shared_fps\": {:.1}, \"stealing_fps\": {:.1}, \"chaselev_fps\": {:.1}, ",
+            "\"conserved\": true}},\n",
+            "    \"sched\": {{\"local_hits\": {}, \"injector_hits\": {}, \"steals\": {}, ",
+            "\"stolen_tasks\": {}}}\n",
             "  }},\n",
             "  \"batching\": {{\n",
             "    \"workers\": {},\n",
@@ -1477,6 +1556,7 @@ fn main() {
             "  }}\n",
             "}}\n"
         ),
+        format!("{:?}", sched::global().queue_mode()).to_lowercase(),
         secs,
         runs,
         json_cases.join(",\n"),
@@ -1513,19 +1593,25 @@ fn main() {
         workers,
         shared_fps,
         steal_fps,
+        chase_fps,
         arch_ratio,
+        chase_ratio,
         shared_lpi.0,
         steal_lpi.0,
+        chase_lpi.0,
         shared_lpi.1,
         steal_lpi.1,
+        chase_lpi.1,
         FANIN_PIPELINES,
         FANIN_SOURCES,
         FANIN_BUFS,
         fanin_shared_fps,
         fanin_steal_fps,
+        fanin_chase_fps,
         sl,
         si,
         ssteal,
+        sbatch,
         workers,
         b64_fps,
         unb64_fps,

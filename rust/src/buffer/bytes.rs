@@ -16,18 +16,32 @@ use std::ops::{Bound, Deref, RangeBounds};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Process-wide count of payload bytes duplicated by explicit copies.
-static COPIED: AtomicU64 = AtomicU64::new(0);
+use crate::metrics::{shard_slot, COUNTER_SHARDS};
+
+/// One padded lane of the copy counter: every frame on every worker
+/// records here, so a single atomic would bounce its cache line across
+/// cores (same false-sharing fix as `metrics::Counter` sharding).
+#[repr(align(128))]
+struct CopyShard(AtomicU64);
+
+#[allow(clippy::declare_interior_mutable_const)] // const used only as an array initializer
+const COPY_SHARD_ZERO: CopyShard = CopyShard(AtomicU64::new(0));
+
+/// Process-wide count of payload bytes duplicated by explicit copies,
+/// sharded per thread and summed on read (monotonic, not a linearizable
+/// snapshot — identical semantics to the relaxed single atomic it
+/// replaces).
+static COPIED: [CopyShard; COUNTER_SHARDS] = [COPY_SHARD_ZERO; COUNTER_SHARDS];
 
 /// Record `n` payload bytes as copied (for code that copies outside
 /// [`Bytes::copy_from_slice`], e.g. legacy/baseline paths).
 pub fn record_copy(n: usize) {
-    COPIED.fetch_add(n as u64, Ordering::Relaxed);
+    COPIED[shard_slot()].0.fetch_add(n as u64, Ordering::Relaxed);
 }
 
 /// Total payload bytes duplicated so far in this process.
 pub fn bytes_copied() -> u64 {
-    COPIED.load(Ordering::Relaxed)
+    COPIED.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
 }
 
 /// A shared, immutable byte slice: `Arc<Vec<u8>>` + offset/len.

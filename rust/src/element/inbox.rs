@@ -20,10 +20,11 @@
 //! is never exceeded no matter who is pushing.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::element::Item;
+use crate::metrics::{self, Counter};
 use crate::util::{Error, Result};
 
 /// Callback re-enqueueing a parked scheduler task. Registered wakers are
@@ -31,6 +32,16 @@ use crate::util::{Error, Result};
 /// awaited transition possible; spurious fires are allowed — the woken
 /// task re-checks the queue state and re-parks if nothing changed.
 pub type Waker = Arc<dyn Fn() + Send + Sync>;
+
+/// `inbox.wakes`: every waker the inboxes fire (consumer wakes on push,
+/// producer wakes on pop/close). One firing per parked-task re-enqueue,
+/// i.e. per frame on a parked-heavy pipeline — hot enough to shard
+/// (see [`metrics::Registry::sharded_counter`]). Cached so the hot path
+/// never touches the registry's name map.
+fn wake_counter() -> &'static Arc<Counter> {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| metrics::global().sharded_counter("inbox.wakes"))
+}
 
 /// Consumer wakers taken during a multi-push turn (a fan-out push, an
 /// EOS broadcast), fired in ONE pass after every queue was filled instead
@@ -57,11 +68,17 @@ impl WakeBatch {
 
     /// Fire every collected waker (the batch is left empty).
     pub fn fire(&mut self) {
+        let mut n = 0u64;
         if let Some(w) = self.first.take() {
             w();
+            n += 1;
         }
         for w in self.rest.drain(..) {
             w();
+            n += 1;
+        }
+        if n > 0 {
+            wake_counter().add(n);
         }
     }
 }
@@ -180,13 +197,19 @@ pub struct Inbox {
 fn fire(waker: Option<Waker>) {
     if let Some(w) = waker {
         w();
+        wake_counter().inc();
     }
 }
 
 fn fire_all(wakers: Vec<Waker>) {
+    if wakers.is_empty() {
+        return;
+    }
+    let n = wakers.len() as u64;
     for w in wakers {
         w();
     }
+    wake_counter().add(n);
 }
 
 impl Inbox {

@@ -12,23 +12,46 @@
 //! tasks; `Blocking` elements (socket-bound sources/sinks, app channels,
 //! live-paced capture) keep a dedicated thread exactly as before.
 //!
-//! ## Queue architecture (work stealing)
+//! ## Queue architecture (lock-free work stealing)
 //!
 //! At 64 pipelines x 6 elements every park/wake/yield used to serialize
-//! through ONE shared `Mutex<VecDeque>`; now each worker owns a local
-//! deque and steals when empty ([`QueueMode::Stealing`], the default):
+//! through ONE shared `Mutex<VecDeque>`; now each worker owns a
+//! **lock-free Chase-Lev deque** ([`QueueMode::ChaseLev`], the default):
 //!
 //! - A wake issued **on a worker thread** (the overwhelmingly common
-//!   case: a push re-enqueueing its downstream consumer) lands on that
-//!   worker's own local queue — an uncontended lock.
+//!   case: a push re-enqueueing its downstream consumer) is a lock-free
+//!   bottom push onto that worker's own deque — no mutex, no wait, and
+//!   the worker's own pops never contend with it.
 //! - Wakes from **non-worker threads** (`Blocking` elements, MQTT/zmq
 //!   callback threads, pipeline spawn/teardown) fall back to a global
-//!   **injector** queue. Workers poll the injector ahead of local work
-//!   every [`INJECTOR_TICK`] turns so it can never starve behind a busy
-//!   local queue.
-//! - A worker with nothing local and an empty injector **steals** from
-//!   the front of a victim's deque (round-robin over peers) before
-//!   going to sleep.
+//!   **injector** queue. The injector keeps its `Mutex` — it is off the
+//!   per-frame hot path — but workers drain it in half-the-queue
+//!   **batches** (one lock hold moves many tasks) and poll it ahead of
+//!   local work every [`INJECTOR_TICK`] turns so it can never starve
+//!   behind a busy local queue.
+//! - A worker with nothing local and an empty injector **steals a
+//!   batch** — up to half the victim's visible queue, each element
+//!   claimed by its own top CAS — runs the first claimable task and
+//!   parks the rest on its own deque (they surface as `local_hits`).
+//!
+//! ### Chase-Lev memory-ordering notes
+//!
+//! The deque is the classic Chase-Lev growable ring with the C11
+//! orderings of Lê et al. (PPoPP '13): the owner pushes/pops `bottom`
+//! with relaxed loads/stores plus a release fence publishing each slot
+//! write; thieves `Acquire`-load `top`, fence, `Acquire`-load `bottom`,
+//! read the slot, then claim index `top` with a SeqCst CAS. The owner's
+//! pop reserves `bottom - 1` first and re-reads `top` after a SeqCst
+//! fence, so a pop racing a steal resolves through `top`: on the
+//! one-element boundary both sides CAS `top` and exactly one wins.
+//! `top` only ever increases, so the CAS is ABA-free. Growth doubles
+//! the power-of-two ring and **retires** (never frees, until `Drop`)
+//! the old buffer: a thief holding a stale buffer pointer reads a
+//! frozen cell whose value for any still-claimable index is identical
+//! in every later generation — its top CAS then certifies the read.
+//! A **range** steal (one CAS over `top..top+n`) would be unsound with
+//! a bottom-popping owner (the owner can pop inside the claimed range
+//! without touching `top`), hence the per-element CAS batch.
 //!
 //! Every dequeue claims the task with a `QUEUED -> RUNNING` CAS, so a
 //! wake racing a pop can never be clobbered into a double-run: a stale
@@ -36,9 +59,12 @@
 //! on a signal-counting condvar; wakes issued during a worker's turn are
 //! **batched** — the sleep lock is taken once per turn (covering a whole
 //! multi-buffer burst plus an EOS fan-out), not once per enqueued task.
-//! `EDGEPIPE_SCHED_QUEUE=shared` opts the global pool back into the
-//! single shared queue (the pre-work-stealing architecture, kept as the
-//! bench comparator).
+//! A thief that loses a steal CAS treats the scan as "work may remain"
+//! and rescans instead of sleeping, preserving the lost-wakeup-free
+//! sleep protocol. `EDGEPIPE_SCHED_QUEUE=stealing` opts the global pool
+//! back into the schema-4 `Mutex<VecDeque>` per-worker deques and
+//! `EDGEPIPE_SCHED_QUEUE=shared` into the single shared queue (both
+//! kept as bench comparators).
 //!
 //! A task never blocks a worker on queue state:
 //!
@@ -61,14 +87,20 @@
 //!
 //! Observability: `sched.tasks` (spawned), `sched.parks` (task parked),
 //! `sched.polls` (step-loop iterations), `sched.local_hits` /
-//! `sched.injector_hits` / `sched.steals` (where each dequeue came from —
-//! steals is a true cross-worker steal count), and `sched.queue_locks` /
+//! `sched.injector_hits` / `sched.steals` (where each claimed dequeue
+//! came from — steals counts successful cross-worker steal *visits*),
+//! `sched.stolen_tasks` (total tasks transferred by those visits,
+//! >= steals when batches move more than one), and `sched.queue_locks` /
 //! `sched.lock_waits` (ready-queue lock acquisitions / acquisitions that
-//! had to wait) in the global metrics registry.
+//! had to wait — injector-only under `ChaseLev`) in the global metrics
+//! registry. All of them are per-thread **sharded** counters
+//! ([`metrics::Registry::sharded_counter`]): K workers bumping them per
+//! frame would otherwise false-share one cache line.
 
 use std::cell::Cell;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::marker::PhantomData;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, TryLockError, Weak};
 
 use crate::element::inbox::{PollState, TryPop, Waker};
@@ -89,8 +121,13 @@ pub enum Workload {
 /// Ready-queue architecture of a pool (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum QueueMode {
-    /// Per-worker deques + injector + stealing (the default).
+    /// Per-worker lock-free Chase-Lev deques + batched injector drains +
+    /// batch stealing (the default).
     #[default]
+    ChaseLev,
+    /// Per-worker `Mutex<VecDeque>` deques + injector + one-task steals
+    /// (the schema-4 architecture; `EDGEPIPE_SCHED_QUEUE=stealing`,
+    /// bench comparator).
     Stealing,
     /// One shared queue every worker pops (the pre-work-stealing
     /// architecture; `EDGEPIPE_SCHED_QUEUE=shared`, bench comparator).
@@ -101,7 +138,8 @@ impl QueueMode {
     pub fn from_env() -> Self {
         match std::env::var("EDGEPIPE_SCHED_QUEUE").ok().as_deref() {
             Some("shared") => QueueMode::Shared,
-            _ => QueueMode::Stealing,
+            Some("stealing") => QueueMode::Stealing,
+            _ => QueueMode::ChaseLev,
         }
     }
 }
@@ -137,6 +175,191 @@ const RUNNING: u8 = 2;
 const NOTIFIED: u8 = 3;
 const DONE: u8 = 4;
 
+// ---------------------------------------------------------------------------
+// Chase-Lev lock-free work-stealing deque (hand-rolled; module docs carry
+// the memory-ordering discipline and the batch-steal soundness argument).
+// ---------------------------------------------------------------------------
+
+/// Initial ring capacity (power of two).
+const MIN_DEQUE_CAP: usize = 32;
+
+/// Hard cap on tasks one steal visit transfers (half the victim's queue,
+/// but never more than this — a huge victim shouldn't stall the thief).
+const MAX_STEAL_BATCH: usize = 16;
+
+/// Tasks one injector lock hold may drain in `ChaseLev` mode.
+const INJECTOR_BATCH: usize = 32;
+
+/// Result of a thief's [`ChaseLev::steal`] attempt.
+enum Steal<T> {
+    /// Claimed the element at `top`.
+    Taken(T),
+    /// Nothing visible to steal.
+    Empty,
+    /// Lost the top CAS to the owner or another thief. Work may still
+    /// exist — the caller must rescan, never sleep, on this answer.
+    Retry,
+}
+
+/// Power-of-two ring of raw `Arc` payload pointers. Slots are atomics
+/// because a thief reads the cell for index `top` while the owner may be
+/// storing into *other* indices of the same ring; a cell holding a
+/// still-claimable index is never overwritten within one generation
+/// (growth triggers before the ring wraps onto live entries).
+struct DequeBuf {
+    slots: Box<[AtomicUsize]>,
+    mask: usize,
+}
+
+impl DequeBuf {
+    fn new(cap: usize) -> DequeBuf {
+        debug_assert!(cap.is_power_of_two());
+        DequeBuf { slots: (0..cap).map(|_| AtomicUsize::new(0)).collect(), mask: cap - 1 }
+    }
+
+    fn cap(&self) -> usize {
+        self.mask + 1
+    }
+
+    fn slot(&self, i: isize) -> &AtomicUsize {
+        &self.slots[(i as usize) & self.mask]
+    }
+}
+
+/// Chase-Lev deque of `Arc<T>` payloads: the owner pushes and pops the
+/// bottom without locks or (in the common case) CAS; thieves claim the
+/// top with a CAS. `top` is monotonically increasing, so the CAS is
+/// ABA-free. See the module docs for the full ordering discipline.
+pub(crate) struct ChaseLev<T> {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: AtomicPtr<DequeBuf>,
+    /// Rings replaced by growth, freed only on `Drop` (epoch-by-lifetime
+    /// retirement): a thief that loaded the old pointer may still read a
+    /// frozen cell, and every cell it can certify with a top CAS holds
+    /// the same value in all later generations.
+    retired: Mutex<Vec<*mut DequeBuf>>,
+    _payload: PhantomData<Arc<T>>,
+}
+
+// Safety: the deque owns `Arc<T>` payloads (stored as raw pointers) and
+// hands them across threads; `*mut DequeBuf` is owned exclusively by the
+// deque. Both are safe to send/share exactly when `Arc<T>` is.
+unsafe impl<T: Send + Sync> Send for ChaseLev<T> {}
+unsafe impl<T: Send + Sync> Sync for ChaseLev<T> {}
+
+impl<T> ChaseLev<T> {
+    fn new() -> Self {
+        ChaseLev {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Box::into_raw(Box::new(DequeBuf::new(MIN_DEQUE_CAP)))),
+            retired: Mutex::new(Vec::new()),
+            _payload: PhantomData,
+        }
+    }
+
+    /// Entries visible right now — exact for the owner, a racy hint for
+    /// thieves sizing a batch.
+    fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        b.saturating_sub(t).max(0) as usize
+    }
+
+    /// Owner-only: push one element on the bottom.
+    fn push(&self, v: Arc<T>) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        if b - t >= buf.cap() as isize {
+            self.grow(t, b);
+            buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        }
+        buf.slot(b).store(Arc::into_raw(v) as usize, Ordering::Relaxed);
+        // Publish the slot BEFORE the new bottom: a thief observing the
+        // incremented bottom must also observe the slot write.
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only (called from `push`): double the ring, copying live
+    /// indices `t..b`; retire the old ring until `Drop`.
+    fn grow(&self, t: isize, b: isize) {
+        let old = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        let new = Box::new(DequeBuf::new(old.cap() * 2));
+        for i in t..b {
+            new.slot(i).store(old.slot(i).load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        let old_ptr = self.buf.swap(Box::into_raw(new), Ordering::Release);
+        self.retired.lock().unwrap_or_else(|p| p.into_inner()).push(old_ptr);
+    }
+
+    /// Owner-only: pop one element off the bottom (LIFO).
+    fn pop(&self) -> Option<Arc<T>> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = unsafe { &*self.buf.load(Ordering::Relaxed) };
+        self.bottom.store(b, Ordering::Relaxed);
+        // Order our bottom reservation against thief top reads: either a
+        // racing thief observes the reservation, or we observe its CAS —
+        // never both taking the same element.
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: undo the reservation.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let raw = buf.slot(b).load(Ordering::Relaxed);
+        if t == b {
+            // Last element: race thieves for it through the top CAS.
+            let won =
+                self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                return None; // a thief got it first
+            }
+        }
+        Some(unsafe { Arc::from_raw(raw as *const T) })
+    }
+
+    /// Thief: claim the element at `top`. The slot is read BEFORE the
+    /// CAS (afterwards the owner may legally overwrite the cell); CAS
+    /// success certifies the value read really was index `top`'s.
+    fn steal(&self) -> Steal<Arc<T>> {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Observing b > t (released by the owner's push fence) implies
+        // this Acquire load observes a generation holding index t; an
+        // older generation read keeps a frozen copy of the same value
+        // alive via `retired`.
+        let buf = unsafe { &*self.buf.load(Ordering::Acquire) };
+        let raw = buf.slot(t).load(Ordering::Relaxed);
+        if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_err() {
+            return Steal::Retry;
+        }
+        Steal::Taken(unsafe { Arc::from_raw(raw as *const T) })
+    }
+}
+
+impl<T> Drop for ChaseLev<T> {
+    fn drop(&mut self) {
+        // Exclusive access: release remaining payloads, then every ring
+        // generation.
+        while self.pop().is_some() {}
+        let cur = *self.buf.get_mut();
+        drop(unsafe { Box::from_raw(cur) });
+        let retired = self.retired.get_mut().unwrap_or_else(|p| p.into_inner());
+        for p in retired.drain(..) {
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
+}
+
 /// Live-task countdown a pipeline joins on at teardown.
 pub struct TaskGroup {
     live: Mutex<usize>,
@@ -166,10 +389,14 @@ impl TaskGroup {
     }
 }
 
+/// Sharded throughout: every counter here is bumped per frame (or per
+/// dequeue) by K workers at once — the false-sharing hot set the sharded
+/// counter variant exists for.
 pub(crate) struct SchedMetrics {
     pub tasks: Arc<Counter>,
     pub parks: Arc<Counter>,
     pub steals: Arc<Counter>,
+    pub stolen_tasks: Arc<Counter>,
     pub polls: Arc<Counter>,
     pub local_hits: Arc<Counter>,
     pub injector_hits: Arc<Counter>,
@@ -181,14 +408,15 @@ impl SchedMetrics {
     fn new() -> Self {
         let g = metrics::global();
         Self {
-            tasks: g.counter("sched.tasks"),
-            parks: g.counter("sched.parks"),
-            steals: g.counter("sched.steals"),
-            polls: g.counter("sched.polls"),
-            local_hits: g.counter("sched.local_hits"),
-            injector_hits: g.counter("sched.injector_hits"),
-            queue_locks: g.counter("sched.queue_locks"),
-            lock_waits: g.counter("sched.lock_waits"),
+            tasks: g.sharded_counter("sched.tasks"),
+            parks: g.sharded_counter("sched.parks"),
+            steals: g.sharded_counter("sched.steals"),
+            stolen_tasks: g.sharded_counter("sched.stolen_tasks"),
+            polls: g.sharded_counter("sched.polls"),
+            local_hits: g.sharded_counter("sched.local_hits"),
+            injector_hits: g.sharded_counter("sched.injector_hits"),
+            queue_locks: g.sharded_counter("sched.queue_locks"),
+            lock_waits: g.sharded_counter("sched.lock_waits"),
         }
     }
 }
@@ -348,6 +576,17 @@ enum StepOutcome {
     Done,
 }
 
+/// Result of one dequeue scan over every source a worker polls.
+enum Scan {
+    /// A task was claimed; run it.
+    Task(Arc<Task>),
+    /// Nothing claimable anywhere — sleeping is safe.
+    Empty,
+    /// A steal lost its CAS: work may remain whose wake signal was
+    /// already consumed, so the worker must rescan, not sleep.
+    Retry,
+}
+
 /// A schedulable element (handle kept by the owning pipeline; wakers hold
 /// weak refs so dropped pipelines free their elements).
 pub struct Task {
@@ -383,7 +622,10 @@ thread_local! {
 /// besides the global.
 pub struct Scheduler {
     injector: ReadyQueue,
+    /// `Stealing`-mode per-worker deques (mutex comparator).
     locals: Vec<ReadyQueue>,
+    /// `ChaseLev`-mode per-worker lock-free deques.
+    deques: Vec<ChaseLev<Task>>,
     sleep: Mutex<Sleep>,
     cv: Condvar,
     workers: usize,
@@ -415,6 +657,7 @@ impl Scheduler {
         let s = Arc::new(Scheduler {
             injector: Mutex::new(VecDeque::new()),
             locals: (0..k).map(|_| Mutex::new(VecDeque::new())).collect(),
+            deques: (0..k).map(|_| ChaseLev::new()).collect(),
             sleep: Mutex::new(Sleep { idle: 0, signals: 0 }),
             cv: Condvar::new(),
             workers: k,
@@ -490,12 +733,17 @@ impl Scheduler {
     }
 
     /// Make a QUEUED task runnable. On a worker thread of this pool the
-    /// task lands on that worker's own (uncontended) local queue and the
+    /// task lands on that worker's own deque — a lock-free bottom push
+    /// under `ChaseLev`, an uncontended lock under `Stealing` — and the
     /// idle-worker signal is deferred to the end-of-turn batch; any other
     /// thread routes through the injector with an immediate signal.
     fn enqueue(self: &Arc<Self>, task: Arc<Task>) {
-        match self.current_worker() {
-            Some(id) if self.queues == QueueMode::Stealing => {
+        match (self.current_worker(), self.queues) {
+            (Some(id), QueueMode::ChaseLev) => {
+                self.deques[id].push(task);
+                PENDING_WAKES.with(|p| p.set(p.get() + 1));
+            }
+            (Some(id), QueueMode::Stealing) => {
                 self.lock_queue(&self.locals[id]).push_back(task);
                 PENDING_WAKES.with(|p| p.set(p.get() + 1));
             }
@@ -575,35 +823,182 @@ impl Scheduler {
         }
     }
 
-    /// One full dequeue attempt: local, injector, then steal (see module
-    /// docs for the ordering rationale).
-    fn scan(&self, id: usize, tick: usize) -> Option<Arc<Task>> {
-        if self.queues == QueueMode::Shared {
-            let t = self.claim_from(&self.injector)?;
-            self.m.injector_hits.inc();
-            return Some(t);
-        }
-        if tick % INJECTOR_TICK == 0 {
-            if let Some(t) = self.claim_from(&self.injector) {
-                self.m.injector_hits.inc();
-                return Some(t);
-            }
-        }
-        if let Some(t) = self.claim_from(&self.locals[id]) {
-            self.m.local_hits.inc();
-            return Some(t);
-        }
-        if let Some(t) = self.claim_from(&self.injector) {
-            self.m.injector_hits.inc();
-            return Some(t);
-        }
-        for off in 1..self.workers {
-            if let Some(t) = self.claim_from(&self.locals[(id + off) % self.workers]) {
-                self.m.steals.inc();
-                return Some(t);
+    /// Pop the worker's own Chase-Lev deque until an entry wins the
+    /// `QUEUED -> RUNNING` claim CAS (stale entries drop, as in
+    /// [`Scheduler::claim_from`]).
+    fn pop_own(&self, id: usize) -> Option<Arc<Task>> {
+        while let Some(task) = self.deques[id].pop() {
+            if task
+                .state
+                .compare_exchange(QUEUED, RUNNING, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return Some(task);
             }
         }
         None
+    }
+
+    /// `ChaseLev`-mode injector drain: ONE counted lock hold takes up to
+    /// half the injector (capped at [`INJECTOR_BATCH`]); the first
+    /// claimable task runs now, the rest land on this worker's own deque
+    /// (surfacing as `local_hits` later). Their original enqueues
+    /// already signalled sleepers; extra deferred wakes invite idle
+    /// peers to steal the surplus back. Loops while whole batches turn
+    /// out stale so a live entry deeper in the queue can't be missed
+    /// right before a sleep.
+    fn drain_injector(&self, id: usize) -> Option<Arc<Task>> {
+        loop {
+            let mut q = self.lock_queue(&self.injector);
+            if q.is_empty() {
+                return None;
+            }
+            let n = ((q.len() + 1) / 2).min(INJECTOR_BATCH);
+            let batch: Vec<Arc<Task>> = q.drain(..n).collect();
+            drop(q);
+            let mut claimed = None;
+            let mut extras = 0usize;
+            for task in batch {
+                if claimed.is_none() {
+                    if task
+                        .state
+                        .compare_exchange(QUEUED, RUNNING, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        claimed = Some(task);
+                    }
+                } else {
+                    self.deques[id].push(task);
+                    extras += 1;
+                }
+            }
+            if extras > 0 {
+                PENDING_WAKES.with(|p| p.set(p.get() + extras));
+            }
+            if claimed.is_some() {
+                return claimed;
+            }
+        }
+    }
+
+    /// Batch steal from `victim`: per-element top CASes claim up to half
+    /// the victim's visible queue (capped at [`MAX_STEAL_BATCH`]). The
+    /// first task winning the `QUEUED -> RUNNING` claim is returned to
+    /// run; the rest stay QUEUED and move onto the thief's own deque.
+    /// One *range* CAS over `top..top+n` would be unsound here — see the
+    /// module docs. Returns `(claimed, lost_a_cas)`; a lost CAS means
+    /// work may remain, so the scan must not conclude "empty".
+    fn steal_batch(&self, id: usize, victim: usize) -> (Option<Arc<Task>>, bool) {
+        let v = &self.deques[victim];
+        let budget = ((v.len() + 1) / 2).clamp(1, MAX_STEAL_BATCH);
+        let mut claimed: Option<Arc<Task>> = None;
+        let mut moved = 0u64;
+        let mut extras = 0usize;
+        for _ in 0..budget {
+            match v.steal() {
+                Steal::Empty => break,
+                Steal::Retry => {
+                    if extras > 0 {
+                        PENDING_WAKES.with(|p| p.set(p.get() + extras));
+                    }
+                    if moved > 0 {
+                        self.m.stolen_tasks.add(moved);
+                    }
+                    return (claimed, true);
+                }
+                Steal::Taken(task) => {
+                    if claimed.is_none() {
+                        if task
+                            .state
+                            .compare_exchange(QUEUED, RUNNING, Ordering::SeqCst, Ordering::SeqCst)
+                            .is_ok()
+                        {
+                            claimed = Some(task);
+                            moved += 1;
+                        }
+                        // Stale entries fail the CAS and drop silently.
+                    } else {
+                        self.deques[id].push(task);
+                        moved += 1;
+                        extras += 1;
+                    }
+                }
+            }
+        }
+        if extras > 0 {
+            PENDING_WAKES.with(|p| p.set(p.get() + extras));
+        }
+        if moved > 0 {
+            self.m.stolen_tasks.add(moved);
+        }
+        (claimed, false)
+    }
+
+    /// One full dequeue attempt: (tick) injector, local, injector, then
+    /// steal round-robin (see module docs for the ordering rationale).
+    fn scan(&self, id: usize, tick: usize) -> Scan {
+        match self.queues {
+            QueueMode::Shared => match self.claim_from(&self.injector) {
+                Some(t) => {
+                    self.m.injector_hits.inc();
+                    Scan::Task(t)
+                }
+                None => Scan::Empty,
+            },
+            QueueMode::Stealing => {
+                if tick % INJECTOR_TICK == 0 {
+                    if let Some(t) = self.claim_from(&self.injector) {
+                        self.m.injector_hits.inc();
+                        return Scan::Task(t);
+                    }
+                }
+                if let Some(t) = self.claim_from(&self.locals[id]) {
+                    self.m.local_hits.inc();
+                    return Scan::Task(t);
+                }
+                if let Some(t) = self.claim_from(&self.injector) {
+                    self.m.injector_hits.inc();
+                    return Scan::Task(t);
+                }
+                for off in 1..self.workers {
+                    if let Some(t) = self.claim_from(&self.locals[(id + off) % self.workers]) {
+                        self.m.steals.inc();
+                        return Scan::Task(t);
+                    }
+                }
+                Scan::Empty
+            }
+            QueueMode::ChaseLev => {
+                if tick % INJECTOR_TICK == 0 {
+                    if let Some(t) = self.drain_injector(id) {
+                        self.m.injector_hits.inc();
+                        return Scan::Task(t);
+                    }
+                }
+                if let Some(t) = self.pop_own(id) {
+                    self.m.local_hits.inc();
+                    return Scan::Task(t);
+                }
+                if let Some(t) = self.drain_injector(id) {
+                    self.m.injector_hits.inc();
+                    return Scan::Task(t);
+                }
+                let mut lost_cas = false;
+                for off in 1..self.workers {
+                    let (t, lost) = self.steal_batch(id, (id + off) % self.workers);
+                    lost_cas |= lost;
+                    if let Some(t) = t {
+                        self.m.steals.inc();
+                        return Scan::Task(t);
+                    }
+                }
+                if lost_cas {
+                    Scan::Retry
+                } else {
+                    Scan::Empty
+                }
+            }
+        }
     }
 
     /// Block until a task is claimable. The pre-sleep re-scan runs under
@@ -612,15 +1007,25 @@ impl Scheduler {
     /// (which observes every push completed before it) closes that
     /// lost-wakeup window. Lock order is sleep -> queue here; producers
     /// take queue and sleep sequentially, never nested — no deadlock.
+    /// A `Retry` scan (lost steal CAS) loops back instead of sleeping:
+    /// the victim may still hold work whose wake signal was already
+    /// consumed.
     fn next_task(&self, id: usize, tick: &mut usize) -> Arc<Task> {
         loop {
             *tick = tick.wrapping_add(1);
-            if let Some(t) = self.scan(id, *tick) {
-                return t;
+            match self.scan(id, *tick) {
+                Scan::Task(t) => return t,
+                Scan::Retry => {
+                    std::hint::spin_loop();
+                    continue;
+                }
+                Scan::Empty => {}
             }
             let mut s = self.sleep.lock().unwrap();
-            if let Some(t) = self.scan(id, *tick) {
-                return t;
+            match self.scan(id, *tick) {
+                Scan::Task(t) => return t,
+                Scan::Retry => continue, // drop the lock, rescan
+                Scan::Empty => {}
             }
             s.idle += 1;
             while s.signals == 0 {
@@ -713,8 +1118,8 @@ mod tests {
     }
 
     #[test]
-    fn queue_mode_defaults_to_stealing() {
-        assert_eq!(QueueMode::default(), QueueMode::Stealing);
+    fn queue_mode_defaults_to_chaselev() {
+        assert_eq!(QueueMode::default(), QueueMode::ChaseLev);
     }
 
     #[test]
@@ -722,6 +1127,8 @@ mod tests {
         let s = Scheduler::start_detached(2, QueueMode::Shared);
         assert_eq!(s.workers(), 2);
         assert_eq!(s.queue_mode(), QueueMode::Shared);
+        let s2 = Scheduler::start_detached(2, QueueMode::ChaseLev);
+        assert_eq!(s2.queue_mode(), QueueMode::ChaseLev);
         // Zero workers is clamped, not accepted.
         let s1 = Scheduler::start_detached(0, QueueMode::Stealing);
         assert_eq!(s1.workers(), 1);
@@ -735,5 +1142,188 @@ mod tests {
         s.notify(1000);
         let sl = s.sleep.lock().unwrap();
         assert!(sl.signals <= sl.idle);
+    }
+
+    // -----------------------------------------------------------------------
+    // Chase-Lev deque unit + stress suite. Payload `Arc<usize>` keeps
+    // element identity checkable without scheduler machinery.
+    // -----------------------------------------------------------------------
+
+    #[test]
+    fn deque_empty_pop_and_empty_steal() {
+        let d: ChaseLev<usize> = ChaseLev::new();
+        assert!(d.pop().is_none());
+        assert!(matches!(d.steal(), Steal::Empty));
+        assert_eq!(d.len(), 0);
+        d.push(Arc::new(7));
+        assert_eq!(d.len(), 1);
+        assert_eq!(*d.pop().unwrap(), 7);
+        // Back to empty: both ends agree again.
+        assert!(d.pop().is_none());
+        assert!(matches!(d.steal(), Steal::Empty));
+    }
+
+    #[test]
+    fn deque_owner_pops_lifo_thief_steals_fifo() {
+        let d: ChaseLev<usize> = ChaseLev::new();
+        for i in 0..10 {
+            d.push(Arc::new(i));
+        }
+        // Thief takes the OLDEST entries...
+        for want in 0..3 {
+            match d.steal() {
+                Steal::Taken(v) => assert_eq!(*v, want),
+                _ => panic!("steal failed with no contention"),
+            }
+        }
+        // ...the owner the NEWEST.
+        for want in (3..10).rev() {
+            assert_eq!(*d.pop().unwrap(), want);
+        }
+        assert!(d.pop().is_none());
+    }
+
+    #[test]
+    fn deque_grows_past_min_cap_without_losing_elements() {
+        let d: ChaseLev<usize> = ChaseLev::new();
+        let n = MIN_DEQUE_CAP * 8 + 3; // several grow generations
+        for i in 0..n {
+            d.push(Arc::new(i));
+        }
+        assert_eq!(d.len(), n);
+        // Old generations are retired, not freed.
+        assert!(!d.retired.lock().unwrap().is_empty());
+        for want in (0..n).rev() {
+            assert_eq!(*d.pop().unwrap(), want);
+        }
+        assert!(d.pop().is_none());
+    }
+
+    #[test]
+    fn deque_grow_interleaved_with_steals() {
+        let d: ChaseLev<usize> = ChaseLev::new();
+        // Advance top first so grown rings start mid-index.
+        for i in 0..MIN_DEQUE_CAP {
+            d.push(Arc::new(i));
+        }
+        for want in 0..MIN_DEQUE_CAP / 2 {
+            match d.steal() {
+                Steal::Taken(v) => assert_eq!(*v, want),
+                _ => panic!("uncontended steal failed"),
+            }
+        }
+        for i in MIN_DEQUE_CAP..MIN_DEQUE_CAP * 4 {
+            d.push(Arc::new(i));
+        }
+        let mut got: Vec<usize> = Vec::new();
+        while let Some(v) = d.pop() {
+            got.push(*v);
+        }
+        let want: Vec<usize> = (MIN_DEQUE_CAP / 2..MIN_DEQUE_CAP * 4).rev().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn deque_one_element_owner_thief_race_hands_out_exactly_once() {
+        let d: Arc<ChaseLev<usize>> = Arc::new(ChaseLev::new());
+        for round in 0..300usize {
+            d.push(Arc::new(round));
+            let thief = {
+                let d = d.clone();
+                std::thread::spawn(move || loop {
+                    match d.steal() {
+                        Steal::Taken(v) => return Some(*v),
+                        Steal::Empty => return None,
+                        Steal::Retry => std::hint::spin_loop(),
+                    }
+                })
+            };
+            let mine = d.pop().map(|v| *v);
+            let theirs = thief.join().unwrap();
+            // Exactly one side gets the element (the thief may also see
+            // Empty after the owner's pop — never a duplicate).
+            match (mine, theirs) {
+                (Some(v), None) | (None, Some(v)) => assert_eq!(v, round),
+                other => panic!("round {round}: element duplicated or lost: {other:?}"),
+            }
+            assert!(d.pop().is_none());
+        }
+    }
+
+    /// Deterministic xorshift for the stress mix (no external crates).
+    fn xorshift(state: &mut u64) -> u64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        *state
+    }
+
+    #[test]
+    fn deque_multi_thief_stress_conserves_every_element() {
+        const N: usize = 20_000;
+        const THIEVES: usize = 3;
+        let d: Arc<ChaseLev<usize>> = Arc::new(ChaseLev::new());
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut thieves = Vec::new();
+        for _ in 0..THIEVES {
+            let d = d.clone();
+            let done = done.clone();
+            thieves.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match d.steal() {
+                        Steal::Taken(v) => got.push(*v),
+                        Steal::Retry => std::hint::spin_loop(),
+                        Steal::Empty => {
+                            if done.load(Ordering::SeqCst) {
+                                return got;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            }));
+        }
+        // Owner: randomized push/pop mix, then drain.
+        let mut owned = Vec::new();
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        for i in 0..N {
+            d.push(Arc::new(i));
+            if xorshift(&mut rng) % 4 == 0 {
+                if let Some(v) = d.pop() {
+                    owned.push(*v);
+                }
+            }
+        }
+        while let Some(v) = d.pop() {
+            owned.push(*v);
+        }
+        // The deque is empty from the owner's side; thieves may still be
+        // completing in-flight CASes, but Steal::Empty after `done` means
+        // they saw the final state.
+        done.store(true, Ordering::SeqCst);
+        let mut all = owned;
+        for t in thieves {
+            all.extend(t.join().unwrap());
+        }
+        // Conservation: every element exactly once — none lost to a
+        // steal/pop race, none duplicated by a stale-buffer read.
+        assert_eq!(all.len(), N, "lost or duplicated elements");
+        all.sort_unstable();
+        for (i, v) in all.iter().enumerate() {
+            assert_eq!(*v, i, "element {i} missing or duplicated");
+        }
+    }
+
+    #[test]
+    fn deque_drop_releases_leftover_payloads() {
+        let payload = Arc::new(41usize);
+        let d: ChaseLev<usize> = ChaseLev::new();
+        for _ in 0..MIN_DEQUE_CAP * 2 {
+            d.push(payload.clone());
+        }
+        assert!(Arc::strong_count(&payload) > MIN_DEQUE_CAP);
+        drop(d);
+        assert_eq!(Arc::strong_count(&payload), 1, "Drop leaked deque payloads");
     }
 }

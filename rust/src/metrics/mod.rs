@@ -2,11 +2,32 @@
 //! process-level CPU/RSS sampling the paper's evaluation reports
 //! (throughput, CPU usage, peak memory — §5.4).
 //!
+//! ## Sharded hot counters
+//!
+//! A plain [`Counter`] is a pair of atomics; at K workers hammering the
+//! same counter per frame (`sched.polls`, `bytes_copied`, wake counts)
+//! the cache line holding those atomics ping-pongs between cores — the
+//! classic false-sharing/contention tax on the hot path. Counters
+//! upgraded via [`Registry::sharded_counter`] (or
+//! [`Counter::ensure_sharded`]) split their increments across
+//! cache-line-padded per-thread shards: each writer picks a stable
+//! thread-local slot and only ever touches its own line. Reads
+//! ([`Counter::count`]/[`Counter::bytes`]) sum the base atomics plus all
+//! shards, so the API — and every `metrics::dump`/bench reader — is
+//! unchanged. The sum is **monotonic but not a linearizable snapshot**:
+//! concurrent increments may or may not be included, exactly like the
+//! relaxed single-atomic read before it. Increments recorded before an
+//! upgrade stay in the base atomics and remain part of the sum, so
+//! upgrading late never loses counts.
+//!
 //! Well-known counter families registered elsewhere: `sched.*` from the
 //! work-stealing element scheduler (`tasks`/`parks`/`polls`, the
-//! `local_hits`/`injector_hits`/`steals` dequeue split, and
-//! `queue_locks`/`lock_waits` ready-queue contention — see
-//! [`crate::element::sched`]), `codec.auto.<link>.*` from the adaptive
+//! `local_hits`/`injector_hits`/`steals` dequeue split plus
+//! `stolen_tasks` batch-transfer totals, and `queue_locks`/`lock_waits`
+//! ready-queue contention — see [`crate::element::sched`]; all sharded),
+//! `inbox.wakes` consumer/producer waker firings from the link inboxes
+//! (sharded — see [`crate::element::inbox::WakeBatch`]),
+//! `codec.auto.<link>.*` from the adaptive
 //! wire codec, `codec.delta.<link>.{keyframes,deltas,bytes_saved}` from
 //! delta-coded link encoders plus `codec.delta.<link>.resyncs` from
 //! their decoders (chain breaks observed after loss/reorder — see
@@ -25,39 +46,101 @@
 //! exists to eliminate.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
-/// Monotonic event counter.
+/// Shard count of an upgraded [`Counter`] (power of two; the slot mask).
+/// More shards than typical worker counts so K workers rarely collide.
+pub(crate) const COUNTER_SHARDS: usize = 16;
+
+/// One per-thread lane of a sharded counter, padded to its own pair of
+/// cache lines (128 B covers adjacent-line prefetching on x86).
 #[derive(Debug, Default)]
-pub struct Counter {
+#[repr(align(128))]
+struct CounterShard {
     n: AtomicU64,
     bytes: AtomicU64,
 }
 
+/// Stable per-thread shard slot: threads round-robin onto
+/// `COUNTER_SHARDS` lanes at first use, so each worker keeps hitting the
+/// same (exclusive in the common K <= shards case) cache line.
+pub(crate) fn shard_slot() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SLOT: usize = NEXT.fetch_add(1, Ordering::Relaxed) & (COUNTER_SHARDS - 1);
+    }
+    SLOT.with(|s| *s)
+}
+
+/// Monotonic event counter.
+///
+/// Plain by default (one atomic pair); [`Counter::ensure_sharded`]
+/// upgrades it in place to per-thread padded shards for hot-path use —
+/// see the module docs. Reads always return base + Σ shards, so both
+/// forms share one API.
+#[derive(Debug, Default)]
+pub struct Counter {
+    n: AtomicU64,
+    bytes: AtomicU64,
+    shards: OnceLock<Box<[CounterShard]>>,
+}
+
 impl Counter {
+    /// Upgrade to per-thread sharded increments (idempotent; safe while
+    /// other threads hold the same `Arc<Counter>` — pre-upgrade counts
+    /// stay in the base atomics and remain part of every sum).
+    pub fn ensure_sharded(&self) {
+        self.shards.get_or_init(|| (0..COUNTER_SHARDS).map(|_| CounterShard::default()).collect());
+    }
+
     pub fn inc(&self) {
-        self.n.fetch_add(1, Ordering::Relaxed);
+        match self.shards.get() {
+            Some(s) => s[shard_slot()].n.fetch_add(1, Ordering::Relaxed),
+            None => self.n.fetch_add(1, Ordering::Relaxed),
+        };
     }
 
     /// Bump the event count by `n` (batched increment — one atomic op
     /// for a whole fan-out instead of one per subscriber).
     pub fn add(&self, n: u64) {
-        self.n.fetch_add(n, Ordering::Relaxed);
+        match self.shards.get() {
+            Some(s) => s[shard_slot()].n.fetch_add(n, Ordering::Relaxed),
+            None => self.n.fetch_add(n, Ordering::Relaxed),
+        };
     }
 
     pub fn add_bytes(&self, b: u64) {
-        self.n.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(b, Ordering::Relaxed);
+        match self.shards.get() {
+            Some(s) => {
+                let sh = &s[shard_slot()];
+                sh.n.fetch_add(1, Ordering::Relaxed);
+                sh.bytes.fetch_add(b, Ordering::Relaxed);
+            }
+            None => {
+                self.n.fetch_add(1, Ordering::Relaxed);
+                self.bytes.fetch_add(b, Ordering::Relaxed);
+            }
+        }
     }
 
+    /// Total events: base + every shard. Monotonic, not a linearizable
+    /// snapshot (concurrent increments may land either side of the sum).
     pub fn count(&self) -> u64 {
-        self.n.load(Ordering::Relaxed)
+        let base = self.n.load(Ordering::Relaxed);
+        match self.shards.get() {
+            Some(s) => base + s.iter().map(|sh| sh.n.load(Ordering::Relaxed)).sum::<u64>(),
+            None => base,
+        }
     }
 
     pub fn bytes(&self) -> u64 {
-        self.bytes.load(Ordering::Relaxed)
+        let base = self.bytes.load(Ordering::Relaxed);
+        match self.shards.get() {
+            Some(s) => base + s.iter().map(|sh| sh.bytes.load(Ordering::Relaxed)).sum::<u64>(),
+            None => base,
+        }
     }
 }
 
@@ -116,6 +199,16 @@ pub struct Registry {
 impl Registry {
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// [`Registry::counter`] upgraded for hot paths: per-thread padded
+    /// shards, summed on read (see the module docs). Returns the SAME
+    /// instance `counter(name)` returns — callers that grabbed the plain
+    /// handle earlier observe the upgrade and keep every count.
+    pub fn sharded_counter(&self, name: &str) -> Arc<Counter> {
+        let c = self.counter(name);
+        c.ensure_sharded();
+        c
     }
 
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
@@ -240,6 +333,56 @@ mod tests {
         c.add_bytes(100);
         assert_eq!(c.count(), 2);
         assert_eq!(c.bytes(), 100);
+    }
+
+    #[test]
+    fn sharded_counter_sums_across_threads() {
+        let c = Arc::new(Counter::default());
+        c.ensure_sharded();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c2 = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c2.inc();
+                }
+                c2.add(5);
+                c2.add_bytes(7);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.count(), 8 * (1000 + 5 + 1));
+        assert_eq!(c.bytes(), 8 * 7);
+    }
+
+    #[test]
+    fn late_shard_upgrade_keeps_base_counts() {
+        let r = Registry::default();
+        let plain = r.counter("hot");
+        plain.inc();
+        plain.add_bytes(3);
+        // Upgrade through the registry: same instance, counts preserved,
+        // and the pre-upgrade handle routes new increments to shards.
+        let sharded = r.sharded_counter("hot");
+        assert!(Arc::ptr_eq(&plain, &sharded));
+        plain.inc();
+        sharded.add(2);
+        assert_eq!(plain.count(), 2 + 2 + 1); // 2 pre-upgrade (inc+add_bytes), inc, add(2)
+        assert_eq!(sharded.bytes(), 3);
+        // Idempotent.
+        r.sharded_counter("hot").inc();
+        assert_eq!(plain.count(), 6);
+    }
+
+    #[test]
+    fn shard_slot_is_stable_and_in_range() {
+        let a = shard_slot();
+        assert_eq!(a, shard_slot());
+        assert!(a < COUNTER_SHARDS);
+        let other = std::thread::spawn(shard_slot).join().unwrap();
+        assert!(other < COUNTER_SHARDS);
     }
 
     #[test]

@@ -500,9 +500,9 @@ fn queue_counters_split_local_and_injector() {
     assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
     assert_eq!(rec.buffers.load(Ordering::Relaxed), 400);
     // Spawns come from this (non-worker) thread -> injector; wakes issued
-    // on worker threads land on local queues.
+    // on worker threads land on local queues (Chase-Lev or mutex deques).
     assert!(g.counter("sched.injector_hits").count() > i0, "spawned tasks bypass the injector");
-    if edgepipe::element::sched::global().queue_mode() == QueueMode::Stealing {
+    if edgepipe::element::sched::global().queue_mode() != QueueMode::Shared {
         assert!(g.counter("sched.local_hits").count() > l0, "worker-side wakes never hit local queues");
     }
 }
@@ -517,6 +517,42 @@ fn detached_shared_queue_pool_still_delivers() {
     let running = p.start_pooled_on(&pool).unwrap();
     assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
     assert_eq!(rec.buffers.load(Ordering::Relaxed), 150);
+}
+
+#[test]
+fn detached_mutex_stealing_pool_still_delivers() {
+    // The schema-4 mutex-deque architecture stays available as the
+    // second bench comparator; its delivery semantics must not drift
+    // now that the global default is the Chase-Lev pool.
+    let pool = Scheduler::start_detached(2, QueueMode::Stealing);
+    assert_eq!(pool.queue_mode(), QueueMode::Stealing);
+    let (p, rec) = chain(150, 3);
+    let running = p.start_pooled_on(&pool).unwrap();
+    assert_eq!(running.wait_eos(Duration::from_secs(30)), WaitOutcome::Eos);
+    assert_eq!(rec.buffers.load(Ordering::Relaxed), 150);
+}
+
+#[test]
+fn detached_chaselev_pool_delivers_under_parallel_churn() {
+    // Many short pipelines on a small Chase-Lev pool: spawn/teardown
+    // enqueues hit the batched injector drain, worker-side wakes hit the
+    // lock-free deques, and idle workers batch-steal — every buffer must
+    // still arrive exactly once (the claim CAS dedupes stale entries).
+    let pool = Scheduler::start_detached(2, QueueMode::ChaseLev);
+    assert_eq!(pool.queue_mode(), QueueMode::ChaseLev);
+    let mut running = Vec::new();
+    let mut recs = Vec::new();
+    for _ in 0..8 {
+        let (p, rec) = chain(200, 3);
+        running.push(p.start_pooled_on(&pool).unwrap());
+        recs.push(rec);
+    }
+    for r in running {
+        assert_eq!(r.wait_eos(Duration::from_secs(60)), WaitOutcome::Eos);
+    }
+    for rec in recs {
+        assert_eq!(rec.buffers.load(Ordering::Relaxed), 200);
+    }
 }
 
 // ---------------------------------------------------------------------------
